@@ -1,0 +1,39 @@
+//! Bench: paper Fig 5 — fused-kernel speedup over the DGL-style baseline,
+//! swept over batch sizes and fanout tuples on papers100m-sim.
+//!
+//!   cargo bench --bench fig5_sampling
+//!   FIG5_SCALE=0.005 FIG5_FULL=1 cargo bench --bench fig5_sampling
+//!
+//! Prints the same two panels the paper plots: sampling-only speedup and
+//! overall (sampling + training) speedup.
+
+use fastsample::coordinator::experiments::{fig5_e2e, fig5_sampling, Fig5Opts};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 =
+        std::env::var("FIG5_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.002);
+    let full = std::env::var("FIG5_FULL").is_ok();
+
+    let mut opts = Fig5Opts {
+        dataset_spec: format!("papers100m-sim:{scale}"),
+        seed: 7,
+        ..Default::default()
+    };
+    if !full {
+        opts.batch_sizes = vec![1024, 2048, 4096];
+        opts.fanout_sets =
+            vec![vec![5, 5, 5], vec![10, 10, 10], vec![15, 10, 5], vec![20, 15, 10]];
+        opts.iters = 5;
+    }
+
+    println!("{}", fig5_sampling(&opts)?);
+
+    // Bottom panel needs the fig5_* AOT variants; skip cleanly otherwise.
+    if fastsample::config::artifacts_available() {
+        opts.iters = 3;
+        println!("{}", fig5_e2e(&opts)?);
+    } else {
+        println!("(skipping end-to-end panel: run `make artifacts`)");
+    }
+    Ok(())
+}

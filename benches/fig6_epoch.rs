@@ -1,0 +1,52 @@
+//! Bench: paper Fig 6 — distributed epoch time for {vanilla, hybrid,
+//! hybrid+fused} across worker counts on products-sim and
+//! papers100m-sim, under the modeled 200 Gb/s InfiniBand fabric.
+//!
+//!   cargo bench --bench fig6_epoch
+//!   FIG6_FULL=1 cargo bench --bench fig6_epoch    (bigger graphs + 8 workers)
+//!
+//! Also prints Table-1/Fig-4 context rows (dataset stats + storage
+//! breakdown) so one bench run regenerates every table/figure's numbers.
+
+use fastsample::coordinator::experiments::{fig4, fig6, rounds_report, table1, Fig6Opts};
+
+fn main() -> anyhow::Result<()> {
+    if !fastsample::config::artifacts_available() {
+        println!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let full = std::env::var("FIG6_FULL").is_ok();
+
+    // Context: Table 1 + Fig 4 (cheap, metadata + generated graphs).
+    println!("{}", table1(0.01, 0.001, 7)?);
+    println!("{}", fig4(0.01, 0.001, 7)?);
+
+    let opts = if full {
+        Fig6Opts {
+            runs: vec![
+                ("products-sim:0.05".into(), "fig6_products".into()),
+                ("papers100m-sim:0.005".into(), "fig6_papers".into()),
+            ],
+            workers: vec![4, 8],
+            epochs: 2,
+            max_batches: Some(8),
+            ..Default::default()
+        }
+    } else {
+        Fig6Opts {
+            runs: vec![
+                ("products-sim:0.02".into(), "fig6_products_small".into()),
+                ("papers100m-sim:0.002".into(), "fig6_papers_small".into()),
+            ],
+            workers: vec![4, 8],
+            epochs: 1,
+            max_batches: Some(6),
+            ..Default::default()
+        }
+    };
+    println!("{}", fig6(&opts)?);
+
+    // A3 rounds accounting rides along (cheap, quickstart-sized).
+    println!("{}", rounds_report(4, 7)?);
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Microbenchmarks of the L3 hot paths feeding the figure-level numbers:
+//! per-level sampling kernels, the relabel/intern pass, the RNG, the
+//! partitioner, and the ring all-reduce. These are the profile targets
+//! of EXPERIMENTS.md §Perf.
+//!
+//!   cargo bench --bench kernels_micro
+
+use fastsample::dist::{run_workers, NetworkModel, RoundKind};
+use fastsample::graph::generator::{planted_communities, rmat};
+use fastsample::partition::{partition_graph, PartitionConfig};
+use fastsample::sampling::rng::RngKey;
+use fastsample::sampling::{
+    sample_level_baseline, sample_level_fused, SamplerWorkspace,
+};
+use fastsample::util::bench::{header, Bencher};
+
+fn main() {
+    let bench = Bencher::default();
+    println!("{}", header());
+
+    // ---- Per-level kernels on a skewed RMAT graph (1M edges).
+    let g = rmat(1 << 17, 1 << 20, (0.57, 0.19, 0.19, 0.05), RngKey::new(1));
+    let seeds: Vec<u32> = (0..8192u32).map(|i| i * 13 % (1 << 17)).collect();
+    // Dedup seeds (sampling requires unique seeds).
+    let seeds = {
+        let mut s = seeds;
+        s.sort_unstable();
+        s.dedup();
+        s
+    };
+    for fanout in [5usize, 15, 30] {
+        let mut ws = SamplerWorkspace::new();
+        let key = RngKey::new(2);
+        let mut i = 0u64;
+        let s = bench.run(&format!("level/baseline fanout={fanout}"), || {
+            i += 1;
+            sample_level_baseline(&g, &seeds, fanout, key.fold(i), &mut ws)
+        });
+        println!("{}", s.row());
+        let mut ws = SamplerWorkspace::new();
+        let mut j = 0u64;
+        let s = bench.run(&format!("level/fused    fanout={fanout}"), || {
+            j += 1;
+            sample_level_fused(&g, &seeds, fanout, key.fold(j), &mut ws)
+        });
+        println!("{}", s.row());
+    }
+
+    // ---- Relabel/intern pass in isolation.
+    {
+        let mut ws = SamplerWorkspace::new();
+        let ids: Vec<u32> = (0..100_000u32).map(|i| i.wrapping_mul(2654435761) >> 15).collect();
+        let s = bench.run("workspace/intern 100k ids", || {
+            ws.begin(1 << 17);
+            let mut order = Vec::with_capacity(ids.len());
+            for &v in &ids {
+                std::hint::black_box(ws.intern(v, &mut order));
+            }
+            order.len()
+        });
+        println!("{}", s.row());
+    }
+
+    // ---- RNG throughput.
+    {
+        let key = RngKey::new(3);
+        let s = bench.run("rng/sample_distinct 30-of-300 x1k", || {
+            let mut out = Vec::new();
+            let mut acc = 0usize;
+            for i in 0..1000 {
+                let mut st = key.stream(i);
+                st.sample_distinct(300, 30, &mut out);
+                acc += out[0];
+            }
+            acc
+        });
+        println!("{}", s.row());
+    }
+
+    // ---- Partitioner end to end (64k nodes).
+    {
+        let (pg, _) = planted_communities(65_536, 8, 12, 0.9, RngKey::new(4));
+        let train: Vec<u32> = (0..65_536u32).step_by(11).collect();
+        let slow = Bencher { budget: std::time::Duration::from_secs(6), min_iters: 3, ..Default::default() };
+        let s = slow.run("partition/metis-like 64k x8", || {
+            partition_graph(&pg, &train, &PartitionConfig::new(8))
+        });
+        println!("{}", s.row());
+    }
+
+    // ---- Ring all-reduce (1M floats, 4 workers).
+    {
+        let slow = Bencher { budget: std::time::Duration::from_secs(4), min_iters: 3, ..Default::default() };
+        let s = slow.run("comm/all_reduce 1M f32 x4 workers", || {
+            run_workers(4, NetworkModel::free(), |rank, comm| {
+                let mut data = vec![rank as f32; 1 << 20];
+                comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
+                data[0]
+            })
+        });
+        println!("{}", s.row());
+    }
+}

@@ -1,0 +1,69 @@
+//! The billion-scale scenario, scaled: partition a papers100M-like graph
+//! across 8 workers, compare vanilla vs hybrid partitioning end to end —
+//! memory per worker, communication rounds/bytes, and epoch time — the
+//! trade the paper's §3.3/§5 argues for.
+//!
+//! Run:  make artifacts && cargo run --release --example papers100m_sim
+//! Flags: --scale 0.002 --workers 8 --batches 4
+
+use fastsample::config;
+use fastsample::dist::RoundKind;
+use fastsample::partition::{build_shards, partition_graph, PartitionConfig, Scheme};
+use fastsample::train::{train_distributed, TrainConfig};
+use fastsample::util::cli::Args;
+use std::sync::Arc;
+
+fn human(b: u64) -> String {
+    format!("{:.1} MiB", b as f64 / (1 << 20) as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let scale = args.get("scale", 0.002f64)?;
+    let workers = args.get("workers", 8usize)?;
+    let batches = args.get("batches", 4usize)?;
+    args.finish()?;
+
+    if !config::artifacts_available() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let d = config::dataset(&format!("papers100m-sim:{scale}"), 3)?;
+    println!(
+        "{} — {} nodes, {} edges, feat dim {}, {} classes\n",
+        d.name,
+        d.num_nodes(),
+        d.num_edges(),
+        d.feat_dim,
+        d.num_classes
+    );
+
+    // ---- Per-worker memory: the "acceptable compromise" (Fig 4 logic).
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(workers)));
+    println!("partition: edge cut {:.3}", book.cut_fraction(&d.graph));
+    println!("\nper-worker memory            topology      features");
+    for (name, scheme) in [("vanilla", Scheme::Vanilla), ("hybrid", Scheme::Hybrid)] {
+        let shards = build_shards(&d, &book, scheme);
+        let topo = shards.iter().map(|s| s.topology.storage_bytes() as u64).max().unwrap();
+        let feat = shards.iter().map(|s| s.feature_bytes() as u64).max().unwrap();
+        println!("  {name:<24} {:>12} {:>12}", human(topo), human(feat));
+    }
+
+    // ---- End to end: same training, different communication structure.
+    println!("\nmode            epoch s   sampling rounds   feature bytes    total bytes");
+    for mode in ["vanilla", "hybrid", "hybrid+fused"] {
+        let mut cfg = TrainConfig::mode("fig6_papers", mode, workers)?;
+        cfg.epochs = 1;
+        cfg.max_batches = Some(batches);
+        let r = train_distributed(&d, &config::artifacts_dir(), &cfg)?;
+        println!(
+            "{:<14} {:>8.2}s {:>17} {:>15} {:>14}",
+            mode,
+            r.mean_epoch_wall_s(),
+            r.comm_total.sampling_rounds(),
+            r.comm_total.bytes_of(RoundKind::FeatureResponse),
+            r.comm_total.total_bytes()
+        );
+    }
+    println!("\n(hybrid: sampling rounds drop from 2(L-1)/batch to 0 — paper §3.3)");
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels for the FastSample GNN compute hot-spot."""
+
+from compile.kernels.sage_agg import (  # noqa: F401
+    mean_aggregate,
+    mean_aggregate_bwd,
+    mean_aggregate_fwd,
+)

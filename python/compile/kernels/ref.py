@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas aggregation kernels.
+
+These are the correctness ground truth: small, obviously-right expressions
+with no tiling, padding, or pallas machinery. pytest sweeps the kernels
+against them (see python/tests/test_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+
+def mean_aggregate_ref(features, idx, counts):
+    """out[i] = mean over valid slots k < counts[i] of features[idx[i, k]]."""
+    rows = features[idx]  # [n_dst, K, F]
+    k = idx.shape[1]
+    mask = (jnp.arange(k)[None, :] < counts[:, None]).astype(features.dtype)
+    denom = jnp.maximum(counts, 1).astype(features.dtype)
+    w = mask / denom[:, None]
+    return (rows * w[..., None]).sum(axis=1)
+
+
+def mean_aggregate_grad_ref(g, idx, counts, n_src):
+    """d_features of mean_aggregate_ref: scatter-add of g[i]/counts[i]."""
+    k = idx.shape[1]
+    mask = (jnp.arange(k)[None, :] < counts[:, None]).astype(g.dtype)
+    denom = jnp.maximum(counts, 1).astype(g.dtype)
+    w = mask / denom[:, None]  # [n_dst, K]
+    contrib = g[:, None, :] * w[:, :, None]  # [n_dst, K, F]
+    out = jnp.zeros((n_src, g.shape[1]), g.dtype)
+    return out.at[idx.reshape(-1)].add(contrib.reshape(-1, g.shape[1]))

@@ -1,0 +1,201 @@
+"""L2: GraphSAGE forward/backward in JAX, calling the L1 Pallas kernels.
+
+The paper trains a 3-layer GraphSAGE (mean aggregator, hidden 256, dropout
+between layers) on sampled message-flow-graphs (MFGs). This module defines
+that model over *padded* MFGs so it can be AOT-lowered to fixed-shape HLO
+(see aot.py) and executed from the rust coordinator via PJRT.
+
+Padded MFG convention (mirrors DGL: destination nodes come first in the
+source-node array of the level below):
+
+  level L (top) .. level 0 (input); ``caps[l]`` is the padded node count of
+  level l, ``caps[L] == batch``.  For layer ``l`` (1-indexed):
+    idx_l:  [caps[l], K_l] int32 — neighbor slots into the level-(l-1) array
+    cnt_l:  [caps[l]]      int32 — valid neighbor count per node (0 for padding)
+  feats:    [caps[0], F] float32 — input features of level-0 nodes
+  labels:   [batch] int32, label_mask: [batch] float32 (0 for padded seeds)
+
+Padding is inert: padded nodes have cnt == 0 (aggregation yields 0), are
+never referenced by valid idx slots, and are masked out of the loss.
+"""
+
+from functools import partial
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.sage_agg import mean_aggregate
+
+
+class ModelConfig(NamedTuple):
+    """Static configuration of one AOT model variant."""
+
+    feat_dim: int
+    hidden: int
+    classes: int
+    batch: int
+    fanouts: Tuple[int, ...]  # (N_L, ..., N_1): top level first, paper §4.1
+    caps: Tuple[int, ...]  # (caps[0], ..., caps[L]): input level first
+    dropout: float = 0.5
+
+    @property
+    def layers(self) -> int:
+        return len(self.fanouts)
+
+    def layer_dims(self) -> Sequence[Tuple[int, int]]:
+        dims = []
+        d_in = self.feat_dim
+        for l in range(self.layers):
+            d_out = self.classes if l == self.layers - 1 else self.hidden
+            dims.append((d_in, d_out))
+            d_in = d_out
+        return dims
+
+
+def compute_caps(batch: int, fanouts: Sequence[int], node_limit: int | None = None) -> Tuple[int, ...]:
+    """Worst-case padded node count per level.
+
+    Level sets are unique and include the level above as a prefix, so
+    ``caps[l-1] <= caps[l] * (1 + N_l)`` and never more than the graph size.
+    Returned input-level-first: ``(caps[0], ..., caps[L])``.
+    """
+    caps = [batch]
+    for f in fanouts:  # fanouts is top-first: N_L, ..., N_1
+        nxt = caps[-1] * (1 + f)
+        if node_limit is not None:
+            nxt = min(nxt, node_limit)
+        caps.append(nxt)
+    return tuple(reversed(caps))
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list — the contract with the rust side."""
+    spec = []
+    for l, (d_in, d_out) in enumerate(cfg.layer_dims(), start=1):
+        spec.append((f"l{l}.w_self", (d_in, d_out)))
+        spec.append((f"l{l}.w_neigh", (d_in, d_out)))
+        spec.append((f"l{l}.bias", (d_out,)))
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    """Xavier-uniform init (reference only; rust owns init at runtime)."""
+    params = []
+    for _, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            limit = (6.0 / (shape[0] + shape[1])) ** 0.5
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -limit, limit))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def _sage_layer(w_self, w_neigh, bias, h_src, idx, cnt, n_dst):
+    """One GraphSAGE-mean layer over a padded bipartite MFG level."""
+    agg = mean_aggregate(h_src, idx, cnt)  # [n_dst, d_in] Pallas kernel
+    h_dst = h_src[:n_dst]  # dst nodes are the prefix of the src array
+    return h_dst @ w_self + agg @ w_neigh + bias
+
+
+def forward(cfg: ModelConfig, params, feats, mfgs, *, train: bool, seed=None):
+    """Run all layers; returns seed-node logits ``[batch, classes]``.
+
+    ``mfgs`` is ``[(idx_1, cnt_1), ..., (idx_L, cnt_L)]`` bottom layer first
+    (layer 1 consumes the input features).
+    """
+    h = feats
+    for l in range(1, cfg.layers + 1):
+        idx, cnt = mfgs[l - 1]
+        w_self, w_neigh, bias = params[3 * (l - 1) : 3 * l]
+        n_dst = cfg.caps[l]
+        h = _sage_layer(w_self, w_neigh, bias, h, idx, cnt, n_dst)
+        if l < cfg.layers:
+            h = jax.nn.relu(h)
+            if train and cfg.dropout > 0.0:
+                key = jax.random.fold_in(jax.random.PRNGKey(seed), l)
+                keep = 1.0 - cfg.dropout
+                mask = jax.random.bernoulli(key, keep, h.shape)
+                h = jnp.where(mask, h / keep, 0.0)
+    return h
+
+
+def masked_cross_entropy(logits, labels, label_mask):
+    """Mean CE over valid seeds (mask 0 → padded seed, excluded)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(label_mask.sum(), 1.0)
+    return (nll * label_mask).sum() / denom
+
+
+def _unpack(cfg: ModelConfig, args):
+    """Split the flat AOT argument list (see arg_order in the manifest)."""
+    n_params = 3 * cfg.layers
+    params = tuple(args[:n_params])
+    rest = list(args[n_params:])
+    feats = rest.pop(0)
+    mfgs = []
+    for _ in range(cfg.layers):
+        idx = rest.pop(0)
+        cnt = rest.pop(0)
+        mfgs.append((idx, cnt))
+    return params, feats, mfgs, rest
+
+
+def make_train_step(cfg: ModelConfig):
+    """Flat-signature train step: ``(*params, feats, idx*, cnt*, labels,
+    label_mask, seed) -> (loss, *grads)``; grads in param_spec order."""
+
+    def train_step(*args):
+        params, feats, mfgs, rest = _unpack(cfg, args)
+        labels, label_mask, seed = rest
+
+        def loss_fn(p):
+            logits = forward(cfg, p, feats, mfgs, train=True, seed=seed)
+            return masked_cross_entropy(logits, labels, label_mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss,) + tuple(grads)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """Flat-signature eval step: ``(*params, feats, idx*, cnt*) -> (logits,)``."""
+
+    def eval_step(*args):
+        params, feats, mfgs, rest = _unpack(cfg, args)
+        assert not rest
+        logits = forward(cfg, params, feats, mfgs, train=False)
+        return (logits,)
+
+    return eval_step
+
+
+def example_args(cfg: ModelConfig, *, for_train: bool):
+    """ShapeDtypeStructs for jax.jit(...).lower(...) of one variant."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    args = [jax.ShapeDtypeStruct(s, f32) for _, s in param_spec(cfg)]
+    args.append(jax.ShapeDtypeStruct((cfg.caps[0], cfg.feat_dim), f32))
+    for l in range(1, cfg.layers + 1):
+        k = cfg.fanouts[cfg.layers - l]  # fanouts are top-first
+        args.append(jax.ShapeDtypeStruct((cfg.caps[l], k), i32))
+        args.append(jax.ShapeDtypeStruct((cfg.caps[l],), i32))
+    if for_train:
+        args.append(jax.ShapeDtypeStruct((cfg.batch,), i32))  # labels
+        args.append(jax.ShapeDtypeStruct((cfg.batch,), f32))  # label_mask
+        args.append(jax.ShapeDtypeStruct((), i32))  # dropout seed
+    return args
+
+
+def arg_order(cfg: ModelConfig, *, for_train: bool):
+    """Human/manifest-readable names matching example_args order."""
+    names = [n for n, _ in param_spec(cfg)]
+    names.append("feats")
+    for l in range(1, cfg.layers + 1):
+        names += [f"idx_{l}", f"cnt_{l}"]
+    if for_train:
+        names += ["labels", "label_mask", "seed"]
+    return names

@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas aggregation kernels vs the pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes/degree distributions; explicit cases pin the
+edge geometry (empty neighborhoods, single row, non-divisible tiles).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import mean_aggregate_grad_ref, mean_aggregate_ref
+from compile.kernels.sage_agg import (
+    mean_aggregate,
+    mean_aggregate_bwd,
+    mean_aggregate_fwd,
+)
+
+
+def _case(rng, n_src, n_dst, k, f, dtype=jnp.float32):
+    x = jnp.asarray(rng.normal(size=(n_src, f)), dtype)
+    idx = jnp.asarray(rng.integers(0, n_src, (n_dst, k)), jnp.int32)
+    cnt = jnp.asarray(rng.integers(0, k + 1, n_dst), jnp.int32)
+    return x, idx, cnt
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=1e-5, rtol=1e-5)
+
+
+shapes = st.tuples(
+    st.integers(1, 300),  # n_src
+    st.integers(1, 200),  # n_dst
+    st.integers(1, 12),  # K
+    st.integers(1, 160),  # F
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes=shapes, seed=st.integers(0, 2**31 - 1))
+def test_fwd_matches_ref(shapes, seed):
+    n_src, n_dst, k, f = shapes
+    x, idx, cnt = _case(np.random.default_rng(seed), n_src, n_dst, k, f)
+    out = mean_aggregate_fwd(x, idx, cnt)
+    ref = mean_aggregate_ref(x, idx, cnt)
+    assert out.shape == (n_dst, f)
+    np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(shapes=shapes, seed=st.integers(0, 2**31 - 1))
+def test_bwd_matches_ref(shapes, seed):
+    n_src, n_dst, k, f = shapes
+    rng = np.random.default_rng(seed)
+    _, idx, cnt = _case(rng, n_src, n_dst, k, f)
+    g = jnp.asarray(rng.normal(size=(n_dst, f)), jnp.float32)
+    out = mean_aggregate_bwd(g, idx, cnt, n_src)
+    ref = mean_aggregate_grad_ref(g, idx, cnt, n_src)
+    assert out.shape == (n_src, f)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shapes=shapes, seed=st.integers(0, 2**31 - 1))
+def test_custom_vjp_matches_jax_grad_of_ref(shapes, seed):
+    n_src, n_dst, k, f = shapes
+    x, idx, cnt = _case(np.random.default_rng(seed), n_src, n_dst, k, f)
+    w = jnp.asarray(np.random.default_rng(seed + 1).normal(size=(n_dst, f)), jnp.float32)
+
+    gk = jax.grad(lambda x: (mean_aggregate(x, idx, cnt) * w).sum())(x)
+    gr = jax.grad(lambda x: (mean_aggregate_ref(x, idx, cnt) * w).sum())(x)
+    np.testing.assert_allclose(gk, gr, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    x, idx, cnt = _case(np.random.default_rng(0), 64, 48, 5, 32, dtype)
+    out = mean_aggregate_fwd(x, idx, cnt)
+    ref = mean_aggregate_ref(x, idx, cnt)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_zero_count_rows_are_zero():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(10, 7)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 10, (5, 4)), jnp.int32)
+    cnt = jnp.zeros(5, jnp.int32)
+    out = mean_aggregate_fwd(x, idx, cnt)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((5, 7), np.float32))
+
+
+def test_full_count_is_plain_mean():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(20, 9)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 20, (8, 6)), jnp.int32)
+    cnt = jnp.full(8, 6, jnp.int32)
+    out = mean_aggregate_fwd(x, idx, cnt)
+    np.testing.assert_allclose(out, np.asarray(x)[np.asarray(idx)].mean(1), atol=1e-5)
+
+
+def test_padding_slots_do_not_leak():
+    """Whatever sits in idx slots past cnt must not affect the output."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(30, 5)), jnp.float32)
+    idx_a = jnp.asarray(rng.integers(0, 30, (6, 4)), jnp.int32)
+    cnt = jnp.asarray([0, 1, 2, 3, 4, 2], jnp.int32)
+    # Scramble only the invalid slots.
+    idx_b = np.asarray(idx_a).copy()
+    for i, c in enumerate(np.asarray(cnt)):
+        idx_b[i, c:] = rng.integers(0, 30, 4 - c)
+    out_a = mean_aggregate_fwd(x, idx_a, cnt)
+    out_b = mean_aggregate_fwd(x, jnp.asarray(idx_b), cnt)
+    np.testing.assert_allclose(out_a, out_b, atol=1e-6)
+
+
+def test_single_element_shapes():
+    x, idx, cnt = _case(np.random.default_rng(4), 1, 1, 1, 1)
+    out = mean_aggregate_fwd(x, idx, cnt)
+    ref = mean_aggregate_ref(x, idx, cnt)
+    np.testing.assert_allclose(out, ref, atol=1e-6)
+
+
+def test_non_divisible_tiles():
+    """Shapes deliberately coprime with the 128-wide default blocks."""
+    x, idx, cnt = _case(np.random.default_rng(5), 257, 131, 7, 129)
+    out = mean_aggregate_fwd(x, idx, cnt)
+    ref = mean_aggregate_ref(x, idx, cnt)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_under_jit():
+    x, idx, cnt = _case(np.random.default_rng(6), 100, 70, 5, 33)
+    f = jax.jit(lambda x, i, c: mean_aggregate_fwd(x, i, c))
+    np.testing.assert_allclose(f(x, idx, cnt), mean_aggregate_ref(x, idx, cnt), atol=1e-5)
+
+
+def test_grad_under_jit():
+    x, idx, cnt = _case(np.random.default_rng(7), 90, 40, 6, 21)
+    g = jax.jit(jax.grad(lambda x: mean_aggregate(x, idx, cnt).sum()))(x)
+    gr = jax.grad(lambda x: mean_aggregate_ref(x, idx, cnt).sum())(x)
+    np.testing.assert_allclose(g, gr, atol=1e-4)
+
+
+def test_duplicate_neighbor_indices_accumulate():
+    """Repeated idx entries contribute multiple times (with-replacement)."""
+    x = jnp.asarray(np.eye(4, dtype=np.float32))
+    idx = jnp.asarray([[2, 2, 2]], jnp.int32)
+    cnt = jnp.asarray([3], jnp.int32)
+    out = mean_aggregate_fwd(x, idx, cnt)
+    np.testing.assert_allclose(out, np.eye(4, dtype=np.float32)[2][None], atol=1e-6)

@@ -1,0 +1,56 @@
+//! Shared run configuration helpers for the CLI, examples, and benches.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::dist::NetworkModel;
+use crate::graph::{datasets, Dataset};
+
+/// Locate the AOT artifacts directory: `$FASTSAMPLE_ARTIFACTS` or
+/// `<crate root>/artifacts` (built by `make artifacts`).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("FASTSAMPLE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when artifacts exist (tests/examples skip politely otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Resolve a dataset spec (`name[:scale]`) with a fixed seed.
+pub fn dataset(spec: &str, seed: u64) -> Result<Dataset> {
+    datasets::by_name(spec, seed)
+}
+
+/// Resolve a network model by name: `infiniband` (paper fabric),
+/// `ethernet`, `free` (accounting only).
+pub fn network(name: &str) -> Result<NetworkModel> {
+    match name {
+        "infiniband" | "ib" => Ok(NetworkModel::infiniband_200g()),
+        "ethernet" | "eth" => Ok(NetworkModel::ethernet_10g()),
+        "free" | "none" => Ok(NetworkModel::free()),
+        other => anyhow::bail!("unknown network model {other:?} (infiniband | ethernet | free)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn network_names_resolve() {
+        assert!(network("infiniband").unwrap().inject_delay);
+        assert!(!network("free").unwrap().inject_delay);
+        assert!(network("warp").is_err());
+    }
+
+    #[test]
+    fn artifacts_dir_points_into_crate_by_default() {
+        // (Does not require artifacts to exist.)
+        assert!(artifacts_dir().ends_with("artifacts"));
+    }
+}

@@ -1,0 +1,5 @@
+//! Coordination layer: experiment regenerators (one per paper
+//! table/figure + ablations) and run-mode mapping. The `fastsample`
+//! binary and the bench targets are thin wrappers over this module.
+
+pub mod experiments;

@@ -1,0 +1,100 @@
+//! COO (COOrdinate) edge-list format — the intermediate representation the
+//! baseline (DGL-style) sampling pipeline materializes and the fused kernel
+//! avoids (paper Fig 2 and §3.2).
+
+use anyhow::{ensure, Result};
+
+use super::{CscGraph, NodeId};
+
+/// Edge list `(src[i], dst[i])`, unordered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooGraph {
+    num_nodes: usize,
+    src: Vec<NodeId>,
+    dst: Vec<NodeId>,
+}
+
+impl CooGraph {
+    pub fn new(num_nodes: usize, src: Vec<NodeId>, dst: Vec<NodeId>) -> Result<Self> {
+        ensure!(src.len() == dst.len(), "src/dst length mismatch");
+        ensure!(
+            src.iter().chain(dst.iter()).all(|&v| (v as usize) < num_nodes),
+            "endpoint out of range"
+        );
+        Ok(Self { num_nodes, src, dst })
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn src(&self) -> &[NodeId] {
+        &self.src
+    }
+
+    pub fn dst(&self) -> &[NodeId] {
+        &self.dst
+    }
+
+    /// Counting-sort conversion to CSC keyed on `dst` (in-edges). This is
+    /// the exact two-pass conversion the baseline sampler pays per level
+    /// and the fused kernel skips.
+    pub fn to_csc(&self) -> CscGraph {
+        let n = self.num_nodes;
+        let mut indptr = vec![0usize; n + 1];
+        for &d in &self.dst {
+            indptr[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut indices = vec![0 as NodeId; self.src.len()];
+        let mut cursor = indptr.clone();
+        for (&s, &d) in self.src.iter().zip(&self.dst) {
+            indices[cursor[d as usize]] = s;
+            cursor[d as usize] += 1;
+        }
+        CscGraph::new_unchecked(indptr, indices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csc_groups_by_dst() {
+        // edges: 1->0, 2->0, 2->1
+        let coo = CooGraph::new(4, vec![1, 2, 2], vec![0, 0, 1]).unwrap();
+        let csc = coo.to_csc();
+        assert_eq!(csc.indptr(), &[0, 2, 3, 3, 3]);
+        assert_eq!(csc.neighbors(0), &[1, 2]);
+        assert_eq!(csc.neighbors(1), &[2]);
+    }
+
+    #[test]
+    fn rejects_bad_edges() {
+        assert!(CooGraph::new(2, vec![0], vec![5]).is_err());
+        assert!(CooGraph::new(2, vec![0, 1], vec![0]).is_err());
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let coo = CooGraph::new(3, vec![], vec![]).unwrap();
+        let csc = coo.to_csc();
+        assert_eq!(csc.num_nodes(), 3);
+        assert_eq!(csc.num_edges(), 0);
+    }
+
+    #[test]
+    fn preserves_duplicate_edges() {
+        let coo = CooGraph::new(2, vec![0, 0], vec![1, 1]).unwrap();
+        assert_eq!(coo.to_csc().neighbors(1), &[0, 0]);
+    }
+}

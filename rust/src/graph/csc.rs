@@ -1,0 +1,175 @@
+//! CSC (Compressed Sparse Column) adjacency — the canonical topology
+//! format (paper Fig 2): `indptr[v+1] - indptr[v]` in-edges for node `v`,
+//! their sources at `indices[indptr[v]..indptr[v+1]]`.
+
+use anyhow::{ensure, Result};
+
+use super::{CooGraph, NodeId};
+
+/// Immutable CSC graph over in-edges. `A ≡ (R, C)` in the paper's
+/// notation: `R = indptr`, `C = indices`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscGraph {
+    indptr: Vec<usize>,
+    indices: Vec<NodeId>,
+}
+
+impl CscGraph {
+    /// Build from raw arrays, validating the CSC invariants.
+    pub fn new(indptr: Vec<usize>, indices: Vec<NodeId>) -> Result<Self> {
+        ensure!(!indptr.is_empty(), "indptr must have at least one entry");
+        ensure!(indptr[0] == 0, "indptr[0] must be 0");
+        ensure!(
+            indptr.windows(2).all(|w| w[0] <= w[1]),
+            "indptr must be non-decreasing"
+        );
+        ensure!(
+            *indptr.last().unwrap() == indices.len(),
+            "indptr[-1] ({}) != nnz ({})",
+            indptr.last().unwrap(),
+            indices.len()
+        );
+        let n = indptr.len() - 1;
+        ensure!(
+            indices.iter().all(|&s| (s as usize) < n),
+            "edge source out of range"
+        );
+        Ok(Self { indptr, indices })
+    }
+
+    /// Internal constructor for callers that uphold the invariants
+    /// themselves (generators, partitioner); debug-checked.
+    pub(crate) fn new_unchecked(indptr: Vec<usize>, indices: Vec<NodeId>) -> Self {
+        debug_assert!(Self::new(indptr.clone(), indices.clone()).is_ok());
+        Self { indptr, indices }
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// In-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        self.indptr[v as usize + 1] - self.indptr[v as usize]
+    }
+
+    /// In-neighbors of `v` (edge sources), O(1) slice — the property the
+    /// paper's fused kernel exploits.
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        &self.indices[self.indptr[v as usize]..self.indptr[v as usize + 1]]
+    }
+
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    pub fn indices(&self) -> &[NodeId] {
+        &self.indices
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes() as NodeId).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_nodes() == 0 {
+            return 0.0;
+        }
+        self.num_edges() as f64 / self.num_nodes() as f64
+    }
+
+    /// Bytes held by the adjacency arrays (Fig 4 "topology" accounting).
+    pub fn storage_bytes(&self) -> usize {
+        self.indptr.len() * std::mem::size_of::<usize>()
+            + self.indices.len() * std::mem::size_of::<NodeId>()
+    }
+
+    /// Expand back to COO (used by tests and the baseline pipeline).
+    pub fn to_coo(&self) -> CooGraph {
+        let mut src = Vec::with_capacity(self.num_edges());
+        let mut dst = Vec::with_capacity(self.num_edges());
+        for v in 0..self.num_nodes() as NodeId {
+            for &s in self.neighbors(v) {
+                src.push(s);
+                dst.push(v);
+            }
+        }
+        CooGraph::new(self.num_nodes(), src, dst).expect("CSC expands to valid COO")
+    }
+
+    /// Restrict to the in-edges of a node subset, relabeling nothing:
+    /// returns (indptr over `nodes` order, concatenated neighbor lists).
+    /// Used by the partitioner to build per-partition halo graphs.
+    pub fn induce_in_edges(&self, nodes: &[NodeId]) -> (Vec<usize>, Vec<NodeId>) {
+        let mut indptr = Vec::with_capacity(nodes.len() + 1);
+        indptr.push(0);
+        let total: usize = nodes.iter().map(|&v| self.degree(v)).sum();
+        let mut indices = Vec::with_capacity(total);
+        for &v in nodes {
+            indices.extend_from_slice(self.neighbors(v));
+            indptr.push(indices.len());
+        }
+        (indptr, indices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 0 <- 1, 0 <- 2, 1 <- 2, 3 isolated.
+    fn toy() -> CscGraph {
+        CscGraph::new(vec![0, 2, 3, 3, 3], vec![1, 2, 2]).unwrap()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = toy();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[] as &[NodeId]);
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_graphs_rejected() {
+        assert!(CscGraph::new(vec![], vec![]).is_err());
+        assert!(CscGraph::new(vec![1, 2], vec![0]).is_err()); // indptr[0] != 0
+        assert!(CscGraph::new(vec![0, 2, 1], vec![0, 0]).is_err()); // decreasing
+        assert!(CscGraph::new(vec![0, 1], vec![5]).is_err()); // src out of range
+        assert!(CscGraph::new(vec![0, 3], vec![0]).is_err()); // nnz mismatch
+    }
+
+    #[test]
+    fn coo_round_trip() {
+        let g = toy();
+        let coo = g.to_coo();
+        let back = coo.to_csc();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn induce_in_edges_subsets() {
+        let g = toy();
+        let (indptr, indices) = g.induce_in_edges(&[2, 0]);
+        assert_eq!(indptr, vec![0, 0, 2]);
+        assert_eq!(indices, vec![1, 2]);
+    }
+
+    #[test]
+    fn storage_bytes_counts_both_arrays() {
+        let g = toy();
+        assert_eq!(g.storage_bytes(), 5 * 8 + 3 * 4);
+    }
+}

@@ -1,0 +1,271 @@
+//! Synthetic graph generators.
+//!
+//! The paper benchmarks on OGB graphs we cannot ship; these generators
+//! produce scaled analogs with the properties that drive sampling cost:
+//! power-law in-degree skew (RMAT / hub mixture), community structure
+//! (so the edge-cut partitioner and the planted classification task are
+//! both meaningful), and matching feature/class dimensions
+//! (DESIGN.md §Substitutions).
+//!
+//! All generators are deterministic in the [`RngKey`] and parallelized
+//! with scoped threads via counter-based streams (one stream per
+//! node/edge), so the output is independent of thread count.
+
+use crate::sampling::rng::RngKey;
+use crate::util::par;
+
+use super::{CooGraph, CscGraph, Dataset, NodeId};
+
+/// Erdős–Rényi-ish: every node draws `avg_degree` in-neighbors uniformly.
+pub fn erdos_renyi(n: usize, avg_degree: usize, key: RngKey) -> CscGraph {
+    let key = key.fold(0xE2D0);
+    per_node_graph(n, |v, out| {
+        let mut s = key.stream(v as u64);
+        let d = if n <= 1 { 0 } else { avg_degree };
+        for _ in 0..d {
+            out.push(s.next_below(n) as NodeId);
+        }
+    })
+}
+
+/// RMAT (Chakrabarti et al.): recursive quadrant choice with probabilities
+/// `(a, b, c, d)`; produces the heavy-tailed degree distribution of
+/// real-world web/citation graphs. Self-loops allowed (as in the OGB
+/// preprocessing they are rare and harmless to sampling).
+pub fn rmat(n: usize, num_edges: usize, probs: (f64, f64, f64, f64), key: RngKey) -> CscGraph {
+    assert!(n.is_power_of_two(), "rmat requires power-of-two node count");
+    let scale = n.trailing_zeros();
+    let (a, b, c, _d) = probs;
+    let key = key.fold(0x12A7);
+    let edges: Vec<(NodeId, NodeId)> = par::par_map(num_edges, |e| {
+        let mut s = key.stream(e as u64);
+        let (mut src, mut dst) = (0u64, 0u64);
+        for _ in 0..scale {
+            let r = s.next_f32() as f64;
+            let (si, di) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            src = (src << 1) | si;
+            dst = (dst << 1) | di;
+        }
+        (src as NodeId, dst as NodeId)
+    });
+    let (src, dst): (Vec<_>, Vec<_>) = edges.into_iter().unzip();
+    CooGraph::new(n, src, dst).expect("rmat edges in range").to_csc()
+}
+
+/// Planted-community graph + labels: node `v` belongs to community
+/// `v * classes / n` (contiguous blocks, so edge-cut partitioners have
+/// real structure to find). Each node draws in-neighbors, intra-community
+/// with probability `p_intra`. Degrees follow a hub mixture: a fraction of
+/// nodes are hubs with ~10x the base degree, giving the skew that makes
+/// neighbor sampling non-trivial.
+pub fn planted_communities(
+    n: usize,
+    classes: usize,
+    avg_degree: usize,
+    p_intra: f32,
+    key: RngKey,
+) -> (CscGraph, Vec<i32>) {
+    assert!(classes >= 1 && n >= classes);
+    let labels: Vec<i32> = (0..n).map(|v| (v * classes / n) as i32).collect();
+    let block = n / classes;
+    let key = key.fold(0xC0117);
+    let graph = per_node_graph(n, |v, out| {
+        let mut s = key.stream(v as u64);
+        // Hub mixture: 5% of nodes get 10x degree.
+        let base = avg_degree.max(1);
+        let d = if s.next_f32() < 0.05 { base * 10 } else { (base as f32 * s.next_range_f32(0.2, 1.6)) as usize };
+        let c = (v * classes / n) as usize;
+        let (lo, hi) = (c * block, ((c + 1) * block).min(n));
+        for _ in 0..d.max(1) {
+            let u = if s.next_f32() < p_intra && hi > lo {
+                lo + s.next_below(hi - lo)
+            } else {
+                s.next_below(n)
+            };
+            out.push(u as NodeId);
+        }
+    });
+    (graph, labels)
+}
+
+/// Parameters for a full synthetic dataset (graph + features + labels).
+#[derive(Debug, Clone)]
+pub struct DatasetParams {
+    pub name: String,
+    pub num_nodes: usize,
+    pub avg_degree: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    /// Fraction of nodes that are labeled (seed pool), as in OGB splits.
+    pub labeled_frac: f64,
+    /// Intra-community edge probability (community signal strength).
+    pub p_intra: f32,
+    /// Feature noise stddev around the class centroid.
+    pub noise: f32,
+    pub seed: u64,
+}
+
+/// Build a learnable node-classification dataset: planted communities,
+/// features = class centroid (±1 pattern) + gaussian noise.
+pub fn make_dataset(p: &DatasetParams) -> Dataset {
+    let key = RngKey::new(p.seed);
+    let (graph, labels) =
+        planted_communities(p.num_nodes, p.num_classes, p.avg_degree, p.p_intra, key);
+
+    // Class centroids: deterministic ±1 patterns.
+    let cent_key = key.fold(0xCE17);
+    let centroids: Vec<f32> = (0..p.num_classes * p.feat_dim)
+        .map(|i| {
+            let mut s = cent_key.stream(i as u64);
+            if s.next_f32() < 0.5 {
+                -1.0
+            } else {
+                1.0
+            }
+        })
+        .collect();
+
+    let feat_key = key.fold(0xFEA7);
+    let f = p.feat_dim;
+    let mut feats = vec![0f32; p.num_nodes * f];
+    par::par_chunks_mut(&mut feats, f, |v, row| {
+        let mut s = feat_key.stream(v as u64);
+        let c = labels[v] as usize;
+        for (j, x) in row.iter_mut().enumerate() {
+            // Box–Muller gaussian.
+            let u1 = s.next_f32().max(1e-7);
+            let u2 = s.next_f32();
+            let gauss = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos();
+            *x = centroids[c * f + j] + p.noise * gauss;
+        }
+    });
+
+    // Labeled subset: evenly strided so every community contributes seeds.
+    let stride = (1.0 / p.labeled_frac.max(1e-9)).round().max(1.0) as usize;
+    let train_ids: Vec<NodeId> =
+        (0..p.num_nodes).step_by(stride).map(|v| v as NodeId).collect();
+
+    Dataset {
+        name: p.name.clone(),
+        graph,
+        feats,
+        feat_dim: f,
+        labels,
+        num_classes: p.num_classes,
+        train_ids,
+    }
+}
+
+/// Helper: build a CSC graph by generating each node's in-neighbor list
+/// independently (parallel), then stitching indptr/indices.
+fn per_node_graph(n: usize, fill: impl Fn(usize, &mut Vec<NodeId>) + Sync) -> CscGraph {
+    let lists: Vec<Vec<NodeId>> = par::par_map(n, |v| {
+        let mut out = Vec::new();
+        fill(v, &mut out);
+        out
+    });
+    let mut indptr = Vec::with_capacity(n + 1);
+    indptr.push(0usize);
+    let mut total = 0usize;
+    for l in &lists {
+        total += l.len();
+        indptr.push(total);
+    }
+    let mut indices = Vec::with_capacity(total);
+    for l in &lists {
+        indices.extend_from_slice(l);
+    }
+    CscGraph::new_unchecked(indptr, indices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erdos_renyi_shape_and_determinism() {
+        let g1 = erdos_renyi(100, 5, RngKey::new(1));
+        let g2 = erdos_renyi(100, 5, RngKey::new(1));
+        let g3 = erdos_renyi(100, 5, RngKey::new(2));
+        assert_eq!(g1, g2);
+        assert_ne!(g1, g3);
+        assert_eq!(g1.num_nodes(), 100);
+        assert_eq!(g1.num_edges(), 500);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(1 << 12, 40_000, (0.57, 0.19, 0.19, 0.05), RngKey::new(7));
+        assert_eq!(g.num_nodes(), 1 << 12);
+        assert_eq!(g.num_edges(), 40_000);
+        // Heavy tail: max degree far above average.
+        assert!(g.max_degree() as f64 > 5.0 * g.avg_degree(), "max {} avg {}", g.max_degree(), g.avg_degree());
+    }
+
+    #[test]
+    fn planted_communities_are_assortative() {
+        let (g, labels) = planted_communities(1000, 4, 10, 0.9, RngKey::new(3));
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for v in 0..1000u32 {
+            for &u in g.neighbors(v) {
+                total += 1;
+                if labels[u as usize] == labels[v as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        assert!(intra as f64 / total as f64 > 0.8, "{intra}/{total}");
+    }
+
+    #[test]
+    fn make_dataset_contract() {
+        let d = make_dataset(&DatasetParams {
+            name: "t".into(),
+            num_nodes: 500,
+            avg_degree: 8,
+            feat_dim: 16,
+            num_classes: 5,
+            labeled_frac: 0.1,
+            p_intra: 0.8,
+            noise: 0.2,
+            seed: 9,
+        });
+        assert_eq!(d.num_nodes(), 500);
+        assert_eq!(d.feats.len(), 500 * 16);
+        assert_eq!(d.labels.len(), 500);
+        assert!((45..=55).contains(&d.train_ids.len()), "{}", d.train_ids.len());
+        assert!(d.labels.iter().all(|&l| (0..5).contains(&l)));
+        // Features carry class signal: same-class rows closer than cross-class.
+        let dist = |a: u32, b: u32| -> f32 {
+            d.feat(a).iter().zip(d.feat(b)).map(|(x, y)| (x - y).powi(2)).sum()
+        };
+        // nodes 0,1 share class 0; node 499 is class 4.
+        assert!(dist(0, 1) < dist(0, 499));
+    }
+
+    #[test]
+    fn dataset_storage_accounting() {
+        let d = make_dataset(&DatasetParams {
+            name: "t".into(),
+            num_nodes: 100,
+            avg_degree: 4,
+            feat_dim: 8,
+            num_classes: 2,
+            labeled_frac: 0.5,
+            p_intra: 0.5,
+            noise: 0.1,
+            seed: 1,
+        });
+        assert_eq!(d.feature_bytes(), 100 * 8 * 4);
+        assert_eq!(d.topology_bytes(), d.graph.storage_bytes());
+    }
+}

@@ -1,0 +1,149 @@
+//! Binary dataset serialization: generate once, reuse across bench runs.
+//!
+//! Format (little-endian):
+//!   magic "FSDS" | version u32 | name_len u32 | name bytes |
+//!   num_nodes u64 | num_edges u64 | feat_dim u64 | num_classes u64 |
+//!   num_train u64 | indptr u64[n+1] | indices u32[m] | feats f32[n*f] |
+//!   labels i32[n] | train_ids u32[num_train]
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Result, Context};
+
+use super::{CscGraph, Dataset, NodeId};
+
+const MAGIC: &[u8; 4] = b"FSDS";
+const VERSION: u32 = 1;
+
+pub fn save(dataset: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    let name = dataset.name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    for v in [
+        dataset.num_nodes() as u64,
+        dataset.num_edges() as u64,
+        dataset.feat_dim as u64,
+        dataset.num_classes as u64,
+        dataset.train_ids.len() as u64,
+    ] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    write_slice(&mut w, dataset.graph.indptr())?;
+    write_slice(&mut w, dataset.graph.indices())?;
+    write_slice(&mut w, &dataset.feats)?;
+    write_slice(&mut w, &dataset.labels)?;
+    write_slice(&mut w, &dataset.train_ids)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "not a FastSample dataset file");
+    let version = read_u32(&mut r)?;
+    ensure!(version == VERSION, "unsupported version {version}");
+    let name_len = read_u32(&mut r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let feat_dim = read_u64(&mut r)? as usize;
+    let num_classes = read_u64(&mut r)? as usize;
+    let num_train = read_u64(&mut r)? as usize;
+
+    let indptr: Vec<usize> = read_vec::<u64>(&mut r, n + 1)?.into_iter().map(|v| v as usize).collect();
+    let indices: Vec<NodeId> = read_vec(&mut r, m)?;
+    let feats: Vec<f32> = read_vec(&mut r, n * feat_dim)?;
+    let labels: Vec<i32> = read_vec(&mut r, n)?;
+    let train_ids: Vec<NodeId> = read_vec(&mut r, num_train)?;
+
+    Ok(Dataset {
+        name: String::from_utf8(name)?,
+        graph: CscGraph::new(indptr, indices)?,
+        feats,
+        feat_dim,
+        labels,
+        num_classes,
+        train_ids,
+    })
+}
+
+fn write_slice<T: Copy>(w: &mut impl Write, data: &[T]) -> Result<()> {
+    // Safety: plain-old-data slices written as raw little-endian bytes
+    // (all field types are u32/u64/usize/i32/f32 on a LE target).
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), std::mem::size_of_val(data))
+    };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_vec<T: Copy + Default>(r: &mut impl Read, len: usize) -> Result<Vec<T>> {
+    let mut out = vec![T::default(); len];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr().cast::<u8>(), len * std::mem::size_of::<T>())
+    };
+    r.read_exact(bytes)?;
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{make_dataset, DatasetParams};
+
+    #[test]
+    fn save_load_round_trip() {
+        let d = make_dataset(&DatasetParams {
+            name: "roundtrip".into(),
+            num_nodes: 300,
+            avg_degree: 6,
+            feat_dim: 12,
+            num_classes: 3,
+            labeled_frac: 0.2,
+            p_intra: 0.7,
+            noise: 0.3,
+            seed: 11,
+        });
+        let tmp = std::env::temp_dir().join("fastsample_io_test.bin");
+        save(&d, &tmp).unwrap();
+        let back = load(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(d.name, back.name);
+        assert_eq!(d.graph, back.graph);
+        assert_eq!(d.feats, back.feats);
+        assert_eq!(d.labels, back.labels);
+        assert_eq!(d.train_ids, back.train_ids);
+        assert_eq!(d.num_classes, back.num_classes);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let tmp = std::env::temp_dir().join("fastsample_io_garbage.bin");
+        std::fs::write(&tmp, b"not a dataset").unwrap();
+        assert!(load(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

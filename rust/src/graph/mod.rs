@@ -1,0 +1,65 @@
+//! Graph substrate: sparse storage, synthetic generators, dataset registry
+//! and binary I/O.
+//!
+//! Storage follows the paper's preference (§3.2): CSC is the canonical
+//! format because fetching a node's in-neighbors is O(1); COO exists as the
+//! intermediate the *baseline* sampling pipeline produces (and the fused
+//! kernel avoids).
+
+mod coo;
+mod csc;
+pub mod datasets;
+pub mod generator;
+pub mod io;
+
+pub use coo::CooGraph;
+pub use csc::CscGraph;
+
+/// Node identifier. `u32` covers the node counts we simulate (the paper's
+/// largest graph, ogbn-papers100M, has 111M nodes — also within u32);
+/// edge *counts* use `usize`/`u64` (papers100M has 3.2B edges).
+pub type NodeId = u32;
+
+/// A node-classification dataset: graph topology + dense node features +
+/// labels + the labeled (trainable) node set.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub graph: CscGraph,
+    /// Row-major `[num_nodes, feat_dim]`.
+    pub feats: Vec<f32>,
+    pub feat_dim: usize,
+    /// One label per node (only meaningful where `labeled` is true).
+    pub labels: Vec<i32>,
+    pub num_classes: usize,
+    /// Labeled nodes — the pool top-level sampling seeds are drawn from.
+    pub train_ids: Vec<NodeId>,
+}
+
+impl Dataset {
+    pub fn num_nodes(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.graph.num_edges()
+    }
+
+    /// Feature row of one node.
+    #[inline]
+    pub fn feat(&self, v: NodeId) -> &[f32] {
+        let f = self.feat_dim;
+        &self.feats[v as usize * f..(v as usize + 1) * f]
+    }
+
+    /// Bytes of the adjacency structure (indptr + indices) — the
+    /// "topology" bar of the paper's Fig 4.
+    pub fn topology_bytes(&self) -> usize {
+        self.graph.storage_bytes()
+    }
+
+    /// Bytes of the dense feature tensor — the "features" bar of Fig 4.
+    pub fn feature_bytes(&self) -> usize {
+        self.feats.len() * std::mem::size_of::<f32>()
+    }
+}

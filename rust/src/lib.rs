@@ -1,0 +1,35 @@
+//! # FastSample
+//!
+//! Reproduction of *FastSample: Accelerating Distributed Graph Neural
+//! Network Training for Billion-Scale Graphs* (Mostafa et al., 2023) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's systems contribution: the fused
+//!   CSC-direct sampling kernel ([`sampling::fused`]), the DGL-style
+//!   two-step baseline it is benchmarked against ([`sampling::baseline`]),
+//!   METIS-like edge-cut and hybrid partitioning ([`partition`]), and the
+//!   distributed training runtime (workers, collectives, feature store) in
+//!   [`dist`] / [`train`] / [`coordinator`].
+//! * **L2/L1 (build-time python)** — a 3-layer GraphSAGE with a Pallas
+//!   aggregation kernel, AOT-lowered to HLO text (`make artifacts`) and
+//!   executed from the hot path through [`runtime`] (PJRT CPU client).
+//!
+//! Python never runs on the training path: the rust binary is
+//! self-contained once `artifacts/` is built.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! (Table 1, Fig 4, Fig 5, Fig 6 of the paper), and `EXPERIMENTS.md` for
+//! measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod dist;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod sampling;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (anyhow for rich error context).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,286 @@
+//! `fastsample` — CLI for the FastSample reproduction.
+//!
+//! Subcommands:
+//!   train         distributed training (vanilla | hybrid | hybrid+fused)
+//!   partition     partition a dataset and print quality metrics
+//!   sample-bench  quick fused-vs-baseline sampling comparison
+//!   gen-data      generate + save a synthetic dataset to disk
+//!   report        regenerate a paper table/figure or ablation
+//!   info          list AOT variants and environment
+
+use anyhow::{bail, Result};
+
+use fastsample::config;
+use fastsample::coordinator::experiments as exp;
+use fastsample::dist::NetworkModel;
+use fastsample::graph::{datasets, io as graph_io};
+use fastsample::partition::{partition_graph, PartitionBook, PartitionConfig};
+use fastsample::runtime::Manifest;
+use fastsample::sampling::rng::RngKey;
+use fastsample::sampling::{sample_mfgs, KernelKind, MinibatchSchedule, SamplerWorkspace};
+use fastsample::train::{train_distributed, TrainConfig};
+use fastsample::util::cli::Args;
+
+const USAGE: &str = "\
+fastsample — FastSample (distributed GNN sampling) reproduction
+
+USAGE: fastsample <command> [--flags]
+
+COMMANDS:
+  train         --dataset products-sim:0.01 --variant e2e_products
+                --mode hybrid+fused --workers 4 --epochs 3 [--lr 0.006]
+                [--optimizer adam] [--net infiniband] [--max-batches N]
+                [--cache N] [--seed S] [--eval]
+  partition     --dataset <spec> --parts 8 [--seed S]
+  sample-bench  --dataset <spec> --batch 1024 --fanouts 15,10,5 [--iters 10]
+  gen-data      --dataset <spec> --out graph.bin [--seed S]
+  report        --id table1|fig4|fig5|fig5-e2e|fig6|rounds|cache-ablation|
+                     fanout-ablation|memory  [--quick] [--scale S] [--workers W]
+  info
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.command.clone() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "partition" => cmd_partition(&args),
+        "sample-bench" => cmd_sample_bench(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "report" => cmd_report(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let spec = args.get_str("dataset", "quickstart");
+    let variant = args.get_str("variant", "quickstart");
+    let mode = args.get_str("mode", "hybrid+fused");
+    let workers = args.get("workers", 4usize)?;
+    let seed = args.get("seed", 0u64)?;
+
+    let mut cfg = TrainConfig::mode(&variant, &mode, workers)?;
+    cfg.epochs = args.get("epochs", 3usize)?;
+    cfg.lr = args.get("lr", 0.006f32)?;
+    cfg.optimizer = args.get_str("optimizer", "adam");
+    cfg.seed = seed;
+    cfg.net = config::network(&args.get_str("net", "infiniband"))?;
+    cfg.cache_capacity = args.get("cache", 0usize)?;
+    cfg.max_batches = match args.get("max-batches", 0usize)? {
+        0 => None,
+        n => Some(n),
+    };
+    cfg.eval_last_batch = args.has("eval");
+    cfg.verbose = true;
+    args.finish()?;
+
+    let dataset = config::dataset(&spec, seed)?;
+    eprintln!(
+        "training {} on {} ({} nodes, {} edges), {} workers, mode {}",
+        variant,
+        dataset.name,
+        dataset.num_nodes(),
+        dataset.num_edges(),
+        workers,
+        mode
+    );
+    let report = train_distributed(&dataset, &config::artifacts_dir(), &cfg)?;
+    println!(
+        "\nmean epoch time: {:.2}s   total comm bytes: {}",
+        report.mean_epoch_wall_s(),
+        report.comm_total.total_bytes()
+    );
+    println!("{}", report.comm_total.report());
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let spec = args.get_str("dataset", "products-sim:0.01");
+    let parts = args.get("parts", 8usize)?;
+    let seed = args.get("seed", 0u64)?;
+    args.finish()?;
+    let d = config::dataset(&spec, seed)?;
+    let t0 = std::time::Instant::now();
+    let book = partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(parts));
+    println!(
+        "partitioned {} ({} nodes, {} edges) into {parts} parts in {:.2}s",
+        d.name,
+        d.num_nodes(),
+        d.num_edges(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("edge cut:        {:.3}", book.cut_fraction(&d.graph));
+    println!("node imbalance:  {:.3}", PartitionBook::imbalance(&book.node_counts()));
+    println!("edge imbalance:  {:.3}", PartitionBook::imbalance(&book.edge_counts(&d.graph)));
+    println!(
+        "label imbalance: {:.3}",
+        PartitionBook::imbalance(&book.label_counts(&d.train_ids))
+    );
+    Ok(())
+}
+
+fn cmd_sample_bench(args: &Args) -> Result<()> {
+    let spec = args.get_str("dataset", "papers100m-sim:0.005");
+    let batch = args.get("batch", 1024usize)?;
+    let fanouts = args.get_list("fanouts", &[15, 10, 5])?;
+    let iters = args.get("iters", 10usize)?;
+    let seed = args.get("seed", 0u64)?;
+    args.finish()?;
+    let d = config::dataset(&spec, seed)?;
+    let key = RngKey::new(seed);
+    let schedule = MinibatchSchedule::new(&d.train_ids, batch.min(d.train_ids.len()), key);
+    let seeds = schedule.batch(0);
+    let mut ws = SamplerWorkspace::new();
+    println!(
+        "sampling {} seeds from {} with fanouts {:?} ({} iters)",
+        seeds.len(),
+        d.name,
+        fanouts,
+        iters
+    );
+    for kind in [KernelKind::Baseline, KernelKind::Fused] {
+        let _ = sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, kind);
+        let t0 = std::time::Instant::now();
+        let mut edges = 0usize;
+        for i in 0..iters {
+            let mfgs =
+                sample_mfgs(&d.graph, seeds, &fanouts, key.fold(i as u64), &mut ws, kind);
+            edges = mfgs.iter().map(|m| m.num_edges()).sum();
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("{kind:?}: {:.3} ms/batch ({edges} sampled edges)", dt * 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let spec = args.get_str("dataset", "products-sim:0.01");
+    let out = args.require_str("out")?;
+    let seed = args.get("seed", 0u64)?;
+    args.finish()?;
+    let d = config::dataset(&spec, seed)?;
+    graph_io::save(&d, &out)?;
+    println!(
+        "wrote {} ({} nodes, {} edges, {} feature bytes) to {out}",
+        d.name,
+        d.num_nodes(),
+        d.num_edges(),
+        d.feature_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args.get_str("id", "");
+    let quick = args.has("quick");
+    let seed = args.get("seed", 7u64)?;
+    let workers = args.get("workers", 4usize)?;
+    let scale = args.get("scale", 0.0f64)?;
+    args.finish()?;
+
+    let text = match which.as_str() {
+        "table1" => exp::table1(pick(scale, 0.01), pick(scale, 0.001), seed)?,
+        "fig4" => exp::fig4(pick(scale, 0.01), pick(scale, 0.001), seed)?,
+        "fig5" => {
+            let mut opts = exp::Fig5Opts { seed, ..Default::default() };
+            if quick {
+                opts.dataset_spec = "papers100m-sim:0.001".into();
+                opts.batch_sizes = vec![1024, 2048];
+                opts.fanout_sets = vec![vec![5, 5, 5], vec![15, 10, 5]];
+                opts.iters = 3;
+            }
+            if scale > 0.0 {
+                opts.dataset_spec = format!("papers100m-sim:{scale}");
+            }
+            exp::fig5_sampling(&opts)?
+        }
+        "fig5-e2e" => {
+            let mut opts = exp::Fig5Opts { seed, ..Default::default() };
+            if quick {
+                opts.dataset_spec = "papers100m-sim:0.001".into();
+                opts.iters = 2;
+            }
+            if scale > 0.0 {
+                opts.dataset_spec = format!("papers100m-sim:{scale}");
+            }
+            exp::fig5_e2e(&opts)?
+        }
+        "fig6" => {
+            let mut opts = exp::Fig6Opts { seed, ..Default::default() };
+            if quick {
+                opts.runs = vec![("products-sim:0.02".into(), "fig6_products_small".into())];
+                opts.workers = vec![4];
+                opts.epochs = 1;
+                opts.max_batches = Some(3);
+            }
+            exp::fig6(&opts)?
+        }
+        "rounds" => exp::rounds_report(workers, seed)?,
+        "cache-ablation" => exp::cache_ablation(workers, seed)?,
+        "fanout-ablation" => exp::fanout_ablation(workers, seed)?,
+        "memory" => exp::partition_memory(
+            &format!("products-sim:{}", pick(scale, 0.01)),
+            workers,
+            seed,
+        )?,
+        other => bail!("unknown report {other:?} — see `fastsample` usage"),
+    };
+    println!("{text}");
+    Ok(())
+}
+
+fn pick(scale: f64, default: f64) -> f64 {
+    if scale > 0.0 {
+        scale
+    } else {
+        default
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.finish()?;
+    println!("artifacts dir: {:?}", config::artifacts_dir());
+    if config::artifacts_available() {
+        let m = Manifest::load(config::artifacts_dir())?;
+        let mut names: Vec<&String> = m.variants.keys().collect();
+        names.sort();
+        println!(
+            "{:<16} {:>7} {:<14} {:<28} {:>9}",
+            "variant", "batch", "fanouts", "caps", "params"
+        );
+        for n in names {
+            let v = m.variant(n)?;
+            println!(
+                "{:<16} {:>7} {:<14} {:<28} {:>9}",
+                n,
+                v.batch,
+                format!("{:?}", v.fanouts),
+                format!("{:?}", v.caps),
+                v.param_numel()
+            );
+        }
+    } else {
+        println!("artifacts missing — run `make artifacts`");
+    }
+    println!("datasets: products-sim[:scale] papers100m-sim[:scale] quickstart");
+    println!("threads: {}", fastsample::util::par::num_threads());
+    let net = NetworkModel::infiniband_200g();
+    println!(
+        "default fabric: {:?} latency, {:.0} GB/s bandwidth",
+        net.latency,
+        net.bandwidth / 1e9
+    );
+    let _ = datasets::OGBN_PRODUCTS;
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Partition book: node → partition assignment plus the quality metrics
+//! the paper's partitioning discussion cares about (edge cut, node/edge
+//! balance, labeled-node balance).
+
+use anyhow::{ensure, Result};
+
+use crate::graph::{CscGraph, NodeId};
+
+/// Immutable partition assignment for `num_parts` workers.
+#[derive(Debug, Clone)]
+pub struct PartitionBook {
+    num_parts: usize,
+    assignment: Vec<u16>,
+}
+
+impl PartitionBook {
+    pub fn new(num_parts: usize, assignment: Vec<u16>) -> Result<Self> {
+        ensure!(num_parts >= 1 && num_parts <= u16::MAX as usize);
+        ensure!(
+            assignment.iter().all(|&p| (p as usize) < num_parts),
+            "assignment references partition >= num_parts"
+        );
+        Ok(Self { num_parts, assignment })
+    }
+
+    #[inline]
+    pub fn part_of(&self, v: NodeId) -> usize {
+        self.assignment[v as usize] as usize
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.num_parts
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Nodes of one partition, in global-id order.
+    pub fn nodes_of(&self, part: usize) -> Vec<NodeId> {
+        (0..self.assignment.len() as NodeId).filter(|&v| self.part_of(v) == part).collect()
+    }
+
+    /// Per-partition node counts.
+    pub fn node_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.num_parts];
+        for &p in &self.assignment {
+            c[p as usize] += 1;
+        }
+        c
+    }
+
+    /// Number of edges whose endpoints live in different partitions.
+    pub fn edge_cut(&self, graph: &CscGraph) -> usize {
+        let mut cut = 0usize;
+        for v in 0..graph.num_nodes() as NodeId {
+            let pv = self.part_of(v);
+            cut += graph.neighbors(v).iter().filter(|&&u| self.part_of(u) != pv).count();
+        }
+        cut
+    }
+
+    /// Edge-cut fraction in `[0, 1]`.
+    pub fn cut_fraction(&self, graph: &CscGraph) -> f64 {
+        if graph.num_edges() == 0 {
+            return 0.0;
+        }
+        self.edge_cut(graph) as f64 / graph.num_edges() as f64
+    }
+
+    /// Per-partition in-edge counts (edges owned by the dst partition,
+    /// matching the paper's "all incoming edges to the partition nodes").
+    pub fn edge_counts(&self, graph: &CscGraph) -> Vec<usize> {
+        let mut c = vec![0usize; self.num_parts];
+        for v in 0..graph.num_nodes() as NodeId {
+            c[self.part_of(v)] += graph.degree(v);
+        }
+        c
+    }
+
+    /// Per-partition labeled-node counts (seed balance, paper §4).
+    pub fn label_counts(&self, train_ids: &[NodeId]) -> Vec<usize> {
+        let mut c = vec![0usize; self.num_parts];
+        for &v in train_ids {
+            c[self.part_of(v)] += 1;
+        }
+        c
+    }
+
+    /// max/mean imbalance of a count vector (1.0 = perfectly balanced).
+    pub fn imbalance(counts: &[usize]) -> f64 {
+        let total: usize = counts.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / counts.len() as f64;
+        counts.iter().copied().max().unwrap_or(0) as f64 / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> CscGraph {
+        // v <- v+1 for each v.
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        for v in 0..n {
+            if v + 1 < n {
+                indices.push((v + 1) as NodeId);
+            }
+            indptr.push(indices.len());
+        }
+        CscGraph::new(indptr, indices).unwrap()
+    }
+
+    #[test]
+    fn contiguous_split_has_one_cut_edge() {
+        let g = path_graph(10);
+        let assignment: Vec<u16> = (0..10).map(|v| if v < 5 { 0 } else { 1 }).collect();
+        let book = PartitionBook::new(2, assignment).unwrap();
+        assert_eq!(book.edge_cut(&g), 1);
+        assert_eq!(book.node_counts(), vec![5, 5]);
+        assert_eq!(book.nodes_of(1), (5..10).collect::<Vec<_>>());
+        assert!((PartitionBook::imbalance(&book.node_counts()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interleaved_split_cuts_everything() {
+        let g = path_graph(10);
+        let assignment: Vec<u16> = (0..10).map(|v| (v % 2) as u16).collect();
+        let book = PartitionBook::new(2, assignment).unwrap();
+        assert_eq!(book.edge_cut(&g), 9);
+        assert!((book.cut_fraction(&g) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn label_counts_follow_assignment() {
+        let book = PartitionBook::new(2, vec![0, 0, 1, 1]).unwrap();
+        assert_eq!(book.label_counts(&[0, 2, 3]), vec![1, 2]);
+    }
+
+    #[test]
+    fn rejects_out_of_range_assignment() {
+        assert!(PartitionBook::new(2, vec![0, 2]).is_err());
+    }
+}

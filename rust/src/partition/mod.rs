@@ -1,0 +1,21 @@
+//! Graph partitioning (paper §3.3).
+//!
+//! * [`book`] — the partition assignment + quality metrics (edge cut,
+//!   node/edge/label balance).
+//! * [`metis_like`] — a from-scratch multilevel edge-cut partitioner
+//!   (heavy-edge-matching coarsening → greedy region growing → boundary
+//!   refinement), standing in for METIS with the same objectives the
+//!   paper lists: minimize cut edges, balance nodes/edges, and balance
+//!   labeled nodes so every machine draws the same number of seeds.
+//! * [`shard`] — materialize per-worker shards under either scheme:
+//!   **vanilla** (topology *and* features partitioned; remote sampling
+//!   rounds required) or **hybrid** (topology replicated, features
+//!   partitioned; the paper's contribution).
+
+pub mod book;
+pub mod metis_like;
+pub mod shard;
+
+pub use book::PartitionBook;
+pub use metis_like::{partition_graph, PartitionConfig};
+pub use shard::{build_shards, Scheme, TopologyView, WorkerShard};

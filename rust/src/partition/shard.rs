@@ -1,0 +1,271 @@
+//! Per-worker shards under the two partitioning schemes of the paper.
+//!
+//! **Vanilla** (DistDGL-style, §3.3): each worker stores its partition's
+//! node features *and only* the incoming edges of its partition nodes
+//! (topology halo). Sampling a non-local node requires a remote request —
+//! 2(L−1) communication rounds per minibatch.
+//!
+//! **Hybrid** (the paper's scheme): the full topology is replicated on
+//! every worker (it is small, Fig 4) while features stay partitioned.
+//! Sampling is then fully local; only the 2 feature-exchange rounds
+//! remain.
+
+use std::sync::Arc;
+
+use crate::graph::{CscGraph, Dataset, NodeId};
+
+use super::book::PartitionBook;
+
+/// Partitioning scheme selector (the Fig 6 comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    Vanilla,
+    Hybrid,
+}
+
+/// What a worker can see of the graph topology.
+pub enum TopologyView {
+    /// Hybrid: the whole adjacency, shared (one copy per *process*; in the
+    /// paper it is one copy per machine).
+    Full(Arc<CscGraph>),
+    /// Vanilla: in-edges of local nodes only. `row_of[v]` is the local row
+    /// of global node `v`, or `u32::MAX` if `v` is not local.
+    Halo { indptr: Vec<usize>, indices: Vec<NodeId>, row_of: Vec<u32> },
+}
+
+impl TopologyView {
+    /// In-neighbors of `v`, or `None` when `v` is not sampleable locally
+    /// (vanilla scheme, remote node) — the caller must issue a remote
+    /// sampling request.
+    #[inline]
+    pub fn try_neighbors(&self, v: NodeId) -> Option<&[NodeId]> {
+        match self {
+            TopologyView::Full(g) => Some(g.neighbors(v)),
+            TopologyView::Halo { indptr, indices, row_of } => {
+                let row = row_of[v as usize];
+                if row == u32::MAX {
+                    None
+                } else {
+                    Some(&indices[indptr[row as usize]..indptr[row as usize + 1]])
+                }
+            }
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        matches!(self, TopologyView::Full(_))
+    }
+
+    /// Bytes of adjacency data this worker holds (per-worker memory cost
+    /// of the scheme — the compromise the paper's §5 discusses).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            TopologyView::Full(g) => g.storage_bytes(),
+            TopologyView::Halo { indptr, indices, row_of } => {
+                indptr.len() * 8 + indices.len() * 4 + row_of.len() * 4
+            }
+        }
+    }
+}
+
+/// Everything one worker owns.
+pub struct WorkerShard {
+    pub part: usize,
+    pub num_parts: usize,
+    pub book: Arc<PartitionBook>,
+    pub topology: TopologyView,
+    /// Global ids of nodes whose features this worker stores (sorted).
+    pub local_nodes: Vec<NodeId>,
+    /// `feat_row[v]` = local feature row of global `v`, `u32::MAX` if remote.
+    pub feat_row: Vec<u32>,
+    /// Row-major `[local_nodes.len(), feat_dim]`.
+    pub feats: Vec<f32>,
+    pub feat_dim: usize,
+    /// Labels, replicated (they are 4 bytes/node — negligible next to
+    /// features; DistDGL replicates them inside the partition book too).
+    pub labels: Arc<Vec<i32>>,
+    /// Labeled nodes owned by this worker — its top-level seed pool.
+    pub train_local: Vec<NodeId>,
+}
+
+impl WorkerShard {
+    /// Feature row of a *local* node.
+    #[inline]
+    pub fn local_feat(&self, v: NodeId) -> &[f32] {
+        let row = self.feat_row[v as usize];
+        debug_assert_ne!(row, u32::MAX, "node {v} is not local to part {}", self.part);
+        let f = self.feat_dim;
+        &self.feats[row as usize * f..(row as usize + 1) * f]
+    }
+
+    #[inline]
+    pub fn owns(&self, v: NodeId) -> bool {
+        self.feat_row[v as usize] != u32::MAX
+    }
+
+    pub fn feature_bytes(&self) -> usize {
+        self.feats.len() * 4
+    }
+}
+
+/// Materialize all worker shards for a dataset under `scheme`.
+pub fn build_shards(
+    dataset: &Dataset,
+    book: &Arc<PartitionBook>,
+    scheme: Scheme,
+) -> Vec<WorkerShard> {
+    let parts = book.num_parts();
+    let labels = Arc::new(dataset.labels.clone());
+    let full_graph = match scheme {
+        Scheme::Hybrid => Some(Arc::new(dataset.graph.clone())),
+        Scheme::Vanilla => None,
+    };
+    (0..parts)
+        .map(|p| {
+            let local_nodes = book.nodes_of(p);
+            let mut feat_row = vec![u32::MAX; dataset.num_nodes()];
+            for (i, &v) in local_nodes.iter().enumerate() {
+                feat_row[v as usize] = i as u32;
+            }
+            let f = dataset.feat_dim;
+            let mut feats = Vec::with_capacity(local_nodes.len() * f);
+            for &v in &local_nodes {
+                feats.extend_from_slice(dataset.feat(v));
+            }
+            let topology = match &full_graph {
+                Some(g) => TopologyView::Full(Arc::clone(g)),
+                None => {
+                    let (indptr, indices) = dataset.graph.induce_in_edges(&local_nodes);
+                    let mut row_of = vec![u32::MAX; dataset.num_nodes()];
+                    for (i, &v) in local_nodes.iter().enumerate() {
+                        row_of[v as usize] = i as u32;
+                    }
+                    TopologyView::Halo { indptr, indices, row_of }
+                }
+            };
+            let train_local: Vec<NodeId> =
+                dataset.train_ids.iter().copied().filter(|&v| book.part_of(v) == p).collect();
+            WorkerShard {
+                part: p,
+                num_parts: parts,
+                book: Arc::clone(book),
+                topology,
+                local_nodes,
+                feat_row,
+                feats,
+                feat_dim: f,
+                labels: Arc::clone(&labels),
+                train_local,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{make_dataset, DatasetParams};
+    use crate::partition::metis_like::{partition_graph, PartitionConfig};
+
+    fn toy_dataset() -> Dataset {
+        make_dataset(&DatasetParams {
+            name: "shard-test".into(),
+            num_nodes: 600,
+            avg_degree: 8,
+            feat_dim: 6,
+            num_classes: 4,
+            labeled_frac: 0.2,
+            p_intra: 0.9,
+            noise: 0.1,
+            seed: 42,
+        })
+    }
+
+    fn build(scheme: Scheme) -> (Dataset, Vec<WorkerShard>) {
+        let d = toy_dataset();
+        let book =
+            Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+        let shards = build_shards(&d, &book, scheme);
+        (d, shards)
+    }
+
+    #[test]
+    fn shards_cover_all_nodes_exactly_once() {
+        for scheme in [Scheme::Vanilla, Scheme::Hybrid] {
+            let (d, shards) = build(scheme);
+            let mut seen = vec![0u8; d.num_nodes()];
+            for s in &shards {
+                for &v in &s.local_nodes {
+                    seen[v as usize] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn features_match_dataset_rows() {
+        let (d, shards) = build(Scheme::Hybrid);
+        for s in &shards {
+            for &v in s.local_nodes.iter().take(20) {
+                assert_eq!(s.local_feat(v), d.feat(v));
+                assert!(s.owns(v));
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_sees_all_vanilla_sees_local_only() {
+        let (d, shards) = build(Scheme::Vanilla);
+        for s in &shards {
+            for v in 0..d.num_nodes() as NodeId {
+                let visible = s.topology.try_neighbors(v).is_some();
+                assert_eq!(visible, s.owns(v), "vanilla: node {v}");
+                if visible {
+                    assert_eq!(s.topology.try_neighbors(v).unwrap(), d.graph.neighbors(v));
+                }
+            }
+        }
+        let (d2, shards2) = build(Scheme::Hybrid);
+        for s in &shards2 {
+            assert!(s.topology.is_full());
+            for v in 0..d2.num_nodes() as NodeId {
+                assert_eq!(s.topology.try_neighbors(v).unwrap(), d2.graph.neighbors(v));
+            }
+        }
+    }
+
+    #[test]
+    fn train_pools_partition_the_train_set() {
+        let (d, shards) = build(Scheme::Hybrid);
+        let total: usize = shards.iter().map(|s| s.train_local.len()).sum();
+        assert_eq!(total, d.train_ids.len());
+        for s in &shards {
+            for &v in &s.train_local {
+                assert_eq!(s.book.part_of(v), s.part);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_accounting_reflects_schemes() {
+        let (d, vanilla) = build(Scheme::Vanilla);
+        let (_, hybrid) = build(Scheme::Hybrid);
+        // Hybrid: every worker stores the full topology.
+        for s in &hybrid {
+            assert_eq!(s.topology.storage_bytes(), d.graph.storage_bytes());
+        }
+        // Vanilla: workers store strictly less adjacency than the total
+        // (halo row_of vector aside, indices are a partition subset).
+        for s in &vanilla {
+            if let TopologyView::Halo { indices, .. } = &s.topology {
+                assert!(indices.len() < d.graph.num_edges());
+            } else {
+                panic!("expected halo view");
+            }
+        }
+        // Features always partition exactly.
+        let total_feat: usize = vanilla.iter().map(|s| s.feats.len()).sum();
+        assert_eq!(total_feat, d.feats.len());
+    }
+}

@@ -1,0 +1,68 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compilation happens once per artifact at
+//! startup; only `Executable::run` sits on the hot path.
+
+use std::path::Path;
+
+use anyhow::{Result, Context};
+use xla::Literal;
+
+use super::tensor::HostTensor;
+
+/// Owns the PJRT client. One per process (workers share it: XLA CPU
+/// executables are thread-safe to execute concurrently).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO **text** artifact (see module docs for why
+    /// text is the interchange format).
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled, ready-to-run XLA executable with a tuple result (all our
+/// AOT artifacts are lowered with `return_tuple=True`).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<Literal> =
+            inputs.iter().map(HostTensor::to_literal).collect::<Result<_>>()?;
+        let outs = self.run_literals(&literals)?;
+        outs.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Lower-level entry point when the caller already holds literals.
+    pub fn run_literals(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self.exe.execute::<Literal>(inputs).context("executing")?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}

@@ -1,0 +1,190 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: which HLO files exist, their padded shapes
+//! (`caps`), fanouts, and the flat argument order.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One model parameter: name + shape, in the order the AOT executables
+/// expect them as leading arguments (and return their grads).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT model variant (fixed batch/fanouts/caps → fixed HLO shapes).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    /// Top level first: `(N_L, ..., N_1)` — paper §4.1 notation.
+    pub fanouts: Vec<usize>,
+    /// Input level first: `caps[0] ≥ ... ≥ caps[L] == batch`.
+    pub caps: Vec<usize>,
+    pub dropout: f64,
+    pub params: Vec<ParamSpec>,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub train_args: Vec<String>,
+    pub eval_args: Vec<String>,
+}
+
+impl Variant {
+    pub fn layers(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    /// Fanout used when expanding level `l` seeds into level `l-1` nodes
+    /// (`l` is 1-indexed from the bottom, as in the paper's Algorithm 1).
+    pub fn fanout_at_layer(&self, l: usize) -> usize {
+        self.fanouts[self.layers() - l]
+    }
+
+    /// Total number of parameter scalars (for flat optimizer state).
+    pub fn param_numel(&self) -> usize {
+        self.params.iter().map(ParamSpec::numel).sum()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let str_vec = |key: &str| -> Result<Vec<String>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_str().map(str::to_string))
+                .collect()
+        };
+        Ok(Variant {
+            feat_dim: j.get("feat_dim")?.as_usize()?,
+            hidden: j.get("hidden")?.as_usize()?,
+            classes: j.get("classes")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            fanouts: j.get("fanouts")?.usize_vec()?,
+            caps: j.get("caps")?.usize_vec()?,
+            dropout: j.get("dropout")?.as_f64()?,
+            params: j
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p.get("shape")?.usize_vec()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            train_hlo: j.get("train_hlo")?.as_str()?.to_string(),
+            eval_hlo: j.get("eval_hlo")?.as_str()?.to_string(),
+            train_args: str_vec("train_args")?,
+            eval_args: str_vec("eval_args")?,
+        })
+    }
+}
+
+/// The whole manifest: variant name → [`Variant`].
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variants: HashMap<String, Variant>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated from I/O for testability).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut variants = HashMap::new();
+        for (name, v) in j.get("variants")?.as_obj()? {
+            let variant = Variant::from_json(v)
+                .with_context(|| format!("manifest variant {name:?}"))?;
+            variants.insert(name.clone(), variant);
+        }
+        Ok(Manifest { variants, dir: dir.to_path_buf() })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow!(
+                "variant {name:?} not in manifest (have: {:?}) — re-run `make artifacts`",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "variants": {
+            "q": {
+                "feat_dim": 32, "hidden": 64, "classes": 8, "batch": 32,
+                "fanouts": [15, 10, 5], "caps": [2048, 512, 128, 32], "dropout": 0.5,
+                "params": [
+                    {"name": "l1.w_self", "shape": [32, 64]},
+                    {"name": "l1.bias", "shape": [64]}
+                ],
+                "train_hlo": "q_train.hlo.txt", "eval_hlo": "q_eval.hlo.txt",
+                "train_args": ["l1.w_self", "l1.bias", "feats", "labels", "label_mask", "seed"],
+                "eval_args": ["l1.w_self", "l1.bias", "feats"]
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let v = m.variant("q").unwrap();
+        assert_eq!(v.batch, 32);
+        assert_eq!(v.fanouts, vec![15, 10, 5]);
+        assert_eq!(v.params.len(), 2);
+        assert_eq!(v.params[0].numel(), 32 * 64);
+        assert_eq!(v.param_numel(), 32 * 64 + 64);
+        assert_eq!(m.hlo_path(&v.train_hlo), Path::new("/tmp/a/q_train.hlo.txt"));
+    }
+
+    #[test]
+    fn fanout_at_layer_is_top_first() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let v = m.variant("q").unwrap();
+        assert_eq!(v.fanout_at_layer(3), 15); // top layer expands with N_3
+        assert_eq!(v.fanout_at_layer(1), 5);
+    }
+
+    #[test]
+    fn missing_variant_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_is_error() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"variants": {"q": {"batch": 1}}}"#, Path::new(".")).is_err());
+    }
+}

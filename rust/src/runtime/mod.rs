@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! training hot path.
+//!
+//! The interchange with the python build path (`python/compile/aot.py`) is
+//! **HLO text** + `artifacts/manifest.json`. Text (not serialized proto) is
+//! required: jax ≥ 0.5 emits 64-bit instruction ids which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see DESIGN.md §AOT).
+
+mod client;
+mod manifest;
+mod model;
+mod tensor;
+
+pub use client::{Engine, Executable};
+pub use manifest::{Manifest, ParamSpec, Variant};
+pub use model::{EvalOutput, ModelRuntime, PaddedBatch, TrainOutput};
+pub use tensor::HostTensor;

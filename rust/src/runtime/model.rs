@@ -1,0 +1,153 @@
+//! Model-level runtime: wraps the train/eval executables of one manifest
+//! variant behind a typed interface, and owns parameter initialization.
+
+use anyhow::{ensure, Result};
+
+use crate::sampling::rng::RngKey;
+
+use super::client::{Engine, Executable};
+use super::manifest::{Manifest, Variant};
+use super::tensor::HostTensor;
+
+/// A fully padded minibatch, shaped exactly as the AOT executable expects
+/// (see `python/compile/model.py` docstring for the convention). Built by
+/// `train::padding` from sampled MFGs.
+#[derive(Debug, Clone)]
+pub struct PaddedBatch {
+    /// `[caps[0], F]` input features of the level-0 nodes.
+    pub feats: HostTensor,
+    /// Bottom layer first: `(idx_l [caps[l], K_l], cnt_l [caps[l]])`.
+    pub levels: Vec<(HostTensor, HostTensor)>,
+    /// `[batch]` seed labels (zero-filled beyond the real seed count).
+    pub labels: Vec<i32>,
+    /// `[batch]` 1.0 for real seeds, 0.0 for padding.
+    pub label_mask: Vec<f32>,
+}
+
+/// Result of one train step.
+#[derive(Debug)]
+pub struct TrainOutput {
+    pub loss: f32,
+    /// Gradients in `Variant::params` order.
+    pub grads: Vec<HostTensor>,
+}
+
+/// Result of one eval step.
+#[derive(Debug)]
+pub struct EvalOutput {
+    /// `[batch, classes]` seed logits.
+    pub logits: HostTensor,
+}
+
+/// One variant's compiled executables + metadata.
+pub struct ModelRuntime {
+    pub variant: Variant,
+    train_exe: Executable,
+    eval_exe: Executable,
+}
+
+impl ModelRuntime {
+    /// Compile the train+eval artifacts of `name` (once, at startup).
+    pub fn load(engine: &Engine, manifest: &Manifest, name: &str) -> Result<Self> {
+        let variant = manifest.variant(name)?.clone();
+        let train_exe = engine.load_hlo(manifest.hlo_path(&variant.train_hlo))?;
+        let eval_exe = engine.load_hlo(manifest.hlo_path(&variant.eval_hlo))?;
+        Ok(Self { variant, train_exe, eval_exe })
+    }
+
+    /// Xavier-uniform weights, zero biases — matches the reference
+    /// `init_params` in python/compile/model.py (scheme, not bits).
+    pub fn init_params(&self, seed: u64) -> Vec<HostTensor> {
+        let key = RngKey::new(seed).fold(0x9a7a_11ce);
+        self.variant
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let n = spec.numel();
+                if spec.shape.len() == 2 {
+                    let limit = (6.0 / (spec.shape[0] + spec.shape[1]) as f32).sqrt();
+                    let mut s = key.stream(i as u64);
+                    let data = (0..n).map(|_| s.next_range_f32(-limit, limit)).collect();
+                    HostTensor::f32(data, &spec.shape)
+                } else {
+                    HostTensor::zeros_f32(&spec.shape)
+                }
+            })
+            .collect()
+    }
+
+    fn check_batch(&self, batch: &PaddedBatch) -> Result<()> {
+        let v = &self.variant;
+        ensure!(
+            batch.levels.len() == v.layers(),
+            "batch has {} levels, variant expects {}",
+            batch.levels.len(),
+            v.layers()
+        );
+        ensure!(
+            batch.feats.shape() == [v.caps[0], v.feat_dim],
+            "feats shape {:?} != [{}, {}]",
+            batch.feats.shape(),
+            v.caps[0],
+            v.feat_dim
+        );
+        for (l, (idx, cnt)) in batch.levels.iter().enumerate() {
+            let layer = l + 1;
+            let k = v.fanout_at_layer(layer);
+            ensure!(
+                idx.shape() == [v.caps[layer], k],
+                "idx_{layer} shape {:?} != [{}, {}]",
+                idx.shape(),
+                v.caps[layer],
+                k
+            );
+            ensure!(cnt.shape() == [v.caps[layer]], "cnt_{layer} shape mismatch");
+        }
+        ensure!(batch.labels.len() == v.batch && batch.label_mask.len() == v.batch);
+        Ok(())
+    }
+
+    /// Flat argument assembly shared by train/eval (params first, then
+    /// feats, then per-layer idx/cnt — must match `arg_order` in model.py).
+    fn base_args(&self, params: &[HostTensor], batch: &PaddedBatch) -> Vec<HostTensor> {
+        let mut args = Vec::with_capacity(params.len() + 1 + 2 * batch.levels.len() + 3);
+        args.extend_from_slice(params);
+        args.push(batch.feats.clone());
+        for (idx, cnt) in &batch.levels {
+            args.push(idx.clone());
+            args.push(cnt.clone());
+        }
+        args
+    }
+
+    /// Run one training step: returns the masked-CE loss and grads.
+    pub fn train_step(
+        &self,
+        params: &[HostTensor],
+        batch: &PaddedBatch,
+        dropout_seed: i32,
+    ) -> Result<TrainOutput> {
+        self.check_batch(batch)?;
+        ensure!(params.len() == self.variant.params.len(), "param count mismatch");
+        let mut args = self.base_args(params, batch);
+        args.push(HostTensor::i32(batch.labels.clone(), &[self.variant.batch]));
+        args.push(HostTensor::f32(batch.label_mask.clone(), &[self.variant.batch]));
+        args.push(HostTensor::scalar_i32(dropout_seed));
+
+        let mut outs = self.train_exe.run(&args)?;
+        ensure!(outs.len() == 1 + params.len(), "train step returned {} outputs", outs.len());
+        let grads = outs.split_off(1);
+        let loss = outs[0].as_f32()?[0];
+        Ok(TrainOutput { loss, grads })
+    }
+
+    /// Run one eval step: seed logits only (no dropout).
+    pub fn eval_step(&self, params: &[HostTensor], batch: &PaddedBatch) -> Result<EvalOutput> {
+        self.check_batch(batch)?;
+        let args = self.base_args(params, batch);
+        let mut outs = self.eval_exe.run(&args)?;
+        ensure!(outs.len() == 1, "eval step returned {} outputs", outs.len());
+        Ok(EvalOutput { logits: outs.pop().unwrap() })
+    }
+}

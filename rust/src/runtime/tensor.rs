@@ -1,0 +1,135 @@
+//! Host-side tensors and conversion to/from PJRT literals.
+//!
+//! The training loop works with plain `Vec`-backed tensors; conversion to
+//! `xla::Literal` happens once per step at the executable boundary.
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal, PrimitiveType};
+
+/// A dense host tensor, either f32 or i32 — the only two dtypes crossing
+/// the L3↔L2 boundary (see `python/compile/model.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self::I32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        Self::f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Self::F32 { shape, .. } | Self::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Self::F32 { data, .. } => data.len(),
+            Self::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Self::F32 { data, .. } => Ok(data),
+            Self::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Self::I32 { data, .. } => Ok(data),
+            Self::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Build a PJRT literal (row-major, matching jax's default layout).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let lit = match self {
+            Self::F32 { data, shape } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)?
+            }
+            Self::I32 { data, shape } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match lit.primitive_type()? {
+            PrimitiveType::F32 => Ok(Self::F32 { data: lit.to_vec::<f32>()?, shape: dims }),
+            PrimitiveType::S32 => Ok(Self::I32 { data: lit.to_vec::<i32>()?, shape: dims }),
+            ty => bail!("unsupported literal type {ty:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_round_trip() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn i32_literal_round_trip() {
+        let t = HostTensor::i32(vec![-1, 0, 7, 42], &[4]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_round_trip() {
+        let t = HostTensor::scalar_i32(3);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = HostTensor::scalar_f32(1.0);
+        assert!(t.as_i32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+}

@@ -1,0 +1,168 @@
+//! Adaptive fanout schedules — the paper's §5 future-work extension:
+//! "use an adaptive fanout schedule to dynamically adjust the sampling
+//! fanouts based on the training dynamics."
+//!
+//! A schedule maps (epoch, observed loss) → per-level fanouts, always
+//! bounded by the AOT variant's compiled fanouts (shapes are static, so
+//! adaptation can only *shrink* the sample; the padding masks absorb the
+//! difference). Shrinking early epochs' fanouts cuts sampling + feature
+//! traffic when gradients are noisy anyway; the ablation bench
+//! (`report fanout-ablation`) measures the trade-off.
+
+/// A fanout schedule. Fanouts are top level first, like everywhere else.
+pub trait FanoutSchedule: Send + Sync {
+    /// Fanouts to use for `epoch` given the smoothed loss (`None` before
+    /// any loss is observed). Must be elementwise ≤ `max_fanouts`.
+    fn fanouts(&self, epoch: usize, smoothed_loss: Option<f32>) -> Vec<usize>;
+    fn max_fanouts(&self) -> &[usize];
+}
+
+/// The paper's default: constant fanouts.
+#[derive(Debug, Clone)]
+pub struct FixedSchedule {
+    pub fanouts: Vec<usize>,
+}
+
+impl FanoutSchedule for FixedSchedule {
+    fn fanouts(&self, _epoch: usize, _loss: Option<f32>) -> Vec<usize> {
+        self.fanouts.clone()
+    }
+
+    fn max_fanouts(&self) -> &[usize] {
+        &self.fanouts
+    }
+}
+
+/// Linear ramp: start at `start_frac` of the full fanout and reach 100%
+/// at `ramp_epochs`. A simple, deterministic instance of the paper's
+/// adaptive-fanout idea.
+#[derive(Debug, Clone)]
+pub struct RampSchedule {
+    pub max: Vec<usize>,
+    pub start_frac: f32,
+    pub ramp_epochs: usize,
+}
+
+impl FanoutSchedule for RampSchedule {
+    fn fanouts(&self, epoch: usize, _loss: Option<f32>) -> Vec<usize> {
+        let t = if self.ramp_epochs == 0 {
+            1.0
+        } else {
+            (epoch as f32 / self.ramp_epochs as f32).min(1.0)
+        };
+        let frac = self.start_frac + (1.0 - self.start_frac) * t;
+        self.max
+            .iter()
+            .map(|&f| ((f as f32 * frac).round() as usize).clamp(1, f))
+            .collect()
+    }
+
+    fn max_fanouts(&self) -> &[usize] {
+        &self.max
+    }
+}
+
+/// Loss-plateau escalation: keep fanouts at `start_frac` until the
+/// smoothed loss improves by less than `tol` between epochs, then step up
+/// by `step_frac` (sticky). Mirrors "adjust based on training dynamics".
+#[derive(Debug)]
+pub struct PlateauSchedule {
+    pub max: Vec<usize>,
+    pub start_frac: f32,
+    pub step_frac: f32,
+    pub tol: f32,
+    state: std::sync::Mutex<PlateauState>,
+}
+
+#[derive(Debug, Default)]
+struct PlateauState {
+    frac: f32,
+    last_loss: Option<f32>,
+}
+
+impl PlateauSchedule {
+    pub fn new(max: Vec<usize>, start_frac: f32, step_frac: f32, tol: f32) -> Self {
+        Self {
+            max,
+            start_frac,
+            step_frac,
+            tol,
+            state: std::sync::Mutex::new(PlateauState { frac: start_frac, last_loss: None }),
+        }
+    }
+}
+
+impl FanoutSchedule for PlateauSchedule {
+    fn fanouts(&self, _epoch: usize, smoothed_loss: Option<f32>) -> Vec<usize> {
+        let mut st = self.state.lock().unwrap();
+        if st.frac == 0.0 {
+            st.frac = self.start_frac;
+        }
+        if let (Some(prev), Some(cur)) = (st.last_loss, smoothed_loss) {
+            if prev - cur < self.tol {
+                st.frac = (st.frac + self.step_frac).min(1.0);
+            }
+        }
+        if smoothed_loss.is_some() {
+            st.last_loss = smoothed_loss;
+        }
+        let frac = st.frac;
+        self.max
+            .iter()
+            .map(|&f| ((f as f32 * frac).round() as usize).clamp(1, f))
+            .collect()
+    }
+
+    fn max_fanouts(&self) -> &[usize] {
+        &self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant() {
+        let s = FixedSchedule { fanouts: vec![15, 10, 5] };
+        assert_eq!(s.fanouts(0, None), vec![15, 10, 5]);
+        assert_eq!(s.fanouts(99, Some(0.1)), vec![15, 10, 5]);
+    }
+
+    #[test]
+    fn ramp_reaches_max_and_stays() {
+        let s = RampSchedule { max: vec![10, 10], start_frac: 0.3, ramp_epochs: 10 };
+        assert_eq!(s.fanouts(0, None), vec![3, 3]);
+        assert_eq!(s.fanouts(10, None), vec![10, 10]);
+        assert_eq!(s.fanouts(50, None), vec![10, 10]);
+        // Monotone non-decreasing.
+        let mut prev = 0;
+        for e in 0..12 {
+            let f = s.fanouts(e, None)[0];
+            assert!(f >= prev);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn ramp_never_exceeds_or_hits_zero() {
+        let s = RampSchedule { max: vec![3], start_frac: 0.0, ramp_epochs: 5 };
+        for e in 0..8 {
+            let f = s.fanouts(e, None)[0];
+            assert!((1..=3).contains(&f));
+        }
+    }
+
+    #[test]
+    fn plateau_escalates_on_stall() {
+        let s = PlateauSchedule::new(vec![10], 0.5, 0.25, 0.01);
+        assert_eq!(s.fanouts(0, Some(1.0)), vec![5]);
+        // Loss improving fast: stays.
+        assert_eq!(s.fanouts(1, Some(0.5)), vec![5]);
+        // Stalled: escalates.
+        assert_eq!(s.fanouts(2, Some(0.499)), vec![8]);
+        assert_eq!(s.fanouts(3, Some(0.498)), vec![10]);
+        // Capped at max.
+        assert_eq!(s.fanouts(4, Some(0.497)), vec![10]);
+    }
+}

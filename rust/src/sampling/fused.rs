@@ -1,0 +1,164 @@
+//! The paper's fused sampling kernel (Algorithm 1).
+//!
+//! One level of neighbor sampling that writes **straight into CSC**:
+//!
+//! * the row-pointer vector `R` falls out of the sampling loop for free
+//!   (a running sum of per-seed sample counts);
+//! * no intermediate COO graph is materialized, re-read, or converted;
+//! * compaction/relabeling happens in the same pass that writes `C`,
+//!   using the `M` map vector (here epoch-stamped so the reset is O(1),
+//!   see [`SamplerWorkspace`]).
+//!
+//! The sampling loop (the paper's first `for`) is parallelized with scoped
+//! threads over seeds — each seed draws from its own counter-based RNG
+//! stream, so the result is independent of thread scheduling. The relabel
+//! loop (the paper's second `for`) is kept sequential and deterministic:
+//! it is a pure O(nnz) pass over data already in cache.
+
+use crate::graph::{CscGraph, NodeId};
+use crate::util::par;
+
+use super::mfg::{Mfg, SamplerWorkspace};
+use super::rng::RngKey;
+
+/// Sample one level: for every seed draw at most `fanout` in-neighbors
+/// (without replacement), returning the relabeled bipartite CSC block and
+/// (inside it) the next level's seed set `src_nodes`.
+///
+/// Seeds must be unique (they are: they come from the previous level's
+/// relabel table, or from a minibatch of distinct training nodes).
+pub fn sample_level_fused(
+    graph: &CscGraph,
+    seeds: &[NodeId],
+    fanout: usize,
+    key: RngKey,
+    ws: &mut SamplerWorkspace,
+) -> Mfg {
+    assert!(fanout >= 1, "fanout must be >= 1");
+    let n = seeds.len();
+    ws.begin(graph.num_nodes());
+    ws.samples.resize(n * fanout, 0);
+    ws.counts.resize(n, 0);
+
+    // ---- Phase 1 (paper's first loop, parallel): sample into a strided
+    // buffer; counts[i] doubles as the degree R needs.
+    par::par_zip_chunks(
+        &mut ws.samples,
+        &mut ws.counts,
+        fanout,
+        Vec::new,
+        |scratch, i, chunk, cnt| {
+            let v = seeds[i];
+            let neigh = graph.neighbors(v);
+            let d = neigh.len();
+            if d <= fanout {
+                chunk[..d].copy_from_slice(neigh);
+                *cnt = d as u32;
+            } else {
+                let mut s = key.stream(v as u64);
+                s.sample_distinct(d, fanout, scratch);
+                for (slot, &pos) in chunk.iter_mut().zip(scratch.iter()) {
+                    *slot = neigh[pos];
+                }
+                *cnt = fanout as u32;
+            }
+        },
+    );
+
+    // ---- Phase 2 (paper's second loop): R from the running sum, C and
+    // the relabel table in one pass — no COO, no conversion.
+    let mut indptr = Vec::with_capacity(n + 1);
+    indptr.push(0usize);
+    let mut total = 0usize;
+    for i in 0..n {
+        total += ws.counts[i] as usize;
+        indptr.push(total);
+    }
+
+    let mut src_nodes = Vec::with_capacity(n + total);
+    for &v in seeds {
+        let pos = ws.intern(v, &mut src_nodes);
+        debug_assert_eq!(pos as usize, src_nodes.len() - 1, "seeds must be unique");
+    }
+    let mut indices = Vec::with_capacity(total);
+    for i in 0..n {
+        let base = i * fanout;
+        for j in 0..ws.counts[i] as usize {
+            indices.push(ws.intern(ws.samples[base + j], &mut src_nodes));
+        }
+    }
+
+    Mfg { indptr, indices, src_nodes, n_dst: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::erdos_renyi;
+
+    fn toy() -> CscGraph {
+        // 0 <- {1,2,3}; 1 <- {2}; 2 <- {}; 3 <- {0}
+        CscGraph::new(vec![0, 3, 4, 4, 5], vec![1, 2, 3, 2, 0]).unwrap()
+    }
+
+    #[test]
+    fn low_degree_takes_all_neighbors() {
+        let g = toy();
+        let mut ws = SamplerWorkspace::new();
+        let mfg = sample_level_fused(&g, &[0, 1, 2], 5, RngKey::new(1), &mut ws);
+        mfg.validate(&[0, 1, 2], 5).unwrap();
+        assert_eq!(mfg.degree(0), 3);
+        assert_eq!(mfg.degree(1), 1);
+        assert_eq!(mfg.degree(2), 0);
+        // Seed prefix + newly seen {3} (1 and 2 are already seeds).
+        assert_eq!(mfg.src_nodes, vec![0, 1, 2, 3]);
+        // Neighbor order preserved when taking all.
+        let n0: Vec<u32> = mfg.neighbors(0).to_vec();
+        assert_eq!(n0, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn high_degree_subsamples_without_replacement() {
+        let g = erdos_renyi(200, 30, RngKey::new(2));
+        let mut ws = SamplerWorkspace::new();
+        let seeds: Vec<NodeId> = (0..50).collect();
+        let mfg = sample_level_fused(&g, &seeds, 10, RngKey::new(3), &mut ws);
+        mfg.validate(&seeds, 10).unwrap();
+        for i in 0..50 {
+            assert_eq!(mfg.degree(i), g.degree(seeds[i]).min(10));
+            // Without replacement: positions distinct (graph may hold
+            // duplicate edges, so compare positions via sorted dedup of
+            // the *sampled global ids* against multiset membership).
+            let picked: Vec<NodeId> =
+                mfg.neighbors(i).iter().map(|&p| mfg.src_nodes[p as usize]).collect();
+            for &s in &picked {
+                assert!(g.neighbors(seeds[i]).contains(&s));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_key() {
+        let g = erdos_renyi(300, 20, RngKey::new(4));
+        let seeds: Vec<NodeId> = (0..100).step_by(3).collect();
+        let mut ws = SamplerWorkspace::new();
+        let a = sample_level_fused(&g, &seeds, 5, RngKey::new(5), &mut ws);
+        let b = sample_level_fused(&g, &seeds, 5, RngKey::new(5), &mut ws);
+        assert_eq!(a, b);
+        let c = sample_level_fused(&g, &seeds, 5, RngKey::new(6), &mut ws);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn workspace_reuse_is_clean_across_graphs() {
+        let g1 = erdos_renyi(100, 10, RngKey::new(7));
+        let g2 = erdos_renyi(50, 5, RngKey::new(8));
+        let mut ws = SamplerWorkspace::new();
+        let seeds1: Vec<NodeId> = (0..20).collect();
+        let seeds2: Vec<NodeId> = (0..10).collect();
+        sample_level_fused(&g1, &seeds1, 4, RngKey::new(9), &mut ws);
+        let m = sample_level_fused(&g2, &seeds2, 4, RngKey::new(9), &mut ws);
+        m.validate(&seeds2, 4).unwrap();
+        assert!(m.src_nodes.iter().all(|&v| (v as usize) < 50));
+    }
+}

@@ -1,0 +1,191 @@
+//! Message Flow Graphs — the bipartite per-layer graphs produced by
+//! sampling (paper §3.1): `G^l = (V^{l-1}, V^l; E^{l-1})` with edges from
+//! source nodes (level l-1) to target nodes (level l), stored in CSC so
+//! GNN aggregation fetches a node's sampled neighbors in O(1).
+
+use anyhow::{ensure, Result};
+
+use crate::graph::NodeId;
+
+/// One sampled bipartite level in CSC form with *relabeled* (compacted)
+/// indices.
+///
+/// Convention (DGL's, which the L2 model relies on): the destination
+/// nodes are the **prefix** of `src_nodes`, i.e. `src_nodes[i]` for
+/// `i < n_dst` is destination `i` itself. This is the one deliberate
+/// deviation from the paper's Algorithm 1 (which builds `V^{l-1}` from
+/// sampled sources only): GraphSAGE's self path needs `h_dst` at every
+/// level, so the relabel map is seeded with the destinations first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mfg {
+    /// `R` — row pointers over destinations, `len == n_dst + 1`.
+    pub indptr: Vec<usize>,
+    /// `C` — compacted source positions (into `src_nodes`), `len == nnz`.
+    pub indices: Vec<u32>,
+    /// Global ids of the level-(l-1) node array; `[..n_dst]` mirrors the
+    /// destination (seed) list.
+    pub src_nodes: Vec<NodeId>,
+    /// Number of destination (seed) nodes at this level.
+    pub n_dst: usize,
+}
+
+impl Mfg {
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn num_src(&self) -> usize {
+        self.src_nodes.len()
+    }
+
+    /// Sampled in-neighbor count of destination `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Compacted neighbor positions of destination `i`.
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.indices[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    /// Check every structural invariant; used by tests and debug builds.
+    pub fn validate(&self, seeds: &[NodeId], fanout: usize) -> Result<()> {
+        ensure!(self.n_dst == seeds.len(), "n_dst != |seeds|");
+        ensure!(self.indptr.len() == self.n_dst + 1, "indptr length");
+        ensure!(self.indptr[0] == 0, "indptr[0]");
+        ensure!(self.indptr.windows(2).all(|w| w[0] <= w[1]), "indptr monotone");
+        ensure!(*self.indptr.last().unwrap() == self.indices.len(), "nnz");
+        ensure!(self.src_nodes.len() >= self.n_dst, "src shorter than dst");
+        ensure!(&self.src_nodes[..self.n_dst] == seeds, "dst prefix != seeds");
+        for i in 0..self.n_dst {
+            ensure!(self.degree(i) <= fanout, "degree exceeds fanout");
+        }
+        ensure!(
+            self.indices.iter().all(|&p| (p as usize) < self.src_nodes.len()),
+            "compacted index out of range"
+        );
+        // src_nodes must be unique (it is a relabel table).
+        let mut seen = std::collections::HashSet::with_capacity(self.src_nodes.len());
+        ensure!(self.src_nodes.iter().all(|&v| seen.insert(v)), "duplicate src node");
+        Ok(())
+    }
+}
+
+/// Reusable scratch space shared across sampling calls so the hot loop
+/// allocates nothing proportional to the *full* graph per call.
+///
+/// `map` is the paper's `M` vector (global node id → compacted position)
+/// with epoch stamping instead of a `fill(-1)` per level: an entry is
+/// valid only if its stamp half matches `stamp`, so resetting is O(1).
+/// Stamp and index are packed into one u64 (`stamp << 32 | idx`) so a
+/// lookup touches one cache line instead of two (§Perf).
+#[derive(Debug, Default)]
+pub struct SamplerWorkspace {
+    pub(crate) map: Vec<u64>,
+    pub(crate) stamp: u32,
+    /// Strided sample buffer for the fused kernel's parallel phase.
+    pub(crate) samples: Vec<NodeId>,
+    /// Per-seed sample counts (fused) / scratch degrees (baseline).
+    pub(crate) counts: Vec<u32>,
+    /// Baseline scratch: materialized COO src/dst arrays.
+    pub(crate) coo_src: Vec<NodeId>,
+    pub(crate) coo_dst: Vec<NodeId>,
+}
+
+impl SamplerWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure the relabel map covers `num_nodes` and start a fresh epoch.
+    /// (Public for benches.)
+    pub fn begin(&mut self, num_nodes: usize) {
+        if self.map.len() < num_nodes {
+            self.map.resize(num_nodes, 0);
+        }
+        // Stamp 0 is reserved for "never touched"; on wrap, hard-reset.
+        self.stamp = self.stamp.wrapping_add(1);
+        if self.stamp == 0 {
+            self.map.fill(0);
+            self.stamp = 1;
+        }
+    }
+
+    /// Map `v` to its compacted position, appending to `order` on first
+    /// sight. The sequential heart of Algorithm 1's second loop.
+    #[inline]
+    /// (Public for benches.)
+    pub fn intern(&mut self, v: NodeId, order: &mut Vec<NodeId>) -> u32 {
+        let vi = v as usize;
+        let entry = self.map[vi];
+        if (entry >> 32) as u32 == self.stamp {
+            entry as u32
+        } else {
+            let idx = order.len() as u32;
+            order.push(v);
+            self.map[vi] = ((self.stamp as u64) << 32) | idx as u64;
+            idx
+        }
+    }
+
+    /// Compacted position of an already-interned node (panics in debug if
+    /// `v` was not interned this epoch). Used by the baseline converter.
+    #[inline]
+    pub(crate) fn position(&self, v: NodeId) -> u32 {
+        let entry = self.map[v as usize];
+        debug_assert_eq!((entry >> 32) as u32, self.stamp, "node {v} not interned");
+        entry as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_epoch_reset_is_cheap_and_correct() {
+        let mut ws = SamplerWorkspace::new();
+        ws.begin(10);
+        let mut order = Vec::new();
+        assert_eq!(ws.intern(3, &mut order), 0);
+        assert_eq!(ws.intern(7, &mut order), 1);
+        assert_eq!(ws.intern(3, &mut order), 0);
+        assert_eq!(order, vec![3, 7]);
+
+        ws.begin(10); // new epoch invalidates everything
+        let mut order2 = Vec::new();
+        assert_eq!(ws.intern(7, &mut order2), 0);
+        assert_eq!(order2, vec![7]);
+    }
+
+    #[test]
+    fn workspace_grows_on_demand() {
+        let mut ws = SamplerWorkspace::new();
+        ws.begin(4);
+        let mut order = Vec::new();
+        ws.intern(3, &mut order);
+        ws.begin(100);
+        ws.intern(99, &mut order);
+    }
+
+    #[test]
+    fn mfg_validate_catches_corruption() {
+        let mfg = Mfg {
+            indptr: vec![0, 1, 2],
+            indices: vec![0, 2],
+            src_nodes: vec![5, 6, 9],
+            n_dst: 2,
+        };
+        assert!(mfg.validate(&[5, 6], 1).is_ok());
+        assert!(mfg.validate(&[5, 7], 1).is_err()); // wrong seeds
+        assert!(mfg.validate(&[5, 6], 0).is_err()); // fanout exceeded
+        let mut bad = mfg.clone();
+        bad.indices[0] = 9;
+        assert!(bad.validate(&[5, 6], 1).is_err()); // index out of range
+        let mut dup = mfg;
+        dup.src_nodes = vec![5, 6, 5];
+        assert!(dup.validate(&[5, 6], 1).is_err()); // duplicate src
+    }
+}

@@ -1,0 +1,21 @@
+//! Graph sampling: the paper's core contribution.
+//!
+//! * [`fused`] — the single-pass CSC-direct kernel (Algorithm 1).
+//! * [`baseline`] — the DGL-style two-step COO pipeline it is compared to.
+//! * [`pipeline`] — the L-level recursive driver + minibatch schedule.
+//! * [`adaptive`] — adaptive fanout schedules (paper §5 future work).
+//! * [`rng`] — counter-based RNG making both kernels draw identical
+//!   samples (and the parallel loops deterministic).
+
+pub mod adaptive;
+pub mod baseline;
+pub mod fused;
+pub mod mfg;
+pub mod pipeline;
+pub mod rng;
+
+pub use baseline::sample_level_baseline;
+pub use fused::sample_level_fused;
+pub use mfg::{Mfg, SamplerWorkspace};
+pub use pipeline::{sample_mfgs, KernelKind, MinibatchSchedule};
+pub use rng::{RngKey, RngStream};

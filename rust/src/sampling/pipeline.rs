@@ -1,0 +1,155 @@
+//! Multi-level sampling driver + minibatch iteration (paper §3.1, Fig 1).
+//!
+//! Recursively applies a level sampler for `l = L, ..., 1`: the source
+//! nodes of one level become the seeds of the level below. Returns the
+//! MFG stack **bottom layer first** (the order the L2 model consumes).
+
+use crate::graph::{CscGraph, NodeId};
+
+use super::baseline::sample_level_baseline;
+use super::fused::sample_level_fused;
+use super::mfg::{Mfg, SamplerWorkspace};
+use super::rng::RngKey;
+
+/// Which level kernel to use — the Fig 5 / Fig 6 A-B comparison axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The paper's Algorithm 1 (CSC-direct, single pass).
+    Fused,
+    /// DGL-style two-step COO pipeline.
+    Baseline,
+}
+
+impl KernelKind {
+    pub fn sample_level(
+        self,
+        graph: &CscGraph,
+        seeds: &[NodeId],
+        fanout: usize,
+        key: RngKey,
+        ws: &mut SamplerWorkspace,
+    ) -> Mfg {
+        match self {
+            Self::Fused => sample_level_fused(graph, seeds, fanout, key, ws),
+            Self::Baseline => sample_level_baseline(graph, seeds, fanout, key, ws),
+        }
+    }
+}
+
+/// Sample all `L` levels for one minibatch of seed nodes.
+///
+/// `fanouts` is top level first — `(N_L, ..., N_1)`, the paper's tuple
+/// notation. The returned vector is bottom layer first: `out[0]` is the
+/// layer-1 MFG whose `src_nodes` are the input (level-0) nodes.
+pub fn sample_mfgs(
+    graph: &CscGraph,
+    seeds: &[NodeId],
+    fanouts: &[usize],
+    key: RngKey,
+    ws: &mut SamplerWorkspace,
+    kind: KernelKind,
+) -> Vec<Mfg> {
+    let mut out = Vec::with_capacity(fanouts.len());
+    let mut cur: Vec<NodeId> = seeds.to_vec();
+    for (li, &f) in fanouts.iter().enumerate() {
+        let level_key = key.fold(0x1e7e1).fold(li as u64);
+        let mfg = kind.sample_level(graph, &cur, f, level_key, ws);
+        cur = mfg.src_nodes.clone();
+        out.push(mfg);
+    }
+    out.reverse();
+    out
+}
+
+/// Per-epoch minibatch schedule: a deterministic shuffle of the seed pool
+/// chopped into fixed-size batches (the trailing remainder is dropped, as
+/// DGL's `drop_last=True` — keeps AOT shapes full).
+pub struct MinibatchSchedule {
+    order: Vec<NodeId>,
+    batch: usize,
+}
+
+impl MinibatchSchedule {
+    pub fn new(train_ids: &[NodeId], batch: usize, epoch_key: RngKey) -> Self {
+        assert!(batch >= 1);
+        let mut order = train_ids.to_vec();
+        // Fisher–Yates with the epoch key.
+        let mut s = epoch_key.fold(0x5c4ed).stream(0);
+        for i in (1..order.len()).rev() {
+            order.swap(i, s.next_below(i + 1));
+        }
+        Self { order, batch }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.order.len() / self.batch
+    }
+
+    pub fn batch(&self, i: usize) -> &[NodeId] {
+        &self.order[i * self.batch..(i + 1) * self.batch]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &[NodeId]> {
+        (0..self.num_batches()).map(move |i| self.batch(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::erdos_renyi;
+
+    #[test]
+    fn levels_chain_and_are_bottom_first() {
+        let g = erdos_renyi(400, 15, RngKey::new(1));
+        let seeds: Vec<NodeId> = (0..32).collect();
+        let mut ws = SamplerWorkspace::new();
+        let fanouts = [4, 3, 2]; // N_3, N_2, N_1
+        let mfgs = sample_mfgs(&g, &seeds, &fanouts, RngKey::new(2), &mut ws, KernelKind::Fused);
+        assert_eq!(mfgs.len(), 3);
+        // Top MFG (last) has the minibatch as dst.
+        assert_eq!(mfgs[2].n_dst, 32);
+        assert_eq!(&mfgs[2].src_nodes[..32], &seeds[..]);
+        // Chaining: dst set of level l == src set of level l+1.
+        assert_eq!(mfgs[1].n_dst, mfgs[2].num_src());
+        assert_eq!(mfgs[0].n_dst, mfgs[1].num_src());
+        assert_eq!(&mfgs[1].src_nodes[..mfgs[1].n_dst], &mfgs[2].src_nodes[..]);
+        // Fanouts applied top-first: top level sampled ≤ 4 per seed.
+        for i in 0..mfgs[2].n_dst {
+            assert!(mfgs[2].degree(i) <= 4);
+        }
+        for i in 0..mfgs[0].n_dst {
+            assert!(mfgs[0].degree(i) <= 2);
+        }
+    }
+
+    #[test]
+    fn fused_and_baseline_pipelines_identical() {
+        let g = erdos_renyi(600, 20, RngKey::new(3));
+        let seeds: Vec<NodeId> = (100..164).collect();
+        let mut ws_a = SamplerWorkspace::new();
+        let mut ws_b = SamplerWorkspace::new();
+        let a = sample_mfgs(&g, &seeds, &[5, 5], RngKey::new(4), &mut ws_a, KernelKind::Fused);
+        let b = sample_mfgs(&g, &seeds, &[5, 5], RngKey::new(4), &mut ws_b, KernelKind::Baseline);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn schedule_is_permutation_and_deterministic() {
+        let ids: Vec<NodeId> = (0..103).collect();
+        let s1 = MinibatchSchedule::new(&ids, 10, RngKey::new(5));
+        let s2 = MinibatchSchedule::new(&ids, 10, RngKey::new(5));
+        let s3 = MinibatchSchedule::new(&ids, 10, RngKey::new(6));
+        assert_eq!(s1.num_batches(), 10); // 103/10, remainder dropped
+        let flat1: Vec<NodeId> = s1.iter().flatten().copied().collect();
+        let flat2: Vec<NodeId> = s2.iter().flatten().copied().collect();
+        assert_eq!(flat1, flat2);
+        let flat3: Vec<NodeId> = s3.iter().flatten().copied().collect();
+        assert_ne!(flat1, flat3);
+        // Permutation: all distinct, all in range.
+        let mut sorted = flat1.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100);
+    }
+}

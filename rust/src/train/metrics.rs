@@ -1,0 +1,131 @@
+//! Per-epoch metrics: loss/accuracy plus the time breakdown that Fig 5/6
+//! are made of (sampling vs feature exchange vs compute vs grad sync).
+
+use std::time::Instant;
+
+use crate::dist::CommStats;
+use crate::runtime::HostTensor;
+
+/// Wall-clock phase accumulator for one worker's epoch.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    pub sample_s: f64,
+    pub feature_s: f64,
+    pub compute_s: f64,
+    pub sync_s: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.sample_s + self.feature_s + self.compute_s + self.sync_s
+    }
+
+    pub fn add(&mut self, other: &PhaseTimes) {
+        self.sample_s += other.sample_s;
+        self.feature_s += other.feature_s;
+        self.compute_s += other.compute_s;
+        self.sync_s += other.sync_s;
+    }
+
+    pub fn scale(&self, k: f64) -> PhaseTimes {
+        PhaseTimes {
+            sample_s: self.sample_s * k,
+            feature_s: self.feature_s * k,
+            compute_s: self.compute_s * k,
+            sync_s: self.sync_s * k,
+        }
+    }
+}
+
+/// Scoped phase timer: `let _t = Phase::new(&mut times.sample_s);`…
+/// explicit `stop` keeps borrowck simple instead.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = (now - self.0).as_secs_f64();
+        self.0 = now;
+        dt
+    }
+}
+
+/// One worker's summary for one epoch.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub batches: usize,
+    pub mean_loss: f32,
+    pub times: PhaseTimes,
+    pub wall_s: f64,
+    /// Communication delta for this epoch (rank 0 only; empty elsewhere).
+    pub comm: Option<CommStats>,
+    /// Accuracy on the last batch of the epoch (if eval was run).
+    pub batch_acc: Option<f32>,
+}
+
+/// Masked argmax accuracy of `[batch, classes]` logits.
+pub fn accuracy(logits: &HostTensor, labels: &[i32], mask: &[f32]) -> f32 {
+    let shape = logits.shape();
+    let (b, c) = (shape[0], shape[1]);
+    let data = logits.as_f32().expect("logits are f32");
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..b {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let row = &data[i * c..(i + 1) * c];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if pred as i32 == labels[i] {
+            correct += 1;
+        }
+        total += 1;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f32 / total as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_masked() {
+        let logits = HostTensor::f32(vec![1.0, 0.0, 0.0, 9.0, 0.5, 0.4], &[3, 2]);
+        let labels = [0, 1, 1];
+        // Row 2 predicts 0 but is masked out.
+        assert_eq!(accuracy(&logits, &labels, &[1.0, 1.0, 0.0]), 1.0);
+        assert!((accuracy(&logits, &labels, &[1.0, 1.0, 1.0]) - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(accuracy(&logits, &labels, &[0.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn phase_times_accumulate() {
+        let mut a = PhaseTimes { sample_s: 1.0, feature_s: 2.0, compute_s: 3.0, sync_s: 4.0 };
+        a.add(&a.clone());
+        assert_eq!(a.total(), 20.0);
+        let h = a.scale(0.5);
+        assert_eq!(h.total(), 10.0);
+    }
+
+    #[test]
+    fn stopwatch_laps_monotonically() {
+        let mut sw = Stopwatch::start();
+        let a = sw.lap();
+        let b = sw.lap();
+        assert!(a >= 0.0 && b >= 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Training stack: MFG padding, optimizers, metrics, and the distributed
+//! trainer that drives sampling → feature exchange → AOT compute → grad
+//! sync per minibatch.
+
+pub mod metrics;
+pub mod optimizer;
+pub mod padding;
+pub mod trainer;
+
+pub use metrics::{accuracy, EpochStats, PhaseTimes, Stopwatch};
+pub use optimizer::{Adam, Optimizer, Sgd};
+pub use padding::pad_batch;
+pub use trainer::{train_distributed, AggEpoch, ScheduleKind, TrainConfig, TrainReport};

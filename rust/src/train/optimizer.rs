@@ -1,0 +1,170 @@
+//! Optimizers applied on the rust side after the gradient all-reduce.
+//!
+//! The AOT train step returns raw gradients; every worker applies the
+//! same update to its own (identical) parameter copy, which keeps
+//! parameters consistent without a parameter server — the paper's
+//! data-parallel scheme.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::HostTensor;
+
+/// A parameter-update rule over flat f32 tensors.
+pub trait Optimizer: Send {
+    fn step(&mut self, params: &mut [HostTensor], grads: &[HostTensor]) -> Result<()>;
+    fn lr(&self) -> f32;
+}
+
+/// SGD with optional momentum.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Self { lr, momentum, velocity: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [HostTensor], grads: &[HostTensor]) -> Result<()> {
+        ensure!(params.len() == grads.len());
+        if self.velocity.is_empty() && self.momentum != 0.0 {
+            self.velocity = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        }
+        for (pi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let (HostTensor::F32 { data: pd, .. }, HostTensor::F32 { data: gd, .. }) = (p, g)
+            else {
+                anyhow::bail!("optimizer expects f32 tensors")
+            };
+            ensure!(pd.len() == gd.len(), "param/grad length mismatch at {pi}");
+            if self.momentum == 0.0 {
+                for (x, dx) in pd.iter_mut().zip(gd) {
+                    *x -= self.lr * dx;
+                }
+            } else {
+                let v = &mut self.velocity[pi];
+                for ((x, dx), vi) in pd.iter_mut().zip(gd).zip(v.iter_mut()) {
+                    *vi = self.momentum * *vi + dx;
+                    *x -= self.lr * *vi;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+/// Adam (Kingma & Ba) — the de-facto default for GraphSAGE on OGB; the
+/// paper's lr of 0.006 is used with this by default.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Self { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [HostTensor], grads: &[HostTensor]) -> Result<()> {
+        ensure!(params.len() == grads.len());
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| vec![0.0; p.len()]).collect();
+            self.v = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for (pi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let (HostTensor::F32 { data: pd, .. }, HostTensor::F32 { data: gd, .. }) = (p, g)
+            else {
+                anyhow::bail!("optimizer expects f32 tensors")
+            };
+            ensure!(pd.len() == gd.len(), "param/grad length mismatch at {pi}");
+            let (m, v) = (&mut self.m[pi], &mut self.v[pi]);
+            for i in 0..pd.len() {
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gd[i];
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gd[i] * gd[i];
+                let mh = m[i] / bc1;
+                let vh = v[i] / bc2;
+                pd[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+            }
+        }
+        Ok(())
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+/// Parse `sgd`, `sgd:0.9` (momentum) or `adam` into an optimizer.
+pub fn by_name(name: &str, lr: f32) -> Result<Box<dyn Optimizer>> {
+    match name.split_once(':') {
+        None if name == "adam" => Ok(Box::new(Adam::new(lr))),
+        None if name == "sgd" => Ok(Box::new(Sgd::new(lr, 0.0))),
+        Some(("sgd", m)) => Ok(Box::new(Sgd::new(lr, m.parse()?))),
+        _ => anyhow::bail!("unknown optimizer {name:?} (want adam | sgd | sgd:<momentum>)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_grad(p: &HostTensor) -> HostTensor {
+        // grad of 0.5*||x||² is x.
+        HostTensor::f32(p.as_f32().unwrap().to_vec(), p.shape())
+    }
+
+    fn run(opt: &mut dyn Optimizer, steps: usize) -> f32 {
+        let mut params = vec![HostTensor::f32(vec![1.0, -2.0, 3.0], &[3])];
+        for _ in 0..steps {
+            let g = vec![quad_grad(&params[0])];
+            opt.step(&mut params, &g).unwrap();
+        }
+        params[0].as_f32().unwrap().iter().map(|x| x * x).sum::<f32>()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let start = 1.0f32 + 4.0 + 9.0;
+        assert!(run(&mut Sgd::new(0.1, 0.0), 50) < 1e-3 * start);
+    }
+
+    #[test]
+    fn momentum_and_adam_converge_too() {
+        let start = 14.0f32;
+        assert!(run(&mut Sgd::new(0.05, 0.9), 80) < 1e-2 * start);
+        assert!(run(&mut Adam::new(0.2), 100) < 1e-2 * start);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let mut opt = Sgd::new(0.1, 0.0);
+        let mut params = vec![HostTensor::f32(vec![1.0], &[1])];
+        let grads = vec![HostTensor::f32(vec![1.0, 2.0], &[2])];
+        assert!(opt.step(&mut params, &grads).is_err());
+    }
+
+    #[test]
+    fn by_name_parses() {
+        assert!(by_name("adam", 0.006).is_ok());
+        assert!(by_name("sgd", 0.1).is_ok());
+        assert_eq!(by_name("sgd:0.9", 0.1).unwrap().lr(), 0.1);
+        assert!(by_name("lbfgs", 0.1).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Pad sampled MFGs to the fixed shapes of an AOT model variant.
+//!
+//! The AOT executables have static shapes (`Variant::caps`); sampled MFGs
+//! are smaller and ragged. Padding appends inert rows: `cnt = 0` (the
+//! aggregation kernel emits zeros), `idx = 0` (points at a real row but is
+//! masked by `cnt`), `label_mask = 0` (excluded from the loss). The L2
+//! tests (`python/tests/test_model.py::test_padding_nodes_are_inert`)
+//! and `rust/tests/train_e2e.rs` pin the inertness.
+
+use anyhow::{ensure, Result};
+
+use crate::graph::NodeId;
+use crate::runtime::{HostTensor, PaddedBatch, Variant};
+use crate::sampling::Mfg;
+
+/// Build a [`PaddedBatch`] from sampled MFGs (bottom layer first) and the
+/// fetched input features (rows for `mfgs[0].src_nodes`, row-major).
+pub fn pad_batch(
+    variant: &Variant,
+    mfgs: &[Mfg],
+    input_feats: &[f32],
+    labels_of: impl Fn(NodeId) -> i32,
+) -> Result<PaddedBatch> {
+    let l_count = variant.layers();
+    ensure!(mfgs.len() == l_count, "expected {} MFG levels, got {}", l_count, mfgs.len());
+    let f = variant.feat_dim;
+    let n0 = mfgs[0].num_src();
+    ensure!(
+        input_feats.len() == n0 * f,
+        "feature buffer holds {} rows, sampled graph has {n0}",
+        input_feats.len() / f.max(1)
+    );
+
+    // ---- Features: sampled rows, then zero padding to caps[0].
+    let cap0 = variant.caps[0];
+    ensure!(n0 <= cap0, "level-0 nodes {n0} exceed cap {cap0} — rebuild artifacts with larger caps");
+    let mut feats = Vec::with_capacity(cap0 * f);
+    feats.extend_from_slice(input_feats);
+    feats.resize(cap0 * f, 0.0);
+
+    // ---- Per-layer neighbor tables.
+    let mut levels = Vec::with_capacity(l_count);
+    for (li, mfg) in mfgs.iter().enumerate() {
+        let layer = li + 1;
+        let k = variant.fanout_at_layer(layer);
+        let cap_dst = variant.caps[layer];
+        let cap_src = variant.caps[layer - 1];
+        ensure!(
+            mfg.n_dst <= cap_dst,
+            "layer {layer}: {} dst nodes exceed cap {cap_dst}",
+            mfg.n_dst
+        );
+        ensure!(
+            mfg.num_src() <= cap_src,
+            "layer {layer}: {} src nodes exceed cap {cap_src}",
+            mfg.num_src()
+        );
+        let mut idx = vec![0i32; cap_dst * k];
+        let mut cnt = vec![0i32; cap_dst];
+        for i in 0..mfg.n_dst {
+            let neigh = mfg.neighbors(i);
+            ensure!(neigh.len() <= k, "layer {layer}: degree {} > fanout {k}", neigh.len());
+            for (j, &p) in neigh.iter().enumerate() {
+                idx[i * k + j] = p as i32;
+            }
+            cnt[i] = neigh.len() as i32;
+        }
+        levels.push((
+            HostTensor::i32(idx, &[cap_dst, k]),
+            HostTensor::i32(cnt, &[cap_dst]),
+        ));
+    }
+
+    // ---- Seed labels + mask (seeds are the top MFG's dst prefix).
+    let top = mfgs.last().unwrap();
+    let batch = variant.batch;
+    ensure!(top.n_dst <= batch, "seed count {} exceeds batch {batch}", top.n_dst);
+    let mut labels = vec![0i32; batch];
+    let mut label_mask = vec![0f32; batch];
+    for (i, &v) in top.src_nodes[..top.n_dst].iter().enumerate() {
+        labels[i] = labels_of(v);
+        label_mask[i] = 1.0;
+    }
+
+    Ok(PaddedBatch {
+        feats: HostTensor::f32(feats, &[cap0, f]),
+        levels,
+        labels,
+        label_mask,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::erdos_renyi;
+    use crate::runtime::Manifest;
+    use crate::sampling::rng::RngKey;
+    use crate::sampling::{sample_mfgs, KernelKind, SamplerWorkspace};
+
+    fn variant() -> Variant {
+        // Hand-built variant: B=8, fanouts (3,2) → caps (96, 32, 8).
+        let text = r#"{"variants": {"t": {
+            "feat_dim": 4, "hidden": 8, "classes": 3, "batch": 8,
+            "fanouts": [3, 2], "caps": [96, 32, 8], "dropout": 0.0,
+            "params": [{"name": "w", "shape": [4, 8]}],
+            "train_hlo": "x", "eval_hlo": "x",
+            "train_args": [], "eval_args": []
+        }}}"#;
+        Manifest::parse(text, std::path::Path::new("."))
+            .unwrap()
+            .variant("t")
+            .unwrap()
+            .clone()
+    }
+
+    #[test]
+    fn shapes_and_masks() {
+        let v = variant();
+        let g = erdos_renyi(200, 6, RngKey::new(1));
+        let seeds: Vec<NodeId> = (0..8).collect();
+        let mut ws = SamplerWorkspace::new();
+        let mfgs = sample_mfgs(&g, &seeds, &v.fanouts, RngKey::new(2), &mut ws, KernelKind::Fused);
+        let n0 = mfgs[0].num_src();
+        let feats = vec![1.5f32; n0 * v.feat_dim];
+        let batch = pad_batch(&v, &mfgs, &feats, |n| (n % 3) as i32).unwrap();
+
+        assert_eq!(batch.feats.shape(), &[96, 4]);
+        assert_eq!(batch.levels.len(), 2);
+        assert_eq!(batch.levels[0].0.shape(), &[32, 2]); // layer 1: fanout N_1=2
+        assert_eq!(batch.levels[1].0.shape(), &[8, 3]); // layer 2: fanout N_2=3
+        assert_eq!(batch.labels.len(), 8);
+        assert!(batch.label_mask.iter().all(|&m| m == 1.0)); // full batch
+        // Labels follow the seed prefix.
+        for (i, &s) in seeds.iter().enumerate() {
+            assert_eq!(batch.labels[i], (s % 3) as i32);
+        }
+        // Feature padding region is zeros.
+        let fd = batch.feats.as_f32().unwrap();
+        assert!(fd[n0 * 4..].iter().all(|&x| x == 0.0));
+        assert!(fd[..n0 * 4].iter().all(|&x| x == 1.5));
+        // Padded rows have cnt 0.
+        let cnt1 = batch.levels[0].1.as_i32().unwrap();
+        assert!(cnt1[mfgs[0].n_dst..].iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn rejects_oversized_inputs() {
+        let mut v = variant();
+        v.caps = vec![4, 4, 8]; // deliberately too small
+        let g = erdos_renyi(200, 6, RngKey::new(1));
+        let seeds: Vec<NodeId> = (0..8).collect();
+        let mut ws = SamplerWorkspace::new();
+        let mfgs = sample_mfgs(&g, &seeds, &v.fanouts, RngKey::new(2), &mut ws, KernelKind::Fused);
+        let feats = vec![0f32; mfgs[0].num_src() * v.feat_dim];
+        assert!(pad_batch(&v, &mfgs, &feats, |_| 0).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_feature_count() {
+        let v = variant();
+        let g = erdos_renyi(100, 4, RngKey::new(3));
+        let seeds: Vec<NodeId> = (0..8).collect();
+        let mut ws = SamplerWorkspace::new();
+        let mfgs = sample_mfgs(&g, &seeds, &v.fanouts, RngKey::new(4), &mut ws, KernelKind::Fused);
+        let feats = vec![0f32; 3]; // wrong
+        assert!(pad_batch(&v, &mfgs, &feats, |_| 0).is_err());
+    }
+}

@@ -1,0 +1,430 @@
+//! The distributed training loop: sampling → feature exchange → AOT
+//! train step → gradient all-reduce → optimizer, per minibatch, across W
+//! workers (paper §3.3 + §4 training setup).
+//!
+//! Every worker holds an identical parameter copy, applies identical
+//! updates (gradients are mean-all-reduced), and draws seeds from its own
+//! partition's labeled nodes — the paper's data-parallel recipe. All
+//! phase times are measured per worker so Fig 5/6 can be regenerated.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::dist::{
+    fetch_features, run_workers_with, sample_mfgs_distributed, CachePolicy, Comm, CommStats,
+    Counters, FeatureCache, NetworkModel, RoundKind,
+};
+use crate::graph::Dataset;
+use crate::partition::{build_shards, partition_graph, PartitionConfig, Scheme, WorkerShard};
+use crate::runtime::{Engine, HostTensor, Manifest, ModelRuntime};
+use crate::sampling::rng::RngKey;
+use crate::sampling::{KernelKind, MinibatchSchedule, SamplerWorkspace};
+
+use super::metrics::{accuracy, EpochStats, PhaseTimes, Stopwatch};
+use super::optimizer;
+use super::padding::pad_batch;
+
+/// Full configuration of one distributed training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// AOT variant name from `artifacts/manifest.json`.
+    pub variant: String,
+    pub scheme: Scheme,
+    pub kernel: KernelKind,
+    pub workers: usize,
+    pub epochs: usize,
+    /// Paper default: 0.006.
+    pub lr: f32,
+    /// `adam` | `sgd` | `sgd:<momentum>`.
+    pub optimizer: String,
+    pub seed: u64,
+    pub net: NetworkModel,
+    /// Remote-feature cache rows per worker (0 = disabled).
+    pub cache_capacity: usize,
+    pub cache_policy: CachePolicy,
+    /// Cap batches per epoch (benches); `None` = full epoch.
+    pub max_batches: Option<usize>,
+    /// Compute last-batch accuracy each epoch via the eval executable.
+    pub eval_last_batch: bool,
+    /// Fanout schedule (paper §5 future work). Fanouts may only shrink
+    /// below the variant's compiled fanouts; padding absorbs the rest.
+    pub schedule: ScheduleKind,
+    pub verbose: bool,
+}
+
+/// Declarative fanout-schedule selector (see `sampling::adaptive`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScheduleKind {
+    /// The paper's default: the variant's compiled fanouts every epoch.
+    Fixed,
+    /// Linear ramp from `start_frac` to full over `ramp_epochs`.
+    Ramp { start_frac: f32, ramp_epochs: usize },
+    /// Escalate on loss plateaus.
+    Plateau { start_frac: f32, step_frac: f32, tol: f32 },
+}
+
+impl ScheduleKind {
+    fn build(self, max: Vec<usize>) -> Box<dyn crate::sampling::adaptive::FanoutSchedule> {
+        use crate::sampling::adaptive::*;
+        match self {
+            ScheduleKind::Fixed => Box::new(FixedSchedule { fanouts: max }),
+            ScheduleKind::Ramp { start_frac, ramp_epochs } => {
+                Box::new(RampSchedule { max, start_frac, ramp_epochs })
+            }
+            ScheduleKind::Plateau { start_frac, step_frac, tol } => {
+                Box::new(PlateauSchedule::new(max, start_frac, step_frac, tol))
+            }
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn new(variant: &str, scheme: Scheme, kernel: KernelKind, workers: usize) -> Self {
+        Self {
+            variant: variant.to_string(),
+            scheme,
+            kernel,
+            workers,
+            epochs: 3,
+            lr: 0.006,
+            optimizer: "adam".into(),
+            seed: 0,
+            net: NetworkModel::infiniband_200g(),
+            cache_capacity: 0,
+            cache_policy: CachePolicy::StaticDegree,
+            max_batches: None,
+            eval_last_batch: false,
+            schedule: ScheduleKind::Fixed,
+            verbose: false,
+        }
+    }
+
+    /// The three Fig 6 scenarios by name.
+    pub fn mode(variant: &str, mode: &str, workers: usize) -> Result<Self> {
+        let (scheme, kernel) = match mode {
+            "vanilla" => (Scheme::Vanilla, KernelKind::Baseline),
+            "hybrid" => (Scheme::Hybrid, KernelKind::Baseline),
+            "hybrid+fused" => (Scheme::Hybrid, KernelKind::Fused),
+            // Extra ablation arm: fused assembly under vanilla partitioning.
+            "vanilla+fused" => (Scheme::Vanilla, KernelKind::Fused),
+            _ => anyhow::bail!("unknown mode {mode:?} (vanilla | hybrid | hybrid+fused | vanilla+fused)"),
+        };
+        Ok(Self::new(variant, scheme, kernel, workers))
+    }
+}
+
+/// Cross-worker aggregation of one epoch.
+#[derive(Debug, Clone)]
+pub struct AggEpoch {
+    pub epoch: usize,
+    pub batches: usize,
+    pub mean_loss: f32,
+    /// Slowest worker's wall time — the distributed epoch time (Fig 6).
+    pub wall_s: f64,
+    /// Mean per-worker phase breakdown.
+    pub times: PhaseTimes,
+    pub comm: CommStats,
+    pub acc: Option<f32>,
+}
+
+/// Result of a whole run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub epochs: Vec<AggEpoch>,
+    pub comm_total: CommStats,
+    /// Worker-0 per-step loss curve (for EXPERIMENTS.md).
+    pub loss_curve: Vec<f32>,
+}
+
+impl TrainReport {
+    pub fn mean_epoch_wall_s(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return 0.0;
+        }
+        self.epochs.iter().map(|e| e.wall_s).sum::<f64>() / self.epochs.len() as f64
+    }
+}
+
+struct WorkerResult {
+    epochs: Vec<EpochStats>,
+    loss_curve: Vec<f32>,
+}
+
+/// Run distributed training of `cfg` over `dataset`, loading AOT
+/// artifacts from `artifacts_dir`.
+pub fn train_distributed(
+    dataset: &Dataset,
+    artifacts_dir: &Path,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let variant = manifest.variant(&cfg.variant)?;
+    ensure!(
+        variant.feat_dim == dataset.feat_dim,
+        "variant {} expects feat_dim {}, dataset {} has {}",
+        cfg.variant,
+        variant.feat_dim,
+        dataset.name,
+        dataset.feat_dim
+    );
+    ensure!(
+        variant.classes >= dataset.num_classes,
+        "variant has {} classes, dataset needs {}",
+        variant.classes,
+        dataset.num_classes
+    );
+
+    let book = Arc::new(partition_graph(
+        &dataset.graph,
+        &dataset.train_ids,
+        &PartitionConfig::new(cfg.workers),
+    ));
+    let shards = build_shards(dataset, &book, cfg.scheme);
+    let counters = Arc::new(Counters::default());
+
+    let shards_ref = &shards;
+    let results: Vec<Result<WorkerResult>> = run_workers_with(
+        cfg.workers,
+        cfg.net.clone(),
+        Arc::clone(&counters),
+        move |rank, comm| worker_loop(rank, comm, &shards_ref[rank], &manifest, cfg),
+    );
+
+    let mut workers = Vec::with_capacity(results.len());
+    for (rank, r) in results.into_iter().enumerate() {
+        workers.push(r.with_context(|| format!("worker {rank}"))?);
+    }
+
+    // Aggregate per epoch.
+    let epochs = (0..workers[0].epochs.len())
+        .map(|e| {
+            let per: Vec<&EpochStats> = workers.iter().map(|w| &w.epochs[e]).collect();
+            let mut times = PhaseTimes::default();
+            for s in &per {
+                times.add(&s.times);
+            }
+            AggEpoch {
+                epoch: e,
+                batches: per[0].batches,
+                mean_loss: per.iter().map(|s| s.mean_loss).sum::<f32>() / per.len() as f32,
+                wall_s: per.iter().map(|s| s.wall_s).fold(0.0, f64::max),
+                times: times.scale(1.0 / per.len() as f64),
+                comm: per[0].comm.clone().unwrap_or_default(),
+                acc: per[0].batch_acc,
+            }
+        })
+        .collect();
+
+    Ok(TrainReport {
+        epochs,
+        comm_total: counters.snapshot(),
+        loss_curve: workers.swap_remove(0).loss_curve,
+    })
+}
+
+fn worker_loop(
+    rank: usize,
+    comm: &mut Comm,
+    shard: &WorkerShard,
+    manifest: &Manifest,
+    cfg: &TrainConfig,
+) -> Result<WorkerResult> {
+    // Each worker owns a PJRT client + executables (PjRtClient is Rc-based
+    // and not Send; one client per worker also mirrors one per machine).
+    let engine = Engine::cpu()?;
+    let rt = ModelRuntime::load(&engine, manifest, &cfg.variant)?;
+    let variant = &rt.variant;
+    let mut params = rt.init_params(cfg.seed);
+    let mut opt = optimizer::by_name(&cfg.optimizer, cfg.lr)?;
+    let mut ws = SamplerWorkspace::new();
+    let key = RngKey::new(cfg.seed).fold(0xF00D);
+
+    // Optional remote-feature cache (paper §5 extension).
+    let mut cache = (cfg.cache_capacity > 0).then(|| {
+        FeatureCache::new(cfg.cache_policy, cfg.cache_capacity, shard.feat_dim)
+    });
+    if let (Some(c), crate::partition::TopologyView::Full(g)) = (&mut cache, &shard.topology) {
+        if cfg.cache_policy == CachePolicy::StaticDegree {
+            let hot = crate::dist::feature_cache::hottest_remote_nodes(
+                |v| g.degree(v),
+                g.num_nodes(),
+                |v| shard.owns(v),
+                cfg.cache_capacity,
+            );
+            crate::dist::feature_store::prefill_cache(comm, shard, &hot, c);
+        }
+    }
+
+    // Agree on batches/epoch (paper balances labeled nodes per machine so
+    // every worker generates the same number of minibatches).
+    let my_batches = (shard.train_local.len() / variant.batch) as u64;
+    let mut batches = comm.all_reduce_min_u64(my_batches) as usize;
+    if let Some(cap) = cfg.max_batches {
+        batches = batches.min(cap);
+    }
+    ensure!(
+        batches > 0,
+        "partition {rank} has too few labeled nodes ({}) for one batch of {} — use a larger dataset scale or a smaller-batch variant",
+        shard.train_local.len(),
+        variant.batch
+    );
+
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    let mut loss_curve = Vec::new();
+    let mut grad_buf: Vec<f32> = Vec::new();
+    let mut feat_buf: Vec<f32> = Vec::new();
+    let sched = cfg.schedule.build(variant.fanouts.clone());
+    let mut smoothed_loss: Option<f32> = None;
+
+    for epoch in 0..cfg.epochs {
+        comm.barrier();
+        let comm_before = (rank == 0).then(|| comm.counters.snapshot());
+        let epoch_sw = Stopwatch::start();
+        let mut times = PhaseTimes::default();
+        let mut loss_sum = 0f64;
+        let mut batch_acc = None;
+
+        let schedule =
+            MinibatchSchedule::new(&shard.train_local, variant.batch, key.fold(epoch as u64));
+        // Fanouts for this epoch (Fixed ⇒ the variant's compiled tuple).
+        let fanouts = sched.fanouts(epoch, smoothed_loss);
+        debug_assert!(fanouts.iter().zip(&variant.fanouts).all(|(a, b)| a <= b));
+
+        for b in 0..batches {
+            let seeds = schedule.batch(b);
+            let batch_key = key.fold(epoch as u64).fold(b as u64 + 1);
+            let mut sw = Stopwatch::start();
+
+            // ---- Phase 1: sampling (0 or 2(L−1) rounds by scheme).
+            let mfgs = sample_mfgs_distributed(
+                comm,
+                shard,
+                seeds,
+                &fanouts,
+                batch_key,
+                &mut ws,
+                cfg.kernel,
+            );
+            times.sample_s += sw.lap();
+
+            // ---- Phase 2: input feature exchange (2 rounds).
+            let input_nodes = &mfgs[0].src_nodes;
+            fetch_features(comm, shard, input_nodes, cache.as_mut(), &mut feat_buf);
+            times.feature_s += sw.lap();
+
+            // ---- Phase 3: padded AOT train step.
+            let labels = &shard.labels;
+            let padded =
+                pad_batch(variant, &mfgs, &feat_buf, |v| labels[v as usize])?;
+            let dropout_seed = (epoch * batches + b) as i32;
+            let out = rt.train_step(&params, &padded, dropout_seed)?;
+            ensure!(out.loss.is_finite(), "loss diverged at epoch {epoch} batch {b}");
+            loss_sum += out.loss as f64;
+            if rank == 0 {
+                loss_curve.push(out.loss);
+            }
+            times.compute_s += sw.lap();
+
+            // ---- Phase 4: gradient all-reduce + local update.
+            flatten_into(&out.grads, &mut grad_buf);
+            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad_buf);
+            let mut grads = out.grads;
+            unflatten_from(&grad_buf, &mut grads);
+            opt.step(&mut params, &grads)?;
+            times.sync_s += sw.lap();
+
+            // ---- Optional accuracy on the final batch of the epoch.
+            if cfg.eval_last_batch && b == batches - 1 {
+                let ev = rt.eval_step(&params, &padded)?;
+                batch_acc =
+                    Some(accuracy(&ev.logits, &padded.labels, &padded.label_mask));
+            }
+        }
+
+        comm.barrier();
+        let mut sw_end = epoch_sw;
+        let wall_s = sw_end.lap();
+        smoothed_loss = Some((loss_sum / batches as f64) as f32);
+        let comm_delta = comm_before.map(|before| comm.counters.snapshot().diff(&before));
+        let stats = EpochStats {
+            epoch,
+            batches,
+            mean_loss: (loss_sum / batches as f64) as f32,
+            times,
+            wall_s,
+            comm: comm_delta,
+            batch_acc,
+        };
+        if cfg.verbose && rank == 0 {
+            eprintln!(
+                "[epoch {epoch}] loss {:.4} wall {:.2}s sample {:.2}s feat {:.2}s compute {:.2}s sync {:.2}s acc {:?}",
+                stats.mean_loss,
+                stats.wall_s,
+                stats.times.sample_s,
+                stats.times.feature_s,
+                stats.times.compute_s,
+                stats.times.sync_s,
+                stats.batch_acc
+            );
+        }
+        epochs.push(stats);
+    }
+
+    Ok(WorkerResult { epochs, loss_curve })
+}
+
+/// Concatenate grad tensors into one flat buffer (reused across steps).
+fn flatten_into(grads: &[HostTensor], buf: &mut Vec<f32>) {
+    buf.clear();
+    for g in grads {
+        buf.extend_from_slice(g.as_f32().expect("grads are f32"));
+    }
+}
+
+/// Scatter the flat (all-reduced) buffer back into the grad tensors.
+fn unflatten_from(buf: &[f32], grads: &mut [HostTensor]) {
+    let mut off = 0;
+    for g in grads {
+        if let HostTensor::F32 { data, .. } = g {
+            let n = data.len();
+            data.copy_from_slice(&buf[off..off + n]);
+            off += n;
+        }
+    }
+    debug_assert_eq!(off, buf.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatten_unflatten_round_trip() {
+        let grads = vec![
+            HostTensor::f32(vec![1.0, 2.0], &[2]),
+            HostTensor::f32(vec![3.0], &[1]),
+        ];
+        let mut buf = Vec::new();
+        flatten_into(&grads, &mut buf);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+        let mut back = vec![
+            HostTensor::f32(vec![0.0, 0.0], &[2]),
+            HostTensor::f32(vec![0.0], &[1]),
+        ];
+        unflatten_from(&buf, &mut back);
+        assert_eq!(back, grads);
+    }
+
+    #[test]
+    fn mode_names_map_to_fig6_arms() {
+        let v = TrainConfig::mode("x", "vanilla", 4).unwrap();
+        assert_eq!((v.scheme, v.kernel), (Scheme::Vanilla, KernelKind::Baseline));
+        let h = TrainConfig::mode("x", "hybrid", 4).unwrap();
+        assert_eq!((h.scheme, h.kernel), (Scheme::Hybrid, KernelKind::Baseline));
+        let hf = TrainConfig::mode("x", "hybrid+fused", 4).unwrap();
+        assert_eq!((hf.scheme, hf.kernel), (Scheme::Hybrid, KernelKind::Fused));
+        assert!(TrainConfig::mode("x", "nope", 4).is_err());
+    }
+}

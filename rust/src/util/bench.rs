@@ -1,0 +1,155 @@
+//! Self-contained timing harness (offline substitute for criterion).
+//!
+//! Used by the `cargo bench` targets in `benches/` and the `report`
+//! subcommands. Warmup + fixed-duration sampling + robust statistics;
+//! results can be printed as an aligned table or dumped as JSON for
+//! EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one measured benchmark case (times in seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n as f64;
+        let pct = |p: f64| samples[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            std: var.sqrt(),
+            min: samples.first().copied().unwrap_or(0.0),
+            p50: pct(0.50),
+            p95: pct(0.95),
+        }
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12} {:>6}",
+            self.name,
+            fmt_time(self.mean),
+            fmt_time(self.p50),
+            fmt_time(self.p95),
+            fmt_time(self.std),
+            self.iters
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12} {:>6}",
+        "benchmark", "mean", "p50", "p95", "std", "iters"
+    )
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Benchmark runner: warms up, then samples `f` until `budget` elapses
+/// (at least `min_iters`, at most `max_iters`).
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for heavyweight end-to-end cases (epoch benches).
+    pub fn heavy() -> Self {
+        Self {
+            warmup: Duration::ZERO,
+            budget: Duration::from_secs(4),
+            min_iters: 2,
+            max_iters: 20,
+        }
+    }
+
+    /// Measure `f`, using its return value to keep the work observable
+    /// (the value is passed to `std::hint::black_box`).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        let wu_start = Instant::now();
+        while wu_start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (samples.len() < self.min_iters)
+            || (start.elapsed() < self.budget && samples.len() < self.max_iters)
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        Stats::from_samples(name, samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered_and_sane() {
+        let b = Bencher {
+            warmup: Duration::ZERO,
+            budget: Duration::from_millis(50),
+            min_iters: 5,
+            max_iters: 100,
+        };
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+        assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn formatting_has_units() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-5).ends_with("µs"));
+        assert!(fmt_time(2.5e-2).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with('s'));
+        assert!(header().contains("benchmark"));
+    }
+}

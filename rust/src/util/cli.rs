@@ -1,0 +1,165 @@
+//! Tiny CLI flag parser (offline substitute for clap).
+//!
+//! Grammar: `binary <subcommand> [--key value]... [--flag]...`
+//! Values never start with `--`; everything is typed at the call site.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: one positional subcommand + `--key [value]` pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, Option<String>>,
+    /// Keys read at least once (for unknown-flag detection).
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with("--") {
+                out.command = iter.next();
+            }
+        }
+        while let Some(item) = iter.next() {
+            let key = item
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {item:?}"))?
+                .to_string();
+            if key.is_empty() {
+                bail!("empty flag name");
+            }
+            let value = match iter.peek() {
+                Some(v) if !v.starts_with("--") => iter.next(),
+                _ => None,
+            };
+            if out.flags.insert(key.clone(), value).is_some() {
+                bail!("duplicate flag --{key}");
+            }
+        }
+        Ok(out)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    /// String flag with a default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(Some(v)) => v.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    /// Required string flag.
+    pub fn require_str(&self, key: &str) -> Result<String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(Some(v)) => Ok(v.clone()),
+            _ => bail!("missing required flag --{key}"),
+        }
+    }
+
+    /// Typed flag with a default (usize, f64, u64, ...).
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(Some(v)) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+            Some(None) => bail!("--{key} needs a value"),
+            None => Ok(default),
+        }
+    }
+
+    /// Boolean presence flag.
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains_key(key)
+    }
+
+    /// Comma-separated list flag, e.g. `--fanouts 15,10,5`.
+    pub fn get_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(Some(v)) => v
+                .split(',')
+                .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+                .collect(),
+            Some(None) => bail!("--{key} needs a value"),
+            None => Ok(default.to_vec()),
+        }
+    }
+
+    /// Error if any provided flag was never consumed (typo guard). Call
+    /// after all get_* calls.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !seen.contains(k.as_str())).collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --dataset products-sim:0.01 --workers 8 --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get_str("dataset", "x"), "products-sim:0.01");
+        assert_eq!(a.get("workers", 1usize).unwrap(), 8);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_lists() {
+        let a = parse("bench --fanouts 15,10,5");
+        assert_eq!(a.get_list("fanouts", &[3]).unwrap(), vec![15, 10, 5]);
+        assert_eq!(a.get_list("other", &[2, 2]).unwrap(), vec![2, 2]);
+        assert_eq!(a.get("epochs", 3usize).unwrap(), 3);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(vec!["x".into(), "y".into()]).is_err()); // y not a flag
+        assert!(Args::parse(vec!["--a".into(), "--a".into()]).is_err()); // dup (second --a parsed as flag)
+        let a = parse("run --typo 3");
+        let _ = a.get("ok", 0usize);
+        assert!(a.finish().is_err());
+        assert!(parse("run").require_str("missing").is_err());
+        assert!(parse("run --n abc").get("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.command, None);
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,21 @@
+//! In-tree substrates for an offline environment.
+//!
+//! This build runs with no network and a vendored crate set that contains
+//! only `xla` and `anyhow`, so the supporting libraries a production crate
+//! would normally pull in are implemented here from std:
+//!
+//! * [`json`] — minimal JSON parser/writer (for `artifacts/manifest.json`
+//!   and report output);
+//! * [`par`] — scoped-thread data-parallel helpers (the rayon patterns the
+//!   sampling kernels and generators need);
+//! * [`cli`] — flag parsing for the `fastsample` binary;
+//! * [`bench`] — timing harness with warmup and robust stats (criterion
+//!   replacement; used by `cargo bench` targets);
+//! * [`prop`] — randomized property-testing loop with reproducible
+//!   per-case seeds (proptest replacement).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod prop;

@@ -1,0 +1,210 @@
+//! Scoped-thread data-parallel helpers (offline substitute for rayon).
+//!
+//! The sampling kernels and generators need exactly three patterns:
+//! a parallel indexed map, a parallel mutable-chunk sweep, and a parallel
+//! sweep over (strided chunk, per-item slot, shared input) triples. All are
+//! implemented with `std::thread::scope` over contiguous ranges — no work
+//! stealing, which is fine because our loops are statically balanced (the
+//! per-seed work varies only within a fanout factor).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads (clamped so tiny inputs stay serial).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn threads_for(n_items: usize) -> usize {
+    // ~1k items per thread minimum: below that the spawn cost dominates
+    // (§Perf: 4096 left the 2k-seed top sampling level single-threaded).
+    num_threads().min(n_items.div_ceil(1024)).max(1)
+}
+
+/// Parallel indexed map: `out[i] = f(i)` for `i in 0..n`.
+pub fn par_map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let threads = threads_for(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    let slots = out.spare_capacity_mut();
+    let next = AtomicUsize::new(0);
+    // Block-cyclic over fixed-size blocks keeps threads balanced when the
+    // per-item cost is skewed (hub nodes).
+    const BLOCK: usize = 1024;
+    std::thread::scope(|s| {
+        // Split the spare capacity into raw block pointers up front.
+        let base = slots.as_mut_ptr() as usize;
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(BLOCK, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + BLOCK).min(n);
+                for i in start..end {
+                    // Safety: each index is claimed exactly once via the
+                    // atomic counter; slots are disjoint.
+                    unsafe {
+                        let p = (base as *mut T).add(i);
+                        p.write(f(i));
+                    }
+                }
+            });
+        }
+    });
+    // Safety: all n slots were initialized by the scope above.
+    unsafe { out.set_len(n) };
+    out
+}
+
+/// Parallel sweep over equal-size mutable chunks: `f(i, &mut data[i*stride..][..stride])`.
+pub fn par_chunks_mut<T: Send>(
+    data: &mut [T],
+    stride: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(stride > 0 && data.len() % stride == 0);
+    let n = data.len() / stride;
+    let threads = threads_for(n);
+    if threads <= 1 {
+        for (i, chunk) in data.chunks_mut(stride).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len() / stride);
+            let (head, tail) = rest.split_at_mut(take * stride);
+            rest = tail;
+            let start = base;
+            base += take;
+            let f = &f;
+            s.spawn(move || {
+                for (j, chunk) in head.chunks_mut(stride).enumerate() {
+                    f(start + j, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// The sampler's pattern: for each item `i`, `f` gets the item index, a
+/// mutable strided chunk of `a`, and a mutable slot of `b`. Thread-local
+/// scratch is created once per worker via `init`.
+pub fn par_zip_chunks<A: Send, B: Send, S>(
+    a: &mut [A],
+    b: &mut [B],
+    stride: usize,
+    init: impl Fn() -> S + Sync,
+    f: impl Fn(&mut S, usize, &mut [A], &mut B) + Sync,
+) {
+    assert!(stride > 0 && a.len() == b.len() * stride);
+    let n = b.len();
+    let threads = threads_for(n);
+    if threads <= 1 {
+        let mut scratch = init();
+        for (i, (ac, bc)) in a.chunks_mut(stride).zip(b.iter_mut()).enumerate() {
+            f(&mut scratch, i, ac, bc);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut a_rest = a;
+        let mut b_rest = b;
+        let mut base = 0usize;
+        while !b_rest.is_empty() {
+            let take = per.min(b_rest.len());
+            let (a_head, a_tail) = a_rest.split_at_mut(take * stride);
+            let (b_head, b_tail) = b_rest.split_at_mut(take);
+            a_rest = a_tail;
+            b_rest = b_tail;
+            let start = base;
+            base += take;
+            let f = &f;
+            let init = &init;
+            s.spawn(move || {
+                let mut scratch = init();
+                for (j, (ac, bc)) in a_head.chunks_mut(stride).zip(b_head.iter_mut()).enumerate()
+                {
+                    f(&mut scratch, start + j, ac, bc);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let out = par_map(10_000, |i| i * i);
+        assert_eq!(out.len(), 10_000);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_tiny() {
+        assert!(par_map(0, |i| i).is_empty());
+        assert_eq!(par_map(3, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_every_chunk() {
+        let mut data = vec![0usize; 9 * 4096];
+        par_chunks_mut(&mut data, 9, |i, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = i * 9 + j;
+            }
+        });
+        for (k, &v) in data.iter().enumerate() {
+            assert_eq!(v, k);
+        }
+    }
+
+    #[test]
+    fn par_zip_chunks_strided_write() {
+        let n = 5000;
+        let stride = 3;
+        let mut a = vec![0u32; n * stride];
+        let mut b = vec![0u32; n];
+        par_zip_chunks(
+            &mut a,
+            &mut b,
+            stride,
+            Vec::<u32>::new,
+            |scratch, i, chunk, slot| {
+                scratch.push(i as u32); // exercise per-thread scratch
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = (i * stride + j) as u32;
+                }
+                *slot = i as u32;
+            },
+        );
+        for (k, &v) in a.iter().enumerate() {
+            assert_eq!(v, k as u32);
+        }
+        for (i, &v) in b.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn par_zip_chunks_length_mismatch_panics() {
+        let mut a = vec![0u8; 10];
+        let mut b = vec![0u8; 4];
+        par_zip_chunks(&mut a, &mut b, 3, || (), |_, _, _, _| {});
+    }
+}

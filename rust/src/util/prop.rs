@@ -1,0 +1,105 @@
+//! Randomized property testing (offline substitute for proptest).
+//!
+//! `check` runs a property over `cases` randomized inputs derived from a
+//! deterministic per-case key. On failure it panics with the case index
+//! and seed so the exact input is reproducible with `check_one`. No
+//! shrinking — generators are expected to produce small cases at low
+//! indices (pass `i` to your size function).
+
+use crate::sampling::rng::{RngKey, RngStream};
+
+/// Run `property` for `cases` cases. The closure receives the case index
+/// and a fresh RNG stream; generate inputs from the stream and assert
+/// inside. Sizes should grow with the index so early failures are small.
+pub fn check(seed: u64, cases: usize, property: impl Fn(usize, &mut RngStream)) {
+    for i in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut s = RngKey::new(seed).fold(0x9409).stream(i as u64);
+            property(i, &mut s);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {i} (reproduce: check_one({seed}, {i}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case from `check`'s panic message.
+pub fn check_one(seed: u64, case: usize, mut property: impl FnMut(usize, &mut RngStream)) {
+    let mut s = RngKey::new(seed).fold(0x9409).stream(case as u64);
+    property(case, &mut s);
+}
+
+/// Helpers for building random test inputs from a stream.
+pub mod gen {
+    use crate::sampling::rng::RngStream;
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn size(s: &mut RngStream, lo: usize, hi: usize) -> usize {
+        lo + s.next_below(hi - lo + 1)
+    }
+
+    /// Vector of uniform u32 below `bound`.
+    pub fn vec_below(s: &mut RngStream, len: usize, bound: usize) -> Vec<u32> {
+        (0..len).map(|_| s.next_below(bound) as u32).collect()
+    }
+
+    /// Random subset of `0..n` of the given size (distinct, unsorted).
+    pub fn subset(s: &mut RngStream, n: usize, k: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        s.sample_distinct(n, k, &mut out);
+        out.into_iter().map(|v| v as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        check(1, 25, |_i, s| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let v = s.next_below(10);
+            assert!(v < 10);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce: check_one(2, 3")]
+    fn failing_property_reports_case() {
+        check(2, 10, |i, _s| {
+            assert!(i != 3, "boom at {i}");
+        });
+    }
+
+    #[test]
+    fn check_one_reproduces_stream() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check_one(3, 7, |_i, s| a.push(s.next_u64()));
+        check_one(3, 7, |_i, s| b.push(s.next_u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gen_subset_is_distinct() {
+        check(4, 20, |i, s| {
+            let n = gen::size(s, 1, 50 + i);
+            let k = gen::size(s, 0, n);
+            let sub = gen::subset(s, n, k);
+            let mut sorted = sub.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), sub.len());
+        });
+    }
+}

@@ -1,0 +1,220 @@
+//! Integration: the paper's "mathematically equivalent" claim, pinned to
+//! bit-equality.
+//!
+//! * Distributed **vanilla** sampling (2(L−1) collective rounds) must
+//!   produce exactly the MFGs that single-machine fused sampling produces
+//!   with the same key.
+//! * Distributed **hybrid** sampling must do the same with **zero**
+//!   sampling rounds.
+//! * The partitioned feature store must return exactly the dataset rows,
+//!   with and without a cache.
+
+use std::sync::Arc;
+
+use fastsample::dist::{
+    fetch_features, run_workers_with, sample_mfgs_distributed, CachePolicy, Counters,
+    FeatureCache, NetworkModel, RoundKind,
+};
+use fastsample::graph::generator::{make_dataset, DatasetParams};
+use fastsample::graph::{Dataset, NodeId};
+use fastsample::partition::{build_shards, partition_graph, PartitionConfig, Scheme};
+use fastsample::sampling::rng::RngKey;
+use fastsample::sampling::{sample_mfgs, KernelKind, SamplerWorkspace};
+
+fn dataset() -> Dataset {
+    make_dataset(&DatasetParams {
+        name: "dist-eq".into(),
+        num_nodes: 1200,
+        avg_degree: 12,
+        feat_dim: 7,
+        num_classes: 5,
+        labeled_frac: 0.2,
+        p_intra: 0.85,
+        noise: 0.3,
+        seed: 77,
+    })
+}
+
+/// Seeds per worker: its own labeled nodes (as in training).
+fn worker_seeds(d: &Dataset, book: &fastsample::partition::PartitionBook, part: usize, n: usize) -> Vec<NodeId> {
+    d.train_ids.iter().copied().filter(|&v| book.part_of(v) == part).take(n).collect()
+}
+
+#[test]
+fn vanilla_distributed_equals_single_machine_fused() {
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+    let shards = build_shards(&d, &book, Scheme::Vanilla);
+    let fanouts = [4usize, 3, 3];
+    let key = RngKey::new(123);
+
+    let counters = Arc::new(Counters::default());
+    let shards_ref = &shards;
+    let d_ref = &d;
+    let book_ref = &book;
+    let results = run_workers_with(4, NetworkModel::free(), Arc::clone(&counters), {
+        move |rank, comm| {
+            let shard = &shards_ref[rank];
+            let seeds = worker_seeds(d_ref, book_ref, rank, 16);
+            let mut ws = SamplerWorkspace::new();
+            let mfgs = sample_mfgs_distributed(
+                comm, shard, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
+            );
+            (seeds, mfgs)
+        }
+    });
+
+    // Ground truth: single-machine sampling on the full graph.
+    let mut ws = SamplerWorkspace::new();
+    for (seeds, mfgs) in &results {
+        let expect = sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
+        assert_eq!(mfgs, &expect, "distributed vanilla != local fused");
+        for (li, m) in mfgs.iter().enumerate() {
+            let layer = li + 1;
+            let fanout = fanouts[fanouts.len() - layer];
+            let dst: Vec<NodeId> = m.src_nodes[..m.n_dst].to_vec();
+            m.validate(&dst, fanout).unwrap();
+        }
+    }
+
+    // Round accounting: L=3 → 2(L−1) = 4 sampling rounds per minibatch.
+    let s = counters.snapshot();
+    assert_eq!(s.rounds_of(RoundKind::SampleRequest), 2);
+    assert_eq!(s.rounds_of(RoundKind::SampleResponse), 2);
+    assert_eq!(s.sampling_rounds(), 4);
+}
+
+#[test]
+fn vanilla_baseline_assembly_matches_fused_assembly() {
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(3)));
+    let shards = build_shards(&d, &book, Scheme::Vanilla);
+    let fanouts = [5usize, 4];
+    let key = RngKey::new(9);
+    let shards_ref = &shards;
+    let d_ref = &d;
+    let book_ref = &book;
+    let results = run_workers_with(3, NetworkModel::free(), Arc::new(Counters::default()), {
+        move |rank, comm| {
+            let shard = &shards_ref[rank];
+            let seeds = worker_seeds(d_ref, book_ref, rank, 12);
+            let mut ws = SamplerWorkspace::new();
+            let a = sample_mfgs_distributed(
+                comm, shard, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
+            );
+            let b = sample_mfgs_distributed(
+                comm, shard, &seeds, &fanouts, key, &mut ws, KernelKind::Baseline,
+            );
+            (a, b)
+        }
+    });
+    for (a, b) in results {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn hybrid_needs_zero_sampling_rounds_and_matches_vanilla() {
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+    let hybrid = build_shards(&d, &book, Scheme::Hybrid);
+    let fanouts = [4usize, 3, 3];
+    let key = RngKey::new(123);
+
+    let counters = Arc::new(Counters::default());
+    let hybrid_ref = &hybrid;
+    let d_ref = &d;
+    let book_ref = &book;
+    let results = run_workers_with(4, NetworkModel::free(), Arc::clone(&counters), {
+        move |rank, comm| {
+            let shard = &hybrid_ref[rank];
+            let seeds = worker_seeds(d_ref, book_ref, rank, 16);
+            let mut ws = SamplerWorkspace::new();
+            sample_mfgs_distributed(comm, shard, &seeds, &fanouts, key, &mut ws, KernelKind::Fused)
+        }
+    });
+
+    // Hybrid sampling is mathematically identical to single-machine.
+    let mut ws = SamplerWorkspace::new();
+    for (rank, mfgs) in results.iter().enumerate() {
+        let seeds = worker_seeds(&d, &book, rank, 16);
+        let expect = sample_mfgs(&d.graph, &seeds, &fanouts, key, &mut ws, KernelKind::Fused);
+        assert_eq!(mfgs, &expect);
+    }
+
+    // The headline: zero sampling communication under hybrid.
+    let s = counters.snapshot();
+    assert_eq!(s.sampling_rounds(), 0);
+    assert_eq!(s.total_bytes(), 0);
+}
+
+#[test]
+fn feature_store_returns_exact_rows() {
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+    let shards = build_shards(&d, &book, Scheme::Hybrid);
+    let counters = Arc::new(Counters::default());
+    let shards_ref = &shards;
+    let d_ref = &d;
+    let results = run_workers_with(4, NetworkModel::free(), Arc::clone(&counters), {
+        move |rank, comm| {
+            let shard = &shards_ref[rank];
+            // Mix of local and remote nodes, some repeated.
+            let nodes: Vec<NodeId> = (0..200)
+                .map(|i| ((i * 37 + rank * 311) % d_ref.num_nodes()) as NodeId)
+                .collect();
+            let mut out = Vec::new();
+            let stats = fetch_features(comm, shard, &nodes, None, &mut out);
+            (nodes, out, stats)
+        }
+    });
+    for (nodes, out, stats) in &results {
+        assert_eq!(out.len(), nodes.len() * d.feat_dim);
+        for (i, &v) in nodes.iter().enumerate() {
+            assert_eq!(
+                &out[i * d.feat_dim..(i + 1) * d.feat_dim],
+                d.feat(v),
+                "row mismatch at node {v}"
+            );
+        }
+        assert_eq!(stats.local_rows + stats.remote_rows, nodes.len());
+        assert!(stats.remote_rows > 0, "test should exercise remote rows");
+    }
+    // Exactly 2 feature rounds regardless of worker count.
+    let s = counters.snapshot();
+    assert_eq!(s.rounds_of(RoundKind::FeatureRequest), 1);
+    assert_eq!(s.rounds_of(RoundKind::FeatureResponse), 1);
+}
+
+#[test]
+fn feature_cache_cuts_traffic_without_changing_rows() {
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+    let shards = build_shards(&d, &book, Scheme::Hybrid);
+    let shards_ref = &shards;
+    let d_ref = &d;
+    let results = run_workers_with(4, NetworkModel::free(), Arc::new(Counters::default()), {
+        move |rank, comm| {
+            let shard = &shards_ref[rank];
+            let mut cache = FeatureCache::new(CachePolicy::Clock, 256, d_ref.feat_dim);
+            let nodes: Vec<NodeId> = (0..150)
+                .map(|i| ((i * 13 + rank * 101) % d_ref.num_nodes()) as NodeId)
+                .collect();
+            let mut out1 = Vec::new();
+            let s1 = fetch_features(comm, shard, &nodes, Some(&mut cache), &mut out1);
+            // Second fetch of the same nodes: remote rows now cached.
+            let mut out2 = Vec::new();
+            let s2 = fetch_features(comm, shard, &nodes, Some(&mut cache), &mut out2);
+            (nodes, out1, out2, s1, s2)
+        }
+    });
+    for (nodes, out1, out2, s1, s2) in &results {
+        assert_eq!(out1, out2);
+        for (i, &v) in nodes.iter().enumerate() {
+            assert_eq!(&out1[i * d.feat_dim..(i + 1) * d.feat_dim], d.feat(v));
+        }
+        assert_eq!(s1.cache_hits, 0);
+        assert!(s2.cache_hits > 0);
+        assert!(s2.bytes_in < s1.bytes_in, "cache must cut feature traffic");
+    }
+}

@@ -1,0 +1,233 @@
+//! Randomized property tests (in-tree proptest substitute — see
+//! `util::prop`): structural invariants of the sampling kernels,
+//! partitioner, JSON parser, collectives, and padding over hundreds of
+//! randomized cases. Failures print a `check_one(seed, case, ..)` repro.
+
+use fastsample::dist::{run_workers, NetworkModel, RoundKind};
+use fastsample::graph::generator::{erdos_renyi, planted_communities, rmat};
+use fastsample::graph::{CooGraph, CscGraph, NodeId};
+use fastsample::partition::{partition_graph, PartitionBook, PartitionConfig};
+use fastsample::sampling::rng::RngKey;
+use fastsample::sampling::{
+    sample_level_baseline, sample_level_fused, sample_mfgs, KernelKind, SamplerWorkspace,
+};
+use fastsample::util::json::Json;
+use fastsample::util::prop::{check, gen};
+
+/// Random graph from the stream: mixes the three generators.
+fn random_graph(i: usize, s: &mut fastsample::sampling::rng::RngStream) -> CscGraph {
+    let n = gen::size(s, 2, 60 + i * 4);
+    match s.next_below(3) {
+        0 => erdos_renyi(n, gen::size(s, 0, 12), RngKey::new(s.next_u64())),
+        1 => {
+            let np2 = n.next_power_of_two();
+            rmat(np2, np2 * gen::size(s, 1, 8), (0.45, 0.25, 0.2, 0.1), RngKey::new(s.next_u64()))
+        }
+        _ => {
+            planted_communities(
+                n.max(4),
+                gen::size(s, 1, 4),
+                gen::size(s, 1, 8),
+                0.7,
+                RngKey::new(s.next_u64()),
+            )
+            .0
+        }
+    }
+}
+
+#[test]
+fn prop_fused_equals_baseline_always() {
+    check(101, 120, |i, s| {
+        let g = random_graph(i, s);
+        let n = g.num_nodes();
+        let k = gen::size(s, 0, n.min(40));
+        let seeds: Vec<NodeId> = gen::subset(s, n, k);
+        if seeds.is_empty() {
+            return;
+        }
+        let fanout = gen::size(s, 1, 12);
+        let key = RngKey::new(s.next_u64());
+        let mut ws_a = SamplerWorkspace::new();
+        let mut ws_b = SamplerWorkspace::new();
+        let a = sample_level_fused(&g, &seeds, fanout, key, &mut ws_a);
+        let b = sample_level_baseline(&g, &seeds, fanout, key, &mut ws_b);
+        assert_eq!(a, b);
+        a.validate(&seeds, fanout).unwrap();
+    });
+}
+
+#[test]
+fn prop_mfg_structure_invariants() {
+    check(102, 80, |i, s| {
+        let g = random_graph(i, s);
+        let n = g.num_nodes();
+        let k = gen::size(s, 1, n.min(24));
+        let seeds: Vec<NodeId> = gen::subset(s, n, k);
+        if seeds.is_empty() {
+            return;
+        }
+        let levels = gen::size(s, 1, 3);
+        let fanouts: Vec<usize> = (0..levels).map(|_| gen::size(s, 1, 6)).collect();
+        let key = RngKey::new(s.next_u64());
+        let mut ws = SamplerWorkspace::new();
+        let mfgs = sample_mfgs(&g, &seeds, &fanouts, key, &mut ws, KernelKind::Fused);
+        assert_eq!(mfgs.len(), levels);
+        // Chaining: dst of level l == src of level l+1; top dst == seeds.
+        assert_eq!(&mfgs[levels - 1].src_nodes[..mfgs[levels - 1].n_dst], &seeds[..]);
+        for w in mfgs.windows(2) {
+            assert_eq!(&w[0].src_nodes[..w[0].n_dst], &w[1].src_nodes[..]);
+        }
+        for (li, m) in mfgs.iter().enumerate() {
+            let fanout = fanouts[levels - 1 - li];
+            let dst: Vec<NodeId> = m.src_nodes[..m.n_dst].to_vec();
+            m.validate(&dst, fanout).unwrap();
+            // Every sampled edge (u -> v) exists in the original graph.
+            for d in 0..m.n_dst {
+                let v = m.src_nodes[d];
+                for &p in m.neighbors(d) {
+                    let u = m.src_nodes[p as usize];
+                    assert!(
+                        g.neighbors(v).contains(&u),
+                        "sampled edge {u}->{v} not in graph"
+                    );
+                }
+                // Degree semantics: min(graph degree, fanout) — uniform
+                // without replacement takes all when deg <= fanout.
+                assert_eq!(m.degree(d), g.degree(v).min(fanout));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_coo_csc_round_trip() {
+    check(103, 150, |_i, s| {
+        let n = gen::size(s, 1, 200);
+        let m = gen::size(s, 0, 400);
+        let src = gen::vec_below(s, m, n);
+        let dst = gen::vec_below(s, m, n);
+        let coo = CooGraph::new(n, src.clone(), dst.clone()).unwrap();
+        let csc = coo.to_csc();
+        assert_eq!(csc.num_edges(), m);
+        // Every original edge appears in CSC exactly as many times.
+        for (&u, &v) in src.iter().zip(&dst) {
+            assert!(csc.neighbors(v).contains(&u));
+        }
+        // Round trip back preserves the multiset of edges.
+        let back = csc.to_coo();
+        let mut a: Vec<(u32, u32)> = src.into_iter().zip(dst).collect();
+        let mut b: Vec<(u32, u32)> =
+            back.src().iter().copied().zip(back.dst().iter().copied()).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn prop_partitioner_invariants() {
+    check(104, 30, |i, s| {
+        let g = random_graph(i + 5, s);
+        let n = g.num_nodes();
+        let parts = gen::size(s, 1, 6);
+        let tk = gen::size(s, 0, n / 2);
+        let train: Vec<NodeId> = gen::subset(s, n, tk);
+        let book = partition_graph(&g, &train, &PartitionConfig::new(parts));
+        assert_eq!(book.num_parts(), parts);
+        assert_eq!(book.num_nodes(), n);
+        // Every node assigned to a valid part; counts sum to n.
+        let counts = book.node_counts();
+        assert_eq!(counts.iter().sum::<usize>(), n);
+        // Balance within the configured factor + integer slack (only for
+        // graphs big enough for the multilevel path to apply).
+        if n > 8 * parts && parts > 1 {
+            let imb = PartitionBook::imbalance(&counts);
+            assert!(imb < 1.6, "imbalance {imb} (n={n}, parts={parts})");
+        }
+        // Edge cut is a valid fraction.
+        let cf = book.cut_fraction(&g);
+        assert!((0.0..=1.0).contains(&cf));
+    });
+}
+
+#[test]
+fn prop_json_round_trips_random_values() {
+    fn random_json(s: &mut fastsample::sampling::rng::RngStream, depth: usize) -> Json {
+        match if depth == 0 { s.next_below(4) } else { s.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(s.next_below(2) == 0),
+            2 => Json::Num((s.next_below(2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let len = s.next_below(8);
+                Json::Str((0..len).map(|_| char::from(32 + s.next_below(90) as u8)).collect())
+            }
+            4 => Json::Arr((0..s.next_below(5)).map(|_| random_json(s, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..s.next_below(5))
+                    .map(|k| (format!("k{k}"), random_json(s, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(105, 200, |_i, s| {
+        let v = random_json(s, 3);
+        let text = v.dump();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("reparse {text:?}: {e}"));
+        assert_eq!(v, back);
+    });
+}
+
+#[test]
+fn prop_ring_allreduce_matches_serial_sum() {
+    check(106, 25, |_i, s| {
+        let world = gen::size(s, 1, 6);
+        let n = gen::size(s, 1, 300);
+        let inputs: Vec<Vec<f32>> = (0..world)
+            .map(|_| (0..n).map(|_| s.next_range_f32(-5.0, 5.0)).collect())
+            .collect();
+        let mut expect = vec![0f32; n];
+        for w in &inputs {
+            for (e, x) in expect.iter_mut().zip(w) {
+                *e += x;
+            }
+        }
+        for e in expect.iter_mut() {
+            *e /= world as f32;
+        }
+        let inputs_ref = &inputs;
+        let results = run_workers(world, NetworkModel::free(), move |rank, comm| {
+            let mut data = inputs_ref[rank].clone();
+            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
+            data
+        });
+        for r in &results {
+            for (a, b) in r.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_workspace_reuse_never_leaks_between_graphs() {
+    // Reusing one workspace across random graphs of different sizes must
+    // behave as if fresh (epoch stamping correctness).
+    check(107, 60, |i, s| {
+        let mut ws = SamplerWorkspace::new();
+        let mut fresh = SamplerWorkspace::new();
+        for round in 0..3 {
+            let g = random_graph(i + round, s);
+            let n = g.num_nodes();
+            let sk = gen::size(s, 1, n.min(16));
+            let seeds: Vec<NodeId> = gen::subset(s, n, sk);
+            if seeds.is_empty() {
+                continue;
+            }
+            let key = RngKey::new(s.next_u64());
+            let a = sample_level_fused(&g, &seeds, 4, key, &mut ws);
+            let b = sample_level_fused(&g, &seeds, 4, key, &mut fresh);
+            assert_eq!(a, b, "round {round}");
+        }
+    });
+}

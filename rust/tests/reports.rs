@@ -1,0 +1,78 @@
+//! Integration: the experiment regenerators produce well-formed reports
+//! with the paper's invariants visible in the text (cheap configs).
+
+use fastsample::coordinator::experiments as exp;
+
+fn artifacts_available() -> bool {
+    fastsample::config::artifacts_available()
+}
+
+#[test]
+fn table1_contains_published_and_sim_rows() {
+    let t = exp::table1(0.002, 0.0005, 1).unwrap();
+    assert!(t.contains("ogbn-products"));
+    assert!(t.contains("124000000"));
+    assert!(t.contains("ogbn-papers100M"));
+    assert!(t.contains("products-sim"));
+    assert!(t.contains("papers100m-sim"));
+}
+
+#[test]
+fn fig4_shows_topology_fraction_claim() {
+    let t = exp::fig4(0.002, 0.0005, 1).unwrap();
+    assert!(t.contains("MAG240M"));
+    assert!(t.contains("IGBH-full"));
+    // The paper's point: MAG240M topology ~2.3% of total storage.
+    assert!(t.contains("2.31%"), "{t}");
+    assert!(t.contains("1.62%"), "{t}");
+}
+
+#[test]
+fn fig5_sampling_reports_speedups_ge_one_mostly() {
+    let opts = exp::Fig5Opts {
+        dataset_spec: "quickstart".into(),
+        batch_sizes: vec![128, 256],
+        fanout_sets: vec![vec![5, 5], vec![10, 10]],
+        iters: 3,
+        e2e: false,
+        seed: 2,
+    };
+    let t = exp::fig5_sampling(&opts).unwrap();
+    assert!(t.contains("speedup"));
+    // Every configured row is present.
+    assert_eq!(t.matches("\n[").count(), 4, "{t}");
+}
+
+#[test]
+fn partition_memory_reports_both_schemes() {
+    let t = exp::partition_memory("quickstart", 4, 3).unwrap();
+    assert!(t.contains("vanilla"));
+    assert!(t.contains("hybrid"));
+    assert!(t.contains("edge-cut fraction"));
+}
+
+#[test]
+fn rounds_report_shows_the_2l_to_2_reduction() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let t = exp::rounds_report(3, 5).unwrap();
+    assert!(t.contains("mode: vanilla"));
+    assert!(t.contains("mode: hybrid"));
+    // Vanilla: 4 sampling rounds per batch (L=3); hybrid: 0.
+    assert!(t.contains("sampling rounds/batch: 4"), "{t}");
+    assert!(t.contains("sampling rounds/batch: 0"), "{t}");
+}
+
+#[test]
+fn e2e_run_emits_loss_curve() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let d = fastsample::graph::datasets::quickstart(6);
+    let t = exp::e2e_run(&d, "quickstart", "hybrid+fused", 2, 2, 6).unwrap();
+    assert!(t.contains("loss curve"));
+    assert!(t.contains("epoch"));
+}

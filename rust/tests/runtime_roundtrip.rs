@@ -1,0 +1,128 @@
+//! Integration: the python-AOT → rust-PJRT round trip on the real
+//! `quickstart` artifact. Requires `make artifacts` (skips with a clear
+//! message otherwise, so `cargo test` works on a fresh checkout).
+
+use fastsample::runtime::{Engine, HostTensor, Manifest, ModelRuntime, PaddedBatch};
+use fastsample::sampling::rng::RngKey;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Build a random-but-valid padded batch for a variant.
+fn random_batch(rt: &ModelRuntime, seed: u64) -> PaddedBatch {
+    let v = &rt.variant;
+    let key = RngKey::new(seed);
+    let mut s = key.stream(0);
+    let feats: Vec<f32> =
+        (0..v.caps[0] * v.feat_dim).map(|_| s.next_range_f32(-1.0, 1.0)).collect();
+    let mut levels = Vec::new();
+    for l in 1..=v.layers() {
+        let k = v.fanout_at_layer(l);
+        let n_dst = v.caps[l];
+        let n_src = v.caps[l - 1];
+        let idx: Vec<i32> = (0..n_dst * k).map(|_| s.next_below(n_src) as i32).collect();
+        let cnt: Vec<i32> = (0..n_dst).map(|_| s.next_below(k + 1) as i32).collect();
+        levels.push((
+            HostTensor::i32(idx, &[n_dst, k]),
+            HostTensor::i32(cnt, &[n_dst]),
+        ));
+    }
+    let labels: Vec<i32> = (0..v.batch).map(|_| s.next_below(v.classes) as i32).collect();
+    PaddedBatch {
+        feats: HostTensor::f32(feats, &[v.caps[0], v.feat_dim]),
+        levels,
+        labels,
+        label_mask: vec![1.0; v.batch],
+    }
+}
+
+#[test]
+fn quickstart_train_and_eval_execute() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &manifest, "quickstart").unwrap();
+
+    let params = rt.init_params(0);
+    assert_eq!(params.len(), rt.variant.params.len());
+
+    let batch = random_batch(&rt, 1);
+    let out = rt.train_step(&params, &batch, 0).unwrap();
+    assert!(out.loss.is_finite(), "loss {}", out.loss);
+    // Random logits + 8 classes → loss near ln(8).
+    assert!((0.5..6.0).contains(&out.loss), "loss {}", out.loss);
+    assert_eq!(out.grads.len(), params.len());
+    for (g, p) in out.grads.iter().zip(&params) {
+        assert_eq!(g.shape(), p.shape());
+        assert!(g.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+    // Grads must not be identically zero (the model is differentiable).
+    let total: f32 = out
+        .grads
+        .iter()
+        .map(|g| g.as_f32().unwrap().iter().map(|x| x.abs()).sum::<f32>())
+        .sum();
+    assert!(total > 0.0);
+
+    let eval = rt.eval_step(&params, &batch).unwrap();
+    assert_eq!(eval.logits.shape(), &[rt.variant.batch, rt.variant.classes]);
+}
+
+#[test]
+fn train_step_is_deterministic_given_seed() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &manifest, "quickstart").unwrap();
+    let params = rt.init_params(3);
+    let batch = random_batch(&rt, 4);
+    let a = rt.train_step(&params, &batch, 7).unwrap();
+    let b = rt.train_step(&params, &batch, 7).unwrap();
+    assert_eq!(a.loss, b.loss);
+    for (x, y) in a.grads.iter().zip(&b.grads) {
+        assert_eq!(x, y);
+    }
+    // Different dropout seed → different loss (dropout is live).
+    let c = rt.train_step(&params, &batch, 8).unwrap();
+    assert_ne!(a.loss, c.loss);
+}
+
+#[test]
+fn sgd_on_executable_reduces_loss() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &manifest, "quickstart").unwrap();
+    let mut params = rt.init_params(5);
+    let batch = random_batch(&rt, 6);
+    let first = rt.train_step(&params, &batch, 0).unwrap().loss;
+    let mut last = first;
+    for step in 0..30 {
+        let out = rt.train_step(&params, &batch, step).unwrap();
+        last = out.loss;
+        for (p, g) in params.iter_mut().zip(&out.grads) {
+            if let (HostTensor::F32 { data: pd, .. }, HostTensor::F32 { data: gd, .. }) =
+                (p, g)
+            {
+                for (x, dx) in pd.iter_mut().zip(gd) {
+                    *x -= 0.2 * dx;
+                }
+            }
+        }
+    }
+    assert!(
+        last < 0.8 * first,
+        "loss failed to decrease on fixed batch: {first} -> {last}"
+    );
+}

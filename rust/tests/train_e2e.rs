@@ -1,0 +1,115 @@
+//! Integration: the full distributed training loop on the quickstart
+//! dataset/variant, including the paper's central invariant — vanilla,
+//! hybrid, and hybrid+fused runs are **mathematically identical** (§4.2:
+//! "Activating or disabling these two techniques lead to mathematically
+//! equivalent training results") — here pinned to bit-equal loss curves.
+
+use fastsample::dist::NetworkModel;
+use fastsample::graph::datasets;
+use fastsample::train::{train_distributed, TrainConfig};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn base_cfg(mode: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::mode("quickstart", mode, 4).unwrap();
+    cfg.epochs = 2;
+    cfg.max_batches = Some(3);
+    cfg.net = NetworkModel::free();
+    cfg.eval_last_batch = true;
+    cfg
+}
+
+#[test]
+fn all_three_modes_produce_identical_loss_curves() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let d = datasets::quickstart(1);
+    let reports: Vec<_> = ["vanilla", "hybrid", "hybrid+fused"]
+        .iter()
+        .map(|m| train_distributed(&d, &dir, &base_cfg(m)).unwrap())
+        .collect();
+
+    assert!(!reports[0].loss_curve.is_empty());
+    // Bit-identical loss curves across all three Fig 6 arms.
+    assert_eq!(reports[0].loss_curve, reports[1].loss_curve, "vanilla vs hybrid");
+    assert_eq!(reports[1].loss_curve, reports[2].loss_curve, "hybrid vs hybrid+fused");
+
+    // Round structure: vanilla pays sampling rounds, hybrid pays none.
+    assert!(reports[0].comm_total.sampling_rounds() > 0);
+    assert_eq!(reports[1].comm_total.sampling_rounds(), 0);
+    assert_eq!(reports[2].comm_total.sampling_rounds(), 0);
+    // Everyone pays the 2 feature rounds and grad sync.
+    for r in &reports {
+        assert!(r.comm_total.rounds[2] > 0, "feature requests missing");
+        assert!(r.comm_total.rounds[4] > 0, "grad sync missing");
+    }
+}
+
+#[test]
+fn training_learns_the_planted_task() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let d = datasets::quickstart(2);
+    let mut cfg = base_cfg("hybrid+fused");
+    cfg.epochs = 6;
+    cfg.max_batches = Some(3);
+    let report = train_distributed(&d, &dir, &cfg).unwrap();
+
+    let first = report.epochs.first().unwrap().mean_loss;
+    let last = report.epochs.last().unwrap().mean_loss;
+    assert!(
+        last < 0.6 * first,
+        "loss failed to decrease: {first} -> {last} (curve {:?})",
+        report.loss_curve
+    );
+    // The planted task is easy: accuracy on the last batch should beat
+    // chance (1/8) by a wide margin after 6 epochs.
+    let acc = report.epochs.last().unwrap().acc.unwrap();
+    assert!(acc > 0.5, "accuracy {acc}");
+}
+
+#[test]
+fn feature_cache_does_not_change_training() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let d = datasets::quickstart(3);
+    let plain = train_distributed(&d, &dir, &base_cfg("hybrid+fused")).unwrap();
+    let mut cached_cfg = base_cfg("hybrid+fused");
+    cached_cfg.cache_capacity = 400;
+    let cached = train_distributed(&d, &dir, &cached_cfg).unwrap();
+    assert_eq!(plain.loss_curve, cached.loss_curve);
+    // And it must actually cut feature bytes.
+    use fastsample::dist::RoundKind;
+    assert!(
+        cached.comm_total.bytes_of(RoundKind::FeatureResponse)
+            < plain.comm_total.bytes_of(RoundKind::FeatureResponse),
+        "cache saved no bytes"
+    );
+}
+
+#[test]
+fn worker_counts_give_same_math_different_rounds() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let d = datasets::quickstart(4);
+    for workers in [2, 4] {
+        let mut cfg = base_cfg("vanilla");
+        cfg.workers = workers;
+        let r = train_distributed(&d, &dir, &cfg).unwrap();
+        // 2(L-1) sampling rounds per batch, L=3 → 4 per batch.
+        let batches: u64 = r.epochs.iter().map(|e| e.batches as u64).sum();
+        assert_eq!(r.comm_total.sampling_rounds(), 4 * batches, "workers={workers}");
+        assert!(r.loss_curve.iter().all(|l| l.is_finite()));
+    }
+}
