@@ -1,9 +1,15 @@
 //! Microbenchmarks of the L3 hot paths feeding the figure-level numbers:
 //! per-level sampling kernels, the relabel/intern pass, the RNG, the
-//! partitioner, and the ring all-reduce. These are the profile targets
-//! of EXPERIMENTS.md §Perf.
+//! partitioner, and the all-reduce collective. These are the profile
+//! targets of EXPERIMENTS.md §Perf.
 //!
 //!   cargo bench --bench kernels_micro
+//!
+//! Besides the printed table, results are dumped as machine-readable JSON
+//! to `BENCH_dist.json` (override the path with `BENCH_JSON=...`), giving
+//! later PRs a perf trajectory to diff against.
+
+use std::collections::BTreeMap;
 
 use fastsample::dist::{run_workers, NetworkModel, RoundKind};
 use fastsample::graph::generator::{planted_communities, rmat};
@@ -12,10 +18,12 @@ use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{
     sample_level_baseline, sample_level_fused, SamplerWorkspace,
 };
-use fastsample::util::bench::{header, Bencher};
+use fastsample::util::bench::{header, Bencher, Stats};
+use fastsample::util::json::Json;
 
 fn main() {
     let bench = Bencher::default();
+    let mut all: Vec<Stats> = Vec::new();
     println!("{}", header());
 
     // ---- Per-level kernels on a skewed RMAT graph (1M edges).
@@ -37,6 +45,7 @@ fn main() {
             sample_level_baseline(&g, &seeds, fanout, key.fold(i), &mut ws)
         });
         println!("{}", s.row());
+        all.push(s);
         let mut ws = SamplerWorkspace::new();
         let mut j = 0u64;
         let s = bench.run(&format!("level/fused    fanout={fanout}"), || {
@@ -44,6 +53,7 @@ fn main() {
             sample_level_fused(&g, &seeds, fanout, key.fold(j), &mut ws)
         });
         println!("{}", s.row());
+        all.push(s);
     }
 
     // ---- Relabel/intern pass in isolation.
@@ -59,6 +69,7 @@ fn main() {
             order.len()
         });
         println!("{}", s.row());
+        all.push(s);
     }
 
     // ---- RNG throughput.
@@ -75,22 +86,32 @@ fn main() {
             acc
         });
         println!("{}", s.row());
+        all.push(s);
     }
 
     // ---- Partitioner end to end (64k nodes).
     {
         let (pg, _) = planted_communities(65_536, 8, 12, 0.9, RngKey::new(4));
         let train: Vec<u32> = (0..65_536u32).step_by(11).collect();
-        let slow = Bencher { budget: std::time::Duration::from_secs(6), min_iters: 3, ..Default::default() };
+        let slow = Bencher {
+            budget: std::time::Duration::from_secs(6),
+            min_iters: 3,
+            ..Default::default()
+        };
         let s = slow.run("partition/metis-like 64k x8", || {
             partition_graph(&pg, &train, &PartitionConfig::new(8))
         });
         println!("{}", s.row());
+        all.push(s);
     }
 
-    // ---- Ring all-reduce (1M floats, 4 workers).
+    // ---- All-reduce collective (1M floats, 4 workers).
     {
-        let slow = Bencher { budget: std::time::Duration::from_secs(4), min_iters: 3, ..Default::default() };
+        let slow = Bencher {
+            budget: std::time::Duration::from_secs(4),
+            min_iters: 3,
+            ..Default::default()
+        };
         let s = slow.run("comm/all_reduce 1M f32 x4 workers", || {
             run_workers(4, NetworkModel::free(), |rank, comm| {
                 let mut data = vec![rank as f32; 1 << 20];
@@ -99,5 +120,35 @@ fn main() {
             })
         });
         println!("{}", s.row());
+        all.push(s);
     }
+
+    // ---- Machine-readable record for the perf trajectory.
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_dist.json".into());
+    let doc = Json::Obj(BTreeMap::from([
+        ("schema".to_string(), Json::Str("fastsample-bench-v1".into())),
+        ("bench".to_string(), Json::Str("kernels_micro".into())),
+        ("status".to_string(), Json::Str("measured".into())),
+        (
+            "threads".to_string(),
+            Json::Num(fastsample::util::par::num_threads() as f64),
+        ),
+        ("results".to_string(), Json::Arr(all.iter().map(stats_json).collect())),
+    ]));
+    match std::fs::write(&path, doc.dump() + "\n") {
+        Ok(()) => println!("\nwrote {} results to {path}", all.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+fn stats_json(s: &Stats) -> Json {
+    Json::Obj(BTreeMap::from([
+        ("name".to_string(), Json::Str(s.name.clone())),
+        ("iters".to_string(), Json::Num(s.iters as f64)),
+        ("mean_s".to_string(), Json::Num(s.mean)),
+        ("std_s".to_string(), Json::Num(s.std)),
+        ("min_s".to_string(), Json::Num(s.min)),
+        ("p50_s".to_string(), Json::Num(s.p50)),
+        ("p95_s".to_string(), Json::Num(s.p95)),
+    ]))
 }

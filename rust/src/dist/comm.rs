@@ -1,0 +1,458 @@
+//! Typed collective rounds — the communication API everything else is
+//! built on.
+//!
+//! The paper's cost analysis (§3.3) counts *rounds*: synchronized
+//! collectives in which every worker exchanges one typed payload with its
+//! peers. This module makes that the unit of the API: every data
+//! collective is an [`Comm::exchange`] tagged with a [`RoundKind`], and is
+//! charged to shared [`Counters`] (one round per *collective*, bytes per
+//! *worker*), so "vanilla pays 2(L−1) sampling rounds, hybrid pays 0" is
+//! an assertable fact rather than a claim.
+//!
+//! Transport is an in-process mesh of `mpsc` channels between worker
+//! threads (see [`super::worker`]); the seam where a real RPC transport
+//! would slot in is exactly the private `exchange_impl` below. Because
+//! channels are FIFO per (src, dst) pair and every worker executes the
+//! same sequence of collectives, no per-round barrier is needed; payloads
+//! carry a round tag so a desynchronized worker fails loudly instead of
+//! deadlocking or mismatching types.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use super::net::NetworkModel;
+
+/// What a collective round moves — the paper's round taxonomy.
+///
+/// The `usize` discriminants are stable and public: `CommStats::rounds`
+/// and `::bytes` are indexable arrays (`rounds[RoundKind::GradSync as
+/// usize]`), which keeps report code free of match boilerplate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum RoundKind {
+    /// Vanilla sampling: frontier nodes shipped to their owners.
+    SampleRequest = 0,
+    /// Vanilla sampling: sampled neighborhoods shipped back.
+    SampleResponse = 1,
+    /// Feature exchange: input-node ids shipped to feature owners.
+    FeatureRequest = 2,
+    /// Feature exchange: feature rows shipped back.
+    FeatureResponse = 3,
+    /// Data-parallel gradient synchronization.
+    GradSync = 4,
+}
+
+impl RoundKind {
+    pub const COUNT: usize = 5;
+    pub const ALL: [RoundKind; Self::COUNT] = [
+        RoundKind::SampleRequest,
+        RoundKind::SampleResponse,
+        RoundKind::FeatureRequest,
+        RoundKind::FeatureResponse,
+        RoundKind::GradSync,
+    ];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoundKind::SampleRequest => "sample-request",
+            RoundKind::SampleResponse => "sample-response",
+            RoundKind::FeatureRequest => "feature-request",
+            RoundKind::FeatureResponse => "feature-response",
+            RoundKind::GradSync => "grad-sync",
+        }
+    }
+}
+
+/// Shared, thread-safe round/byte accounting. One instance per training
+/// run, shared by all workers (`Arc<Counters>`); snapshot at any sync
+/// point to get a [`CommStats`].
+#[derive(Debug, Default)]
+pub struct Counters {
+    rounds: [AtomicU64; RoundKind::COUNT],
+    bytes: [AtomicU64; RoundKind::COUNT],
+}
+
+impl Counters {
+    /// Record one collective round of `kind`. Called once per collective
+    /// (by rank 0), not once per worker — Fig 6's round counts are
+    /// per-fabric, not per-machine.
+    pub fn add_round(&self, kind: RoundKind) {
+        self.rounds[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` bytes sent off-worker under `kind`. Called by every
+    /// worker for its own payloads, so bytes aggregate over the fabric.
+    pub fn add_bytes(&self, kind: RoundKind, n: u64) {
+        if n > 0 {
+            self.bytes[kind.index()].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Consistent-enough copy of the counters (exact at join/barrier
+    /// points, which is where every reader snapshots).
+    pub fn snapshot(&self) -> CommStats {
+        let mut s = CommStats::default();
+        for k in RoundKind::ALL {
+            s.rounds[k.index()] = self.rounds[k.index()].load(Ordering::Relaxed);
+            s.bytes[k.index()] = self.bytes[k.index()].load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+/// Plain-data snapshot of [`Counters`], indexable by `RoundKind as usize`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CommStats {
+    pub rounds: [u64; RoundKind::COUNT],
+    pub bytes: [u64; RoundKind::COUNT],
+}
+
+impl CommStats {
+    pub fn rounds_of(&self, kind: RoundKind) -> u64 {
+        self.rounds[kind.index()]
+    }
+
+    pub fn bytes_of(&self, kind: RoundKind) -> u64 {
+        self.bytes[kind.index()]
+    }
+
+    /// The paper's headline counter: sampling rounds (request + response).
+    pub fn sampling_rounds(&self) -> u64 {
+        self.rounds_of(RoundKind::SampleRequest) + self.rounds_of(RoundKind::SampleResponse)
+    }
+
+    pub fn feature_rounds(&self) -> u64 {
+        self.rounds_of(RoundKind::FeatureRequest) + self.rounds_of(RoundKind::FeatureResponse)
+    }
+
+    pub fn total_rounds(&self) -> u64 {
+        self.rounds.iter().sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    /// `self - before`, element-wise (for per-epoch deltas).
+    pub fn diff(&self, before: &CommStats) -> CommStats {
+        let mut out = CommStats::default();
+        for i in 0..RoundKind::COUNT {
+            out.rounds[i] = self.rounds[i].saturating_sub(before.rounds[i]);
+            out.bytes[i] = self.bytes[i].saturating_sub(before.bytes[i]);
+        }
+        out
+    }
+
+    /// Aligned per-kind table (used by `fastsample train` and report A3).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{:<18} {:>10} {:>16}\n", "round kind", "rounds", "bytes"));
+        for k in RoundKind::ALL {
+            out.push_str(&format!(
+                "{:<18} {:>10} {:>16}\n",
+                k.name(),
+                self.rounds_of(k),
+                self.bytes_of(k)
+            ));
+        }
+        out.push_str(&format!(
+            "{:<18} {:>10} {:>16}",
+            "total",
+            self.total_rounds(),
+            self.total_bytes()
+        ));
+        out
+    }
+}
+
+/// Type-erased payload crossing a (src, dst) channel: a round tag plus the
+/// typed vector, boxed. The tag catches lockstep bugs (two workers issuing
+/// different collective sequences) with a readable panic.
+type Payload = Box<dyn Any + Send>;
+
+/// Tags for control-plane collectives that move no accountable data.
+const TAG_BARRIER: u8 = 200;
+const TAG_MIN_U64: u8 = 201;
+
+/// One worker's handle to the fabric: rank/world identity, the channel
+/// mesh, the network cost model, and the shared counters.
+///
+/// All collectives are *uniform*: every rank in the world must call the
+/// same method in the same order (the usual SPMD contract). A violation
+/// panics with a "collective sequence mismatch" rather than deadlocking.
+pub struct Comm {
+    rank: usize,
+    world: usize,
+    /// Shared accounting; public so trainers can snapshot per-epoch deltas.
+    pub counters: Arc<Counters>,
+    net: NetworkModel,
+    /// `tx[dst]` sends to rank `dst`; the self slot exists but is unused.
+    tx: Vec<Sender<Payload>>,
+    /// `rx[src]` receives from rank `src`; the self slot is unused.
+    rx: Vec<Receiver<Payload>>,
+}
+
+impl Comm {
+    /// Build the fully-connected channel mesh for `world` ranks.
+    pub(crate) fn mesh(world: usize, net: NetworkModel, counters: Arc<Counters>) -> Vec<Comm> {
+        assert!(world >= 1, "world size must be >= 1");
+        let mut tx_of_rank: Vec<Vec<Sender<Payload>>> =
+            (0..world).map(|_| Vec::with_capacity(world)).collect();
+        let mut rx_of_rank: Vec<Vec<Option<Receiver<Payload>>>> =
+            (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+        for src in 0..world {
+            for dst in 0..world {
+                let (tx, rx) = channel();
+                tx_of_rank[src].push(tx);
+                rx_of_rank[dst][src] = Some(rx);
+            }
+        }
+        tx_of_rank
+            .into_iter()
+            .zip(rx_of_rank)
+            .enumerate()
+            .map(|(rank, (tx, rx))| Comm {
+                rank,
+                world,
+                counters: Arc::clone(&counters),
+                net: net.clone(),
+                tx,
+                rx: rx.into_iter().map(|r| r.expect("mesh slot filled")).collect(),
+            })
+            .collect()
+    }
+
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    #[inline]
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn net(&self) -> &NetworkModel {
+        &self.net
+    }
+
+    /// One typed all-to-all round: `outboxes[dst]` goes to rank `dst`,
+    /// the return value's `[src]` slot is what rank `src` sent here (the
+    /// self slot passes through untouched and untaxed).
+    ///
+    /// Accounting: the round is counted **once** per collective (rank 0
+    /// increments), bytes are charged per worker for off-rank payloads
+    /// only, and the network model injects `latency + bytes/bandwidth`
+    /// of wall time on each worker.
+    pub fn exchange<T: Send + 'static>(
+        &mut self,
+        kind: RoundKind,
+        outboxes: Vec<Vec<T>>,
+    ) -> Vec<Vec<T>> {
+        self.exchange_impl(kind.index() as u8, Some(kind), outboxes)
+    }
+
+    /// Rendezvous: returns once every rank has entered the barrier.
+    /// Control-plane only — not charged to any `RoundKind`.
+    pub fn barrier(&mut self) {
+        let empty: Vec<Vec<u8>> = (0..self.world).map(|_| Vec::new()).collect();
+        let _ = self.exchange_impl(TAG_BARRIER, None, empty);
+    }
+
+    /// Global minimum (used to agree on batches/epoch). Control-plane —
+    /// uncharged, like the barrier.
+    pub fn all_reduce_min_u64(&mut self, v: u64) -> u64 {
+        let outboxes: Vec<Vec<u64>> = (0..self.world)
+            .map(|dst| if dst == self.rank { Vec::new() } else { vec![v] })
+            .collect();
+        let inboxes = self.exchange_impl(TAG_MIN_U64, None, outboxes);
+        let mut m = v;
+        for (src, inbox) in inboxes.iter().enumerate() {
+            if src != self.rank {
+                m = m.min(inbox[0]);
+            }
+        }
+        m
+    }
+
+    /// Mean all-reduce over `data`, element-wise across ranks, in place.
+    ///
+    /// Every rank accumulates contributions in rank order 0..W, so all
+    /// ranks compute **bit-identical** results — the loss-curve
+    /// equivalence tests depend on this. The transport is a direct
+    /// exchange (each rank broadcasts its buffer) rather than a ring:
+    /// same math, simpler lockstep; the byte accounting reflects the
+    /// broadcast honestly (`(W-1) * len * 4` per worker).
+    pub fn all_reduce_mean_f32(&mut self, kind: RoundKind, data: &mut [f32]) {
+        let mine = data.to_vec();
+        let outboxes: Vec<Vec<f32>> = (0..self.world)
+            .map(|dst| if dst == self.rank { Vec::new() } else { mine.clone() })
+            .collect();
+        let inboxes = self.exchange(kind, outboxes);
+        data.fill(0.0);
+        for src in 0..self.world {
+            let part: &[f32] = if src == self.rank { &mine } else { &inboxes[src] };
+            assert_eq!(part.len(), data.len(), "all-reduce length mismatch across ranks");
+            for (acc, x) in data.iter_mut().zip(part) {
+                *acc += *x;
+            }
+        }
+        let inv = 1.0 / self.world as f32;
+        for x in data.iter_mut() {
+            *x *= inv;
+        }
+    }
+
+    fn exchange_impl<T: Send + 'static>(
+        &mut self,
+        tag: u8,
+        track: Option<RoundKind>,
+        outboxes: Vec<Vec<T>>,
+    ) -> Vec<Vec<T>> {
+        assert_eq!(outboxes.len(), self.world, "need one outbox per rank");
+        let mut inboxes: Vec<Option<Vec<T>>> = (0..self.world).map(|_| None).collect();
+        let mut sent_bytes = 0u64;
+        for (dst, data) in outboxes.into_iter().enumerate() {
+            if dst == self.rank {
+                inboxes[dst] = Some(data);
+                continue;
+            }
+            sent_bytes += (data.len() * std::mem::size_of::<T>()) as u64;
+            if self.tx[dst].send(Box::new((tag, data))).is_err() {
+                panic!("rank {}: rank {dst} exited mid-collective", self.rank);
+            }
+        }
+        if let Some(kind) = track {
+            self.counters.add_bytes(kind, sent_bytes);
+            if self.rank == 0 {
+                self.counters.add_round(kind);
+            }
+        }
+        self.net.delay(sent_bytes);
+        for src in 0..self.world {
+            if src == self.rank {
+                continue;
+            }
+            let payload = match self.rx[src].recv() {
+                Ok(p) => p,
+                Err(_) => panic!("rank {}: rank {src} exited mid-collective", self.rank),
+            };
+            let boxed: Box<(u8, Vec<T>)> = payload.downcast().unwrap_or_else(|_| {
+                panic!(
+                    "rank {}: payload type mismatch from rank {src} — \
+                     workers issued different collective sequences",
+                    self.rank
+                )
+            });
+            let (got_tag, data) = *boxed;
+            assert_eq!(
+                got_tag, tag,
+                "rank {}: collective sequence mismatch with rank {src}",
+                self.rank
+            );
+            inboxes[src] = Some(data);
+        }
+        inboxes.into_iter().map(|o| o.expect("inbox filled")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::worker::{run_workers, run_workers_with};
+    use super::*;
+
+    #[test]
+    fn exchange_routes_payloads_by_rank() {
+        let results = run_workers(3, NetworkModel::free(), |rank, comm| {
+            // Rank r sends the single value r*10 + dst to each dst.
+            let outboxes: Vec<Vec<u32>> =
+                (0..3).map(|dst| vec![(rank * 10 + dst) as u32]).collect();
+            comm.exchange(RoundKind::SampleRequest, outboxes)
+        });
+        for (rank, inboxes) in results.iter().enumerate() {
+            for (src, inbox) in inboxes.iter().enumerate() {
+                assert_eq!(inbox[..], [(src * 10 + rank) as u32], "src {src} -> dst {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_count_once_per_collective_bytes_per_worker() {
+        let counters = Arc::new(Counters::default());
+        run_workers_with(4, NetworkModel::free(), Arc::clone(&counters), |rank, comm| {
+            // Two rounds; each worker ships 8 bytes (2 u32) to each peer.
+            for _ in 0..2 {
+                let outboxes: Vec<Vec<u32>> = (0..4).map(|_| vec![rank as u32, 7]).collect();
+                comm.exchange(RoundKind::FeatureRequest, outboxes);
+            }
+        });
+        let s = counters.snapshot();
+        assert_eq!(s.rounds_of(RoundKind::FeatureRequest), 2);
+        // 4 workers x 3 peers x 8 bytes x 2 rounds; self slot untaxed.
+        assert_eq!(s.bytes_of(RoundKind::FeatureRequest), 4 * 3 * 8 * 2);
+        assert_eq!(s.total_rounds(), 2);
+    }
+
+    #[test]
+    fn all_reduce_mean_is_identical_on_every_rank() {
+        let results = run_workers(4, NetworkModel::free(), |rank, comm| {
+            let mut data = vec![rank as f32, 1.0, -2.0 * rank as f32];
+            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
+            data
+        });
+        for r in &results {
+            assert_eq!(r, &results[0], "ranks disagree bitwise");
+        }
+        assert_eq!(results[0][..], [1.5, 1.0, -3.0]);
+    }
+
+    #[test]
+    fn min_and_barrier_are_uncharged() {
+        let counters = Arc::new(Counters::default());
+        let mins = run_workers_with(3, NetworkModel::free(), Arc::clone(&counters), |rank, comm| {
+            comm.barrier();
+            comm.all_reduce_min_u64(10 + rank as u64)
+        });
+        assert!(mins.iter().all(|&m| m == 10));
+        let s = counters.snapshot();
+        assert_eq!(s.total_rounds(), 0);
+        assert_eq!(s.total_bytes(), 0);
+    }
+
+    #[test]
+    fn single_rank_world_degenerates_cleanly() {
+        let out = run_workers(1, NetworkModel::free(), |_rank, comm| {
+            comm.barrier();
+            let mut data = vec![3.0f32, -1.0];
+            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
+            let m = comm.all_reduce_min_u64(9);
+            let echoed = comm.exchange(RoundKind::SampleRequest, vec![vec![42u32]]);
+            (data, m, echoed)
+        });
+        let (data, m, echoed) = &out[0];
+        assert_eq!(data[..], [3.0, -1.0]);
+        assert_eq!(*m, 9);
+        assert_eq!(echoed.len(), 1);
+        assert_eq!(echoed[0][..], [42u32]);
+    }
+
+    #[test]
+    fn stats_diff_and_report_are_consistent() {
+        let a = CommStats { rounds: [0, 0, 0, 0, 5], bytes: [0, 0, 0, 0, 1000] };
+        let b = CommStats { rounds: [0, 0, 0, 0, 8], bytes: [0, 0, 0, 0, 1600] };
+        let d = b.diff(&a);
+        assert_eq!(d.rounds_of(RoundKind::GradSync), 3);
+        assert_eq!(d.bytes_of(RoundKind::GradSync), 600);
+        assert_eq!(d.total_bytes(), 600);
+        let rep = b.report();
+        assert!(rep.contains("grad-sync"));
+        assert!(rep.contains("total"));
+    }
+}

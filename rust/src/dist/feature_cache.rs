@@ -1,0 +1,250 @@
+//! Per-worker cache of *remote* feature rows (paper §5 extension).
+//!
+//! Hybrid partitioning removes sampling rounds; what remains is the
+//! feature exchange, and most of its bytes fetch the same hot (high
+//! in-degree) remote rows over and over. A small cache in front of
+//! [`super::feature_store::fetch_features`] cuts
+//! [`super::comm::RoundKind::FeatureResponse`] traffic without changing a
+//! single returned row (training stays bit-identical — rows are copies).
+//!
+//! Two policies:
+//! * [`CachePolicy::StaticDegree`] — fill once (warm-up with
+//!   [`hottest_remote_nodes`]), never evict: the classic degree-static
+//!   cache of GNS/BGL-style systems. Runtime inserts are accepted only
+//!   while capacity remains.
+//! * [`CachePolicy::Clock`] — second-chance (CLOCK) eviction, an LRU
+//!   approximation with O(1) metadata per row.
+
+use std::collections::HashMap;
+
+use crate::graph::NodeId;
+
+/// Eviction policy selector (the A1 ablation axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Static contents: first fill wins, nothing is ever evicted.
+    StaticDegree,
+    /// CLOCK / second-chance approximation of LRU.
+    Clock,
+}
+
+/// Fixed-capacity cache of feature rows, keyed by global node id.
+pub struct FeatureCache {
+    policy: CachePolicy,
+    capacity: usize,
+    feat_dim: usize,
+    /// Row-major slab, `len == len() * feat_dim`.
+    rows: Vec<f32>,
+    /// Slot → node id.
+    node_of: Vec<NodeId>,
+    /// CLOCK reference bits (set on hit, cleared as the hand sweeps).
+    referenced: Vec<bool>,
+    /// Node id → slot.
+    index: HashMap<NodeId, u32>,
+    hand: usize,
+}
+
+impl FeatureCache {
+    pub fn new(policy: CachePolicy, capacity: usize, feat_dim: usize) -> Self {
+        assert!(feat_dim > 0, "feat_dim must be positive");
+        Self {
+            policy,
+            capacity,
+            feat_dim,
+            rows: Vec::new(),
+            node_of: Vec::new(),
+            referenced: Vec::new(),
+            index: HashMap::with_capacity(capacity),
+            hand: 0,
+        }
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of resident rows.
+    pub fn len(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.node_of.is_empty()
+    }
+
+    /// Is `v` resident? (Does not touch the reference bit.)
+    pub fn contains(&self, v: NodeId) -> bool {
+        self.index.contains_key(&v)
+    }
+
+    /// The cached row for `v`, marking it recently used.
+    pub fn get(&mut self, v: NodeId) -> Option<&[f32]> {
+        let slot = *self.index.get(&v)? as usize;
+        self.referenced[slot] = true;
+        let f = self.feat_dim;
+        Some(&self.rows[slot * f..(slot + 1) * f])
+    }
+
+    /// Offer a row to the cache. Below capacity it is always admitted;
+    /// at capacity, `StaticDegree` rejects (static contents) and `Clock`
+    /// evicts the first unreferenced row past the hand.
+    pub fn insert(&mut self, v: NodeId, row: &[f32]) {
+        assert_eq!(row.len(), self.feat_dim, "row width != feat_dim");
+        if self.capacity == 0 {
+            return;
+        }
+        let f = self.feat_dim;
+        if let Some(&slot) = self.index.get(&v) {
+            // Refresh (rows are immutable in this workload, but stay exact).
+            let slot = slot as usize;
+            self.rows[slot * f..(slot + 1) * f].copy_from_slice(row);
+            self.referenced[slot] = true;
+            return;
+        }
+        if self.node_of.len() < self.capacity {
+            let slot = self.node_of.len();
+            self.node_of.push(v);
+            self.referenced.push(true);
+            self.rows.extend_from_slice(row);
+            self.index.insert(v, slot as u32);
+            return;
+        }
+        if self.policy == CachePolicy::StaticDegree {
+            return;
+        }
+        // CLOCK sweep: give referenced rows a second chance.
+        let slot = loop {
+            let s = self.hand;
+            self.hand = (self.hand + 1) % self.capacity;
+            if self.referenced[s] {
+                self.referenced[s] = false;
+            } else {
+                break s;
+            }
+        };
+        self.index.remove(&self.node_of[slot]);
+        self.node_of[slot] = v;
+        self.referenced[slot] = true;
+        self.rows[slot * f..(slot + 1) * f].copy_from_slice(row);
+        self.index.insert(v, slot as u32);
+    }
+}
+
+/// Warm-up set for `StaticDegree`: the `k` highest in-degree nodes this
+/// worker does *not* own — the rows most likely to be fetched every
+/// minibatch. Ties break toward lower node id so every run (and every
+/// worker pair) computes the same set.
+pub fn hottest_remote_nodes(
+    degree: impl Fn(NodeId) -> usize,
+    num_nodes: usize,
+    owns: impl Fn(NodeId) -> bool,
+    k: usize,
+) -> Vec<NodeId> {
+    let mut cand: Vec<(usize, NodeId)> = (0..num_nodes as NodeId)
+        .filter(|&v| !owns(v))
+        .map(|v| (degree(v), v))
+        .collect();
+    cand.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    cand.truncate(k);
+    cand.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: NodeId, f: usize) -> Vec<f32> {
+        (0..f).map(|j| (v as f32) * 10.0 + j as f32).collect()
+    }
+
+    #[test]
+    fn below_capacity_nothing_is_evicted_under_either_policy() {
+        for policy in [CachePolicy::StaticDegree, CachePolicy::Clock] {
+            let mut c = FeatureCache::new(policy, 8, 3);
+            for v in 0..8u32 {
+                c.insert(v, &row(v, 3));
+            }
+            assert_eq!(c.len(), 8, "{policy:?}");
+            for v in 0..8u32 {
+                assert_eq!(c.get(v).unwrap(), &row(v, 3)[..], "{policy:?} node {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn static_degree_is_static_at_capacity() {
+        let mut c = FeatureCache::new(CachePolicy::StaticDegree, 4, 2);
+        for v in 0..4u32 {
+            c.insert(v, &row(v, 2));
+        }
+        // Over-capacity inserts are rejected; the pinned set survives.
+        for v in 100..150u32 {
+            c.insert(v, &row(v, 2));
+            assert!(!c.contains(v));
+        }
+        for v in 0..4u32 {
+            assert!(c.contains(v), "pinned row {v} was evicted");
+        }
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn clock_second_chance_protects_referenced_rows() {
+        let mut c = FeatureCache::new(CachePolicy::Clock, 4, 2);
+        for v in 0..4u32 {
+            c.insert(v, &row(v, 2));
+        }
+        // All reference bits are set, so the first eviction degenerates to
+        // FIFO: a full sweep clears every bit, then slot 0 (node 0) goes.
+        c.insert(50, &row(50, 2));
+        assert_eq!(c.len(), 4);
+        assert!(c.contains(50));
+        assert!(!c.contains(0));
+        // Now bits are clear except node 50's. Touch node 1: the next
+        // eviction gives it a second chance and takes node 2 instead.
+        c.get(1).unwrap();
+        c.insert(51, &row(51, 2));
+        assert!(c.contains(1), "referenced row lost its second chance");
+        assert!(!c.contains(2), "unreferenced row should have been evicted");
+        assert!(c.contains(3) && c.contains(50) && c.contains(51));
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn zero_capacity_cache_is_inert() {
+        let mut c = FeatureCache::new(CachePolicy::Clock, 0, 2);
+        c.insert(1, &[1.0, 2.0]);
+        assert!(c.is_empty());
+        assert!(c.get(1).is_none());
+    }
+
+    #[test]
+    fn reinsert_refreshes_in_place() {
+        let mut c = FeatureCache::new(CachePolicy::Clock, 2, 1);
+        c.insert(3, &[1.0]);
+        c.insert(3, &[2.0]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(3).unwrap(), &[2.0][..]);
+    }
+
+    #[test]
+    fn hottest_remote_nodes_ranks_by_degree_skips_owned() {
+        let degrees = [5usize, 9, 9, 1, 7, 3];
+        let hot = hottest_remote_nodes(
+            |v| degrees[v as usize],
+            degrees.len(),
+            |v| v == 1, // node 1 is local — must be skipped even at degree 9
+            3,
+        );
+        assert_eq!(hot, [2, 4, 0]);
+        // k larger than the candidate set returns all remotes.
+        let all = hottest_remote_nodes(|v| degrees[v as usize], degrees.len(), |_| false, 100);
+        assert_eq!(all.len(), 6);
+        assert_eq!(all[0], 1); // degree 9, lower id wins the tie with 2
+        assert_eq!(all[1], 2);
+    }
+}

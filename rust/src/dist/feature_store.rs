@@ -1,0 +1,220 @@
+//! Partitioned feature store: fetch input-node features across workers in
+//! the two fixed rounds of the paper's cost model.
+//!
+//! Features are partitioned under *both* schemes (they are the storage
+//! that cannot be replicated — Fig 4), so every minibatch pays exactly one
+//! [`RoundKind::FeatureRequest`] round (ship wanted node ids to their
+//! owners) and one [`RoundKind::FeatureResponse`] round (rows come back),
+//! regardless of worker count or cache configuration. A
+//! [`FeatureCache`] in front short-circuits resident remote rows, cutting
+//! response *bytes* while the round structure — and every returned row —
+//! stays identical.
+//!
+//! This is a collective: all ranks must call [`fetch_features`] (or
+//! [`prefill_cache`]) together, even ranks that need no remote rows.
+
+use std::collections::HashMap;
+
+use crate::graph::NodeId;
+use crate::partition::WorkerShard;
+
+use super::comm::{Comm, RoundKind};
+use super::feature_cache::FeatureCache;
+
+/// Accounting for one `fetch_features` call (per worker, per call — the
+/// global aggregates live in [`super::comm::Counters`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FetchStats {
+    /// Requested rows served from this worker's own shard.
+    pub local_rows: usize,
+    /// Requested rows owned by other workers (cache hits included).
+    pub remote_rows: usize,
+    /// Remote rows served from the cache instead of the fabric.
+    pub cache_hits: usize,
+    /// Feature bytes this worker shipped to peers in the response round.
+    pub bytes_out: u64,
+    /// Feature bytes this worker received from peers.
+    pub bytes_in: u64,
+}
+
+/// Gather the feature rows of `nodes` (in order, duplicates allowed) into
+/// `out` as a row-major `[nodes.len(), feat_dim]` buffer.
+///
+/// Local rows copy straight from the shard; remote rows come from the
+/// cache when resident, otherwise from their owners via the two feature
+/// rounds (deduplicated per call — each missing row crosses the wire at
+/// most once). Freshly fetched rows are offered to the cache.
+pub fn fetch_features(
+    comm: &mut Comm,
+    shard: &WorkerShard,
+    nodes: &[NodeId],
+    mut cache: Option<&mut FeatureCache>,
+    out: &mut Vec<f32>,
+) -> FetchStats {
+    let f = shard.feat_dim;
+    let world = comm.world();
+    let rank = comm.rank();
+    out.clear();
+    out.resize(nodes.len() * f, 0.0);
+    let mut stats = FetchStats::default();
+
+    // ---- Pass 1: serve local + cached rows now; queue unique misses.
+    // Cached rows are copied immediately (not after the exchange) so a
+    // later insert can never evict a row we still owe the caller.
+    // `fetched` records each miss's (owner, position-in-request) as it is
+    // queued — the slot its row will occupy in the response.
+    let mut requests: Vec<Vec<NodeId>> = vec![Vec::new(); world];
+    let mut fetched: HashMap<NodeId, (usize, usize)> = HashMap::new();
+    let mut deferred: Vec<(usize, NodeId)> = Vec::new();
+    for (i, &v) in nodes.iter().enumerate() {
+        let dst = &mut out[i * f..(i + 1) * f];
+        if shard.owns(v) {
+            dst.copy_from_slice(shard.local_feat(v));
+            stats.local_rows += 1;
+            continue;
+        }
+        stats.remote_rows += 1;
+        if let Some(row) = cache.as_deref_mut().and_then(|c| c.get(v)) {
+            dst.copy_from_slice(row);
+            stats.cache_hits += 1;
+            continue;
+        }
+        if let std::collections::hash_map::Entry::Vacant(slot) = fetched.entry(v) {
+            let p = shard.book.part_of(v);
+            slot.insert((p, requests[p].len()));
+            requests[p].push(v);
+        }
+        deferred.push((i, v));
+    }
+
+    // ---- The two feature rounds (collective even with zero misses).
+    let granted = comm.exchange(RoundKind::FeatureRequest, requests);
+    let mut replies: Vec<Vec<f32>> = Vec::with_capacity(world);
+    for (src, req) in granted.iter().enumerate() {
+        let mut rep: Vec<f32> = Vec::with_capacity(req.len() * f);
+        for &v in req {
+            rep.extend_from_slice(shard.local_feat(v));
+        }
+        if src != rank {
+            stats.bytes_out += (rep.len() * 4) as u64;
+        }
+        replies.push(rep);
+    }
+    let rows = comm.exchange(RoundKind::FeatureResponse, replies);
+    for (src, inbox) in rows.iter().enumerate() {
+        if src != rank {
+            stats.bytes_in += (inbox.len() * 4) as u64;
+        }
+    }
+
+    // ---- Pass 2: fill deferred slots from the responses, warm the cache.
+    for (i, v) in deferred {
+        let (p, j) = fetched[&v];
+        out[i * f..(i + 1) * f].copy_from_slice(&rows[p][j * f..(j + 1) * f]);
+    }
+    if let Some(c) = cache.as_deref_mut() {
+        for (&v, &(p, j)) in &fetched {
+            c.insert(v, &rows[p][j * f..(j + 1) * f]);
+        }
+    }
+    stats
+}
+
+/// Warm a cache with `nodes` (typically
+/// [`super::feature_cache::hottest_remote_nodes`]) before training.
+/// Collective, like `fetch_features` — all ranks call it together, each
+/// with its own warm-up set.
+pub fn prefill_cache(
+    comm: &mut Comm,
+    shard: &WorkerShard,
+    nodes: &[NodeId],
+    cache: &mut FeatureCache,
+) -> FetchStats {
+    let mut scratch = Vec::new();
+    fetch_features(comm, shard, nodes, Some(cache), &mut scratch)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::feature_cache::CachePolicy;
+    use super::super::net::NetworkModel;
+    use super::super::worker::run_workers;
+    use super::*;
+    use crate::graph::generator::{make_dataset, DatasetParams};
+    use crate::graph::Dataset;
+    use crate::partition::{build_shards, partition_graph, PartitionConfig, Scheme};
+
+    fn dataset() -> Dataset {
+        make_dataset(&DatasetParams {
+            name: "feature-store-unit".into(),
+            num_nodes: 300,
+            avg_degree: 6,
+            feat_dim: 5,
+            num_classes: 3,
+            labeled_frac: 0.3,
+            p_intra: 0.8,
+            noise: 0.2,
+            seed: 13,
+        })
+    }
+
+    #[test]
+    fn duplicate_nodes_cross_the_wire_once() {
+        let d = dataset();
+        let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(3)));
+        let shards = build_shards(&d, &book, Scheme::Hybrid);
+        let shards_ref = &shards;
+        let d_ref = &d;
+        let results = run_workers(3, NetworkModel::free(), move |rank, comm| {
+            let shard = &shards_ref[rank];
+            // Every node requested three times.
+            let base: Vec<NodeId> =
+                (0..40).map(|i| ((i * 31 + rank * 97) % d_ref.num_nodes()) as NodeId).collect();
+            let nodes: Vec<NodeId> =
+                base.iter().chain(base.iter()).chain(base.iter()).copied().collect();
+            let mut out = Vec::new();
+            let stats = fetch_features(comm, shard, &nodes, None, &mut out);
+            (nodes, out, stats)
+        });
+        for (nodes, out, stats) in &results {
+            assert_eq!(stats.local_rows + stats.remote_rows, nodes.len());
+            for (i, &v) in nodes.iter().enumerate() {
+                assert_eq!(&out[i * d.feat_dim..(i + 1) * d.feat_dim], d.feat(v));
+            }
+            // Dedup: at most one wire row per *unique* remote node.
+            let unique_remote = stats.remote_rows / 3;
+            assert!(stats.bytes_in <= (unique_remote * d.feat_dim * 4) as u64);
+        }
+    }
+
+    #[test]
+    fn prefill_then_fetch_serves_from_cache() {
+        let d = dataset();
+        let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(2)));
+        let shards = build_shards(&d, &book, Scheme::Hybrid);
+        let shards_ref = &shards;
+        let d_ref = &d;
+        let results = run_workers(2, NetworkModel::free(), move |rank, comm| {
+            let shard = &shards_ref[rank];
+            // Warm the cache with every remote node, then fetch them.
+            let remote: Vec<NodeId> = (0..d_ref.num_nodes() as NodeId)
+                .filter(|&v| !shard.owns(v))
+                .collect();
+            let mut cache =
+                FeatureCache::new(CachePolicy::StaticDegree, remote.len(), d_ref.feat_dim);
+            prefill_cache(comm, shard, &remote, &mut cache);
+            let mut out = Vec::new();
+            let stats = fetch_features(comm, shard, &remote, Some(&mut cache), &mut out);
+            (remote, out, stats)
+        });
+        for (remote, out, stats) in &results {
+            assert_eq!(stats.cache_hits, remote.len());
+            assert_eq!(stats.bytes_in, 0);
+            for (i, &v) in remote.iter().enumerate() {
+                assert_eq!(&out[i * d.feat_dim..(i + 1) * d.feat_dim], d.feat(v));
+            }
+        }
+    }
+}

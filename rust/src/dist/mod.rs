@@ -1,0 +1,37 @@
+//! Distributed runtime: typed communication rounds, the worker harness,
+//! and the distributed sampling / feature-exchange collectives — the API
+//! layer the trainer, experiments, benches, and equivalence tests are
+//! built against (see DESIGN.md §dist for the module map and the
+//! round-count table).
+//!
+//! Structure:
+//!
+//! * [`comm`] — [`RoundKind`]-tagged collectives over an in-process
+//!   channel mesh, charged to shared [`Counters`] (rounds per collective,
+//!   bytes per worker). The seam where a real RPC transport would go.
+//! * [`net`] — [`NetworkModel`]: latency + bandwidth cost per round, so
+//!   Fig 5/6 epoch times are simulatable on one machine.
+//! * [`worker`] — [`run_workers`]/[`run_workers_with`]: spawn W
+//!   rendezvous-connected worker threads, collect per-rank results.
+//! * [`sampling`] — [`sample_mfgs_distributed`]: vanilla (2(L−1) rounds
+//!   per minibatch) and hybrid (zero rounds) sampling, bit-equal to the
+//!   single-machine pipeline.
+//! * [`feature_store`] — [`fetch_features`]/[`prefill_cache`]: the two
+//!   fixed feature rounds over the partitioned store.
+//! * [`feature_cache`] — [`FeatureCache`] under
+//!   [`CachePolicy::StaticDegree`] or [`CachePolicy::Clock`], plus the
+//!   [`hottest_remote_nodes`] warm-up heuristic.
+
+pub mod comm;
+pub mod feature_cache;
+pub mod feature_store;
+pub mod net;
+pub mod sampling;
+pub mod worker;
+
+pub use comm::{Comm, CommStats, Counters, RoundKind};
+pub use feature_cache::{hottest_remote_nodes, CachePolicy, FeatureCache};
+pub use feature_store::{fetch_features, prefill_cache, FetchStats};
+pub use net::NetworkModel;
+pub use sampling::sample_mfgs_distributed;
+pub use worker::{run_workers, run_workers_with};

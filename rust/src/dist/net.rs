@@ -1,0 +1,123 @@
+//! Network cost model for the simulated fabric.
+//!
+//! Every collective round a worker participates in is charged
+//! `latency + bytes_sent / bandwidth` of wall time (injected with
+//! `thread::sleep`, so the phase breakdowns of Fig 5/6 reflect the fabric
+//! even when all "workers" are threads on one machine). The `free()` model
+//! keeps the byte/round *accounting* but injects no delay — that is what
+//! the equivalence tests and CI run under, so they stay fast and
+//! deterministic in wall time.
+
+use std::time::Duration;
+
+/// Cost model of the fabric connecting workers (one worker ≈ one machine
+/// of the paper's testbed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkModel {
+    pub name: &'static str,
+    /// Per-round fixed cost (rendezvous + software stack).
+    pub latency: Duration,
+    /// Bytes per second; `f64::INFINITY` for the free model.
+    pub bandwidth: f64,
+    /// When false, rounds are accounted but no wall time is injected.
+    pub inject_delay: bool,
+}
+
+impl NetworkModel {
+    /// Accounting-only fabric: zero cost, no injected delay. Use for
+    /// correctness tests and round/byte counting.
+    pub fn free() -> Self {
+        Self {
+            name: "free",
+            latency: Duration::ZERO,
+            bandwidth: f64::INFINITY,
+            inject_delay: false,
+        }
+    }
+
+    /// The paper's testbed fabric: 200 Gb/s InfiniBand (≈25 GB/s per
+    /// direction) with a ~2 µs round latency.
+    pub fn infiniband_200g() -> Self {
+        Self {
+            name: "infiniband-200g",
+            latency: Duration::from_micros(2),
+            bandwidth: 25e9,
+            inject_delay: true,
+        }
+    }
+
+    /// Commodity 10 Gb/s Ethernet (≈1.25 GB/s) with a ~50 µs round
+    /// latency — the fabric where vanilla sampling rounds hurt most.
+    pub fn ethernet_10g() -> Self {
+        Self {
+            name: "ethernet-10g",
+            latency: Duration::from_micros(50),
+            bandwidth: 1.25e9,
+            inject_delay: true,
+        }
+    }
+
+    /// Modeled wall time for one worker sending `bytes` in one round.
+    pub fn cost(&self, bytes: u64) -> Duration {
+        let transfer = bytes as f64 / self.bandwidth;
+        self.latency + Duration::from_secs_f64(transfer)
+    }
+
+    /// Inject the modeled delay (no-op unless `inject_delay`).
+    ///
+    /// `thread::sleep` granularity is coarse (tens of µs on Linux), so
+    /// sub-latency rounds are an upper bound — acceptable because the
+    /// simulated fabrics are only used by the figure benches, never by
+    /// the correctness tests.
+    pub fn delay(&self, bytes: u64) {
+        if !self.inject_delay {
+            return;
+        }
+        let d = self.cost(bytes);
+        if d > Duration::ZERO {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_charges_zero_for_any_size() {
+        let net = NetworkModel::free();
+        for bytes in [0u64, 1, 1 << 20, u64::MAX >> 8] {
+            assert_eq!(net.cost(bytes), Duration::ZERO);
+        }
+        assert!(!net.inject_delay);
+        // delay() must return immediately even for huge payloads.
+        net.delay(u64::MAX >> 8);
+    }
+
+    #[test]
+    fn cost_is_monotone_in_bytes() {
+        for net in [NetworkModel::infiniband_200g(), NetworkModel::ethernet_10g()] {
+            let mut prev = Duration::ZERO;
+            for bytes in [0u64, 1 << 10, 1 << 20, 1 << 30] {
+                let c = net.cost(bytes);
+                assert!(c >= prev, "{}: cost({bytes}) < cost of fewer bytes", net.name);
+                assert!(c >= net.latency, "{}: cost below latency floor", net.name);
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_math_matches_the_fabric() {
+        let ib = NetworkModel::infiniband_200g();
+        // 25 GB over 25 GB/s = 1 s (+2 µs latency).
+        let c = ib.cost(25_000_000_000);
+        assert!((c.as_secs_f64() - 1.0).abs() < 1e-3, "{c:?}");
+        // Ethernet is 20x slower per byte.
+        let eth = NetworkModel::ethernet_10g();
+        let ratio = (eth.cost(1 << 30) - eth.latency).as_secs_f64()
+            / (ib.cost(1 << 30) - ib.latency).as_secs_f64();
+        assert!((ratio - 20.0).abs() < 0.1, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Worker harness: spawn W rendezvous-connected workers and collect their
+//! per-rank results.
+//!
+//! One worker thread stands in for one machine of the paper's testbed.
+//! The closure receives `(rank, &mut Comm)` and runs SPMD-style: every
+//! rank must issue the same sequence of collectives (the [`Comm`] layer
+//! panics loudly on divergence). Results come back in rank order.
+//!
+//! Threads are scoped, so worker closures may borrow stack data (shards,
+//! datasets, configs) from the caller — the pattern every integration
+//! test and the trainer use.
+
+use std::sync::Arc;
+
+use super::comm::{Comm, Counters};
+use super::net::NetworkModel;
+
+/// Run `world` workers with a fresh (throwaway) [`Counters`] instance.
+pub fn run_workers<R, F>(world: usize, net: NetworkModel, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut Comm) -> R + Sync,
+{
+    run_workers_with(world, net, Arc::new(Counters::default()), f)
+}
+
+/// Run `world` workers sharing `counters`, returning per-rank results in
+/// rank order. Panics if any worker panics (after all threads finish or
+/// cascade-fail through their channels).
+pub fn run_workers_with<R, F>(
+    world: usize,
+    net: NetworkModel,
+    counters: Arc<Counters>,
+    f: F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut Comm) -> R + Sync,
+{
+    let comms = Comm::mesh(world, net, counters);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut comm)| {
+                let f = &f;
+                s.spawn(move || f(rank, &mut comm))
+            })
+            .collect();
+        let mut out = Vec::with_capacity(world);
+        let mut panics: Vec<Box<dyn std::any::Any + Send>> = Vec::new();
+        for h in handles {
+            match h.join() {
+                Ok(r) => out.push(r),
+                Err(e) => panics.push(e),
+            }
+        }
+        if !panics.is_empty() {
+            // A worker dying mid-collective makes its peers panic with
+            // "exited mid-collective"; re-raise the *root cause* (the
+            // first payload that is not such a cascade) so test failures
+            // show the original assertion, not the fallout.
+            let pick = panics
+                .iter()
+                .position(|e| match e.downcast_ref::<String>() {
+                    Some(msg) => !msg.contains("exited mid-collective"),
+                    None => true,
+                })
+                .unwrap_or(0);
+            std::panic::resume_unwind(panics.swap_remove(pick));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::RoundKind;
+
+    #[test]
+    fn results_come_back_in_rank_order() {
+        let out = run_workers(5, NetworkModel::free(), |rank, comm| {
+            comm.barrier();
+            rank * rank
+        });
+        assert_eq!(out, [0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn workers_can_borrow_caller_stack_data() {
+        let shared: Vec<u64> = (0..4).map(|i| 100 + i).collect();
+        let shared_ref = &shared;
+        let out = run_workers(4, NetworkModel::free(), move |rank, comm| {
+            comm.all_reduce_min_u64(shared_ref[rank])
+        });
+        assert!(out.iter().all(|&m| m == 100));
+    }
+
+    #[test]
+    fn counters_are_shared_across_calls() {
+        let counters = Arc::new(Counters::default());
+        for _ in 0..3 {
+            run_workers_with(2, NetworkModel::free(), Arc::clone(&counters), |_, comm| {
+                comm.exchange(RoundKind::GradSync, vec![vec![1u8], vec![1u8]]);
+            });
+        }
+        assert_eq!(counters.snapshot().rounds_of(RoundKind::GradSync), 3);
+    }
+}

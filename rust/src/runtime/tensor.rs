@@ -1,9 +1,12 @@
 //! Host-side tensors and conversion to/from PJRT literals.
 //!
 //! The training loop works with plain `Vec`-backed tensors; conversion to
-//! `xla::Literal` happens once per step at the executable boundary.
+//! `xla::Literal` happens once per step at the executable boundary (and
+//! only exists under the `xla` feature — the hermetic default build keeps
+//! the tensor type but has no literal boundary to cross).
 
 use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
 use xla::{ElementType, Literal, PrimitiveType};
 
 /// A dense host tensor, either f32 or i32 — the only two dtypes crossing
@@ -69,6 +72,7 @@ impl HostTensor {
     }
 
     /// Build a PJRT literal (row-major, matching jax's default layout).
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<Literal> {
         let lit = match self {
             Self::F32 { data, shape } => {
@@ -88,6 +92,7 @@ impl HostTensor {
     }
 
     /// Read a literal back into a host tensor.
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -103,6 +108,7 @@ impl HostTensor {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "xla")]
     #[test]
     fn f32_literal_round_trip() {
         let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
@@ -111,6 +117,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn i32_literal_round_trip() {
         let t = HostTensor::i32(vec![-1, 0, 7, 42], &[4]);
@@ -118,12 +125,22 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn scalar_round_trip() {
         let t = HostTensor::scalar_i32(3);
         let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
         assert_eq!(t, back);
         assert_eq!(back.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn shape_and_len_agree() {
+        let t = HostTensor::zeros_f32(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert!(!t.is_empty());
+        assert!(HostTensor::f32(vec![], &[0]).is_empty());
     }
 
     #[test]

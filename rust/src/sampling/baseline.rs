@@ -20,6 +20,7 @@
 use crate::graph::{CscGraph, NodeId};
 use crate::util::par;
 
+use super::fused::sample_node;
 use super::mfg::{Mfg, SamplerWorkspace};
 use super::rng::RngKey;
 
@@ -47,74 +48,15 @@ pub fn sample_level_baseline(
         Vec::new,
         |scratch, i, chunk, cnt| {
             let v = seeds[i];
-            let neigh = graph.neighbors(v);
-            let d = neigh.len();
-            if d <= fanout {
-                chunk[..d].copy_from_slice(neigh);
-                *cnt = d as u32;
-            } else {
-                let mut s = key.stream(v as u64);
-                s.sample_distinct(d, fanout, scratch);
-                for (slot, &pos) in chunk.iter_mut().zip(scratch.iter()) {
-                    *slot = neigh[pos];
-                }
-                *cnt = fanout as u32;
-            }
+            *cnt = sample_node(graph.neighbors(v), v, fanout, key, scratch, chunk);
         },
     );
 
-    // ---- Step 1b: materialize the COO graph (the extra memory round-trip
-    // the fused kernel avoids).
-    ws.coo_src.clear();
-    ws.coo_dst.clear();
-    for i in 0..n {
-        let base = i * fanout;
-        for j in 0..ws.counts[i] as usize {
-            ws.coo_src.push(ws.samples[base + j]);
-            ws.coo_dst.push(seeds[i]);
-        }
-    }
-    let nnz = ws.coo_src.len();
-
-    // ---- Step 2a (to_block): compact/relabel the COO endpoints. Seeds
-    // first (dst prefix convention), then sources in edge order.
-    let mut src_nodes = Vec::with_capacity(n + nnz);
-    for &v in seeds {
-        let pos = ws.intern(v, &mut src_nodes);
-        debug_assert_eq!(pos as usize, src_nodes.len() - 1, "seeds must be unique");
-    }
-    // Relabeled COO (yet another nnz-sized array the fused kernel skips).
-    let mut rel_src: Vec<u32> = Vec::with_capacity(nnz);
-    for e in 0..nnz {
-        let p = ws.intern(ws.coo_src[e], &mut src_nodes);
-        rel_src.push(p);
-    }
-
-    // ---- Step 2b: COO → CSC conversion. Degrees are *re-computed* by a
-    // counting pass (the information sampling already had), then a scatter
-    // pass with a cursor array fills C. Because edges were emitted
-    // seed-major, the scatter preserves per-row order, so the output is
-    // bit-identical to the fused kernel's.
-    let mut indptr = vec![0usize; n + 1];
-    // dst ids are global; the relabel map already knows their rows (the
-    // seed prefix), exactly like DGL's to_block — but the baseline still
-    // pays the per-edge lookup in both passes below.
-    for e in 0..nnz {
-        let row = ws.position(ws.coo_dst[e]) as usize;
-        indptr[row + 1] += 1;
-    }
-    for i in 0..n {
-        indptr[i + 1] += indptr[i];
-    }
-    let mut cursor = indptr.clone();
-    let mut indices = vec![0u32; nnz];
-    for e in 0..nnz {
-        let row = ws.position(ws.coo_dst[e]) as usize;
-        indices[cursor[row]] = rel_src[e];
-        cursor[row] += 1;
-    }
-
-    Mfg { indptr, indices, src_nodes, n_dst: n }
+    // ---- Steps 1b–2b: COO materialization, relabel, and the COO → CSC
+    // counting + scatter conversion (see `SamplerWorkspace::
+    // assemble_baseline` — shared with the distributed vanilla sampler's
+    // baseline arm, which pays the same redundant passes).
+    ws.assemble_baseline(seeds, fanout)
 }
 
 #[cfg(test)]

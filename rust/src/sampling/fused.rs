@@ -49,46 +49,46 @@ pub fn sample_level_fused(
         Vec::new,
         |scratch, i, chunk, cnt| {
             let v = seeds[i];
-            let neigh = graph.neighbors(v);
-            let d = neigh.len();
-            if d <= fanout {
-                chunk[..d].copy_from_slice(neigh);
-                *cnt = d as u32;
-            } else {
-                let mut s = key.stream(v as u64);
-                s.sample_distinct(d, fanout, scratch);
-                for (slot, &pos) in chunk.iter_mut().zip(scratch.iter()) {
-                    *slot = neigh[pos];
-                }
-                *cnt = fanout as u32;
-            }
+            *cnt = sample_node(graph.neighbors(v), v, fanout, key, scratch, chunk);
         },
     );
 
     // ---- Phase 2 (paper's second loop): R from the running sum, C and
     // the relabel table in one pass — no COO, no conversion.
-    let mut indptr = Vec::with_capacity(n + 1);
-    indptr.push(0usize);
-    let mut total = 0usize;
-    for i in 0..n {
-        total += ws.counts[i] as usize;
-        indptr.push(total);
-    }
+    ws.assemble_fused(seeds, fanout)
+}
 
-    let mut src_nodes = Vec::with_capacity(n + total);
-    for &v in seeds {
-        let pos = ws.intern(v, &mut src_nodes);
-        debug_assert_eq!(pos as usize, src_nodes.len() - 1, "seeds must be unique");
-    }
-    let mut indices = Vec::with_capacity(total);
-    for i in 0..n {
-        let base = i * fanout;
-        for j in 0..ws.counts[i] as usize {
-            indices.push(ws.intern(ws.samples[base + j], &mut src_nodes));
+/// Draw at most `fanout` of `neigh` (the in-neighbors of `v`) into the
+/// front of `chunk`, returning how many were written. Degree ≤ fanout
+/// takes all neighbors in order; otherwise Floyd-samples positions from
+/// the counter-based stream keyed by `(key, v)`.
+///
+/// This is *the* neighbor-choice function: the fused kernel, the DGL-style
+/// baseline, and the distributed vanilla sampler (remote owners included)
+/// all call it, so any worker sampling node `v` under the same level key
+/// draws identical neighbors — the bit-equality the paper's
+/// "mathematically equivalent" claim is pinned to.
+#[inline]
+pub(crate) fn sample_node(
+    neigh: &[NodeId],
+    v: NodeId,
+    fanout: usize,
+    key: RngKey,
+    scratch: &mut Vec<usize>,
+    chunk: &mut [NodeId],
+) -> u32 {
+    let d = neigh.len();
+    if d <= fanout {
+        chunk[..d].copy_from_slice(neigh);
+        d as u32
+    } else {
+        let mut s = key.stream(v as u64);
+        s.sample_distinct(d, fanout, scratch);
+        for (slot, &pos) in chunk.iter_mut().zip(scratch.iter()) {
+            *slot = neigh[pos];
         }
+        fanout as u32
     }
-
-    Mfg { indptr, indices, src_nodes, n_dst: n }
 }
 
 #[cfg(test)]

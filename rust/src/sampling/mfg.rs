@@ -138,6 +138,91 @@ impl SamplerWorkspace {
         debug_assert_eq!((entry >> 32) as u32, self.stamp, "node {v} not interned");
         entry as u32
     }
+
+    /// Algorithm 1's second loop: build the relabeled CSC block straight
+    /// from the strided sample buffer (`samples`/`counts` filled for
+    /// `seeds.len()` rows of stride `fanout`, under the current `begin`
+    /// epoch). Shared by the single-machine fused kernel and the
+    /// distributed vanilla sampler, which is what makes their outputs
+    /// bit-identical by construction.
+    pub(crate) fn assemble_fused(&mut self, seeds: &[NodeId], fanout: usize) -> Mfg {
+        let n = seeds.len();
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0usize);
+        let mut total = 0usize;
+        for i in 0..n {
+            total += self.counts[i] as usize;
+            indptr.push(total);
+        }
+        let mut src_nodes = Vec::with_capacity(n + total);
+        for &v in seeds {
+            let pos = self.intern(v, &mut src_nodes);
+            debug_assert_eq!(pos as usize, src_nodes.len() - 1, "seeds must be unique");
+        }
+        let mut indices = Vec::with_capacity(total);
+        for i in 0..n {
+            let base = i * fanout;
+            for j in 0..self.counts[i] as usize {
+                indices.push(self.intern(self.samples[base + j], &mut src_nodes));
+            }
+        }
+        Mfg { indptr, indices, src_nodes, n_dst: n }
+    }
+
+    /// The DGL-style two-step assembly over the same strided sample
+    /// buffer: materialize a COO edge list, then relabel and convert
+    /// COO → CSC with a counting + scatter pass. Deliberately keeps the
+    /// baseline's redundant memory traffic (the cost Fig 5 measures);
+    /// the output is bit-identical to [`Self::assemble_fused`].
+    pub(crate) fn assemble_baseline(&mut self, seeds: &[NodeId], fanout: usize) -> Mfg {
+        let n = seeds.len();
+        // Step 1b: materialize the COO graph (the extra memory round-trip
+        // the fused kernel avoids).
+        self.coo_src.clear();
+        self.coo_dst.clear();
+        for i in 0..n {
+            let base = i * fanout;
+            for j in 0..self.counts[i] as usize {
+                self.coo_src.push(self.samples[base + j]);
+                self.coo_dst.push(seeds[i]);
+            }
+        }
+        let nnz = self.coo_src.len();
+
+        // Step 2a (to_block): compact/relabel the COO endpoints. Seeds
+        // first (dst prefix convention), then sources in edge order.
+        let mut src_nodes = Vec::with_capacity(n + nnz);
+        for &v in seeds {
+            let pos = self.intern(v, &mut src_nodes);
+            debug_assert_eq!(pos as usize, src_nodes.len() - 1, "seeds must be unique");
+        }
+        let mut rel_src: Vec<u32> = Vec::with_capacity(nnz);
+        for e in 0..nnz {
+            let p = self.intern(self.coo_src[e], &mut src_nodes);
+            rel_src.push(p);
+        }
+
+        // Step 2b: COO → CSC conversion — degrees re-computed by a
+        // counting pass, then a scatter with a cursor array. Edges were
+        // emitted seed-major, so per-row order is preserved.
+        let mut indptr = vec![0usize; n + 1];
+        for e in 0..nnz {
+            let row = self.position(self.coo_dst[e]) as usize;
+            indptr[row + 1] += 1;
+        }
+        for i in 0..n {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut cursor = indptr.clone();
+        let mut indices = vec![0u32; nnz];
+        for e in 0..nnz {
+            let row = self.position(self.coo_dst[e]) as usize;
+            indices[cursor[row]] = rel_src[e];
+            cursor[row] += 1;
+        }
+
+        Mfg { indptr, indices, src_nodes, n_dst: n }
+    }
 }
 
 #[cfg(test)]

@@ -36,6 +36,14 @@ impl KernelKind {
     }
 }
 
+/// Key for one sampling level: every sampler — single-machine or
+/// distributed, fused or baseline — must derive per-level randomness
+/// through this exact fold chain, or the bit-equality between them breaks.
+#[inline]
+pub(crate) fn level_key(key: RngKey, level: usize) -> RngKey {
+    key.fold(0x1e7e1).fold(level as u64)
+}
+
 /// Sample all `L` levels for one minibatch of seed nodes.
 ///
 /// `fanouts` is top level first — `(N_L, ..., N_1)`, the paper's tuple
@@ -49,12 +57,15 @@ pub fn sample_mfgs(
     ws: &mut SamplerWorkspace,
     kind: KernelKind,
 ) -> Vec<Mfg> {
-    let mut out = Vec::with_capacity(fanouts.len());
-    let mut cur: Vec<NodeId> = seeds.to_vec();
+    let mut out: Vec<Mfg> = Vec::with_capacity(fanouts.len());
     for (li, &f) in fanouts.iter().enumerate() {
-        let level_key = key.fold(0x1e7e1).fold(li as u64);
-        let mfg = kind.sample_level(graph, &cur, f, level_key, ws);
-        cur = mfg.src_nodes.clone();
+        // Each level seeds from the previous level's relabel table —
+        // borrowed in place, not cloned (the table can be 10-100x the
+        // minibatch at the bottom levels, all on the hot path).
+        let mfg = match out.last() {
+            None => kind.sample_level(graph, seeds, f, level_key(key, li), ws),
+            Some(prev) => kind.sample_level(graph, &prev.src_nodes, f, level_key(key, li), ws),
+        };
         out.push(mfg);
     }
     out.reverse();
