@@ -7,13 +7,17 @@
 //!
 //! Besides the printed table, results are dumped as machine-readable JSON
 //! to `BENCH_dist.json` (override the path with `BENCH_JSON=...`), giving
-//! later PRs a perf trajectory to diff against.
+//! later PRs a perf trajectory to diff against. Set
+//! `FASTSAMPLE_BENCH_QUICK=1` for the CI smoke mode: same cases at ~1/8
+//! scale with short budgets, so the bench targets and the JSON
+//! regeneration path stay exercised on every push.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use fastsample::dist::{run_workers, NetworkModel, RoundKind};
-use fastsample::graph::generator::{planted_communities, rmat};
-use fastsample::partition::{partition_graph, PartitionConfig};
+use fastsample::graph::generator::{make_dataset, planted_communities, rmat, DatasetParams};
+use fastsample::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
 use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{
     sample_level_baseline, sample_level_fused, SamplerWorkspace,
@@ -22,13 +26,31 @@ use fastsample::util::bench::{header, Bencher, Stats};
 use fastsample::util::json::Json;
 
 fn main() {
-    let bench = Bencher::default();
+    // Value-checked, not presence-checked: FASTSAMPLE_BENCH_QUICK=0 (or
+    // empty) must still run the full-scale trajectory baseline.
+    let quick = std::env::var("FASTSAMPLE_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let bench = if quick {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(200),
+            min_iters: 2,
+            ..Default::default()
+        }
+    } else {
+        Bencher::default()
+    };
     let mut all: Vec<Stats> = Vec::new();
+    if quick {
+        println!("(quick mode: reduced sizes/budgets — trajectory numbers come from full runs)");
+    }
     println!("{}", header());
 
-    // ---- Per-level kernels on a skewed RMAT graph (1M edges).
-    let g = rmat(1 << 17, 1 << 20, (0.57, 0.19, 0.19, 0.05), RngKey::new(1));
-    let seeds: Vec<u32> = (0..8192u32).map(|i| i * 13 % (1 << 17)).collect();
+    // ---- Per-level kernels on a skewed RMAT graph (1M edges; 128K quick).
+    let (log_n, log_m) = if quick { (14, 17) } else { (17, 20) };
+    let g = rmat(1 << log_n, 1 << log_m, (0.57, 0.19, 0.19, 0.05), RngKey::new(1));
+    let seeds: Vec<u32> = (0..8192u32).map(|i| i * 13 % (1u32 << log_n)).collect();
     // Dedup seeds (sampling requires unique seeds).
     let seeds = {
         let mut s = seeds;
@@ -89,36 +111,81 @@ fn main() {
         all.push(s);
     }
 
-    // ---- Partitioner end to end (64k nodes).
+    // ---- Partitioner end to end (64k nodes; 8k quick).
+    let part_n: usize = if quick { 8_192 } else { 65_536 };
     {
-        let (pg, _) = planted_communities(65_536, 8, 12, 0.9, RngKey::new(4));
-        let train: Vec<u32> = (0..65_536u32).step_by(11).collect();
+        let (pg, _) = planted_communities(part_n, 8, 12, 0.9, RngKey::new(4));
+        let train: Vec<u32> = (0..part_n as u32).step_by(11).collect();
         let slow = Bencher {
-            budget: std::time::Duration::from_secs(6),
+            budget: Duration::from_secs(if quick { 1 } else { 6 }),
             min_iters: 3,
             ..Default::default()
         };
-        let s = slow.run("partition/metis-like 64k x8", || {
+        let s = slow.run(&format!("partition/metis-like {}k x8", part_n / 1024), || {
             partition_graph(&pg, &train, &PartitionConfig::new(8))
         });
         println!("{}", s.row());
         all.push(s);
     }
 
-    // ---- All-reduce collective (1M floats, 4 workers).
+    // ---- Budgeted halo construction (the replication spectrum's setup
+    // cost): build_shards at three budget points over one partition book.
     {
+        let n = if quick { 4_096 } else { 32_768 };
+        let d = make_dataset(&DatasetParams {
+            name: "bench-halo".into(),
+            num_nodes: n,
+            avg_degree: 12,
+            feat_dim: 8,
+            num_classes: 4,
+            labeled_frac: 0.1,
+            p_intra: 0.9,
+            noise: 0.2,
+            seed: 9,
+        });
+        let book = std::sync::Arc::new(partition_graph(
+            &d.graph,
+            &d.train_ids,
+            &PartitionConfig::new(8),
+        ));
+        let halo_max = book
+            .halo_profile(&d.graph)
+            .iter()
+            .map(|h| h.halo_bytes)
+            .max()
+            .unwrap_or(0)
+            .max(64);
+        for (tag, policy) in [
+            ("budget=0", ReplicationPolicy::vanilla()),
+            ("budget=halo/2", ReplicationPolicy::budgeted(halo_max / 2)),
+            ("budget=inf", ReplicationPolicy::hybrid()),
+        ] {
+            let s = bench.run(&format!("partition/build_shards {}k x8 {tag}", n / 1024), || {
+                build_shards(&d, &book, &policy)
+            });
+            println!("{}", s.row());
+            all.push(s);
+        }
+    }
+
+    // ---- All-reduce collective (1M floats, 4 workers; 64k quick).
+    {
+        let words: usize = if quick { 1 << 16 } else { 1 << 20 };
         let slow = Bencher {
-            budget: std::time::Duration::from_secs(4),
+            budget: Duration::from_secs(if quick { 1 } else { 4 }),
             min_iters: 3,
             ..Default::default()
         };
-        let s = slow.run("comm/all_reduce 1M f32 x4 workers", || {
-            run_workers(4, NetworkModel::free(), |rank, comm| {
-                let mut data = vec![rank as f32; 1 << 20];
-                comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
-                data[0]
-            })
-        });
+        let s = slow.run(
+            &format!("comm/all_reduce {}k f32 x4 workers", words >> 10),
+            || {
+                run_workers(4, NetworkModel::free(), |rank, comm| {
+                    let mut data = vec![rank as f32; words];
+                    comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
+                    data[0]
+                })
+            },
+        );
         println!("{}", s.row());
         all.push(s);
     }
@@ -129,6 +196,9 @@ fn main() {
         ("schema".to_string(), Json::Str("fastsample-bench-v1".into())),
         ("bench".to_string(), Json::Str("kernels_micro".into())),
         ("status".to_string(), Json::Str("measured".into())),
+        // Quick-mode records exercise the pipeline but are not trajectory
+        // baselines; diff tooling should prefer quick=false records.
+        ("quick".to_string(), Json::Bool(quick)),
         (
             "threads".to_string(),
             Json::Num(fastsample::util::par::num_threads() as f64),

@@ -26,6 +26,26 @@ pub fn dataset(spec: &str, seed: u64) -> Result<Dataset> {
     datasets::by_name(spec, seed)
 }
 
+/// Parse a replication byte budget: `inf`/`unlimited`/`full` ⇒ `None`
+/// (full replication, the hybrid arm), otherwise an integer byte count
+/// with optional KiB-based `k`/`m`/`g` suffix (`0` ⇒ the vanilla arm).
+pub fn parse_budget(spec: &str) -> Result<Option<u64>> {
+    let s = spec.trim().to_ascii_lowercase();
+    if matches!(s.as_str(), "inf" | "unlimited" | "full") {
+        return Ok(None);
+    }
+    let (num, mult) = match s.as_bytes().last() {
+        Some(b'k') => (&s[..s.len() - 1], 1u64 << 10),
+        Some(b'm') => (&s[..s.len() - 1], 1u64 << 20),
+        Some(b'g') => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s.as_str(), 1),
+    };
+    let n: u64 = num
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad replication budget {spec:?}: {e}"))?;
+    Ok(Some(n.saturating_mul(mult)))
+}
+
 /// Resolve a network model by name: `infiniband` (paper fabric),
 /// `ethernet`, `free` (accounting only).
 pub fn network(name: &str) -> Result<NetworkModel> {
@@ -46,6 +66,19 @@ mod tests {
         assert!(network("infiniband").unwrap().inject_delay);
         assert!(!network("free").unwrap().inject_delay);
         assert!(network("warp").is_err());
+    }
+
+    #[test]
+    fn budgets_parse_across_the_spectrum() {
+        assert_eq!(parse_budget("inf").unwrap(), None);
+        assert_eq!(parse_budget("FULL").unwrap(), None);
+        assert_eq!(parse_budget("0").unwrap(), Some(0));
+        assert_eq!(parse_budget("4096").unwrap(), Some(4096));
+        assert_eq!(parse_budget("64k").unwrap(), Some(64 << 10));
+        assert_eq!(parse_budget("2m").unwrap(), Some(2 << 20));
+        assert_eq!(parse_budget("1g").unwrap(), Some(1 << 30));
+        assert!(parse_budget("lots").is_err());
+        assert!(parse_budget("").is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::config;
 use crate::dist::{CachePolicy, NetworkModel, RoundKind};
@@ -106,26 +106,43 @@ pub fn fig4(products_scale: f64, papers_scale: f64, seed: u64) -> Result<String>
 }
 
 /// Fig-4 style memory table for a *partitioned* run: per-worker bytes
-/// under vanilla vs hybrid — quantifies the paper's "acceptable
-/// compromise" (duplicated topology).
+/// along the replication spectrum — vanilla, a halo-scale byte budget,
+/// the complete 1-hop halo, and full replication (hybrid) — quantifying
+/// the compromise the paper's §5 discusses as a dial, not a binary.
 pub fn partition_memory(spec: &str, workers: usize, seed: u64) -> Result<String> {
-    use crate::partition::{build_shards, partition_graph, PartitionConfig, Scheme};
+    use crate::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
     use std::sync::Arc;
     let d = config::dataset(spec, seed)?;
     let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(workers)));
+    let halo = book.halo_profile(&d.graph);
+    let max_halo = halo.iter().map(|h| h.halo_bytes).max().unwrap_or(0).max(64);
     let mut out = String::new();
     out.push_str(&format!(
-        "Per-worker memory, {} over {workers} workers\n\n{:<10} {:>14} {:>14} {:>14}\n",
-        d.name, "scheme", "topology", "features", "total"
+        "Per-worker memory, {} over {workers} workers (1-hop halo: up to {}/worker)\n\n\
+         {:<16} {:>14} {:>14} {:>14} {:>14}\n",
+        d.name,
+        human_bytes(max_halo),
+        "policy",
+        "topology",
+        "replicated",
+        "features",
+        "total"
     ));
-    for (name, scheme) in [("vanilla", Scheme::Vanilla), ("hybrid", Scheme::Hybrid)] {
-        let shards = build_shards(&d, &book, scheme);
+    for policy in [
+        ReplicationPolicy::vanilla(),
+        ReplicationPolicy::budgeted(max_halo / 2),
+        ReplicationPolicy::halo(1),
+        ReplicationPolicy::hybrid(),
+    ] {
+        let shards = build_shards(&d, &book, &policy);
         let topo = shards.iter().map(|s| s.topology.storage_bytes() as u64).max().unwrap();
+        let repl = shards.iter().map(|s| s.topology.replicated_bytes()).max().unwrap();
         let feat = shards.iter().map(|s| s.feature_bytes() as u64).max().unwrap();
         out.push_str(&format!(
-            "{:<10} {:>14} {:>14} {:>14}\n",
-            name,
+            "{:<16} {:>14} {:>14} {:>14} {:>14}\n",
+            policy.label(),
             human_bytes(topo),
+            human_bytes(repl),
             human_bytes(feat),
             human_bytes(topo + feat)
         ));
@@ -134,6 +151,158 @@ pub fn partition_memory(spec: &str, workers: usize, seed: u64) -> Result<String>
         "\nedge-cut fraction: {:.3}; label imbalance: {:.3}\n",
         book.cut_fraction(&d.graph),
         crate::partition::PartitionBook::imbalance(&book.label_counts(&d.train_ids))
+    ));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Replication frontier — budget → rounds/bytes/memory (the spectrum).
+// ---------------------------------------------------------------------------
+
+/// Sweep the replication budget and measure, per minibatch, the sampling
+/// rounds actually paid (data-dependent, `0..=2(L−1)`), the bytes moved,
+/// and the per-worker adjacency memory — the frontier between the
+/// paper's vanilla (2L+1 total rounds/minibatch) and hybrid (3) arms.
+/// Pure communication structure: sampling + feature exchange + a
+/// stand-in gradient sync, no AOT artifacts needed.
+///
+/// The function itself enforces the curve's invariants (monotone
+/// non-increasing rounds, analytic endpoints) and fails loudly if they
+/// break, so `fastsample report --id replication-frontier` doubles as a
+/// regression check.
+pub fn replication_frontier(spec: &str, workers: usize, seed: u64) -> Result<String> {
+    use crate::dist::{fetch_features, run_workers_with, sample_mfgs_distributed, Counters};
+    use crate::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
+    use std::sync::Arc;
+
+    let d = config::dataset(spec, seed)?;
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(workers)));
+    let fanouts = [4usize, 3, 3]; // L = 3, the paper's depth
+    let levels = fanouts.len();
+    let batch = 32usize;
+    let max_batches = 4u64;
+    let key = RngKey::new(seed).fold(0xF0C5);
+
+    // Budget sweep anchored on the measured 1-hop halo (the natural
+    // scale): 0 (vanilla), a geometric ramp through it, then unlimited.
+    let halo = book.halo_profile(&d.graph);
+    let max_halo = halo.iter().map(|h| h.halo_bytes).max().unwrap_or(0).max(64);
+    let budgets: Vec<Option<u64>> = vec![
+        Some(0),
+        Some(max_halo / 8),
+        Some(max_halo / 2),
+        Some(max_halo.saturating_mul(2)),
+        None,
+    ];
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Replication frontier: {} over {workers} workers, L={levels}, batch {batch} \
+         (1-hop halo: up to {}/worker)\n\n\
+         {:<16} {:>10} {:>10} {:>14} {:>14} {:>14} {:>9}\n",
+        d.name,
+        human_bytes(max_halo),
+        "policy",
+        "smpl rnd/b",
+        "rounds/b",
+        "sample bytes",
+        "adjacency",
+        "replicated",
+        "coverage"
+    ));
+
+    let mut curve: Vec<(String, f64, f64)> = Vec::new();
+    for b in budgets {
+        let policy = ReplicationPolicy::from_budget(b);
+        let shards = build_shards(&d, &book, &policy);
+        let counters = Arc::new(Counters::default());
+        let shards_ref = &shards;
+        let done: Vec<u64> = run_workers_with(
+            workers,
+            NetworkModel::free(),
+            Arc::clone(&counters),
+            move |rank, comm| {
+                let shard = &shards_ref[rank];
+                let schedule = MinibatchSchedule::new(&shard.train_local, batch, key);
+                let nb = comm.all_reduce_min_u64(schedule.num_batches() as u64).min(max_batches);
+                let mut ws = SamplerWorkspace::new();
+                let mut feat = Vec::new();
+                for bi in 0..nb {
+                    let seeds = schedule.batch(bi as usize);
+                    let mfgs = sample_mfgs_distributed(
+                        comm,
+                        shard,
+                        seeds,
+                        &fanouts,
+                        key.fold(bi + 1),
+                        &mut ws,
+                        KernelKind::Fused,
+                    );
+                    fetch_features(comm, shard, &mfgs[0].src_nodes, None, &mut feat);
+                    // Stand-in gradient sync: the report measures round
+                    // structure, not model compute.
+                    let mut grad = vec![0.0f32; 8];
+                    comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad);
+                }
+                nb
+            },
+        );
+        let nb = done[0];
+        ensure!(
+            nb > 0,
+            "dataset {spec:?} too small for batch {batch} over {workers} workers"
+        );
+        let s = counters.snapshot();
+        let srpb = s.sampling_rounds() as f64 / nb as f64;
+        let trpb = s.total_rounds() as f64 / nb as f64;
+        let sample_bytes = (s.bytes_of(RoundKind::SampleRequest)
+            + s.bytes_of(RoundKind::SampleResponse)) as f64
+            / nb as f64;
+        let topo = shards.iter().map(|s| s.topology.storage_bytes() as u64).max().unwrap();
+        let repl = shards.iter().map(|s| s.topology.replicated_bytes()).max().unwrap();
+        let n = d.num_nodes() as f64;
+        let coverage = shards
+            .iter()
+            .map(|s| (s.topology.local_rows() + s.topology.replicated_rows()) as f64 / n)
+            .fold(0.0, f64::max);
+        out.push_str(&format!(
+            "{:<16} {:>10.1} {:>10.1} {:>14} {:>14} {:>14} {:>8.1}%\n",
+            policy.label(),
+            srpb,
+            trpb,
+            human_bytes(sample_bytes as u64),
+            human_bytes(topo),
+            human_bytes(repl),
+            100.0 * coverage
+        ));
+        curve.push((policy.label(), srpb, trpb));
+    }
+
+    // The curve's contract (acceptance criteria for the spectrum).
+    for w in curve.windows(2) {
+        ensure!(
+            w[1].1 <= w[0].1 + 1e-9,
+            "sampling rounds not monotone: {} {:.2} -> {} {:.2}",
+            w[0].0,
+            w[0].1,
+            w[1].0,
+            w[1].1
+        );
+    }
+    let (first, last) = (curve.first().unwrap(), curve.last().unwrap());
+    let analytic_vanilla = (2 * levels + 1) as f64;
+    ensure!(
+        (first.2 - analytic_vanilla).abs() < 1e-9,
+        "vanilla endpoint {:.2} != analytic 2L+1 = {analytic_vanilla}",
+        first.2
+    );
+    ensure!((last.2 - 3.0).abs() < 1e-9, "hybrid endpoint {:.2} != analytic 3", last.2);
+    out.push_str(&format!(
+        "\nendpoints: vanilla {:.1} rounds/batch (analytic 2L+1 = {}), hybrid {:.1} \
+         (analytic 3); curve is monotone in the budget\n",
+        first.2,
+        2 * levels + 1,
+        last.2
     ));
     Ok(out)
 }
@@ -318,7 +487,12 @@ impl Default for Fig6Opts {
                 ("papers100m-sim:0.002".into(), "fig6_papers_small".into()),
             ],
             workers: vec![4, 8],
-            modes: vec!["vanilla".into(), "hybrid".into(), "hybrid+fused".into()],
+            modes: vec![
+                "vanilla".into(),
+                "budget:256k".into(),
+                "hybrid".into(),
+                "hybrid+fused".into(),
+            ],
             epochs: 2,
             max_batches: Some(8),
             net: NetworkModel::infiniband_200g(),
@@ -327,8 +501,10 @@ impl Default for Fig6Opts {
     }
 }
 
-/// Paper Fig 6: distributed epoch time for {vanilla, hybrid,
-/// hybrid+fused} × worker counts × datasets, with phase breakdown.
+/// Paper Fig 6: distributed epoch time per mode × worker counts ×
+/// datasets, with phase breakdown. Modes default to {vanilla, a
+/// mid-spectrum replication budget, hybrid, hybrid+fused}; any
+/// `budget:<bytes>` / `halo:<hops>` mode string works.
 pub fn fig6(opts: &Fig6Opts) -> Result<String> {
     let artifacts = config::artifacts_dir();
     let mut out = String::new();
@@ -375,7 +551,8 @@ pub fn fig6(opts: &Fig6Opts) -> Result<String> {
 // ---------------------------------------------------------------------------
 
 /// A3: communication rounds + bytes per mode for one minibatch-sized run
-/// — the 2L → 2 reduction, measured.
+/// — the 2L → 2 reduction, measured, plus budgeted points of the
+/// replication spectrum in between.
 pub fn rounds_report(workers: usize, seed: u64) -> Result<String> {
     let artifacts = config::artifacts_dir();
     let d = datasets::quickstart(seed);
@@ -383,7 +560,7 @@ pub fn rounds_report(workers: usize, seed: u64) -> Result<String> {
     out.push_str(&format!(
         "A3: communication rounds per training run (quickstart, {workers} workers, 2 epochs x 2 batches, L=3)\n\n"
     ));
-    for mode in ["vanilla", "hybrid", "hybrid+fused"] {
+    for mode in ["vanilla", "budget:16k", "halo:1", "hybrid", "hybrid+fused"] {
         let mut cfg = TrainConfig::mode("quickstart", mode, workers)?;
         cfg.epochs = 2;
         cfg.max_batches = Some(2);
@@ -393,10 +570,15 @@ pub fn rounds_report(workers: usize, seed: u64) -> Result<String> {
         let s = &report.comm_total;
         out.push_str(&format!("mode: {mode}\n{}\n", s.report()));
         let batches = report.epochs.iter().map(|e| e.batches as u64).sum::<u64>();
+        let expect = match mode {
+            "vanilla" => "2(L-1) = 4",
+            "hybrid" | "hybrid+fused" => "0",
+            "halo:1" => "2(L-2) = 2 — the 1-hop halo clears the first exchange",
+            _ => "data-dependent, 0..=2(L-1)",
+        };
         out.push_str(&format!(
-            "sampling rounds/batch: {} (paper: {} for this mode)\n\n",
+            "sampling rounds/batch: {} (expected: {expect})\n\n",
             s.sampling_rounds() as f64 / batches as f64,
-            if mode == "vanilla" { "2(L-1) = 4" } else { "0" }
         ));
     }
     Ok(out)

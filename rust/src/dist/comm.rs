@@ -282,6 +282,15 @@ impl Comm {
         m
     }
 
+    /// Round-skip vote: true iff `v == 0` on **every** rank. One
+    /// uncharged control-plane min-reduce of the zero indicator — the
+    /// protocol `dist::sampling` uses to skip a SampleRequest/Response
+    /// pair when no rank has frontier misses (so sampling rounds are
+    /// measured per level, not assumed per scheme).
+    pub fn all_zero_u64(&mut self, v: u64) -> bool {
+        self.all_reduce_min_u64(u64::from(v == 0)) == 1
+    }
+
     /// Mean all-reduce over `data`, element-wise across ranks, in place.
     ///
     /// Every rank accumulates contributions in rank order 0..W, so all
@@ -421,6 +430,21 @@ mod tests {
             comm.all_reduce_min_u64(10 + rank as u64)
         });
         assert!(mins.iter().all(|&m| m == 10));
+        let s = counters.snapshot();
+        assert_eq!(s.total_rounds(), 0);
+        assert_eq!(s.total_bytes(), 0);
+    }
+
+    #[test]
+    fn all_zero_vote_is_unanimous_and_uncharged() {
+        let counters = Arc::new(Counters::default());
+        let votes = run_workers_with(3, NetworkModel::free(), Arc::clone(&counters), |rank, comm| {
+            // Everyone zero → true; then rank 1 non-zero → false everywhere.
+            let a = comm.all_zero_u64(0);
+            let b = comm.all_zero_u64(if rank == 1 { 5 } else { 0 });
+            (a, b)
+        });
+        assert!(votes.iter().all(|&(a, b)| a && !b));
         let s = counters.snapshot();
         assert_eq!(s.total_rounds(), 0);
         assert_eq!(s.total_bytes(), 0);

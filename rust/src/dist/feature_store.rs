@@ -144,7 +144,7 @@ mod tests {
     use super::*;
     use crate::graph::generator::{make_dataset, DatasetParams};
     use crate::graph::Dataset;
-    use crate::partition::{build_shards, partition_graph, PartitionConfig, Scheme};
+    use crate::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
 
     fn dataset() -> Dataset {
         make_dataset(&DatasetParams {
@@ -164,7 +164,7 @@ mod tests {
     fn duplicate_nodes_cross_the_wire_once() {
         let d = dataset();
         let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(3)));
-        let shards = build_shards(&d, &book, Scheme::Hybrid);
+        let shards = build_shards(&d, &book, &ReplicationPolicy::hybrid());
         let shards_ref = &shards;
         let d_ref = &d;
         let results = run_workers(3, NetworkModel::free(), move |rank, comm| {
@@ -193,7 +193,7 @@ mod tests {
     fn prefill_then_fetch_serves_from_cache() {
         let d = dataset();
         let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(2)));
-        let shards = build_shards(&d, &book, Scheme::Hybrid);
+        let shards = build_shards(&d, &book, &ReplicationPolicy::hybrid());
         let shards_ref = &shards;
         let d_ref = &d;
         let results = run_workers(2, NetworkModel::free(), move |rank, comm| {

@@ -13,9 +13,14 @@
 //!   Fig 5/6 epoch times are simulatable on one machine.
 //! * [`worker`] — [`run_workers`]/[`run_workers_with`]: spawn W
 //!   rendezvous-connected worker threads, collect per-rank results.
-//! * [`sampling`] — [`sample_mfgs_distributed`]: vanilla (2(L−1) rounds
-//!   per minibatch) and hybrid (zero rounds) sampling, bit-equal to the
-//!   single-machine pipeline.
+//! * [`sampling`] — [`sample_mfgs_distributed`]: one unified sampler
+//!   over the replication-budget spectrum — frontier nodes with
+//!   materialized adjacency (local rows + budgeted halo) sample locally,
+//!   only the misses cost a request/response pair, and a control-plane
+//!   vote ([`Comm::all_zero_u64`]) skips the pair when no rank misses.
+//!   Rounds per minibatch are measured in `0..=2(L−1)` (budget 0 ⇒ the
+//!   paper's vanilla counts, full replication ⇒ hybrid's zero), bit-equal
+//!   to the single-machine pipeline at every budget.
 //! * [`feature_store`] — [`fetch_features`]/[`prefill_cache`]: the two
 //!   fixed feature rounds over the partitioned store.
 //! * [`feature_cache`] — [`FeatureCache`] under

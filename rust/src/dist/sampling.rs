@@ -1,57 +1,62 @@
-//! Distributed minibatch sampling under the two partitioning schemes
-//! (paper §3.3) — bit-equal to single-machine [`sample_mfgs`] by
-//! construction.
+//! Distributed minibatch sampling over the replication-budget spectrum
+//! (paper §3.3, generalized) — bit-equal to single-machine
+//! [`sample_mfgs`] by construction at **every** budget point.
 //!
-//! **Hybrid** (the paper's scheme): topology is replicated, so sampling
-//! runs entirely locally — **zero** communication rounds. The call is
-//! literally the single-machine pipeline on the shared adjacency.
-//!
-//! **Vanilla** (DistDGL-style): a worker only sees the in-edges of its
-//! own nodes, so every level past the first must ship non-local frontier
-//! nodes to their owners ([`RoundKind::SampleRequest`]), have the owners
-//! draw the samples, and ship the sampled neighborhoods back
-//! ([`RoundKind::SampleResponse`]) — 2 rounds per level, `2(L−1)` per
-//! minibatch (level 0 seeds are the worker's own labeled nodes).
+//! One unified path replaces the old vanilla/hybrid split: every level,
+//! each worker samples every frontier node whose adjacency it holds
+//! (local rows plus whatever halo its [`ReplicationPolicy`] bought) and
+//! batches only the *misses* into a [`RoundKind::SampleRequest`] /
+//! [`RoundKind::SampleResponse`] pair. Before paying that pair, the
+//! ranks vote with one uncharged control-plane reduce
+//! ([`Comm::all_zero_u64`], built on `all_reduce_min_u64`): when every
+//! rank has zero misses the exchange is skipped entirely. Sampling
+//! rounds per minibatch are therefore **data-dependent**, anywhere in
+//! `0..=2(L−1)` — `Counters` report what actually happened, not what a
+//! scheme constant assumes. Budget 0 reproduces the paper's vanilla
+//! counts (2 rounds per non-seed level with any cross-partition
+//! frontier); full replication reproduces hybrid's zero (the vote is
+//! short-circuited without communication when the view covers the whole
+//! graph, which is uniform across ranks because all shards share one
+//! policy).
 //!
 //! Equality with the single-machine sampler holds bit-for-bit because
 //! neighbor choice depends only on `(level_key, node, its neighbor
-//! list)` — [`sample_node`] keyed by the counter-based RNG — and the
-//! owner of a node sees exactly the full graph's neighbor list for it.
+//! list)` — [`sample_node`] keyed by the counter-based RNG — and any
+//! materialized row (local or replicated halo) carries exactly the full
+//! graph's neighbor list, as does the owner serving a miss remotely.
 //! Assembly then replays the same relabel pass over the same per-seed
 //! chunks in the same order.
+//!
+//! **Remote-slot ordering invariant:** within one owner, requests are
+//! queued in seed order, owners serve them in arrival order, and the
+//! decode walks seeds in order advancing one cursor per owner — so the
+//! k-th miss sent to partition `p` is answered by the k-th
+//! count-prefixed run in `p`'s response. The decode asserts that every
+//! response is consumed exactly (see `sample_level`), and the
+//! `remote_responses_decode_in_seed_order` regression test drives the
+//! interleaved multi-owner case.
 
 use crate::graph::NodeId;
-use crate::partition::{TopologyView, WorkerShard};
+use crate::partition::WorkerShard;
 use crate::sampling::fused::sample_node;
 use crate::sampling::pipeline::level_key;
 use crate::sampling::rng::RngKey;
-use crate::sampling::{sample_mfgs, KernelKind, Mfg, SamplerWorkspace};
+use crate::sampling::{KernelKind, Mfg, SamplerWorkspace};
 use crate::util::par;
 
 use super::comm::{Comm, RoundKind};
 
 /// Sample all levels of one minibatch against a worker shard. Same
 /// contract as single-machine [`sample_mfgs`] (fanouts top level first,
-/// MFGs returned bottom first) plus the SPMD one: under vanilla
-/// partitioning every rank in the world must call this collectively, with
-/// level-0 `seeds` it owns.
+/// MFGs returned bottom first) plus the SPMD one: every rank in the
+/// world must call this collectively, with shards built from the same
+/// [`crate::partition::ReplicationPolicy`]. Seeds are normally the
+/// worker's own labeled nodes (then level 0 costs no exchange), but any
+/// frontier node — seed included — whose adjacency is absent is resolved
+/// through the miss rounds.
+///
+/// [`sample_mfgs`]: crate::sampling::sample_mfgs
 pub fn sample_mfgs_distributed(
-    comm: &mut Comm,
-    shard: &WorkerShard,
-    seeds: &[NodeId],
-    fanouts: &[usize],
-    key: RngKey,
-    ws: &mut SamplerWorkspace,
-    kind: KernelKind,
-) -> Vec<Mfg> {
-    match &shard.topology {
-        // Hybrid: replicated topology ⇒ fully local, zero rounds.
-        TopologyView::Full(g) => sample_mfgs(g, seeds, fanouts, key, ws, kind),
-        TopologyView::Halo { .. } => sample_vanilla(comm, shard, seeds, fanouts, key, ws, kind),
-    }
-}
-
-fn sample_vanilla(
     comm: &mut Comm,
     shard: &WorkerShard,
     seeds: &[NodeId],
@@ -67,7 +72,7 @@ fn sample_vanilla(
                 None => seeds,
                 Some(prev) => &prev.src_nodes,
             };
-            sample_level_vanilla(comm, shard, cur, f, level_key(key, li), ws, li > 0, kind)
+            sample_level(comm, shard, cur, f, level_key(key, li), ws, kind)
         };
         out.push(mfg);
     }
@@ -75,18 +80,17 @@ fn sample_vanilla(
     out
 }
 
-/// One vanilla level: local seeds sampled in place, non-local seeds
-/// resolved through one request + one response round, then assembled
-/// exactly like the corresponding single-machine kernel.
-#[allow(clippy::too_many_arguments)]
-fn sample_level_vanilla(
+/// One level: frontier nodes with materialized adjacency sampled in
+/// place; misses resolved through one request + one response round —
+/// skipped when a control-plane vote agrees no rank has any — then
+/// assembled exactly like the corresponding single-machine kernel.
+fn sample_level(
     comm: &mut Comm,
     shard: &WorkerShard,
     seeds: &[NodeId],
     fanout: usize,
     key: RngKey,
     ws: &mut SamplerWorkspace,
-    exchange: bool,
     kind: KernelKind,
 ) -> Mfg {
     assert!(fanout >= 1, "fanout must be >= 1");
@@ -97,26 +101,31 @@ fn sample_level_vanilla(
     ws.counts.resize(n, 0);
     let mut scratch: Vec<usize> = Vec::new();
 
-    // ---- Queue remote seeds first (order within an owner follows seed
-    // order, which is how responses are matched back up).
-    let mut requests: Vec<Vec<NodeId>> = vec![Vec::new(); world];
-    for &v in seeds {
-        if shard.topology.try_neighbors(v).is_none() {
-            assert!(
-                exchange,
-                "level-0 seed {v} is not local to partition {} — vanilla workers \
-                 must seed from their own labeled nodes",
-                shard.part
-            );
-            requests[shard.book.part_of(v)].push(v);
+    // ---- Queue misses first (order within an owner follows seed order —
+    // the remote-slot ordering invariant the decode below asserts). Under
+    // a full-replication policy no node can miss, so the paper's headline
+    // hybrid arm skips the scan and the per-owner outbox allocation
+    // entirely — its hot path stays the pure local sampling loop below.
+    let full = shard.policy.is_full();
+    let mut requests: Vec<Vec<NodeId>> = Vec::new();
+    let mut misses = 0u64;
+    if !full {
+        requests.resize_with(world, Vec::new);
+        for &v in seeds {
+            if shard.topology.try_neighbors(v).is_none() {
+                let p = shard.book.part_of(v);
+                debug_assert_ne!(p, shard.part, "own nodes always have a materialized row");
+                requests[p].push(v);
+                misses += 1;
+            }
         }
     }
 
-    // ---- Local seeds: sample into the strided buffer with the same
-    // parallel per-seed loop as the single-machine kernels, so the Fig 6
-    // vanilla-vs-hybrid comparison isolates communication cost rather
-    // than a serial-sampling artifact. Remote slots get a placeholder
-    // count and are filled by the response decode below.
+    // ---- Covered seeds: sample into the strided buffer with the same
+    // parallel per-seed loop as the single-machine kernels, so budget
+    // comparisons isolate communication cost rather than a
+    // serial-sampling artifact. Miss slots get a placeholder count and
+    // are filled by the response decode below.
     let topo = &shard.topology;
     par::par_zip_chunks(
         &mut ws.samples,
@@ -132,15 +141,22 @@ fn sample_level_vanilla(
         },
     );
 
-    // ---- The level's two collective rounds (every rank participates,
-    // with empty payloads if it happens to have an all-local frontier —
-    // rounds are a property of the fabric, not of one worker).
-    if exchange {
+    // ---- The round-skip vote + (when needed) the level's two data
+    // rounds. Under a full-replication *policy* no rank can miss, so the
+    // vote itself is skipped without communication — keyed off the
+    // policy (uniform across ranks), never off per-rank view coverage,
+    // which a finite budget can make diverge. Otherwise the vote is one
+    // uncharged control-plane reduce; the data rounds run only when some
+    // rank actually misses — and then *every* rank participates, empty
+    // payloads included: rounds are a property of the fabric, not of
+    // one worker.
+    let need_exchange = !full && !comm.all_zero_u64(misses);
+    if need_exchange {
         let granted = comm.exchange(RoundKind::SampleRequest, requests);
 
         // Serve: sample each requested node with the same key/stream the
         // single-machine kernel would use. Wire format per node:
-        // `count, id, id, ...` (u32 each).
+        // `count, id, id, ...` (u32 each), in request arrival order.
         let mut chunk: Vec<NodeId> = vec![0; fanout];
         let mut replies: Vec<Vec<NodeId>> = Vec::with_capacity(world);
         for req in &granted {
@@ -174,6 +190,18 @@ fn sample_level_vanilla(
             ws.counts[i] = cnt as u32;
             cursor[p] += 1 + cnt;
         }
+        // The ordering invariant, asserted: every byte of every response
+        // was matched to a miss slot — a skewed cursor would mean seed
+        // order and request order diverged somewhere.
+        for (p, resp) in responses.iter().enumerate() {
+            assert_eq!(
+                cursor[p],
+                resp.len(),
+                "rank {}: response from rank {p} not fully consumed — \
+                 remote-slot ordering invariant violated",
+                shard.part
+            );
+        }
     }
 
     // ---- Assembly: replay the chosen kernel's relabel pass over the
@@ -194,7 +222,8 @@ mod tests {
     use super::*;
     use crate::graph::generator::{make_dataset, DatasetParams};
     use crate::graph::Dataset;
-    use crate::partition::{build_shards, partition_graph, PartitionConfig, Scheme};
+    use crate::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
+    use crate::sampling::sample_mfgs;
 
     fn dataset() -> Dataset {
         make_dataset(&DatasetParams {
@@ -214,7 +243,7 @@ mod tests {
     fn single_worker_vanilla_matches_single_machine() {
         let d = dataset();
         let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(1)));
-        let shards = build_shards(&d, &book, Scheme::Vanilla);
+        let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
         let fanouts = [3usize, 2];
         let key = RngKey::new(21);
         let seeds: Vec<NodeId> = d.train_ids.iter().copied().take(10).collect();
@@ -238,10 +267,10 @@ mod tests {
     }
 
     #[test]
-    fn hybrid_shard_is_pure_local_sampling() {
+    fn full_replication_is_pure_local_sampling() {
         let d = dataset();
         let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(2)));
-        let shards = build_shards(&d, &book, Scheme::Hybrid);
+        let shards = build_shards(&d, &book, &ReplicationPolicy::hybrid());
         let fanouts = [4usize, 3];
         let key = RngKey::new(8);
         let shards_ref = &shards;
@@ -272,6 +301,65 @@ mod tests {
             let expect =
                 sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Baseline);
             assert_eq!(mfgs, &expect);
+        }
+    }
+
+    /// Satellite regression for the remote-slot ordering invariant: force
+    /// level-0 misses with seeds that *interleave* local nodes and remote
+    /// nodes of multiple owners in non-sorted order — each owner's
+    /// response must decode back into exactly the requesting slots.
+    #[test]
+    fn remote_responses_decode_in_seed_order() {
+        let d = dataset();
+        let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(3)));
+        let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+        let fanouts = [3usize, 2];
+        let key = RngKey::new(33);
+        // Per rank: walk all nodes striding so ownership interleaves, and
+        // keep an unsorted mix of ~8 locals and ~8 remotes (unique).
+        let mk_seeds = |rank: usize| -> Vec<NodeId> {
+            let mut local = 0;
+            let mut remote = 0;
+            let mut out = Vec::new();
+            for i in 0..d.num_nodes() {
+                let v = ((i * 53 + 17 * (rank + 1)) % d.num_nodes()) as NodeId;
+                if out.contains(&v) {
+                    continue;
+                }
+                let is_local = book.part_of(v) == rank;
+                if is_local && local < 8 {
+                    local += 1;
+                    out.push(v);
+                } else if !is_local && remote < 8 {
+                    remote += 1;
+                    out.push(v);
+                }
+                if local == 8 && remote == 8 {
+                    break;
+                }
+            }
+            assert!(remote > 0, "seed mix must include remote nodes");
+            out
+        };
+        let shards_ref = &shards;
+        let results = run_workers(3, NetworkModel::free(), move |rank, comm| {
+            let seeds = mk_seeds(rank);
+            let mut ws = SamplerWorkspace::new();
+            let mfgs = sample_mfgs_distributed(
+                comm,
+                &shards_ref[rank],
+                &seeds,
+                &fanouts,
+                key,
+                &mut ws,
+                KernelKind::Fused,
+            );
+            (seeds, mfgs)
+        });
+        let mut ws = SamplerWorkspace::new();
+        for (seeds, mfgs) in &results {
+            let expect = sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
+            assert_eq!(mfgs, &expect, "interleaved remote seeds decoded out of order");
         }
     }
 }

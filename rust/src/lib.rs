@@ -7,7 +7,8 @@
 //! * **L3 (this crate)** — the paper's systems contribution: the fused
 //!   CSC-direct sampling kernel ([`sampling::fused`]), the DGL-style
 //!   two-step baseline it is benchmarked against ([`sampling::baseline`]),
-//!   METIS-like edge-cut and hybrid partitioning ([`partition`]), and the
+//!   METIS-like edge-cut partitioning with budgeted halo replication —
+//!   the vanilla→hybrid spectrum — ([`partition`]), and the
 //!   distributed training runtime (workers, collectives, feature store) in
 //!   [`dist`] / [`train`] / [`coordinator`].
 //! * **L2/L1 (build-time python)** — a 3-layer GraphSAGE with a Pallas

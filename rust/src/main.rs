@@ -14,7 +14,7 @@ use fastsample::config;
 use fastsample::coordinator::experiments as exp;
 use fastsample::dist::NetworkModel;
 use fastsample::graph::{datasets, io as graph_io};
-use fastsample::partition::{partition_graph, PartitionBook, PartitionConfig};
+use fastsample::partition::{partition_graph, PartitionBook, PartitionConfig, ReplicationPolicy};
 use fastsample::runtime::Manifest;
 use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{sample_mfgs, KernelKind, MinibatchSchedule, SamplerWorkspace};
@@ -31,11 +31,15 @@ COMMANDS:
                 --mode hybrid+fused --workers 4 --epochs 3 [--lr 0.006]
                 [--optimizer adam] [--net infiniband] [--max-batches N]
                 [--cache N] [--seed S] [--eval]
+                [--replication-budget 0|64k|2m|inf]  (overrides the
+                mode's replication policy; modes also accept
+                budget:<bytes> and halo:<hops>, optionally +fused)
   partition     --dataset <spec> --parts 8 [--seed S]
   sample-bench  --dataset <spec> --batch 1024 --fanouts 15,10,5 [--iters 10]
   gen-data      --dataset <spec> --out graph.bin [--seed S]
   report        --id table1|fig4|fig5|fig5-e2e|fig6|rounds|cache-ablation|
-                     fanout-ablation|memory  [--quick] [--scale S] [--workers W]
+                     fanout-ablation|memory|replication-frontier
+                [--quick] [--scale S] [--workers W]
   info
 ";
 
@@ -71,6 +75,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let seed = args.get("seed", 0u64)?;
 
     let mut cfg = TrainConfig::mode(&variant, &mode, workers)?;
+    if let Some(budget) = args.get_opt_str("replication-budget") {
+        cfg.policy = ReplicationPolicy::from_budget(config::parse_budget(&budget)?);
+    }
     cfg.epochs = args.get("epochs", 3usize)?;
     cfg.lr = args.get("lr", 0.006f32)?;
     cfg.optimizer = args.get_str("optimizer", "adam");
@@ -127,6 +134,13 @@ fn cmd_partition(args: &Args) -> Result<()> {
         "label imbalance: {:.3}",
         PartitionBook::imbalance(&book.label_counts(&d.train_ids))
     );
+    // The replication-budget denominator: what the complete 1-hop halo
+    // would cost each worker (budget >= this ⇒ the first sampling
+    // exchange of every minibatch is cleared).
+    let halo = book.halo_profile(&d.graph);
+    let max_nodes = halo.iter().map(|h| h.boundary_nodes).max().unwrap_or(0);
+    let max_bytes = halo.iter().map(|h| h.halo_bytes).max().unwrap_or(0);
+    println!("1-hop halo:      up to {max_nodes} nodes / {max_bytes} bytes per worker");
     Ok(())
 }
 
@@ -234,6 +248,14 @@ fn cmd_report(args: &Args) -> Result<()> {
             workers,
             seed,
         )?,
+        "replication-frontier" => {
+            let spec = if scale > 0.0 {
+                format!("products-sim:{scale}")
+            } else {
+                "quickstart".to_string()
+            };
+            exp::replication_frontier(&spec, workers, seed)?
+        }
         other => bail!("unknown report {other:?} — see `fastsample` usage"),
     };
     println!("{text}");

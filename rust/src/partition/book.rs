@@ -6,6 +6,16 @@ use anyhow::{ensure, Result};
 
 use crate::graph::{CscGraph, NodeId};
 
+/// One partition's 1-hop replication frontier (see
+/// [`PartitionBook::halo_profile`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HaloProfile {
+    /// Distinct remote sources referenced by the partition's in-edges.
+    pub boundary_nodes: usize,
+    /// Bytes their complete adjacency lists would cost to replicate.
+    pub halo_bytes: u64,
+}
+
 /// Immutable partition assignment for `num_parts` workers.
 #[derive(Debug, Clone)]
 pub struct PartitionBook {
@@ -87,6 +97,37 @@ impl PartitionBook {
         c
     }
 
+    /// Per-partition 1-hop halo profile: for each partition, the distinct
+    /// remote sources referenced by its adjacency and the bytes their
+    /// complete in-edge lists would cost to replicate (8 bytes of row
+    /// pointer + 4 per in-edge). This is the natural denominator for a
+    /// [`crate::partition::ReplicationPolicy`] byte budget: a budget of
+    /// `halo_bytes` buys the whole 1-hop boundary.
+    pub fn halo_profile(&self, graph: &CscGraph) -> Vec<HaloProfile> {
+        let n = graph.num_nodes();
+        let mut out = Vec::with_capacity(self.num_parts);
+        // One pass per partition keeps memory at O(n) regardless of the
+        // partition count (this is a setup-time metric, not a hot path).
+        for p in 0..self.num_parts {
+            let mut seen = vec![false; n];
+            let mut prof = HaloProfile::default();
+            for v in 0..n as NodeId {
+                if self.part_of(v) != p {
+                    continue;
+                }
+                for &u in graph.neighbors(v) {
+                    if self.part_of(u) != p && !seen[u as usize] {
+                        seen[u as usize] = true;
+                        prof.boundary_nodes += 1;
+                        prof.halo_bytes += 8 + 4 * graph.degree(u) as u64;
+                    }
+                }
+            }
+            out.push(prof);
+        }
+        out
+    }
+
     /// max/mean imbalance of a count vector (1.0 = perfectly balanced).
     pub fn imbalance(counts: &[usize]) -> f64 {
         let total: usize = counts.iter().sum();
@@ -144,5 +185,20 @@ mod tests {
     #[test]
     fn rejects_out_of_range_assignment() {
         assert!(PartitionBook::new(2, vec![0, 2]).is_err());
+    }
+
+    #[test]
+    fn halo_profile_counts_distinct_remote_sources() {
+        // Path 0 <- 1 <- ... <- 9, split 5|5: partition 0's only remote
+        // source is node 5 (referenced by node 4); partition 1 references
+        // nothing remote (its sources 6..9 are all local).
+        let g = path_graph(10);
+        let assignment: Vec<u16> = (0..10).map(|v| if v < 5 { 0 } else { 1 }).collect();
+        let book = PartitionBook::new(2, assignment).unwrap();
+        let prof = book.halo_profile(&g);
+        assert_eq!(prof[0].boundary_nodes, 1);
+        // Node 5 has one in-edge (from 6): 8 + 4*1 bytes.
+        assert_eq!(prof[0].halo_bytes, 12);
+        assert_eq!(prof[1], HaloProfile::default());
     }
 }

@@ -462,6 +462,29 @@ mod tests {
     }
 
     #[test]
+    fn partitioner_keeps_the_replication_halo_small() {
+        // The 1-hop halo is what a ReplicationPolicy byte budget buys
+        // back; a cut-minimizing partition must keep it well under the
+        // full topology (a random assignment would reference nearly
+        // every remote node on every worker).
+        let (g, _) = planted_communities(2000, 4, 10, 0.95, RngKey::new(7));
+        let train: Vec<NodeId> = (0..2000).step_by(10).collect();
+        let book = partition_graph(&g, &train, &PartitionConfig::new(4));
+        let interleaved = PartitionBook::new(
+            4,
+            (0..g.num_nodes()).map(|v| (v % 4) as u16).collect(),
+        )
+        .unwrap();
+        let halo_max = |b: &PartitionBook| {
+            b.halo_profile(&g).iter().map(|p| p.halo_bytes).max().unwrap()
+        };
+        let (real, bad) = (halo_max(&book), halo_max(&interleaved));
+        assert!(real < bad / 2, "partitioned halo {real} vs interleaved {bad}");
+        let full_bytes = (g.num_nodes() as u64) * 8 + (g.num_edges() as u64) * 4;
+        assert!(real < full_bytes, "halo must be a strict subset of the topology");
+    }
+
+    #[test]
     fn single_part_and_tiny_graphs() {
         let g = erdos_renyi(50, 3, RngKey::new(4));
         let book = partition_graph(&g, &[], &PartitionConfig::new(1));

@@ -1,21 +1,24 @@
-//! Graph partitioning (paper §3.3).
+//! Graph partitioning (paper §3.3, generalized to a replication budget).
 //!
 //! * [`book`] — the partition assignment + quality metrics (edge cut,
-//!   node/edge/label balance).
+//!   node/edge/label balance, per-partition 1-hop halo profile — the
+//!   natural denominator for replication budgets).
 //! * [`metis_like`] — a from-scratch multilevel edge-cut partitioner
 //!   (heavy-edge-matching coarsening → greedy region growing → boundary
 //!   refinement), standing in for METIS with the same objectives the
 //!   paper lists: minimize cut edges, balance nodes/edges, and balance
 //!   labeled nodes so every machine draws the same number of seeds.
-//! * [`shard`] — materialize per-worker shards under either scheme:
-//!   **vanilla** (topology *and* features partitioned; remote sampling
-//!   rounds required) or **hybrid** (topology replicated, features
-//!   partitioned; the paper's contribution).
+//! * [`shard`] — materialize per-worker shards under a
+//!   [`ReplicationPolicy`]: local in-edges always, plus a budgeted
+//!   boundary-BFS halo of replicated adjacency. `byte_budget = Some(0)`
+//!   is the paper's vanilla arm (topology *and* features partitioned),
+//!   `byte_budget = None` its hybrid arm (topology replicated, features
+//!   partitioned), and finite budgets interpolate between them.
 
 pub mod book;
 pub mod metis_like;
 pub mod shard;
 
-pub use book::PartitionBook;
+pub use book::{HaloProfile, PartitionBook};
 pub use metis_like::{partition_graph, PartitionConfig};
-pub use shard::{build_shards, Scheme, TopologyView, WorkerShard};
+pub use shard::{build_shards, HaloPriority, ReplicationPolicy, TopologyView, WorkerShard};

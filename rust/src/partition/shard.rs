@@ -1,70 +1,181 @@
-//! Per-worker shards under the two partitioning schemes of the paper.
+//! Per-worker shards under a **replication-budget spectrum** (paper §3.3,
+//! generalized).
 //!
-//! **Vanilla** (DistDGL-style, §3.3): each worker stores its partition's
-//! node features *and only* the incoming edges of its partition nodes
-//! (topology halo). Sampling a non-local node requires a remote request —
-//! 2(L−1) communication rounds per minibatch.
+//! The paper compares two extreme points: *vanilla* (DistDGL-style — each
+//! worker stores only the in-edges of its own partition nodes, so every
+//! non-local frontier node costs a remote sampling round) and *hybrid*
+//! (the full topology replicated everywhere, so sampling is fully local).
+//! Full replication cannot scale to billion-edge graphs, and vanilla
+//! over-pays when most of the frontier is local, so this module makes
+//! replication a **budget** instead of a binary: a [`ReplicationPolicy`]
+//! spends a per-worker byte budget on a *partial* halo — local in-edges
+//! always, then the adjacency lists of the highest-priority remote nodes
+//! (boundary-BFS order, reference-weighted) until the budget is
+//! exhausted. `byte_budget = Some(0)` degenerates to vanilla,
+//! `byte_budget = None` (with unbounded hops) to hybrid, and everything
+//! in between trades per-worker memory for data-dependent sampling
+//! rounds (see `dist::sampling`).
 //!
-//! **Hybrid** (the paper's scheme): the full topology is replicated on
-//! every worker (it is small, Fig 4) while features stay partitioned.
-//! Sampling is then fully local; only the 2 feature-exchange rounds
-//! remain.
+//! Replicated halo rows always carry a node's **complete** in-neighbor
+//! list (never truncated), so sampling a halo node locally draws exactly
+//! the neighbors its owner would have drawn — the bit-equality invariant
+//! holds at every budget point.
 
 use std::sync::Arc;
 
-use crate::graph::{CscGraph, Dataset, NodeId};
+use crate::graph::{Dataset, NodeId};
 
 use super::book::PartitionBook;
 
-/// Partitioning scheme selector (the Fig 6 comparison axis).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Scheme {
-    Vanilla,
-    Hybrid,
+/// Priority order in which the replication budget is spent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HaloPriority {
+    /// Boundary-BFS order; within a hop, candidates referenced by the
+    /// most already-covered adjacency entries come first (a proxy for how
+    /// much frontier probability mass reaches them), ties broken by
+    /// ascending node id. Deterministic.
+    #[default]
+    DegreeWeighted,
+    /// Pure boundary-BFS discovery order: hop by hop, ascending node id
+    /// within a hop. Deterministic.
+    BfsOrder,
 }
 
-/// What a worker can see of the graph topology.
-pub enum TopologyView {
-    /// Hybrid: the whole adjacency, shared (one copy per *process*; in the
-    /// paper it is one copy per machine).
-    Full(Arc<CscGraph>),
-    /// Vanilla: in-edges of local nodes only. `row_of[v]` is the local row
-    /// of global node `v`, or `u32::MAX` if `v` is not local.
-    Halo { indptr: Vec<usize>, indices: Vec<NodeId>, row_of: Vec<u32> },
+/// How much remote topology each worker replicates beyond its own
+/// partition's in-edges — the axis that turns the paper's Vanilla/Hybrid
+/// binary into a spectrum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicationPolicy {
+    /// How many hops beyond the partition boundary the halo may grow.
+    /// `0` forbids replication outright; `usize::MAX` leaves growth to
+    /// the byte budget alone.
+    pub hops: usize,
+    /// Per-worker byte budget for replicated adjacency (8 bytes of row
+    /// pointer + 4 bytes per in-edge for each replicated node). `None`
+    /// is unlimited. The budget buys a *prefix* of the priority order —
+    /// construction stops at the first candidate that does not fit — so
+    /// a larger budget always replicates a superset of a smaller one,
+    /// which makes rounds and bytes monotone along a budget sweep.
+    pub byte_budget: Option<u64>,
+    pub priority: HaloPriority,
+}
+
+impl ReplicationPolicy {
+    /// The paper's vanilla arm: no replication, remote frontier nodes
+    /// cost sampling rounds.
+    pub fn vanilla() -> Self {
+        Self { hops: 0, byte_budget: Some(0), priority: HaloPriority::DegreeWeighted }
+    }
+
+    /// The paper's hybrid arm: the full topology on every worker, zero
+    /// sampling rounds.
+    pub fn hybrid() -> Self {
+        Self { hops: usize::MAX, byte_budget: None, priority: HaloPriority::DegreeWeighted }
+    }
+
+    /// A byte-budgeted point on the spectrum (hops unbounded).
+    pub fn budgeted(bytes: u64) -> Self {
+        Self { hops: usize::MAX, byte_budget: Some(bytes), priority: HaloPriority::DegreeWeighted }
+    }
+
+    /// Hop-bounded, byte-unbounded halo (e.g. `halo(1)` replicates the
+    /// complete 1-hop boundary, which clears the first sampling exchange
+    /// of every minibatch).
+    pub fn halo(hops: usize) -> Self {
+        Self { hops, byte_budget: None, priority: HaloPriority::DegreeWeighted }
+    }
+
+    /// Map an optional byte budget to a policy: `None` ⇒ hybrid,
+    /// `Some(0)` ⇒ vanilla, `Some(b)` ⇒ budgeted.
+    pub fn from_budget(budget: Option<u64>) -> Self {
+        match budget {
+            None => Self::hybrid(),
+            Some(0) => Self::vanilla(),
+            Some(b) => Self::budgeted(b),
+        }
+    }
+
+    /// Full replication: every worker sees the whole topology.
+    pub fn is_full(&self) -> bool {
+        self.byte_budget.is_none() && self.hops == usize::MAX
+    }
+
+    /// Human-readable point label (report/CLI rows).
+    pub fn label(&self) -> String {
+        if self.is_full() {
+            return "hybrid".into();
+        }
+        match self.byte_budget {
+            Some(0) => "vanilla".into(),
+            Some(b) if self.hops == usize::MAX => format!("budget:{b}"),
+            Some(b) => format!("budget:{b}/h{}", self.hops),
+            None => format!("halo:{}", self.hops),
+        }
+    }
+}
+
+/// What a worker can see of the graph topology: one CSR over the rows it
+/// holds, with a `row_of` indirection from global node id to local row
+/// (`u32::MAX` when the node is not materialized). Partial views lay out
+/// the partition's own rows first, then replicated halo rows in policy
+/// priority order; the full-replication view shares the graph's own
+/// arrays (identity `row_of`) across all workers, one copy per process.
+#[derive(Clone)]
+pub struct TopologyView {
+    indptr: Arc<Vec<usize>>,
+    indices: Arc<Vec<NodeId>>,
+    row_of: Arc<Vec<u32>>,
+    /// Number of rows belonging to this worker's own partition.
+    local_rows: usize,
+    /// Number of replicated (halo) rows beyond the local ones.
+    replicated_rows: usize,
+    /// Bytes of adjacency attributable to replicated rows (8 + 4·deg per
+    /// row) — the per-worker memory cost of the policy beyond vanilla.
+    replicated_bytes: u64,
+    /// True when every node of the graph has a row.
+    full: bool,
 }
 
 impl TopologyView {
-    /// In-neighbors of `v`, or `None` when `v` is not sampleable locally
-    /// (vanilla scheme, remote node) — the caller must issue a remote
-    /// sampling request.
+    /// In-neighbors of `v`, or `None` when `v` has no materialized row —
+    /// the caller must resolve it through a remote sampling request.
     #[inline]
     pub fn try_neighbors(&self, v: NodeId) -> Option<&[NodeId]> {
-        match self {
-            TopologyView::Full(g) => Some(g.neighbors(v)),
-            TopologyView::Halo { indptr, indices, row_of } => {
-                let row = row_of[v as usize];
-                if row == u32::MAX {
-                    None
-                } else {
-                    Some(&indices[indptr[row as usize]..indptr[row as usize + 1]])
-                }
-            }
+        let row = self.row_of[v as usize];
+        if row == u32::MAX {
+            None
+        } else {
+            Some(&self.indices[self.indptr[row as usize]..self.indptr[row as usize + 1]])
         }
     }
 
-    pub fn is_full(&self) -> bool {
-        matches!(self, TopologyView::Full(_))
+    /// Does every node of the graph have a local row? (True under the
+    /// hybrid policy; also reachable with a large enough finite budget.)
+    #[inline]
+    pub fn covers_all(&self) -> bool {
+        self.full
+    }
+
+    pub fn local_rows(&self) -> usize {
+        self.local_rows
+    }
+
+    pub fn replicated_rows(&self) -> usize {
+        self.replicated_rows
+    }
+
+    /// Adjacency bytes spent on halo rows — must respect the policy's
+    /// byte budget.
+    pub fn replicated_bytes(&self) -> u64 {
+        self.replicated_bytes
     }
 
     /// Bytes of adjacency data this worker holds (per-worker memory cost
-    /// of the scheme — the compromise the paper's §5 discusses).
+    /// of the policy — the compromise the paper's §5 discusses). Shared
+    /// full-replication arrays are charged in full to every worker, as
+    /// each machine of the real deployment would hold its own copy.
     pub fn storage_bytes(&self) -> usize {
-        match self {
-            TopologyView::Full(g) => g.storage_bytes(),
-            TopologyView::Halo { indptr, indices, row_of } => {
-                indptr.len() * 8 + indices.len() * 4 + row_of.len() * 4
-            }
-        }
+        self.indptr.len() * 8 + self.indices.len() * 4 + self.row_of.len() * 4
     }
 }
 
@@ -73,6 +184,12 @@ pub struct WorkerShard {
     pub part: usize,
     pub num_parts: usize,
     pub book: Arc<PartitionBook>,
+    /// The policy every shard of this run was built with. Collectives
+    /// key their fast paths off this (uniform across ranks by the SPMD
+    /// contract), **not** off per-rank view coverage — a finite budget
+    /// can incidentally cover the whole graph on one rank but not
+    /// another, and a coverage-keyed skip would desynchronize the world.
+    pub policy: ReplicationPolicy,
     pub topology: TopologyView,
     /// Global ids of nodes whose features this worker stores (sorted).
     pub local_nodes: Vec<NodeId>,
@@ -108,22 +225,120 @@ impl WorkerShard {
     }
 }
 
-/// Materialize all worker shards for a dataset under `scheme`.
+/// Replication cost of materializing node `v`'s adjacency: one row
+/// pointer slot plus its in-edge list.
+#[inline]
+fn row_cost(degree: usize) -> u64 {
+    8 + 4 * degree as u64
+}
+
+/// Build one worker's topology view under `policy`: local in-edges
+/// always, then budgeted boundary-BFS halo rows.
+fn build_view(
+    dataset: &Dataset,
+    local_nodes: &[NodeId],
+    policy: &ReplicationPolicy,
+) -> TopologyView {
+    let graph = &dataset.graph;
+    let n = dataset.num_nodes();
+    let (mut indptr, mut indices) = graph.induce_in_edges(local_nodes);
+    let mut row_of = vec![u32::MAX; n];
+    for (i, &v) in local_nodes.iter().enumerate() {
+        row_of[v as usize] = i as u32;
+    }
+    let local_rows = local_nodes.len();
+    let mut replicated_rows = 0usize;
+    let mut replicated_bytes = 0u64;
+    let mut budget_left = policy.byte_budget.unwrap_or(u64::MAX);
+
+    // Boundary BFS: hop-1 candidates are the uncovered sources referenced
+    // by local adjacency; hop k+1 candidates are the uncovered sources
+    // referenced by rows added in hop k. Within a hop, candidates are
+    // ordered by the policy's priority; the budget buys a prefix of that
+    // order (construction stops at the first candidate that does not
+    // fit), so replica sets are nested along any budget sweep.
+    let mut current_rows: Vec<NodeId> = local_nodes.to_vec();
+    let mut weight: Vec<u64> = vec![0; n];
+    let mut touched: Vec<NodeId> = Vec::new();
+    let mut hop = 0usize;
+    'grow: while hop < policy.hops && budget_left > 0 && !current_rows.is_empty() {
+        hop += 1;
+        touched.clear();
+        for &v in &current_rows {
+            for &u in graph.neighbors(v) {
+                if row_of[u as usize] == u32::MAX {
+                    if weight[u as usize] == 0 {
+                        touched.push(u);
+                    }
+                    weight[u as usize] += 1;
+                }
+            }
+        }
+        let mut cands: Vec<(u64, NodeId)> =
+            touched.iter().map(|&u| (weight[u as usize], u)).collect();
+        for &u in &touched {
+            weight[u as usize] = 0; // reset for the next hop
+        }
+        match policy.priority {
+            HaloPriority::DegreeWeighted => {
+                cands.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            }
+            HaloPriority::BfsOrder => cands.sort_unstable_by_key(|&(_, u)| u),
+        }
+        let mut added: Vec<NodeId> = Vec::new();
+        for (_, u) in cands {
+            let cost = row_cost(graph.degree(u));
+            if cost > budget_left {
+                break 'grow; // prefix semantics: budget exhausted
+            }
+            budget_left -= cost;
+            row_of[u as usize] = (local_rows + replicated_rows) as u32;
+            indices.extend_from_slice(graph.neighbors(u));
+            indptr.push(indices.len());
+            replicated_rows += 1;
+            replicated_bytes += cost;
+            added.push(u);
+        }
+        current_rows = added;
+    }
+
+    let full = local_rows + replicated_rows == n;
+    TopologyView {
+        indptr: Arc::new(indptr),
+        indices: Arc::new(indices),
+        row_of: Arc::new(row_of),
+        local_rows,
+        replicated_rows,
+        replicated_bytes,
+        full,
+    }
+}
+
+/// Materialize all worker shards for a dataset under `policy`.
 pub fn build_shards(
     dataset: &Dataset,
     book: &Arc<PartitionBook>,
-    scheme: Scheme,
+    policy: &ReplicationPolicy,
 ) -> Vec<WorkerShard> {
     let parts = book.num_parts();
+    let n = dataset.num_nodes();
     let labels = Arc::new(dataset.labels.clone());
-    let full_graph = match scheme {
-        Scheme::Hybrid => Some(Arc::new(dataset.graph.clone())),
-        Scheme::Vanilla => None,
-    };
+    // Full replication shares one set of arrays across all workers (one
+    // copy per *process*; in the paper it is one copy per machine).
+    let full_arrays = policy.is_full().then(|| {
+        let g = &dataset.graph;
+        let total_adj_bytes: u64 = (0..n as NodeId).map(|v| row_cost(g.degree(v))).sum();
+        (
+            Arc::new(g.indptr().to_vec()),
+            Arc::new(g.indices().to_vec()),
+            Arc::new((0..n as u32).collect::<Vec<u32>>()),
+            total_adj_bytes,
+        )
+    });
     (0..parts)
         .map(|p| {
             let local_nodes = book.nodes_of(p);
-            let mut feat_row = vec![u32::MAX; dataset.num_nodes()];
+            let mut feat_row = vec![u32::MAX; n];
             for (i, &v) in local_nodes.iter().enumerate() {
                 feat_row[v as usize] = i as u32;
             }
@@ -132,16 +347,21 @@ pub fn build_shards(
             for &v in &local_nodes {
                 feats.extend_from_slice(dataset.feat(v));
             }
-            let topology = match &full_graph {
-                Some(g) => TopologyView::Full(Arc::clone(g)),
-                None => {
-                    let (indptr, indices) = dataset.graph.induce_in_edges(&local_nodes);
-                    let mut row_of = vec![u32::MAX; dataset.num_nodes()];
-                    for (i, &v) in local_nodes.iter().enumerate() {
-                        row_of[v as usize] = i as u32;
+            let topology = match &full_arrays {
+                Some((indptr, indices, row_of, total_adj_bytes)) => {
+                    let local_adj: u64 =
+                        local_nodes.iter().map(|&v| row_cost(dataset.graph.degree(v))).sum();
+                    TopologyView {
+                        indptr: Arc::clone(indptr),
+                        indices: Arc::clone(indices),
+                        row_of: Arc::clone(row_of),
+                        local_rows: local_nodes.len(),
+                        replicated_rows: n - local_nodes.len(),
+                        replicated_bytes: *total_adj_bytes - local_adj,
+                        full: true,
                     }
-                    TopologyView::Halo { indptr, indices, row_of }
                 }
+                None => build_view(dataset, &local_nodes, policy),
             };
             let train_local: Vec<NodeId> =
                 dataset.train_ids.iter().copied().filter(|&v| book.part_of(v) == p).collect();
@@ -149,6 +369,7 @@ pub fn build_shards(
                 part: p,
                 num_parts: parts,
                 book: Arc::clone(book),
+                policy: *policy,
                 topology,
                 local_nodes,
                 feat_row,
@@ -181,31 +402,35 @@ mod tests {
         })
     }
 
-    fn build(scheme: Scheme) -> (Dataset, Vec<WorkerShard>) {
+    fn build(policy: ReplicationPolicy) -> (Dataset, Vec<WorkerShard>) {
         let d = toy_dataset();
         let book =
             Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
-        let shards = build_shards(&d, &book, scheme);
+        let shards = build_shards(&d, &book, &policy);
         (d, shards)
     }
 
     #[test]
     fn shards_cover_all_nodes_exactly_once() {
-        for scheme in [Scheme::Vanilla, Scheme::Hybrid] {
-            let (d, shards) = build(scheme);
+        for policy in [
+            ReplicationPolicy::vanilla(),
+            ReplicationPolicy::budgeted(2048),
+            ReplicationPolicy::hybrid(),
+        ] {
+            let (d, shards) = build(policy);
             let mut seen = vec![0u8; d.num_nodes()];
             for s in &shards {
                 for &v in &s.local_nodes {
                     seen[v as usize] += 1;
                 }
             }
-            assert!(seen.iter().all(|&c| c == 1), "{scheme:?}");
+            assert!(seen.iter().all(|&c| c == 1), "{policy:?}");
         }
     }
 
     #[test]
     fn features_match_dataset_rows() {
-        let (d, shards) = build(Scheme::Hybrid);
+        let (d, shards) = build(ReplicationPolicy::hybrid());
         for s in &shards {
             for &v in s.local_nodes.iter().take(20) {
                 assert_eq!(s.local_feat(v), d.feat(v));
@@ -215,9 +440,13 @@ mod tests {
     }
 
     #[test]
-    fn hybrid_sees_all_vanilla_sees_local_only() {
-        let (d, shards) = build(Scheme::Vanilla);
+    fn visibility_tracks_the_policy() {
+        // Vanilla: a node is visible iff it is local, and visible rows
+        // carry the full graph adjacency.
+        let (d, shards) = build(ReplicationPolicy::vanilla());
         for s in &shards {
+            assert_eq!(s.topology.replicated_rows(), 0);
+            assert_eq!(s.topology.replicated_bytes(), 0);
             for v in 0..d.num_nodes() as NodeId {
                 let visible = s.topology.try_neighbors(v).is_some();
                 assert_eq!(visible, s.owns(v), "vanilla: node {v}");
@@ -226,18 +455,100 @@ mod tests {
                 }
             }
         }
-        let (d2, shards2) = build(Scheme::Hybrid);
+        // Hybrid: everything visible everywhere.
+        let (d2, shards2) = build(ReplicationPolicy::hybrid());
         for s in &shards2 {
-            assert!(s.topology.is_full());
+            assert!(s.topology.covers_all());
             for v in 0..d2.num_nodes() as NodeId {
                 assert_eq!(s.topology.try_neighbors(v).unwrap(), d2.graph.neighbors(v));
+            }
+        }
+        // Budgeted: local always visible, halo rows carry complete
+        // adjacency (never truncated) — the bit-equality prerequisite.
+        let (d3, shards3) = build(ReplicationPolicy::budgeted(4096));
+        for s in &shards3 {
+            assert!(s.topology.replicated_rows() > 0, "budget bought nothing");
+            assert!(s.topology.replicated_bytes() <= 4096);
+            for v in 0..d3.num_nodes() as NodeId {
+                if s.owns(v) {
+                    assert!(s.topology.try_neighbors(v).is_some());
+                }
+                if let Some(neigh) = s.topology.try_neighbors(v) {
+                    assert_eq!(neigh, d3.graph.neighbors(v), "node {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_hop_halo_covers_every_referenced_source() {
+        // halo(1) with no byte cap must materialize every source that
+        // appears in a local adjacency list — the property that clears
+        // the first sampling exchange of a minibatch.
+        let (d, shards) = build(ReplicationPolicy::halo(1));
+        for s in &shards {
+            for &v in &s.local_nodes {
+                for &u in d.graph.neighbors(v) {
+                    assert!(
+                        s.topology.try_neighbors(u).is_some(),
+                        "1-hop source {u} of local {v} not covered on part {}",
+                        s.part
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn budgets_buy_nested_prefixes() {
+        // Larger budgets replicate a superset of smaller budgets (prefix
+        // semantics), and memory/coverage grow monotonically.
+        let d = toy_dataset();
+        let book =
+            Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+        let budgets = [0u64, 512, 2048, 8192, u64::MAX >> 1];
+        let mut prev: Option<Vec<WorkerShard>> = None;
+        for &b in &budgets {
+            let shards = build_shards(&d, &book, &ReplicationPolicy::budgeted(b));
+            if let Some(smaller) = &prev {
+                for (lo, hi) in smaller.iter().zip(&shards) {
+                    assert!(hi.topology.replicated_rows() >= lo.topology.replicated_rows());
+                    assert!(hi.topology.replicated_bytes() >= lo.topology.replicated_bytes());
+                    for v in 0..d.num_nodes() as NodeId {
+                        if lo.topology.try_neighbors(v).is_some() {
+                            assert!(
+                                hi.topology.try_neighbors(v).is_some(),
+                                "budget {b} dropped node {v} covered by a smaller budget"
+                            );
+                        }
+                    }
+                }
+            }
+            prev = Some(shards);
+        }
+    }
+
+    #[test]
+    fn construction_is_deterministic() {
+        for policy in [ReplicationPolicy::budgeted(4096), ReplicationPolicy::halo(2)] {
+            let (d, a) = build(policy);
+            let (_, b) = build(policy);
+            for (sa, sb) in a.iter().zip(&b) {
+                assert_eq!(sa.topology.replicated_rows(), sb.topology.replicated_rows());
+                for v in 0..d.num_nodes() as NodeId {
+                    assert_eq!(
+                        sa.topology.try_neighbors(v).is_some(),
+                        sb.topology.try_neighbors(v).is_some(),
+                        "{policy:?} node {v}"
+                    );
+                }
             }
         }
     }
 
     #[test]
     fn train_pools_partition_the_train_set() {
-        let (d, shards) = build(Scheme::Hybrid);
+        let (d, shards) = build(ReplicationPolicy::hybrid());
         let total: usize = shards.iter().map(|s| s.train_local.len()).sum();
         assert_eq!(total, d.train_ids.len());
         for s in &shards {
@@ -248,24 +559,42 @@ mod tests {
     }
 
     #[test]
-    fn memory_accounting_reflects_schemes() {
-        let (d, vanilla) = build(Scheme::Vanilla);
-        let (_, hybrid) = build(Scheme::Hybrid);
-        // Hybrid: every worker stores the full topology.
+    fn memory_accounting_spans_the_spectrum() {
+        let (d, vanilla) = build(ReplicationPolicy::vanilla());
+        let (_, mid) = build(ReplicationPolicy::budgeted(4096));
+        let (_, hybrid) = build(ReplicationPolicy::hybrid());
+        // Hybrid: every worker is charged the full topology (plus the
+        // shared identity row_of).
         for s in &hybrid {
-            assert_eq!(s.topology.storage_bytes(), d.graph.storage_bytes());
+            assert_eq!(
+                s.topology.storage_bytes(),
+                d.graph.storage_bytes() + d.num_nodes() * 4
+            );
+            assert!(s.topology.covers_all());
         }
-        // Vanilla: workers store strictly less adjacency than the total
-        // (halo row_of vector aside, indices are a partition subset).
-        for s in &vanilla {
-            if let TopologyView::Halo { indices, .. } = &s.topology {
-                assert!(indices.len() < d.graph.num_edges());
-            } else {
-                panic!("expected halo view");
-            }
+        // The spectrum is strictly ordered per worker: vanilla < mid < hybrid.
+        for ((v, m), h) in vanilla.iter().zip(&mid).zip(&hybrid) {
+            assert!(v.topology.storage_bytes() < m.topology.storage_bytes());
+            assert!(m.topology.storage_bytes() < h.topology.storage_bytes());
         }
         // Features always partition exactly.
         let total_feat: usize = vanilla.iter().map(|s| s.feats.len()).sum();
         assert_eq!(total_feat, d.feats.len());
+    }
+
+    #[test]
+    fn policy_labels_and_constructors_line_up() {
+        assert_eq!(ReplicationPolicy::vanilla().label(), "vanilla");
+        assert_eq!(ReplicationPolicy::hybrid().label(), "hybrid");
+        assert_eq!(ReplicationPolicy::budgeted(4096).label(), "budget:4096");
+        assert_eq!(ReplicationPolicy::halo(1).label(), "halo:1");
+        assert!(ReplicationPolicy::hybrid().is_full());
+        assert!(!ReplicationPolicy::budgeted(u64::MAX >> 1).is_full());
+        assert_eq!(ReplicationPolicy::from_budget(None), ReplicationPolicy::hybrid());
+        assert_eq!(ReplicationPolicy::from_budget(Some(0)), ReplicationPolicy::vanilla());
+        assert_eq!(
+            ReplicationPolicy::from_budget(Some(7)),
+            ReplicationPolicy::budgeted(7)
+        );
     }
 }

@@ -17,7 +17,9 @@ use crate::dist::{
     Counters, FeatureCache, NetworkModel, RoundKind,
 };
 use crate::graph::Dataset;
-use crate::partition::{build_shards, partition_graph, PartitionConfig, Scheme, WorkerShard};
+use crate::partition::{
+    build_shards, partition_graph, PartitionConfig, ReplicationPolicy, WorkerShard,
+};
 use crate::runtime::{Engine, HostTensor, Manifest, ModelRuntime};
 use crate::sampling::rng::RngKey;
 use crate::sampling::{KernelKind, MinibatchSchedule, SamplerWorkspace};
@@ -31,7 +33,9 @@ use super::padding::pad_batch;
 pub struct TrainConfig {
     /// AOT variant name from `artifacts/manifest.json`.
     pub variant: String,
-    pub scheme: Scheme,
+    /// How much remote topology each worker replicates — the axis that
+    /// subsumes the old vanilla/hybrid scheme switch.
+    pub policy: ReplicationPolicy,
     pub kernel: KernelKind,
     pub workers: usize,
     pub epochs: usize,
@@ -81,10 +85,15 @@ impl ScheduleKind {
 }
 
 impl TrainConfig {
-    pub fn new(variant: &str, scheme: Scheme, kernel: KernelKind, workers: usize) -> Self {
+    pub fn new(
+        variant: &str,
+        policy: ReplicationPolicy,
+        kernel: KernelKind,
+        workers: usize,
+    ) -> Self {
         Self {
             variant: variant.to_string(),
-            scheme,
+            policy,
             kernel,
             workers,
             epochs: 3,
@@ -101,17 +110,30 @@ impl TrainConfig {
         }
     }
 
-    /// The three Fig 6 scenarios by name.
+    /// The Fig 6 scenarios by name, plus budgeted points on the
+    /// replication spectrum: `budget:<bytes>` (suffixes `k`/`m`/`g`,
+    /// KiB-based) and `halo:<hops>` (complete h-hop halo, no byte cap),
+    /// each optionally `+fused`.
     pub fn mode(variant: &str, mode: &str, workers: usize) -> Result<Self> {
-        let (scheme, kernel) = match mode {
-            "vanilla" => (Scheme::Vanilla, KernelKind::Baseline),
-            "hybrid" => (Scheme::Hybrid, KernelKind::Baseline),
-            "hybrid+fused" => (Scheme::Hybrid, KernelKind::Fused),
-            // Extra ablation arm: fused assembly under vanilla partitioning.
-            "vanilla+fused" => (Scheme::Vanilla, KernelKind::Fused),
-            _ => anyhow::bail!("unknown mode {mode:?} (vanilla | hybrid | hybrid+fused | vanilla+fused)"),
+        let (base, kernel) = match mode.strip_suffix("+fused") {
+            Some(b) => (b, KernelKind::Fused),
+            None => (mode, KernelKind::Baseline),
         };
-        Ok(Self::new(variant, scheme, kernel, workers))
+        let policy = if base == "vanilla" {
+            ReplicationPolicy::vanilla()
+        } else if base == "hybrid" {
+            ReplicationPolicy::hybrid()
+        } else if let Some(spec) = base.strip_prefix("budget:") {
+            ReplicationPolicy::from_budget(crate::config::parse_budget(spec)?)
+        } else if let Some(h) = base.strip_prefix("halo:") {
+            ReplicationPolicy::halo(h.parse().with_context(|| format!("mode {mode:?}"))?)
+        } else {
+            anyhow::bail!(
+                "unknown mode {mode:?} (vanilla | hybrid | budget:<bytes> | halo:<hops>, \
+                 each optionally +fused)"
+            )
+        };
+        Ok(Self::new(variant, policy, kernel, workers))
     }
 }
 
@@ -181,7 +203,7 @@ pub fn train_distributed(
         &dataset.train_ids,
         &PartitionConfig::new(cfg.workers),
     ));
-    let shards = build_shards(dataset, &book, cfg.scheme);
+    let shards = build_shards(dataset, &book, &cfg.policy);
     let counters = Arc::new(Counters::default());
 
     let shards_ref = &shards;
@@ -245,11 +267,17 @@ fn worker_loop(
     let mut cache = (cfg.cache_capacity > 0).then(|| {
         FeatureCache::new(cfg.cache_policy, cfg.cache_capacity, shard.feat_dim)
     });
-    if let (Some(c), crate::partition::TopologyView::Full(g)) = (&mut cache, &shard.topology) {
-        if cfg.cache_policy == CachePolicy::StaticDegree {
+    // Static-degree prefill needs every node's degree, which only full
+    // replication guarantees; partial-budget runs skip the warm-up (the
+    // cache still fills on demand). Gate on the *policy* — uniform
+    // across ranks — so the prefill collective stays in lockstep even
+    // when a finite budget happens to cover everything on some rank.
+    if let Some(c) = &mut cache {
+        if cfg.cache_policy == CachePolicy::StaticDegree && shard.policy.is_full() {
+            let topo = &shard.topology;
             let hot = crate::dist::feature_cache::hottest_remote_nodes(
-                |v| g.degree(v),
-                g.num_nodes(),
+                |v| topo.try_neighbors(v).map_or(0, |n| n.len()),
+                shard.book.num_nodes(),
                 |v| shard.owns(v),
                 cfg.cache_capacity,
             );
@@ -418,13 +446,25 @@ mod tests {
     }
 
     #[test]
-    fn mode_names_map_to_fig6_arms() {
+    fn mode_names_map_to_policy_points() {
         let v = TrainConfig::mode("x", "vanilla", 4).unwrap();
-        assert_eq!((v.scheme, v.kernel), (Scheme::Vanilla, KernelKind::Baseline));
+        assert_eq!((v.policy, v.kernel), (ReplicationPolicy::vanilla(), KernelKind::Baseline));
         let h = TrainConfig::mode("x", "hybrid", 4).unwrap();
-        assert_eq!((h.scheme, h.kernel), (Scheme::Hybrid, KernelKind::Baseline));
+        assert_eq!((h.policy, h.kernel), (ReplicationPolicy::hybrid(), KernelKind::Baseline));
         let hf = TrainConfig::mode("x", "hybrid+fused", 4).unwrap();
-        assert_eq!((hf.scheme, hf.kernel), (Scheme::Hybrid, KernelKind::Fused));
+        assert_eq!((hf.policy, hf.kernel), (ReplicationPolicy::hybrid(), KernelKind::Fused));
+        let b = TrainConfig::mode("x", "budget:64k", 4).unwrap();
+        assert_eq!(
+            (b.policy, b.kernel),
+            (ReplicationPolicy::budgeted(64 * 1024), KernelKind::Baseline)
+        );
+        let bf = TrainConfig::mode("x", "budget:0+fused", 4).unwrap();
+        assert_eq!((bf.policy, bf.kernel), (ReplicationPolicy::vanilla(), KernelKind::Fused));
+        let h1 = TrainConfig::mode("x", "halo:1", 4).unwrap();
+        assert_eq!(h1.policy, ReplicationPolicy::halo(1));
+        let inf = TrainConfig::mode("x", "budget:inf", 4).unwrap();
+        assert_eq!(inf.policy, ReplicationPolicy::hybrid());
         assert!(TrainConfig::mode("x", "nope", 4).is_err());
+        assert!(TrainConfig::mode("x", "halo:x", 4).is_err());
     }
 }

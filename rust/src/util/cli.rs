@@ -62,6 +62,17 @@ impl Args {
         }
     }
 
+    /// Optional string flag: `Some(value)` only when the flag was passed
+    /// with a value (used for overrides that must distinguish "absent"
+    /// from any default, e.g. `--replication-budget`).
+    pub fn get_opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(Some(v)) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
     /// Required string flag.
     pub fn require_str(&self, key: &str) -> Result<String> {
         self.mark(key);
@@ -134,6 +145,15 @@ mod tests {
         assert_eq!(a.get("workers", 1usize).unwrap(), 8);
         assert!(a.has("verbose"));
         assert!(!a.has("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn optional_flags_distinguish_absent_from_default() {
+        let a = parse("train --replication-budget 64k --bare");
+        assert_eq!(a.get_opt_str("replication-budget").as_deref(), Some("64k"));
+        assert_eq!(a.get_opt_str("missing"), None);
+        assert_eq!(a.get_opt_str("bare"), None); // present but valueless
         a.finish().unwrap();
     }
 

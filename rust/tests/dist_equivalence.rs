@@ -1,11 +1,13 @@
 //! Integration: the paper's "mathematically equivalent" claim, pinned to
-//! bit-equality.
+//! bit-equality — across the whole replication-budget spectrum.
 //!
-//! * Distributed **vanilla** sampling (2(L−1) collective rounds) must
-//!   produce exactly the MFGs that single-machine fused sampling produces
-//!   with the same key.
-//! * Distributed **hybrid** sampling must do the same with **zero**
-//!   sampling rounds.
+//! * Distributed sampling at **every** budget point (vanilla, byte
+//!   budgets, hop-bounded halos, full replication) must produce exactly
+//!   the MFGs that single-machine fused sampling produces with the same
+//!   key.
+//! * Sampling rounds are data-dependent and monotone in the budget:
+//!   budget 0 pays the paper's 2(L−1), the complete 1-hop halo clears
+//!   the first exchange, full replication pays zero.
 //! * The partitioned feature store must return exactly the dataset rows,
 //!   with and without a cache.
 
@@ -17,7 +19,7 @@ use fastsample::dist::{
 };
 use fastsample::graph::generator::{make_dataset, DatasetParams};
 use fastsample::graph::{Dataset, NodeId};
-use fastsample::partition::{build_shards, partition_graph, PartitionConfig, Scheme};
+use fastsample::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
 use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{sample_mfgs, KernelKind, SamplerWorkspace};
 
@@ -40,11 +42,39 @@ fn worker_seeds(d: &Dataset, book: &fastsample::partition::PartitionBook, part: 
     d.train_ids.iter().copied().filter(|&v| book.part_of(v) == part).take(n).collect()
 }
 
+/// Run 4 workers sampling one minibatch each under `policy`; assert
+/// bit-equality with the single-machine sampler on every rank and return
+/// the fabric's sampling-round count.
+fn run_policy(d: &Dataset, policy: ReplicationPolicy, fanouts: &[usize], key: RngKey) -> u64 {
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+    let shards = build_shards(d, &book, &policy);
+    let counters = Arc::new(Counters::default());
+    let shards_ref = &shards;
+    let book_ref = &book;
+    let results = run_workers_with(4, NetworkModel::free(), Arc::clone(&counters), {
+        move |rank, comm| {
+            let shard = &shards_ref[rank];
+            let seeds = worker_seeds(d, book_ref, rank, 16);
+            let mut ws = SamplerWorkspace::new();
+            let mfgs = sample_mfgs_distributed(
+                comm, shard, &seeds, fanouts, key, &mut ws, KernelKind::Fused,
+            );
+            (seeds, mfgs)
+        }
+    });
+    let mut ws = SamplerWorkspace::new();
+    for (seeds, mfgs) in &results {
+        let expect = sample_mfgs(&d.graph, seeds, fanouts, key, &mut ws, KernelKind::Fused);
+        assert_eq!(mfgs, &expect, "{policy:?} != single-machine");
+    }
+    counters.snapshot().sampling_rounds()
+}
+
 #[test]
 fn vanilla_distributed_equals_single_machine_fused() {
     let d = dataset();
     let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
-    let shards = build_shards(&d, &book, Scheme::Vanilla);
+    let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
     let fanouts = [4usize, 3, 3];
     let key = RngKey::new(123);
 
@@ -77,7 +107,8 @@ fn vanilla_distributed_equals_single_machine_fused() {
         }
     }
 
-    // Round accounting: L=3 → 2(L−1) = 4 sampling rounds per minibatch.
+    // Round accounting: L=3 → 2(L−1) = 4 sampling rounds per minibatch
+    // (every non-seed level has cross-partition misses on this graph).
     let s = counters.snapshot();
     assert_eq!(s.rounds_of(RoundKind::SampleRequest), 2);
     assert_eq!(s.rounds_of(RoundKind::SampleResponse), 2);
@@ -88,7 +119,7 @@ fn vanilla_distributed_equals_single_machine_fused() {
 fn vanilla_baseline_assembly_matches_fused_assembly() {
     let d = dataset();
     let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(3)));
-    let shards = build_shards(&d, &book, Scheme::Vanilla);
+    let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
     let fanouts = [5usize, 4];
     let key = RngKey::new(9);
     let shards_ref = &shards;
@@ -114,10 +145,10 @@ fn vanilla_baseline_assembly_matches_fused_assembly() {
 }
 
 #[test]
-fn hybrid_needs_zero_sampling_rounds_and_matches_vanilla() {
+fn full_replication_needs_zero_sampling_rounds_and_matches_vanilla() {
     let d = dataset();
     let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
-    let hybrid = build_shards(&d, &book, Scheme::Hybrid);
+    let hybrid = build_shards(&d, &book, &ReplicationPolicy::hybrid());
     let fanouts = [4usize, 3, 3];
     let key = RngKey::new(123);
 
@@ -134,7 +165,7 @@ fn hybrid_needs_zero_sampling_rounds_and_matches_vanilla() {
         }
     });
 
-    // Hybrid sampling is mathematically identical to single-machine.
+    // Full replication is mathematically identical to single-machine.
     let mut ws = SamplerWorkspace::new();
     for (rank, mfgs) in results.iter().enumerate() {
         let seeds = worker_seeds(&d, &book, rank, 16);
@@ -142,17 +173,64 @@ fn hybrid_needs_zero_sampling_rounds_and_matches_vanilla() {
         assert_eq!(mfgs, &expect);
     }
 
-    // The headline: zero sampling communication under hybrid.
+    // The headline: zero sampling communication under full replication.
     let s = counters.snapshot();
     assert_eq!(s.sampling_rounds(), 0);
     assert_eq!(s.total_bytes(), 0);
+}
+
+/// The tentpole acceptance test: sweep the budget spectrum. Every point
+/// is bit-identical to single-machine sampling; rounds fall monotonically
+/// from the vanilla endpoint (2(L−1)) to the hybrid endpoint (0); the
+/// 1-hop halo pays strictly fewer rounds than vanilla at strictly less
+/// adjacency memory than hybrid.
+#[test]
+fn replication_spectrum_is_bit_identical_with_monotone_rounds() {
+    let d = dataset();
+    let fanouts = [4usize, 3, 3]; // L = 3
+    let key = RngKey::new(123);
+    let policies = [
+        ReplicationPolicy::vanilla(),
+        ReplicationPolicy::budgeted(4 * 1024),
+        ReplicationPolicy::halo(1),
+        ReplicationPolicy::hybrid(),
+    ];
+    let rounds: Vec<u64> =
+        policies.iter().map(|&p| run_policy(&d, p, &fanouts, key)).collect();
+
+    // Endpoints are the analytic scheme constants.
+    assert_eq!(rounds[0], 4, "vanilla endpoint: 2(L-1)");
+    assert_eq!(rounds[3], 0, "hybrid endpoint");
+    // Monotone non-increasing along the sweep.
+    for w in rounds.windows(2) {
+        assert!(w[1] <= w[0], "rounds not monotone: {rounds:?}");
+    }
+    // The complete 1-hop halo clears exactly the first exchange of the
+    // minibatch: levels 2..L still pay, level 1 never does.
+    assert_eq!(rounds[2], 2, "1-hop halo should pay 2(L-2) rounds");
+    assert!(rounds[2] < rounds[0], "mid-point must beat vanilla");
+
+    // Memory: the mid-points sit strictly between the endpoints.
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+    let mems: Vec<usize> = policies
+        .iter()
+        .map(|p| {
+            build_shards(&d, &book, p)
+                .iter()
+                .map(|s| s.topology.storage_bytes())
+                .max()
+                .unwrap()
+        })
+        .collect();
+    assert!(mems[0] < mems[1] && mems[1] < mems[3], "budgeted memory out of order: {mems:?}");
+    assert!(mems[0] < mems[2] && mems[2] < mems[3], "halo memory out of order: {mems:?}");
 }
 
 #[test]
 fn feature_store_returns_exact_rows() {
     let d = dataset();
     let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
-    let shards = build_shards(&d, &book, Scheme::Hybrid);
+    let shards = build_shards(&d, &book, &ReplicationPolicy::hybrid());
     let counters = Arc::new(Counters::default());
     let shards_ref = &shards;
     let d_ref = &d;
@@ -190,7 +268,7 @@ fn feature_store_returns_exact_rows() {
 fn feature_cache_cuts_traffic_without_changing_rows() {
     let d = dataset();
     let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
-    let shards = build_shards(&d, &book, Scheme::Hybrid);
+    let shards = build_shards(&d, &book, &ReplicationPolicy::hybrid());
     let shards_ref = &shards;
     let d_ref = &d;
     let results = run_workers_with(4, NetworkModel::free(), Arc::new(Counters::default()), {

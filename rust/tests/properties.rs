@@ -3,10 +3,12 @@
 //! partitioner, JSON parser, collectives, and padding over hundreds of
 //! randomized cases. Failures print a `check_one(seed, case, ..)` repro.
 
-use fastsample::dist::{run_workers, NetworkModel, RoundKind};
-use fastsample::graph::generator::{erdos_renyi, planted_communities, rmat};
+use fastsample::dist::{run_workers, sample_mfgs_distributed, NetworkModel, RoundKind};
+use fastsample::graph::generator::{erdos_renyi, make_dataset, planted_communities, rmat, DatasetParams};
 use fastsample::graph::{CooGraph, CscGraph, NodeId};
-use fastsample::partition::{partition_graph, PartitionBook, PartitionConfig};
+use fastsample::partition::{
+    build_shards, partition_graph, PartitionBook, PartitionConfig, ReplicationPolicy,
+};
 use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{
     sample_level_baseline, sample_level_fused, sample_mfgs, KernelKind, SamplerWorkspace,
@@ -205,6 +207,127 @@ fn prop_ring_allreduce_matches_serial_sum() {
             for (a, b) in r.iter().zip(&expect) {
                 assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
             }
+        }
+    });
+}
+
+/// Random dataset wrapper around [`random_graph`]-style sizes, for shard
+/// building (features/labels are irrelevant to the topology properties
+/// but `build_shards` carries them).
+fn random_dataset(i: usize, s: &mut fastsample::sampling::rng::RngStream) -> fastsample::graph::Dataset {
+    make_dataset(&DatasetParams {
+        name: format!("prop-repl-{i}"),
+        num_nodes: gen::size(s, 40, 160),
+        avg_degree: gen::size(s, 2, 10),
+        feat_dim: 3,
+        num_classes: 3,
+        labeled_frac: 0.4,
+        p_intra: 0.7,
+        noise: 0.4,
+        seed: s.next_u64(),
+    })
+}
+
+#[test]
+fn prop_budgeted_sampling_equals_single_machine() {
+    // The bit-equality invariant at random budget points: same RngKey ⇒
+    // identical MFGs regardless of where adjacency lives.
+    check(108, 20, |i, s| {
+        let d = random_dataset(i, s);
+        let parts = gen::size(s, 1, 3);
+        let book = std::sync::Arc::new(partition_graph(
+            &d.graph,
+            &d.train_ids,
+            &PartitionConfig::new(parts),
+        ));
+        let policy = match s.next_below(4) {
+            0 => ReplicationPolicy::vanilla(),
+            1 => ReplicationPolicy::budgeted(s.next_u64() % 4096),
+            2 => ReplicationPolicy::halo(gen::size(s, 1, 2)),
+            _ => ReplicationPolicy::hybrid(),
+        };
+        let shards = build_shards(&d, &book, &policy);
+        // Every rank needs at least one seed (empty minibatches are not a
+        // sampling contract the single-machine pipeline supports either).
+        if (0..parts).any(|p| !d.train_ids.iter().any(|&v| book.part_of(v) == p)) {
+            return;
+        }
+        let fanouts = [gen::size(s, 1, 4), gen::size(s, 1, 4)];
+        let key = RngKey::new(s.next_u64());
+        let shards_ref = &shards;
+        let d_ref = &d;
+        let book_ref = &book;
+        let results = run_workers(parts, NetworkModel::free(), move |rank, comm| {
+            let seeds: Vec<NodeId> = d_ref
+                .train_ids
+                .iter()
+                .copied()
+                .filter(|&v| book_ref.part_of(v) == rank)
+                .take(8)
+                .collect();
+            let mut ws = SamplerWorkspace::new();
+            let mfgs = sample_mfgs_distributed(
+                comm,
+                &shards_ref[rank],
+                &seeds,
+                &fanouts,
+                key,
+                &mut ws,
+                KernelKind::Fused,
+            );
+            (seeds, mfgs)
+        });
+        let mut ws = SamplerWorkspace::new();
+        for (seeds, mfgs) in &results {
+            let expect = sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
+            assert_eq!(mfgs, &expect, "{policy:?} diverged from single-machine");
+        }
+    });
+}
+
+#[test]
+fn prop_replica_sets_are_nested_and_budget_respecting() {
+    // Prefix semantics: a larger budget replicates a superset; replicated
+    // bytes never exceed the budget; the endpoints degenerate exactly.
+    check(109, 20, |i, s| {
+        let d = random_dataset(i + 3, s);
+        let parts = gen::size(s, 2, 4);
+        let book = std::sync::Arc::new(partition_graph(
+            &d.graph,
+            &d.train_ids,
+            &PartitionConfig::new(parts),
+        ));
+        let mut budgets: Vec<u64> =
+            (0..3).map(|_| s.next_u64() % 8192).collect();
+        budgets.push(0);
+        budgets.sort_unstable();
+        let mut prev: Option<Vec<Vec<bool>>> = None;
+        for &b in &budgets {
+            let shards = build_shards(&d, &book, &ReplicationPolicy::budgeted(b));
+            let cover: Vec<Vec<bool>> = shards
+                .iter()
+                .map(|sh| {
+                    assert!(sh.topology.replicated_bytes() <= b, "budget {b} overspent");
+                    if b == 0 {
+                        assert_eq!(sh.topology.replicated_rows(), 0);
+                    }
+                    (0..d.num_nodes() as NodeId)
+                        .map(|v| sh.topology.try_neighbors(v).is_some())
+                        .collect()
+                })
+                .collect();
+            if let Some(small) = &prev {
+                for (lo, hi) in small.iter().zip(&cover) {
+                    for (vl, vh) in lo.iter().zip(hi) {
+                        assert!(!*vl || *vh, "larger budget dropped a covered node");
+                    }
+                }
+            }
+            prev = Some(cover);
+        }
+        // Full replication covers everything on every worker.
+        for sh in build_shards(&d, &book, &ReplicationPolicy::hybrid()) {
+            assert!(sh.topology.covers_all());
         }
     });
 }

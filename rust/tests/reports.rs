@@ -44,11 +44,26 @@ fn fig5_sampling_reports_speedups_ge_one_mostly() {
 }
 
 #[test]
-fn partition_memory_reports_both_schemes() {
+fn partition_memory_reports_the_spectrum() {
     let t = exp::partition_memory("quickstart", 4, 3).unwrap();
     assert!(t.contains("vanilla"));
     assert!(t.contains("hybrid"));
+    assert!(t.contains("budget:"), "{t}");
+    assert!(t.contains("halo:1"), "{t}");
     assert!(t.contains("edge-cut fraction"));
+}
+
+#[test]
+fn replication_frontier_curve_holds_its_contract() {
+    // The regenerator enforces monotone rounds and the analytic
+    // endpoints internally (ensure! on failure), so a successful run IS
+    // the acceptance check; the text assertions pin the printed summary.
+    let t = exp::replication_frontier("quickstart", 4, 3).unwrap();
+    assert!(t.contains("vanilla"));
+    assert!(t.contains("hybrid"));
+    assert!(t.contains("(analytic 2L+1 = 7)"), "{t}");
+    assert!(t.contains("(analytic 3)"), "{t}");
+    assert!(t.contains("monotone"), "{t}");
 }
 
 #[test]
