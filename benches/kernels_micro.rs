@@ -15,12 +15,14 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use fastsample::dist::{run_workers, NetworkModel, RoundKind};
+use fastsample::dist::{
+    run_workers, sample_mfgs_distributed, CachePolicy, NetworkModel, RoundKind,
+};
 use fastsample::graph::generator::{make_dataset, planted_communities, rmat, DatasetParams};
 use fastsample::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
 use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{
-    sample_level_baseline, sample_level_fused, SamplerWorkspace,
+    sample_level_baseline, sample_level_fused, KernelKind, SamplerWorkspace,
 };
 use fastsample::util::bench::{header, Bencher, Stats};
 use fastsample::util::json::Json;
@@ -163,6 +165,68 @@ fn main() {
             let s = bench.run(&format!("partition/build_shards {}k x8 {tag}", n / 1024), || {
                 build_shards(&d, &book, &policy)
             });
+            println!("{}", s.row());
+            all.push(s);
+        }
+    }
+
+    // ---- Distributed sampling with and without the remote-adjacency
+    // cache (vanilla replication, 4 workers, 4 minibatches per run so
+    // the cached arm actually warms up and later batches sample cached
+    // rows locally — the effect the `cache-decay` report measures).
+    {
+        let n = if quick { 2_048 } else { 16_384 };
+        let d = make_dataset(&DatasetParams {
+            name: "bench-dist-cache".into(),
+            num_nodes: n,
+            avg_degree: 10,
+            feat_dim: 4,
+            num_classes: 4,
+            labeled_frac: 0.2,
+            p_intra: 0.7, // plenty of cross-partition frontier
+            noise: 0.2,
+            seed: 17,
+        });
+        let book = std::sync::Arc::new(partition_graph(
+            &d.graph,
+            &d.train_ids,
+            &PartitionConfig::new(4),
+        ));
+        let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+        let fanouts = [10usize, 5];
+        let key = RngKey::new(23);
+        for (tag, cache_bytes) in [("uncached", 0u64), ("cache=1m", 1 << 20)] {
+            let shards_ref = &shards;
+            let s = bench.run(
+                &format!("dist/sample_mfgs {}k x4 {tag}", n / 1024),
+                || {
+                    run_workers(4, NetworkModel::free(), move |rank, comm| {
+                        let shard = &shards_ref[rank];
+                        let mut view = shard.topology.clone();
+                        if cache_bytes > 0 {
+                            view.enable_cache(cache_bytes, CachePolicy::Clock);
+                        }
+                        let seeds: Vec<u32> =
+                            shard.train_local.iter().copied().take(256).collect();
+                        let mut ws = SamplerWorkspace::new();
+                        let mut edges = 0usize;
+                        for b in 0..4u64 {
+                            let mfgs = sample_mfgs_distributed(
+                                comm,
+                                shard,
+                                &mut view,
+                                &seeds,
+                                &fanouts,
+                                key.fold(b),
+                                &mut ws,
+                                KernelKind::Fused,
+                            );
+                            edges += mfgs.iter().map(|m| m.num_edges()).sum::<usize>();
+                        }
+                        edges
+                    })
+                },
+            );
             println!("{}", s.row());
             all.push(s);
         }

@@ -46,6 +46,23 @@ pub fn parse_budget(spec: &str) -> Result<Option<u64>> {
     Ok(Some(n.saturating_mul(mult)))
 }
 
+/// Parse a remote-adjacency cache budget (`cache:<bytes>` /
+/// `--adj-cache`): same grammar as [`parse_budget`], with
+/// `inf`/`unlimited`/`full` mapping to an effectively unbounded cache.
+pub fn parse_cache_bytes(spec: &str) -> Result<u64> {
+    Ok(parse_budget(spec)?.unwrap_or(u64::MAX >> 1))
+}
+
+/// Resolve a cache eviction policy by name: `clock` (second-chance,
+/// the adaptive default) or `static` (first fill wins, never evict).
+pub fn cache_policy(name: &str) -> Result<crate::dist::CachePolicy> {
+    match name {
+        "clock" => Ok(crate::dist::CachePolicy::Clock),
+        "static" | "static-degree" => Ok(crate::dist::CachePolicy::StaticDegree),
+        other => anyhow::bail!("unknown cache policy {other:?} (clock | static)"),
+    }
+}
+
 /// Resolve a network model by name: `infiniband` (paper fabric),
 /// `ethernet`, `free` (accounting only).
 pub fn network(name: &str) -> Result<NetworkModel> {
@@ -79,6 +96,20 @@ mod tests {
         assert_eq!(parse_budget("1g").unwrap(), Some(1 << 30));
         assert!(parse_budget("lots").is_err());
         assert!(parse_budget("").is_err());
+    }
+
+    #[test]
+    fn cache_specs_parse() {
+        assert_eq!(parse_cache_bytes("0").unwrap(), 0);
+        assert_eq!(parse_cache_bytes("32k").unwrap(), 32 << 10);
+        assert_eq!(parse_cache_bytes("inf").unwrap(), u64::MAX >> 1);
+        assert!(parse_cache_bytes("lots").is_err());
+        assert_eq!(cache_policy("clock").unwrap(), crate::dist::CachePolicy::Clock);
+        assert_eq!(
+            cache_policy("static").unwrap(),
+            crate::dist::CachePolicy::StaticDegree
+        );
+        assert!(cache_policy("lru").is_err());
     }
 
     #[test]

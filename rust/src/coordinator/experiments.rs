@@ -223,6 +223,7 @@ pub fn replication_frontier(spec: &str, workers: usize, seed: u64) -> Result<Str
             Arc::clone(&counters),
             move |rank, comm| {
                 let shard = &shards_ref[rank];
+                let mut view = shard.topology.clone();
                 let schedule = MinibatchSchedule::new(&shard.train_local, batch, key);
                 let nb = comm.all_reduce_min_u64(schedule.num_batches() as u64).min(max_batches);
                 let mut ws = SamplerWorkspace::new();
@@ -232,6 +233,7 @@ pub fn replication_frontier(spec: &str, workers: usize, seed: u64) -> Result<Str
                     let mfgs = sample_mfgs_distributed(
                         comm,
                         shard,
+                        &mut view,
                         seeds,
                         &fanouts,
                         key.fold(bi + 1),
@@ -304,6 +306,169 @@ pub fn replication_frontier(spec: &str, workers: usize, seed: u64) -> Result<Str
         2 * levels + 1,
         last.2
     ));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Cache decay — per-epoch SampleRequest traffic under the adjacency cache.
+// ---------------------------------------------------------------------------
+
+/// The adjacency cache's acceptance experiment: train several epochs of
+/// pure sampling structure (no AOT artifacts) over **identical per-epoch
+/// seed schedules and sampling keys** — deliberately, so the only thing
+/// that changes between epochs is the cache state — and measure the
+/// per-epoch `SampleRequest` bytes/rounds per arm.
+///
+/// The regenerator enforces the decay contract internally (`ensure!`),
+/// so a successful run IS the acceptance check:
+/// * cache off ⇒ every epoch pays identical request bytes;
+/// * cache on ⇒ the per-epoch request-byte curve is **non-increasing**.
+///   This holds for every *non-evicting* configuration — bounded
+///   `StaticDegree` or any unbounded cache — because such a cache only
+///   ever grows the set of locally answerable rows. (A byte-tight
+///   `Clock` cache may legitimately churn and regress between epochs,
+///   which is why no bounded-Clock arm belongs in this sweep.)
+/// * an effectively unbounded cache ⇒ epochs after the first pay **zero**
+///   sampling rounds and bytes — the whole miss set went resident, and
+///   the round-skip vote clears every exchange.
+pub fn cache_decay(spec: &str, workers: usize, seed: u64) -> Result<String> {
+    use crate::dist::{run_workers_with, sample_mfgs_distributed, CommStats, Counters};
+    use crate::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
+    use std::sync::Arc;
+
+    let d = config::dataset(spec, seed)?;
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(workers)));
+    // Vanilla replication: every cross-partition frontier node is a miss,
+    // the regime where the cache has the most to absorb.
+    let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+    let fanouts = [4usize, 3, 3]; // L = 3, the paper's depth
+    let batch = 32usize;
+    let epochs = 4usize;
+    let max_batches = 4u64;
+    let key = RngKey::new(seed).fold(0xCAC4E);
+
+    let unbounded = u64::MAX >> 1;
+    // Every cached arm is non-evicting (bounded static or unbounded), the
+    // regime where the non-increasing ensure below is a theorem; a
+    // bounded Clock arm could churn and legitimately trip it.
+    let arms: [(&str, u64, CachePolicy); 4] = [
+        ("cache:0 (off)", 0, CachePolicy::StaticDegree),
+        ("cache:2k static", 2 << 10, CachePolicy::StaticDegree),
+        ("cache:inf static", unbounded, CachePolicy::StaticDegree),
+        ("cache:inf clock", unbounded, CachePolicy::Clock),
+    ];
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Cache decay: {} over {workers} workers, vanilla replication, L={}, batch {batch}, \
+         {epochs} epochs of identical seeds/keys\n\n{:<18} {:>7} {}\n",
+        d.name,
+        fanouts.len(),
+        "arm",
+        "epoch",
+        "SampleRequest bytes (rounds)"
+    ));
+
+    for (label, cache_bytes, cache_policy) in arms {
+        let counters = Arc::new(Counters::default());
+        let shards_ref = &shards;
+        let per_rank: Vec<(u64, Vec<CommStats>)> = run_workers_with(
+            workers,
+            NetworkModel::free(),
+            Arc::clone(&counters),
+            move |rank, comm| {
+                let shard = &shards_ref[rank];
+                let mut view = shard.topology.clone();
+                if cache_bytes > 0 {
+                    view.enable_cache(cache_bytes, cache_policy);
+                }
+                // One schedule, reused verbatim every epoch (no epoch key
+                // fold): the workload repeats, only the cache state moves.
+                let schedule = MinibatchSchedule::new(&shard.train_local, batch, key);
+                let nb =
+                    comm.all_reduce_min_u64(schedule.num_batches() as u64).min(max_batches);
+                let mut ws = SamplerWorkspace::new();
+                // Barrier-fenced epoch marks (see `Comm::fenced_snapshot`)
+                // so the fabric-global counters slice into exact
+                // per-epoch deltas.
+                let mut marks = Vec::with_capacity(epochs + 1);
+                for _epoch in 0..epochs {
+                    marks.push(comm.fenced_snapshot());
+                    for bi in 0..nb {
+                        let seeds = schedule.batch(bi as usize);
+                        let mfgs = sample_mfgs_distributed(
+                            comm,
+                            shard,
+                            &mut view,
+                            seeds,
+                            &fanouts,
+                            key.fold(bi + 1),
+                            &mut ws,
+                            KernelKind::Fused,
+                        );
+                        std::hint::black_box(mfgs.len());
+                    }
+                }
+                marks.push(comm.fenced_snapshot());
+                let deltas: Vec<CommStats> =
+                    marks.windows(2).map(|w| w[1].diff(&w[0])).collect();
+                (nb, deltas)
+            },
+        );
+        let (nb, deltas) = &per_rank[0];
+        ensure!(
+            *nb > 0,
+            "dataset {spec:?} too small for batch {batch} over {workers} workers"
+        );
+        let curve: Vec<(u64, u64)> = deltas
+            .iter()
+            .map(|s| (s.bytes_of(RoundKind::SampleRequest), s.rounds_of(RoundKind::SampleRequest)))
+            .collect();
+        for (e, &(bytes, rounds)) in curve.iter().enumerate() {
+            out.push_str(&format!(
+                "{:<18} {:>7} {:>16} ({rounds})\n",
+                if e == 0 { label } else { "" },
+                e,
+                bytes
+            ));
+        }
+
+        // The decay contract.
+        if cache_bytes == 0 {
+            ensure!(curve[0].0 > 0, "no cross-partition misses — workload too easy to measure");
+            for w in curve.windows(2) {
+                ensure!(
+                    w[1].0 == w[0].0,
+                    "{label}: identical epochs paid different request bytes ({} -> {})",
+                    w[0].0,
+                    w[1].0
+                );
+            }
+        } else {
+            for w in curve.windows(2) {
+                ensure!(
+                    w[1].0 <= w[0].0,
+                    "{label}: request-byte curve not non-increasing ({} -> {})",
+                    w[0].0,
+                    w[1].0
+                );
+            }
+        }
+        if cache_bytes == unbounded {
+            ensure!(
+                curve[1..].iter().all(|&(b, r)| b == 0 && r == 0),
+                "{label}: unbounded cache should clear every exchange after epoch 0 ({curve:?})"
+            );
+            ensure!(
+                curve[0].0 > 0,
+                "{label}: epoch 0 must pay the cold misses ({curve:?})"
+            );
+        }
+    }
+    out.push_str(
+        "\ncontract held: cache off ⇒ flat curve; cache on ⇒ non-increasing request bytes; \
+         unbounded cache ⇒ zero sampling traffic after epoch 0\n",
+    );
     Ok(out)
 }
 

@@ -1,0 +1,430 @@
+//! Generic per-worker cache machinery shared by the remote-*feature*
+//! cache ([`super::feature_cache::FeatureCache`]) and the remote-
+//! *adjacency* overlay ([`crate::partition::TopologyView`]).
+//!
+//! One slab, two row shapes: fixed-width rows (feature vectors — every
+//! row is `feat_dim` cells) and variable-width rows (adjacency lists —
+//! one cell per in-edge). Both are byte-budgeted: a row of `len` cells
+//! is charged `row_overhead + len * size_of::<V>()` bytes, so the
+//! adjacency cache uses exactly the same `8 + 4·deg` accounting as the
+//! static halo in `partition::shard`, and a `cache:<bytes>` knob and a
+//! `budget:<bytes>` knob spend the same currency.
+//!
+//! Two policies (the A1 ablation axis, now shared by both caches):
+//! * [`CachePolicy::StaticDegree`] — first fill wins, nothing is ever
+//!   evicted: the classic degree-static cache of GNS/BGL-style systems.
+//!   Runtime inserts are accepted only while budget remains.
+//! * [`CachePolicy::Clock`] — second-chance (CLOCK) eviction, an LRU
+//!   approximation with O(1) metadata per row.
+//!
+//! Lookups ([`SlabCache::get`]) take `&self` and mark the reference bit
+//! atomically, so a read-only view of the cache can be shared across the
+//! sampler's parallel per-seed loop; all mutation (insert/evict) is
+//! `&mut self` and happens in the sequential decode phase.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::graph::NodeId;
+
+/// Eviction policy selector, shared by the feature and adjacency caches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Static contents: first fill wins, nothing is ever evicted.
+    StaticDegree,
+    /// CLOCK / second-chance approximation of LRU.
+    Clock,
+}
+
+/// One resident (or dead, reusable) row of the slab.
+struct Slot {
+    node: NodeId,
+    off: usize,
+    len: usize,
+    /// CLOCK reference bit (set on hit, cleared as the hand sweeps);
+    /// atomic so `get` can mark hits through a shared reference.
+    referenced: AtomicBool,
+    live: bool,
+}
+
+impl Clone for Slot {
+    fn clone(&self) -> Self {
+        Slot {
+            node: self.node,
+            off: self.off,
+            len: self.len,
+            referenced: AtomicBool::new(self.referenced.load(Ordering::Relaxed)),
+            live: self.live,
+        }
+    }
+}
+
+/// Byte-budgeted cache of rows keyed by global node id, backed by one
+/// contiguous slab of `V` cells. Fixed-width clients insert equal-length
+/// rows (evictions then free exactly one slot's worth of space, and the
+/// freed extent is reused in place); variable-width clients may insert
+/// any length, with dead extents reclaimed by an amortized compaction.
+pub struct SlabCache<V> {
+    policy: CachePolicy,
+    capacity_bytes: u64,
+    /// Charged per row on top of the payload cells (0 for fixed-width
+    /// feature rows, 8 for adjacency rows — matching the halo's
+    /// row-pointer accounting).
+    row_overhead: u64,
+    used_bytes: u64,
+    data: Vec<V>,
+    slots: Vec<Slot>,
+    /// Dead slot indices whose extents may be reused by a same-length row.
+    free: Vec<u32>,
+    dead_cells: usize,
+    index: HashMap<NodeId, u32>,
+    hand: usize,
+}
+
+impl<V: Copy> SlabCache<V> {
+    pub fn new(policy: CachePolicy, capacity_bytes: u64, row_overhead: u64) -> Self {
+        Self {
+            policy,
+            capacity_bytes,
+            row_overhead,
+            used_bytes: 0,
+            data: Vec::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            dead_cells: 0,
+            index: HashMap::new(),
+            hand: 0,
+        }
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Bytes currently charged to resident rows.
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    /// Number of resident rows.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Is `v` resident? (Does not touch the reference bit.)
+    pub fn contains(&self, v: NodeId) -> bool {
+        self.index.contains_key(&v)
+    }
+
+    /// Bytes a row of `len` cells is charged against the budget.
+    #[inline]
+    fn charge(&self, len: usize) -> u64 {
+        self.row_overhead + (len * std::mem::size_of::<V>()) as u64
+    }
+
+    /// The longest row worth admitting right now, in cells — `None`
+    /// when nothing (not even an empty row) fits. Derived from the
+    /// *remaining* budget under `StaticDegree` (no eviction will make
+    /// room); under `Clock`, eviction can always make room, but a row
+    /// is only worth it up to a **quarter** of the total budget — wider
+    /// rows would churn most of the resident (hit-bearing) set for one
+    /// entry, and a byte-tight cache facing rows wider than that would
+    /// thrash at a ~0% hit rate while still paying to ship every row.
+    /// This is what the distributed sampler turns into its wire-level
+    /// admission threshold; [`Self::insert`] itself accepts anything
+    /// that fits the whole budget.
+    pub fn admissible_len(&self) -> Option<usize> {
+        let budget = match self.policy {
+            CachePolicy::StaticDegree => self.capacity_bytes - self.used_bytes,
+            CachePolicy::Clock => self.capacity_bytes / 4,
+        };
+        if budget < self.row_overhead {
+            return None;
+        }
+        Some(((budget - self.row_overhead) / std::mem::size_of::<V>().max(1) as u64) as usize)
+    }
+
+    /// The cached row for `v`, marking it recently used. Empty rows are
+    /// valid residents (`Some(&[])` — e.g. a degree-0 adjacency list).
+    pub fn get(&self, v: NodeId) -> Option<&[V]> {
+        let slot = &self.slots[*self.index.get(&v)? as usize];
+        slot.referenced.store(true, Ordering::Relaxed);
+        Some(&self.data[slot.off..slot.off + slot.len])
+    }
+
+    /// Offer a row to the cache; returns whether it is resident after the
+    /// call. While the budget has room every row is admitted; at budget,
+    /// `StaticDegree` rejects (static contents) and `Clock` evicts
+    /// second-chance victims until the row fits. Rows wider than the
+    /// whole budget are always rejected. Re-inserting a resident key of
+    /// the same width refreshes it in place.
+    pub fn insert(&mut self, v: NodeId, row: &[V]) -> bool {
+        let charge = self.charge(row.len());
+        if charge > self.capacity_bytes {
+            return false;
+        }
+        if let Some(&s) = self.index.get(&v) {
+            let s = s as usize;
+            if self.slots[s].len == row.len() {
+                let off = self.slots[s].off;
+                self.data[off..off + row.len()].copy_from_slice(row);
+                self.slots[s].referenced.store(true, Ordering::Relaxed);
+                return true;
+            }
+            // Width changed (not a workload either client produces, but
+            // stay correct): drop the stale row and fall through.
+            self.evict_slot(s);
+        }
+        match self.policy {
+            CachePolicy::StaticDegree => {
+                if self.used_bytes + charge > self.capacity_bytes {
+                    return false;
+                }
+            }
+            CachePolicy::Clock => {
+                while self.used_bytes + charge > self.capacity_bytes {
+                    if !self.evict_victim() {
+                        return false; // unreachable: empty cache fits any charge <= capacity
+                    }
+                }
+            }
+        }
+        // Place the row. Dead slot *metadata* is always recycled so
+        // `slots` stays bounded by the peak resident count: an extent of
+        // exactly this width is rewritten in place (always the case for
+        // fixed-width clients — the slot evicted just above is the last
+        // free entry, which is why probing only the back of the free
+        // list suffices and keeps inserts O(1) even when evictions have
+        // piled up many dead slots); any other dead slot is given a
+        // fresh tail extent (its old cells stay in `dead_cells` until
+        // compaction). Only an empty free list grows the slot table.
+        let probe = self.free.len().saturating_sub(8);
+        let slot = match self.free[probe..]
+            .iter()
+            .rposition(|&s| self.slots[s as usize].len == row.len())
+            .map(|rel| probe + rel)
+        {
+            Some(fpos) => {
+                let s = self.free.swap_remove(fpos) as usize;
+                let off = self.slots[s].off;
+                self.data[off..off + row.len()].copy_from_slice(row);
+                self.dead_cells -= row.len();
+                self.slots[s] = Slot {
+                    node: v,
+                    off,
+                    len: row.len(),
+                    referenced: AtomicBool::new(true),
+                    live: true,
+                };
+                s
+            }
+            None => {
+                let off = self.data.len();
+                self.data.extend_from_slice(row);
+                let fresh = Slot {
+                    node: v,
+                    off,
+                    len: row.len(),
+                    referenced: AtomicBool::new(true),
+                    live: true,
+                };
+                match self.free.pop() {
+                    Some(s) => {
+                        self.slots[s as usize] = fresh;
+                        s as usize
+                    }
+                    None => {
+                        self.slots.push(fresh);
+                        self.slots.len() - 1
+                    }
+                }
+            }
+        };
+        self.index.insert(v, slot as u32);
+        self.used_bytes += charge;
+        self.maybe_compact();
+        true
+    }
+
+    /// CLOCK sweep: clear reference bits until an unreferenced live slot
+    /// is found, then evict it. False iff the cache is empty.
+    fn evict_victim(&mut self) -> bool {
+        if self.index.is_empty() {
+            return false;
+        }
+        loop {
+            let s = self.hand;
+            self.hand = (self.hand + 1) % self.slots.len();
+            if !self.slots[s].live {
+                continue;
+            }
+            if self.slots[s].referenced.swap(false, Ordering::Relaxed) {
+                continue; // second chance
+            }
+            self.evict_slot(s);
+            return true;
+        }
+    }
+
+    fn evict_slot(&mut self, s: usize) {
+        debug_assert!(self.slots[s].live);
+        self.index.remove(&self.slots[s].node);
+        self.used_bytes -= self.charge(self.slots[s].len);
+        self.dead_cells += self.slots[s].len;
+        self.slots[s].live = false;
+        self.free.push(s as u32);
+    }
+
+    /// Reclaim dead extents once they dominate the slab (amortized O(1)
+    /// per insert). Slot indices — and therefore the clock hand — stay
+    /// stable; only offsets move.
+    fn maybe_compact(&mut self) {
+        if self.dead_cells <= 256 || self.dead_cells * 2 <= self.data.len() {
+            return;
+        }
+        let mut packed: Vec<V> = Vec::with_capacity(self.data.len() - self.dead_cells);
+        for slot in self.slots.iter_mut() {
+            if slot.live {
+                let off = packed.len();
+                packed.extend_from_slice(&self.data[slot.off..slot.off + slot.len]);
+                slot.off = off;
+            } else {
+                slot.off = 0;
+                slot.len = 0;
+            }
+        }
+        self.data = packed;
+        // Dead slots keep their (now zero-length) entries on the free
+        // list: their metadata is still recycled by `insert`, which keeps
+        // the slot table bounded by the peak resident count.
+        self.dead_cells = 0;
+    }
+}
+
+impl<V: Copy> Clone for SlabCache<V> {
+    fn clone(&self) -> Self {
+        Self {
+            policy: self.policy,
+            capacity_bytes: self.capacity_bytes,
+            row_overhead: self.row_overhead,
+            used_bytes: self.used_bytes,
+            data: self.data.clone(),
+            slots: self.slots.clone(),
+            free: self.free.clone(),
+            dead_cells: self.dead_cells,
+            index: self.index.clone(),
+            hand: self.hand,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adj_cache(policy: CachePolicy, capacity: u64) -> SlabCache<NodeId> {
+        SlabCache::new(policy, capacity, 8)
+    }
+
+    #[test]
+    fn variable_width_rows_round_trip() {
+        let mut c = adj_cache(CachePolicy::Clock, 1 << 16);
+        c.insert(1, &[10, 11, 12]);
+        c.insert(2, &[]);
+        c.insert(3, &[7; 40]);
+        assert_eq!(c.get(1).unwrap(), &[10, 11, 12][..]);
+        assert_eq!(c.get(2).unwrap(), &[] as &[NodeId]);
+        assert_eq!(c.get(3).unwrap(), &[7; 40][..]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.used_bytes(), 3 * 8 + (3 + 40) * 4);
+    }
+
+    #[test]
+    fn rows_wider_than_the_budget_are_rejected() {
+        let mut c = adj_cache(CachePolicy::Clock, 8 + 4 * 4);
+        assert!(!c.insert(1, &[0; 5]));
+        assert!(c.insert(2, &[0; 4]));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn static_degree_admits_while_budget_remains_then_pins() {
+        let mut c = adj_cache(CachePolicy::StaticDegree, 2 * (8 + 4 * 2));
+        assert!(c.insert(1, &[5, 6]));
+        assert!(c.insert(2, &[7, 8]));
+        assert!(!c.insert(3, &[9, 10]), "over budget must be rejected");
+        assert!(c.contains(1) && c.contains(2) && !c.contains(3));
+        // Admission threshold reflects the *remaining* budget.
+        assert_eq!(c.admissible_len(), None);
+    }
+
+    #[test]
+    fn clock_evicts_to_fit_variable_rows() {
+        let mut c = adj_cache(CachePolicy::Clock, 2 * (8 + 4 * 2));
+        c.insert(1, &[5, 6]);
+        c.insert(2, &[7, 8]);
+        // A 4-cell row needs both resident rows' space.
+        assert!(c.insert(3, &[1, 2, 3, 4]));
+        assert!(c.contains(3));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(3).unwrap(), &[1, 2, 3, 4][..]);
+        // Clock's wire threshold is a quarter of the total budget:
+        // eviction can make room, but churning most of the resident set
+        // for one wide row is never worth shipping it.
+        assert_eq!(c.admissible_len(), Some(0), "32B budget / 4 = 8B fits only empty rows");
+        let wide = adj_cache(CachePolicy::Clock, 4 * (8 + 4 * 10));
+        assert_eq!(wide.admissible_len(), Some(10), "a quarter of the budget, minus overhead");
+    }
+
+    #[test]
+    fn compaction_preserves_resident_rows() {
+        // Thrash a small clock cache with distinct-width rows so dead
+        // extents accumulate past the compaction threshold.
+        let mut c = adj_cache(CachePolicy::Clock, 8 + 4 * 600);
+        for round in 0..50u32 {
+            let len = 400 + (round as usize % 7);
+            let row: Vec<NodeId> = (0..len as NodeId).map(|j| j + round).collect();
+            assert!(c.insert(round, &row));
+            assert_eq!(c.get(round).unwrap(), &row[..], "round {round}");
+        }
+        assert!(c.len() == 1, "cache fits only one wide row at a time");
+        assert!(c.data.len() < 600 * 4, "dead extents never reclaimed");
+        // Dead slot metadata is recycled, so the slot table stays bounded
+        // by the peak resident count (+1 transient), not the insert count.
+        assert!(c.slots.len() <= 2, "slot table leaked: {}", c.slots.len());
+    }
+
+    #[test]
+    fn get_through_shared_reference_marks_hits() {
+        let mut c = adj_cache(CachePolicy::Clock, 3 * (8 + 4));
+        c.insert(1, &[10]);
+        c.insert(2, &[20]);
+        c.insert(3, &[30]);
+        // Full sweep (all referenced) degenerates to FIFO: 1 is evicted.
+        c.insert(4, &[40]);
+        assert!(!c.contains(1));
+        // Shared-ref hit on 2 gives it a second chance; 3 goes next.
+        let shared: &SlabCache<NodeId> = &c;
+        assert_eq!(shared.get(2).unwrap(), &[20][..]);
+        c.insert(5, &[50]);
+        assert!(c.contains(2) && !c.contains(3));
+        assert!(c.contains(4) && c.contains(5));
+    }
+
+    #[test]
+    fn clone_preserves_contents() {
+        let mut c = adj_cache(CachePolicy::StaticDegree, 1 << 12);
+        c.insert(9, &[1, 2, 3]);
+        let d = c.clone();
+        assert_eq!(d.get(9).unwrap(), &[1, 2, 3][..]);
+        assert_eq!(d.used_bytes(), c.used_bytes());
+    }
+}

@@ -282,6 +282,21 @@ impl Comm {
         m
     }
 
+    /// Barrier-fenced snapshot of the shared counters: every rank gets
+    /// the **same** [`CommStats`], taken after all ranks' prior traffic
+    /// is recorded (first barrier) and before any rank can charge new
+    /// bytes (second barrier). This is the only race-free way to slice
+    /// the fabric-global counters into per-epoch deltas — a bare
+    /// `barrier(); snapshot()` lets a fast rank charge the next epoch's
+    /// first bytes before a slow rank has marked the boundary.
+    /// Collective, control-plane only (uncharged).
+    pub fn fenced_snapshot(&mut self) -> CommStats {
+        self.barrier();
+        let s = self.counters.snapshot();
+        self.barrier();
+        s
+    }
+
     /// Round-skip vote: true iff `v == 0` on **every** rank. One
     /// uncharged control-plane min-reduce of the zero indicator — the
     /// protocol `dist::sampling` uses to skip a SampleRequest/Response
@@ -433,6 +448,23 @@ mod tests {
         let s = counters.snapshot();
         assert_eq!(s.total_rounds(), 0);
         assert_eq!(s.total_bytes(), 0);
+    }
+
+    #[test]
+    fn fenced_snapshot_is_identical_on_every_rank() {
+        let counters = Arc::new(Counters::default());
+        let snaps = run_workers_with(3, NetworkModel::free(), Arc::clone(&counters), |rank, comm| {
+            // Rank-skewed traffic before the fence; the fence must still
+            // hand every rank one consistent cut of the counters.
+            let outboxes: Vec<Vec<u8>> = (0..3).map(|_| vec![7u8; rank + 1]).collect();
+            comm.exchange(RoundKind::GradSync, outboxes);
+            comm.fenced_snapshot()
+        });
+        assert_eq!(snaps[0], snaps[1]);
+        assert_eq!(snaps[1], snaps[2]);
+        assert_eq!(snaps[0].rounds_of(RoundKind::GradSync), 1);
+        // (1+2+3) payload bytes x 2 off-rank peers per rank.
+        assert_eq!(snaps[0].bytes_of(RoundKind::GradSync), (1 + 2 + 3) * 2);
     }
 
     #[test]

@@ -7,7 +7,13 @@
 //! [`super::comm::RoundKind::FeatureResponse`] traffic without changing a
 //! single returned row (training stays bit-identical — rows are copies).
 //!
-//! Two policies:
+//! The slab + CLOCK machinery lives in the generic [`super::cache`]
+//! subsystem (shared with the remote-adjacency overlay in
+//! [`crate::partition::TopologyView`]); this module is the fixed-width
+//! typed wrapper: capacity is counted in rows of `feat_dim` f32 cells,
+//! with no per-row overhead, so N rows of budget hold exactly N rows.
+//!
+//! Two policies (see [`CachePolicy`]):
 //! * [`CachePolicy::StaticDegree`] — fill once (warm-up with
 //!   [`hottest_remote_nodes`]), never evict: the classic degree-static
 //!   cache of GNS/BGL-style systems. Runtime inserts are accepted only
@@ -15,78 +21,51 @@
 //! * [`CachePolicy::Clock`] — second-chance (CLOCK) eviction, an LRU
 //!   approximation with O(1) metadata per row.
 
-use std::collections::HashMap;
-
 use crate::graph::NodeId;
 
-/// Eviction policy selector (the A1 ablation axis).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum CachePolicy {
-    /// Static contents: first fill wins, nothing is ever evicted.
-    StaticDegree,
-    /// CLOCK / second-chance approximation of LRU.
-    Clock,
-}
+use super::cache::SlabCache;
+pub use super::cache::CachePolicy;
 
 /// Fixed-capacity cache of feature rows, keyed by global node id.
 pub struct FeatureCache {
-    policy: CachePolicy,
+    inner: SlabCache<f32>,
     capacity: usize,
     feat_dim: usize,
-    /// Row-major slab, `len == len() * feat_dim`.
-    rows: Vec<f32>,
-    /// Slot → node id.
-    node_of: Vec<NodeId>,
-    /// CLOCK reference bits (set on hit, cleared as the hand sweeps).
-    referenced: Vec<bool>,
-    /// Node id → slot.
-    index: HashMap<NodeId, u32>,
-    hand: usize,
 }
 
 impl FeatureCache {
     pub fn new(policy: CachePolicy, capacity: usize, feat_dim: usize) -> Self {
         assert!(feat_dim > 0, "feat_dim must be positive");
-        Self {
-            policy,
-            capacity,
-            feat_dim,
-            rows: Vec::new(),
-            node_of: Vec::new(),
-            referenced: Vec::new(),
-            index: HashMap::with_capacity(capacity),
-            hand: 0,
-        }
+        let bytes = (capacity * feat_dim * std::mem::size_of::<f32>()) as u64;
+        Self { inner: SlabCache::new(policy, bytes, 0), capacity, feat_dim }
     }
 
     pub fn policy(&self) -> CachePolicy {
-        self.policy
+        self.inner.policy()
     }
 
+    /// Capacity in rows.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
     /// Number of resident rows.
     pub fn len(&self) -> usize {
-        self.node_of.len()
+        self.inner.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.node_of.is_empty()
+        self.inner.is_empty()
     }
 
     /// Is `v` resident? (Does not touch the reference bit.)
     pub fn contains(&self, v: NodeId) -> bool {
-        self.index.contains_key(&v)
+        self.inner.contains(v)
     }
 
     /// The cached row for `v`, marking it recently used.
     pub fn get(&mut self, v: NodeId) -> Option<&[f32]> {
-        let slot = *self.index.get(&v)? as usize;
-        self.referenced[slot] = true;
-        let f = self.feat_dim;
-        Some(&self.rows[slot * f..(slot + 1) * f])
+        self.inner.get(v)
     }
 
     /// Offer a row to the cache. Below capacity it is always admitted;
@@ -94,50 +73,17 @@ impl FeatureCache {
     /// evicts the first unreferenced row past the hand.
     pub fn insert(&mut self, v: NodeId, row: &[f32]) {
         assert_eq!(row.len(), self.feat_dim, "row width != feat_dim");
-        if self.capacity == 0 {
-            return;
-        }
-        let f = self.feat_dim;
-        if let Some(&slot) = self.index.get(&v) {
-            // Refresh (rows are immutable in this workload, but stay exact).
-            let slot = slot as usize;
-            self.rows[slot * f..(slot + 1) * f].copy_from_slice(row);
-            self.referenced[slot] = true;
-            return;
-        }
-        if self.node_of.len() < self.capacity {
-            let slot = self.node_of.len();
-            self.node_of.push(v);
-            self.referenced.push(true);
-            self.rows.extend_from_slice(row);
-            self.index.insert(v, slot as u32);
-            return;
-        }
-        if self.policy == CachePolicy::StaticDegree {
-            return;
-        }
-        // CLOCK sweep: give referenced rows a second chance.
-        let slot = loop {
-            let s = self.hand;
-            self.hand = (self.hand + 1) % self.capacity;
-            if self.referenced[s] {
-                self.referenced[s] = false;
-            } else {
-                break s;
-            }
-        };
-        self.index.remove(&self.node_of[slot]);
-        self.node_of[slot] = v;
-        self.referenced[slot] = true;
-        self.rows[slot * f..(slot + 1) * f].copy_from_slice(row);
-        self.index.insert(v, slot as u32);
+        self.inner.insert(v, row);
     }
 }
 
 /// Warm-up set for `StaticDegree`: the `k` highest in-degree nodes this
 /// worker does *not* own — the rows most likely to be fetched every
 /// minibatch. Ties break toward lower node id so every run (and every
-/// worker pair) computes the same set.
+/// worker pair) computes the same set. Selection is O(n) + O(k log k):
+/// a partition around the k-th candidate, then a sort of the k-prefix
+/// only (the degree-then-id order is total, so the selected set — and
+/// with it every warm-up set — is deterministic).
 pub fn hottest_remote_nodes(
     degree: impl Fn(NodeId) -> usize,
     num_nodes: usize,
@@ -148,8 +94,12 @@ pub fn hottest_remote_nodes(
         .filter(|&v| !owns(v))
         .map(|v| (degree(v), v))
         .collect();
-    cand.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
-    cand.truncate(k);
+    let hotter = |a: &(usize, NodeId), b: &(usize, NodeId)| b.0.cmp(&a.0).then(a.1.cmp(&b.1));
+    if k < cand.len() {
+        cand.select_nth_unstable_by(k, hotter);
+        cand.truncate(k);
+    }
+    cand.sort_unstable_by(hotter);
     cand.into_iter().map(|(_, v)| v).collect()
 }
 
@@ -246,5 +196,24 @@ mod tests {
         assert_eq!(all.len(), 6);
         assert_eq!(all[0], 1); // degree 9, lower id wins the tie with 2
         assert_eq!(all[1], 2);
+    }
+
+    #[test]
+    fn topk_selection_matches_full_sort_on_larger_inputs() {
+        // The select-then-sort path must agree with the old full-sort
+        // implementation for every k (deterministic tie-breaks included).
+        let n = 500usize;
+        let deg = |v: NodeId| (v as usize * 7919) % 23; // many degree ties
+        let owns = |v: NodeId| v % 5 == 0;
+        let mut full: Vec<(usize, NodeId)> = (0..n as NodeId)
+            .filter(|&v| !owns(v))
+            .map(|v| (deg(v), v))
+            .collect();
+        full.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        for k in [0usize, 1, 7, 100, 399, 400, 1000] {
+            let got = hottest_remote_nodes(deg, n, owns, k);
+            let want: Vec<NodeId> = full.iter().take(k).map(|&(_, v)| v).collect();
+            assert_eq!(got, want, "k={k}");
+        }
     }
 }

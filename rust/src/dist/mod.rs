@@ -15,18 +15,22 @@
 //!   rendezvous-connected worker threads, collect per-rank results.
 //! * [`sampling`] — [`sample_mfgs_distributed`]: one unified sampler
 //!   over the replication-budget spectrum — frontier nodes with
-//!   materialized adjacency (local rows + budgeted halo) sample locally,
-//!   only the misses cost a request/response pair, and a control-plane
-//!   vote ([`Comm::all_zero_u64`]) skips the pair when no rank misses.
-//!   Rounds per minibatch are measured in `0..=2(L−1)` (budget 0 ⇒ the
-//!   paper's vanilla counts, full replication ⇒ hybrid's zero), bit-equal
-//!   to the single-machine pipeline at every budget.
+//!   materialized adjacency (local rows + budgeted halo + cached rows)
+//!   sample locally, only the misses cost a request/response pair, and a
+//!   control-plane vote ([`Comm::all_zero_u64`]) skips the pair when no
+//!   rank misses. Rounds per minibatch are measured in `0..=2(L−1)`
+//!   (budget 0 ⇒ the paper's vanilla counts, full replication ⇒ hybrid's
+//!   zero), bit-equal to the single-machine pipeline at every budget.
+//! * [`cache`] — [`SlabCache`]: the generic byte-budgeted slab
+//!   (fixed- and variable-width rows) under [`CachePolicy::StaticDegree`]
+//!   or [`CachePolicy::Clock`], shared by the feature cache and the
+//!   remote-adjacency overlay in [`crate::partition::TopologyView`].
 //! * [`feature_store`] — [`fetch_features`]/[`prefill_cache`]: the two
 //!   fixed feature rounds over the partitioned store.
-//! * [`feature_cache`] — [`FeatureCache`] under
-//!   [`CachePolicy::StaticDegree`] or [`CachePolicy::Clock`], plus the
-//!   [`hottest_remote_nodes`] warm-up heuristic.
+//! * [`feature_cache`] — [`FeatureCache`], the fixed-width typed wrapper
+//!   over the slab, plus the [`hottest_remote_nodes`] warm-up heuristic.
 
+pub mod cache;
 pub mod comm;
 pub mod feature_cache;
 pub mod feature_store;
@@ -34,8 +38,9 @@ pub mod net;
 pub mod sampling;
 pub mod worker;
 
+pub use cache::{CachePolicy, SlabCache};
 pub use comm::{Comm, CommStats, Counters, RoundKind};
-pub use feature_cache::{hottest_remote_nodes, CachePolicy, FeatureCache};
+pub use feature_cache::{hottest_remote_nodes, FeatureCache};
 pub use feature_store::{fetch_features, prefill_cache, FetchStats};
 pub use net::NetworkModel;
 pub use sampling::sample_mfgs_distributed;

@@ -1,43 +1,61 @@
 //! Distributed minibatch sampling over the replication-budget spectrum
 //! (paper §3.3, generalized) — bit-equal to single-machine
-//! [`sample_mfgs`] by construction at **every** budget point.
+//! [`sample_mfgs`] by construction at **every** budget point, with or
+//! without the dynamic remote-adjacency cache.
 //!
 //! One unified path replaces the old vanilla/hybrid split: every level,
-//! each worker samples every frontier node whose adjacency it holds
-//! (local rows plus whatever halo its [`ReplicationPolicy`] bought) and
-//! batches only the *misses* into a [`RoundKind::SampleRequest`] /
+//! each worker samples every frontier node whose adjacency it holds —
+//! local rows, whatever halo its [`ReplicationPolicy`] bought, plus any
+//! row resident in its [`TopologyView`] cache overlay — and batches only
+//! the *misses* into a [`RoundKind::SampleRequest`] /
 //! [`RoundKind::SampleResponse`] pair. Before paying that pair, the
 //! ranks vote with one uncharged control-plane reduce
 //! ([`Comm::all_zero_u64`], built on `all_reduce_min_u64`): when every
 //! rank has zero misses the exchange is skipped entirely. Sampling
 //! rounds per minibatch are therefore **data-dependent**, anywhere in
 //! `0..=2(L−1)` — `Counters` report what actually happened, not what a
-//! scheme constant assumes. Budget 0 reproduces the paper's vanilla
-//! counts (2 rounds per non-seed level with any cross-partition
-//! frontier); full replication reproduces hybrid's zero (the vote is
-//! short-circuited without communication when the view covers the whole
-//! graph, which is uniform across ranks because all shards share one
-//! policy).
+//! scheme constant assumes. Budget 0 with no cache reproduces the
+//! paper's vanilla counts; full replication reproduces hybrid's zero
+//! (the vote is short-circuited without communication when the *policy*
+//! is full replication, which is uniform across ranks).
+//!
+//! **Adjacency caching on the wire.** When the cache is enabled (a
+//! uniform, SPMD-contract setting, like the policy), each non-empty
+//! request is prefixed with the requester's admission threshold
+//! ([`TopologyView::cache_admission_limit`], derived from its remaining
+//! cache bytes). The owner serves every miss as before and, for nodes
+//! whose degree falls under the threshold, appends the **full**
+//! adjacency row; the decode inserts it into the requester's overlay.
+//! Future levels and future minibatches then sample those nodes
+//! locally, so measured `SampleRequest` rounds/bytes *decay over
+//! epochs* on skewed workloads (report id `cache-decay`). With the
+//! cache disabled the wire format is byte-identical to the uncached
+//! runtime. Per-rank cache divergence is safe by the same argument as
+//! per-rank halo coverage: it only changes each rank's miss count
+//! feeding the uniform `all_zero_u64` vote.
 //!
 //! Equality with the single-machine sampler holds bit-for-bit because
 //! neighbor choice depends only on `(level_key, node, its neighbor
-//! list)` — [`sample_node`] keyed by the counter-based RNG — and any
-//! materialized row (local or replicated halo) carries exactly the full
-//! graph's neighbor list, as does the owner serving a miss remotely.
-//! Assembly then replays the same relabel pass over the same per-seed
-//! chunks in the same order.
+//! list)` — `sample_node` keyed by the counter-based RNG — and any
+//! materialized row (local, replicated halo, or cached) carries exactly
+//! the full graph's neighbor list, as does the owner serving a miss
+//! remotely. Assembly then replays the same relabel pass over the same
+//! per-seed chunks in the same order.
 //!
 //! **Remote-slot ordering invariant:** within one owner, requests are
 //! queued in seed order, owners serve them in arrival order, and the
-//! decode walks seeds in order advancing one cursor per owner — so the
-//! k-th miss sent to partition `p` is answered by the k-th
-//! count-prefixed run in `p`'s response. The decode asserts that every
-//! response is consumed exactly (see `sample_level`), and the
-//! `remote_responses_decode_in_seed_order` regression test drives the
-//! interleaved multi-owner case.
+//! decode walks the recorded miss slots in order advancing one cursor
+//! per owner — so the k-th miss sent to partition `p` is answered by
+//! the k-th count-prefixed run in `p`'s response. The decode asserts
+//! that every response is consumed exactly (see `sample_level`), and
+//! the `remote_responses_decode_in_seed_order` regression test drives
+//! the interleaved multi-owner case.
+//!
+//! [`sample_mfgs`]: crate::sampling::sample_mfgs
+//! [`ReplicationPolicy`]: crate::partition::ReplicationPolicy
 
 use crate::graph::NodeId;
-use crate::partition::WorkerShard;
+use crate::partition::{TopologyView, WorkerShard};
 use crate::sampling::fused::sample_node;
 use crate::sampling::pipeline::level_key;
 use crate::sampling::rng::RngKey;
@@ -46,25 +64,44 @@ use crate::util::par;
 
 use super::comm::{Comm, RoundKind};
 
+/// "No adjacency row appended" marker in a cache-mode response.
+const NO_ROW: NodeId = NodeId::MAX;
+
 /// Sample all levels of one minibatch against a worker shard. Same
 /// contract as single-machine [`sample_mfgs`] (fanouts top level first,
 /// MFGs returned bottom first) plus the SPMD one: every rank in the
 /// world must call this collectively, with shards built from the same
-/// [`crate::partition::ReplicationPolicy`]. Seeds are normally the
-/// worker's own labeled nodes (then level 0 costs no exchange), but any
-/// frontier node — seed included — whose adjacency is absent is resolved
-/// through the miss rounds.
+/// [`ReplicationPolicy`] and views configured with the same cache
+/// capacity/policy. Seeds are normally the worker's own labeled nodes
+/// (then level 0 costs no exchange), but any frontier node — seed
+/// included — whose adjacency is absent is resolved through the miss
+/// rounds.
+///
+/// `view` is this worker's topology view — typically
+/// `shard.topology.clone()` (three `Arc` bumps), optionally with
+/// [`TopologyView::enable_cache`] called on it. It is mutable because
+/// the response decode feeds admissible remote rows into the cache
+/// overlay; keep one view alive across minibatches so the cache pays
+/// off.
 ///
 /// [`sample_mfgs`]: crate::sampling::sample_mfgs
+/// [`ReplicationPolicy`]: crate::partition::ReplicationPolicy
+#[allow(clippy::too_many_arguments)]
 pub fn sample_mfgs_distributed(
     comm: &mut Comm,
     shard: &WorkerShard,
+    view: &mut TopologyView,
     seeds: &[NodeId],
     fanouts: &[usize],
     key: RngKey,
     ws: &mut SamplerWorkspace,
     kind: KernelKind,
 ) -> Vec<Mfg> {
+    debug_assert_eq!(
+        view.local_rows(),
+        shard.topology.local_rows(),
+        "view does not belong to this shard"
+    );
     let mut out: Vec<Mfg> = Vec::with_capacity(fanouts.len());
     for (li, &f) in fanouts.iter().enumerate() {
         let mfg = {
@@ -72,7 +109,7 @@ pub fn sample_mfgs_distributed(
                 None => seeds,
                 Some(prev) => &prev.src_nodes,
             };
-            sample_level(comm, shard, cur, f, level_key(key, li), ws, kind)
+            sample_level(comm, shard, view, cur, f, level_key(key, li), ws, kind)
         };
         out.push(mfg);
     }
@@ -80,13 +117,17 @@ pub fn sample_mfgs_distributed(
     out
 }
 
-/// One level: frontier nodes with materialized adjacency sampled in
-/// place; misses resolved through one request + one response round —
-/// skipped when a control-plane vote agrees no rank has any — then
-/// assembled exactly like the corresponding single-machine kernel.
+/// One level: frontier nodes with materialized adjacency (static or
+/// cached) sampled in place; misses resolved through one request + one
+/// response round — skipped when a control-plane vote agrees no rank has
+/// any — then assembled exactly like the corresponding single-machine
+/// kernel. Per-level buffers (outboxes, cursors, serve scratch) live in
+/// the workspace and are reused across levels and minibatches.
+#[allow(clippy::too_many_arguments)]
 fn sample_level(
     comm: &mut Comm,
     shard: &WorkerShard,
+    view: &mut TopologyView,
     seeds: &[NodeId],
     fanout: usize,
     key: RngKey,
@@ -99,108 +140,178 @@ fn sample_level(
     ws.begin(shard.book.num_nodes());
     ws.samples.resize(n * fanout, 0);
     ws.counts.resize(n, 0);
-    let mut scratch: Vec<usize> = Vec::new();
 
     // ---- Queue misses first (order within an owner follows seed order —
     // the remote-slot ordering invariant the decode below asserts). Under
     // a full-replication policy no node can miss, so the paper's headline
-    // hybrid arm skips the scan and the per-owner outbox allocation
-    // entirely — its hot path stays the pure local sampling loop below.
+    // hybrid arm skips the scan and the per-owner outboxes entirely — its
+    // hot path stays the pure local sampling loop below. When the cache
+    // is enabled, each non-empty outbox leads with this rank's admission
+    // threshold so owners know which rows are worth shipping whole.
     let full = shard.policy.is_full();
-    let mut requests: Vec<Vec<NodeId>> = Vec::new();
-    let mut misses = 0u64;
+    let cache_on = view.cache_enabled();
+    // This rank's admission threshold, sent once per level as the prefix
+    // of every non-empty outbox. A limit of 0 (nothing admissible — e.g.
+    // a filled StaticDegree cache) tells owners to skip the per-miss
+    // row/marker suffix entirely, so a saturated cache stops paying
+    // response-side overhead; the decode below mirrors the same rule.
+    let limit = if full { 0 } else { view.cache_admission_limit() };
+    ws.miss_slots.clear();
+    let mut outboxes: Vec<Vec<NodeId>> = Vec::new();
     if !full {
-        requests.resize_with(world, Vec::new);
-        for &v in seeds {
-            if shard.topology.try_neighbors(v).is_none() {
+        outboxes.reserve(world);
+        for _ in 0..world {
+            let mut buf = ws.vec_pool.pop().unwrap_or_default();
+            buf.clear();
+            outboxes.push(buf);
+        }
+        for (i, &v) in seeds.iter().enumerate() {
+            if view.try_neighbors(v).is_none() {
                 let p = shard.book.part_of(v);
                 debug_assert_ne!(p, shard.part, "own nodes always have a materialized row");
-                requests[p].push(v);
-                misses += 1;
+                if cache_on && outboxes[p].is_empty() {
+                    outboxes[p].push(limit);
+                }
+                outboxes[p].push(v);
+                ws.miss_slots.push(i as u32);
             }
         }
     }
+    let misses = ws.miss_slots.len() as u64;
 
     // ---- Covered seeds: sample into the strided buffer with the same
     // parallel per-seed loop as the single-machine kernels, so budget
     // comparisons isolate communication cost rather than a
     // serial-sampling artifact. Miss slots get a placeholder count and
-    // are filled by the response decode below.
-    let topo = &shard.topology;
-    par::par_zip_chunks(
-        &mut ws.samples,
-        &mut ws.counts,
-        fanout,
-        Vec::new,
-        |scratch, i, chunk, cnt| {
-            let v = seeds[i];
-            *cnt = match topo.try_neighbors(v) {
-                Some(neigh) => sample_node(neigh, v, fanout, key, scratch, chunk),
-                None => 0,
-            };
-        },
-    );
+    // are filled by the response decode below. (Cache hits are read
+    // through a shared reference; the reference bits are atomic.)
+    {
+        let topo: &TopologyView = view;
+        par::par_zip_chunks(
+            &mut ws.samples,
+            &mut ws.counts,
+            fanout,
+            Vec::new,
+            |scratch, i, chunk, cnt| {
+                let v = seeds[i];
+                *cnt = match topo.try_neighbors(v) {
+                    Some(neigh) => sample_node(neigh, v, fanout, key, scratch, chunk),
+                    None => 0,
+                };
+            },
+        );
+    }
 
     // ---- The round-skip vote + (when needed) the level's two data
     // rounds. Under a full-replication *policy* no rank can miss, so the
     // vote itself is skipped without communication — keyed off the
     // policy (uniform across ranks), never off per-rank view coverage,
-    // which a finite budget can make diverge. Otherwise the vote is one
-    // uncharged control-plane reduce; the data rounds run only when some
-    // rank actually misses — and then *every* rank participates, empty
-    // payloads included: rounds are a property of the fabric, not of
-    // one worker.
+    // which a finite budget or a divergent cache can make differ.
+    // Otherwise the vote is one uncharged control-plane reduce; the data
+    // rounds run only when some rank actually misses — and then *every*
+    // rank participates, empty payloads included: rounds are a property
+    // of the fabric, not of one worker.
     let need_exchange = !full && !comm.all_zero_u64(misses);
     if need_exchange {
-        let granted = comm.exchange(RoundKind::SampleRequest, requests);
+        let granted = comm.exchange(RoundKind::SampleRequest, outboxes);
 
         // Serve: sample each requested node with the same key/stream the
         // single-machine kernel would use. Wire format per node:
-        // `count, id, id, ...` (u32 each), in request arrival order.
-        let mut chunk: Vec<NodeId> = vec![0; fanout];
+        // `count, id*count` (u32 each) in request arrival order; when the
+        // requester's prefixed admission limit is non-zero, additionally
+        // `deg, id*deg` (the full adjacency row) if `deg` clears that
+        // limit, else `NO_ROW`.
+        ws.serve_chunk.clear();
+        ws.serve_chunk.resize(fanout, 0);
         let mut replies: Vec<Vec<NodeId>> = Vec::with_capacity(world);
         for req in &granted {
-            let mut rep: Vec<NodeId> = Vec::with_capacity(req.len() * (fanout + 1));
-            for &u in req {
-                let neigh = shard
-                    .topology
+            let mut rep = ws.vec_pool.pop().unwrap_or_default();
+            rep.clear();
+            let (peer_limit, ids) = match req.split_first() {
+                Some((&peer_limit, ids)) if cache_on => (peer_limit, ids),
+                _ => (0, &req[..]),
+            };
+            rep.reserve(ids.len() * (fanout + 1));
+            for &u in ids {
+                let neigh = view
                     .try_neighbors(u)
                     .expect("received a sampling request for a node this worker does not own");
-                let cnt = sample_node(neigh, u, fanout, key, &mut scratch, &mut chunk);
+                let cnt =
+                    sample_node(neigh, u, fanout, key, &mut ws.serve_scratch, &mut ws.serve_chunk);
                 rep.push(cnt);
-                rep.extend_from_slice(&chunk[..cnt as usize]);
+                rep.extend_from_slice(&ws.serve_chunk[..cnt as usize]);
+                // Row/marker suffix only while the requester can still
+                // admit something (peer_limit 0 ⇒ the bare uncached shape).
+                if peer_limit > 0 {
+                    if (neigh.len() as u64) < peer_limit as u64 {
+                        rep.push(neigh.len() as NodeId);
+                        rep.extend_from_slice(neigh);
+                    } else {
+                        rep.push(NO_ROW);
+                    }
+                }
             }
             replies.push(rep);
         }
         let responses = comm.exchange(RoundKind::SampleResponse, replies);
 
-        // Decode into the strided buffer, walking seeds in order so each
-        // owner's response cursor advances in the order we requested.
-        let mut cursor = vec![0usize; world];
-        for (i, &v) in seeds.iter().enumerate() {
-            if shard.topology.try_neighbors(v).is_some() {
-                continue;
-            }
+        // Decode into the strided buffer, walking the recorded miss slots
+        // in seed order so each owner's response cursor advances in the
+        // order we requested. Appended adjacency rows go straight into
+        // the cache overlay (inserts may be rejected once the budget
+        // fills — correctness never depends on residency).
+        ws.owner_cursor.clear();
+        ws.owner_cursor.resize(world, 0);
+        let miss_slots = std::mem::take(&mut ws.miss_slots);
+        for &slot in &miss_slots {
+            let i = slot as usize;
+            let v = seeds[i];
             let p = shard.book.part_of(v);
             let resp = &responses[p];
-            let cnt = resp[cursor[p]] as usize;
+            let mut cur = ws.owner_cursor[p];
+            let cnt = resp[cur] as usize;
             debug_assert!(cnt <= fanout);
-            let ids = &resp[cursor[p] + 1..cursor[p] + 1 + cnt];
-            ws.samples[i * fanout..i * fanout + cnt].copy_from_slice(ids);
+            ws.samples[i * fanout..i * fanout + cnt]
+                .copy_from_slice(&resp[cur + 1..cur + 1 + cnt]);
             ws.counts[i] = cnt as u32;
-            cursor[p] += 1 + cnt;
+            cur += 1 + cnt;
+            // Owners append the row/marker suffix iff the limit we sent
+            // this level was non-zero (mirrors the serve side above).
+            if limit > 0 {
+                let marker = resp[cur];
+                cur += 1;
+                if marker != NO_ROW {
+                    let deg = marker as usize;
+                    view.cache_insert(v, &resp[cur..cur + deg]);
+                    cur += deg;
+                }
+            }
+            ws.owner_cursor[p] = cur;
         }
+        ws.miss_slots = miss_slots;
         // The ordering invariant, asserted: every byte of every response
         // was matched to a miss slot — a skewed cursor would mean seed
         // order and request order diverged somewhere.
         for (p, resp) in responses.iter().enumerate() {
             assert_eq!(
-                cursor[p],
+                ws.owner_cursor[p],
                 resp.len(),
                 "rank {}: response from rank {p} not fully consumed — \
                  remote-slot ordering invariant violated",
                 shard.part
             );
+        }
+
+        // Recycle the buffers that came back from the fabric (our own
+        // outboxes/replies were moved to their receivers).
+        for mut buf in granted.into_iter().chain(responses) {
+            buf.clear();
+            ws.vec_pool.push(buf);
+        }
+    } else {
+        for mut buf in outboxes {
+            buf.clear();
+            ws.vec_pool.push(buf);
         }
     }
 
@@ -217,6 +328,7 @@ fn sample_level(
 mod tests {
     use std::sync::Arc;
 
+    use super::super::cache::CachePolicy;
     use super::super::net::NetworkModel;
     use super::super::worker::run_workers;
     use super::*;
@@ -251,9 +363,11 @@ mod tests {
         let seeds_ref = &seeds;
         let got = run_workers(1, NetworkModel::free(), move |_rank, comm| {
             let mut ws = SamplerWorkspace::new();
+            let mut view = shards_ref[0].topology.clone();
             sample_mfgs_distributed(
                 comm,
                 &shards_ref[0],
+                &mut view,
                 seeds_ref,
                 &fanouts,
                 key,
@@ -285,9 +399,11 @@ mod tests {
                 .take(8)
                 .collect();
             let mut ws = SamplerWorkspace::new();
+            let mut view = shards_ref[rank].topology.clone();
             let mfgs = sample_mfgs_distributed(
                 comm,
                 &shards_ref[rank],
+                &mut view,
                 &seeds,
                 &fanouts,
                 key,
@@ -307,7 +423,10 @@ mod tests {
     /// Satellite regression for the remote-slot ordering invariant: force
     /// level-0 misses with seeds that *interleave* local nodes and remote
     /// nodes of multiple owners in non-sorted order — each owner's
-    /// response must decode back into exactly the requesting slots.
+    /// response must decode back into exactly the requesting slots. Runs
+    /// with the adjacency cache both off and on (tiny and large budgets),
+    /// since the cache-mode wire format threads extra fields through the
+    /// same cursors.
     #[test]
     fn remote_responses_decode_in_seed_order() {
         let d = dataset();
@@ -341,25 +460,96 @@ mod tests {
             assert!(remote > 0, "seed mix must include remote nodes");
             out
         };
-        let shards_ref = &shards;
-        let results = run_workers(3, NetworkModel::free(), move |rank, comm| {
-            let seeds = mk_seeds(rank);
+        for cache_bytes in [None, Some(256u64), Some(1 << 20)] {
+            let shards_ref = &shards;
+            let results = run_workers(3, NetworkModel::free(), move |rank, comm| {
+                let seeds = mk_seeds(rank);
+                let mut ws = SamplerWorkspace::new();
+                let mut view = shards_ref[rank].topology.clone();
+                if let Some(b) = cache_bytes {
+                    view.enable_cache(b, CachePolicy::Clock);
+                }
+                let mfgs = sample_mfgs_distributed(
+                    comm,
+                    &shards_ref[rank],
+                    &mut view,
+                    &seeds,
+                    &fanouts,
+                    key,
+                    &mut ws,
+                    KernelKind::Fused,
+                );
+                (seeds, mfgs)
+            });
             let mut ws = SamplerWorkspace::new();
-            let mfgs = sample_mfgs_distributed(
+            for (seeds, mfgs) in &results {
+                let expect =
+                    sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
+                assert_eq!(
+                    mfgs, &expect,
+                    "interleaved remote seeds decoded out of order (cache {cache_bytes:?})"
+                );
+            }
+        }
+    }
+
+    /// The cache fast path end to end: the same worker resampling the
+    /// same minibatch stops missing once the rows are resident, and the
+    /// results stay bit-identical throughout.
+    #[test]
+    fn cached_rows_serve_repeat_minibatches_locally() {
+        let d = dataset();
+        let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(2)));
+        let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+        let fanouts = [3usize, 3];
+        let key = RngKey::new(77);
+        let shards_ref = &shards;
+        let book_ref = &book;
+        let d_ref = &d;
+        let results = run_workers(2, NetworkModel::free(), move |rank, comm| {
+            let seeds: Vec<NodeId> = d_ref
+                .train_ids
+                .iter()
+                .copied()
+                .filter(|&v| book_ref.part_of(v) == rank)
+                .take(12)
+                .collect();
+            let mut ws = SamplerWorkspace::new();
+            let mut view = shards_ref[rank].topology.clone();
+            view.enable_cache(u64::MAX >> 1, CachePolicy::StaticDegree);
+            let a = sample_mfgs_distributed(
                 comm,
                 &shards_ref[rank],
+                &mut view,
                 &seeds,
                 &fanouts,
                 key,
                 &mut ws,
                 KernelKind::Fused,
             );
-            (seeds, mfgs)
+            let cached_after_first = view.cached_rows();
+            let b = sample_mfgs_distributed(
+                comm,
+                &shards_ref[rank],
+                &mut view,
+                &seeds,
+                &fanouts,
+                key,
+                &mut ws,
+                KernelKind::Fused,
+            );
+            (seeds, a, b, cached_after_first, view.cached_rows())
         });
         let mut ws = SamplerWorkspace::new();
-        for (seeds, mfgs) in &results {
+        for (seeds, a, b, cached1, cached2) in &results {
             let expect = sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
-            assert_eq!(mfgs, &expect, "interleaved remote seeds decoded out of order");
+            assert_eq!(a, &expect, "first (miss-resolving) pass diverged");
+            assert_eq!(b, &expect, "second (cache-served) pass diverged");
+            assert!(*cached1 > 0, "unbounded cache admitted nothing");
+            assert_eq!(
+                cached1, cached2,
+                "second pass over the same seeds should miss nothing new"
+            );
         }
     }
 }

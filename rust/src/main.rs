@@ -33,12 +33,15 @@ COMMANDS:
                 [--cache N] [--seed S] [--eval]
                 [--replication-budget 0|64k|2m|inf]  (overrides the
                 mode's replication policy; modes also accept
-                budget:<bytes> and halo:<hops>, optionally +fused)
+                budget:<bytes> and halo:<hops>, optionally +fused
+                and/or +cache:<bytes>)
+                [--adj-cache 0|32k|2m|inf] [--adj-cache-policy clock|static]
+                (the dynamic remote-adjacency cache over the static halo)
   partition     --dataset <spec> --parts 8 [--seed S]
   sample-bench  --dataset <spec> --batch 1024 --fanouts 15,10,5 [--iters 10]
   gen-data      --dataset <spec> --out graph.bin [--seed S]
   report        --id table1|fig4|fig5|fig5-e2e|fig6|rounds|cache-ablation|
-                     fanout-ablation|memory|replication-frontier
+                     fanout-ablation|memory|replication-frontier|cache-decay
                 [--quick] [--scale S] [--workers W]
   info
 ";
@@ -84,6 +87,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.seed = seed;
     cfg.net = config::network(&args.get_str("net", "infiniband"))?;
     cfg.cache_capacity = args.get("cache", 0usize)?;
+    if let Some(spec) = args.get_opt_str("adj-cache") {
+        cfg.adj_cache_bytes = config::parse_cache_bytes(&spec)?;
+    }
+    cfg.adj_cache_policy = config::cache_policy(&args.get_str("adj-cache-policy", "clock"))?;
     cfg.max_batches = match args.get("max-batches", 0usize)? {
         0 => None,
         n => Some(n),
@@ -255,6 +262,14 @@ fn cmd_report(args: &Args) -> Result<()> {
                 "quickstart".to_string()
             };
             exp::replication_frontier(&spec, workers, seed)?
+        }
+        "cache-decay" => {
+            let spec = if scale > 0.0 {
+                format!("products-sim:{scale}")
+            } else {
+                "quickstart".to_string()
+            };
+            exp::cache_decay(&spec, workers, seed)?
         }
         other => bail!("unknown report {other:?} — see `fastsample` usage"),
     };

@@ -20,9 +20,21 @@
 //! list (never truncated), so sampling a halo node locally draws exactly
 //! the neighbors its owner would have drawn — the bit-equality invariant
 //! holds at every budget point.
+//!
+//! On top of the *static* halo, a [`TopologyView`] can carry a dynamic
+//! **remote-adjacency cache** (see [`TopologyView::enable_cache`]): a
+//! byte-budgeted [`SlabCache`] overlay that `try_neighbors` falls
+//! through to when a node has no static row. Cached rows are complete
+//! adjacency lists inserted by the distributed sampler's response decode
+//! (`dist::sampling`), so a cached node samples bit-identically to a
+//! local one — the same invariant, extended to the workload-adaptive
+//! layer. The overlay is per-worker mutable state: clone the shard's
+//! view (`shard.topology.clone()` is three `Arc` bumps) and enable the
+//! cache on the clone.
 
 use std::sync::Arc;
 
+use crate::dist::cache::{CachePolicy, SlabCache};
 use crate::graph::{Dataset, NodeId};
 
 use super::book::PartitionBook;
@@ -134,19 +146,86 @@ pub struct TopologyView {
     replicated_bytes: u64,
     /// True when every node of the graph has a row.
     full: bool,
+    /// Dynamic remote-adjacency cache layered over the static rows —
+    /// per-worker state (not shared through the `Arc`s above), absent
+    /// unless [`Self::enable_cache`] was called on this clone.
+    overlay: Option<Box<SlabCache<NodeId>>>,
 }
+
+/// Cached adjacency rows are charged like static halo rows: one row
+/// pointer (8 bytes) plus 4 bytes per in-edge — see [`row_cost`].
+const CACHE_ROW_OVERHEAD: u64 = 8;
 
 impl TopologyView {
     /// In-neighbors of `v`, or `None` when `v` has no materialized row —
     /// the caller must resolve it through a remote sampling request.
+    /// Static rows (local + halo prefix, via the `row_of` indirection)
+    /// win; absent ones fall through to the cache overlay, whose rows
+    /// are complete adjacency lists, so a hit is indistinguishable from
+    /// a static row.
     #[inline]
     pub fn try_neighbors(&self, v: NodeId) -> Option<&[NodeId]> {
         let row = self.row_of[v as usize];
         if row == u32::MAX {
-            None
+            self.overlay.as_ref()?.get(v)
         } else {
             Some(&self.indices[self.indptr[row as usize]..self.indptr[row as usize + 1]])
         }
+    }
+
+    /// Attach a dynamic remote-adjacency cache of `capacity_bytes` to
+    /// this view. Part of the SPMD contract: every rank of a run must
+    /// use the same capacity and policy (like the [`ReplicationPolicy`]
+    /// itself), because the distributed sampler's wire format is keyed
+    /// off whether caching is enabled.
+    pub fn enable_cache(&mut self, capacity_bytes: u64, policy: CachePolicy) {
+        self.overlay =
+            Some(Box::new(SlabCache::new(policy, capacity_bytes, CACHE_ROW_OVERHEAD)));
+    }
+
+    /// Is the dynamic adjacency cache attached?
+    #[inline]
+    pub fn cache_enabled(&self) -> bool {
+        self.overlay.is_some()
+    }
+
+    /// Wire-level admission threshold: a remote row is worth shipping
+    /// whole iff its degree is **strictly below** the returned value
+    /// (0 ⇒ nothing is admissible, including when no cache is attached).
+    /// Derived from the cache's remaining budget — see
+    /// [`SlabCache::admissible_len`].
+    pub fn cache_admission_limit(&self) -> u32 {
+        match &self.overlay {
+            None => 0,
+            Some(c) => c
+                .admissible_len()
+                .map_or(0, |len| (len as u64 + 1).min(u32::MAX as u64) as u32),
+        }
+    }
+
+    /// Offer a full adjacency row to the overlay (no-op without a cache);
+    /// returns whether it is now resident.
+    pub fn cache_insert(&mut self, v: NodeId, row: &[NodeId]) -> bool {
+        debug_assert_eq!(
+            self.row_of[v as usize],
+            u32::MAX,
+            "node {v} already has a static row — caching it would shadow nothing"
+        );
+        match &mut self.overlay {
+            None => false,
+            Some(c) => c.insert(v, row),
+        }
+    }
+
+    /// Resident overlay rows (0 without a cache).
+    pub fn cached_rows(&self) -> usize {
+        self.overlay.as_ref().map_or(0, |c| c.len())
+    }
+
+    /// Bytes currently charged to the overlay (same 8 + 4·deg accounting
+    /// as [`Self::replicated_bytes`]).
+    pub fn cache_used_bytes(&self) -> u64 {
+        self.overlay.as_ref().map_or(0, |c| c.used_bytes())
     }
 
     /// Does every node of the graph have a local row? (True under the
@@ -311,6 +390,7 @@ fn build_view(
         replicated_rows,
         replicated_bytes,
         full,
+        overlay: None,
     }
 }
 
@@ -359,6 +439,7 @@ pub fn build_shards(
                         replicated_rows: n - local_nodes.len(),
                         replicated_bytes: *total_adj_bytes - local_adj,
                         full: true,
+                        overlay: None,
                     }
                 }
                 None => build_view(dataset, &local_nodes, policy),
@@ -544,6 +625,48 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cache_overlay_falls_through_static_rows() {
+        let (d, shards) = build(ReplicationPolicy::vanilla());
+        let s = &shards[0];
+        let mut view = s.topology.clone();
+        assert!(!view.cache_enabled());
+        assert_eq!(view.cache_admission_limit(), 0);
+
+        view.enable_cache(1 << 16, CachePolicy::Clock);
+        assert!(view.cache_enabled());
+        assert!(view.cache_admission_limit() > 0);
+
+        // A remote node is invisible until its full row is cached; after
+        // the insert it reads back exactly the graph's adjacency — the
+        // bit-equality prerequisite, same as for static halo rows.
+        let remote = (0..d.num_nodes() as NodeId)
+            .find(|&v| !s.owns(v))
+            .expect("vanilla shard must have remote nodes");
+        assert!(view.try_neighbors(remote).is_none());
+        assert!(view.cache_insert(remote, d.graph.neighbors(remote)));
+        assert_eq!(view.try_neighbors(remote).unwrap(), d.graph.neighbors(remote));
+        assert_eq!(view.cached_rows(), 1);
+        assert_eq!(
+            view.cache_used_bytes(),
+            8 + 4 * d.graph.degree(remote) as u64
+        );
+
+        // Static rows always win (and the shard's own view is untouched —
+        // the overlay is per-clone state).
+        let local = s.local_nodes[0];
+        assert_eq!(view.try_neighbors(local).unwrap(), d.graph.neighbors(local));
+        assert!(s.topology.try_neighbors(remote).is_none());
+
+        // Admission limits track the remaining budget under StaticDegree.
+        let mut tight = s.topology.clone();
+        tight.enable_cache(8 + 4 * 3, CachePolicy::StaticDegree);
+        assert_eq!(tight.cache_admission_limit(), 4, "degrees 0..=3 admissible");
+        let mut empty = s.topology.clone();
+        empty.enable_cache(0, CachePolicy::StaticDegree);
+        assert_eq!(empty.cache_admission_limit(), 0);
     }
 
     #[test]

@@ -92,6 +92,21 @@ pub struct SamplerWorkspace {
     /// Baseline scratch: materialized COO src/dst arrays.
     pub(crate) coo_src: Vec<NodeId>,
     pub(crate) coo_dst: Vec<NodeId>,
+    // --- Distributed-sampler scratch (`dist::sampling::sample_level`),
+    // hoisted here so per-level state is reused across levels and
+    // minibatches instead of reallocated every call.
+    /// Seed indices whose adjacency was not materialized this level.
+    pub(crate) miss_slots: Vec<u32>,
+    /// Per-owner response cursor for the decode pass.
+    pub(crate) owner_cursor: Vec<usize>,
+    /// Recycled per-owner payload vectors: outbox/reply vectors are moved
+    /// into the fabric each round, but the vectors *received* from peers
+    /// come back here, so the pool reaches a steady state of ~2·world
+    /// buffers after the first exchanged level.
+    pub(crate) vec_pool: Vec<Vec<NodeId>>,
+    /// Serve-side Floyd-sampling scratch and fanout-sized sample chunk.
+    pub(crate) serve_scratch: Vec<usize>,
+    pub(crate) serve_chunk: Vec<NodeId>,
 }
 
 impl SamplerWorkspace {

@@ -48,6 +48,12 @@ pub struct TrainConfig {
     /// Remote-feature cache rows per worker (0 = disabled).
     pub cache_capacity: usize,
     pub cache_policy: CachePolicy,
+    /// Remote-adjacency cache bytes per worker (0 = disabled) — the
+    /// dynamic, workload-adaptive layer over the policy's static halo
+    /// (`cache:<bytes>` mode suffix / `--adj-cache`). Uniform across
+    /// ranks, like the policy: the sampler's wire format is keyed off it.
+    pub adj_cache_bytes: u64,
+    pub adj_cache_policy: CachePolicy,
     /// Cap batches per epoch (benches); `None` = full epoch.
     pub max_batches: Option<usize>,
     /// Compute last-batch accuracy each epoch via the eval executable.
@@ -103,6 +109,8 @@ impl TrainConfig {
             net: NetworkModel::infiniband_200g(),
             cache_capacity: 0,
             cache_policy: CachePolicy::StaticDegree,
+            adj_cache_bytes: 0,
+            adj_cache_policy: CachePolicy::Clock,
             max_batches: None,
             eval_last_batch: false,
             schedule: ScheduleKind::Fixed,
@@ -112,13 +120,13 @@ impl TrainConfig {
 
     /// The Fig 6 scenarios by name, plus budgeted points on the
     /// replication spectrum: `budget:<bytes>` (suffixes `k`/`m`/`g`,
-    /// KiB-based) and `halo:<hops>` (complete h-hop halo, no byte cap),
-    /// each optionally `+fused`.
+    /// KiB-based) and `halo:<hops>` (complete h-hop halo, no byte cap).
+    /// Any base takes `+`-separated options: `+fused` (the fused kernel)
+    /// and `+cache:<bytes>` (the dynamic remote-adjacency cache), e.g.
+    /// `budget:64k+cache:32k+fused`.
     pub fn mode(variant: &str, mode: &str, workers: usize) -> Result<Self> {
-        let (base, kernel) = match mode.strip_suffix("+fused") {
-            Some(b) => (b, KernelKind::Fused),
-            None => (mode, KernelKind::Baseline),
-        };
+        let mut parts = mode.split('+');
+        let base = parts.next().unwrap_or_default();
         let policy = if base == "vanilla" {
             ReplicationPolicy::vanilla()
         } else if base == "hybrid" {
@@ -130,10 +138,23 @@ impl TrainConfig {
         } else {
             anyhow::bail!(
                 "unknown mode {mode:?} (vanilla | hybrid | budget:<bytes> | halo:<hops>, \
-                 each optionally +fused)"
+                 each optionally +fused and/or +cache:<bytes>)"
             )
         };
-        Ok(Self::new(variant, policy, kernel, workers))
+        let mut kernel = KernelKind::Baseline;
+        let mut adj_cache_bytes = 0u64;
+        for opt in parts {
+            if opt == "fused" {
+                kernel = KernelKind::Fused;
+            } else if let Some(spec) = opt.strip_prefix("cache:") {
+                adj_cache_bytes = crate::config::parse_cache_bytes(spec)?;
+            } else {
+                anyhow::bail!("unknown mode option {opt:?} in {mode:?} (fused | cache:<bytes>)");
+            }
+        }
+        let mut cfg = Self::new(variant, policy, kernel, workers);
+        cfg.adj_cache_bytes = adj_cache_bytes;
+        Ok(cfg)
     }
 }
 
@@ -263,6 +284,15 @@ fn worker_loop(
     let mut ws = SamplerWorkspace::new();
     let key = RngKey::new(cfg.seed).fold(0xF00D);
 
+    // This worker's topology view: a cheap clone of the shard's, plus the
+    // optional remote-adjacency cache overlay. Gate on the *policy* —
+    // uniform across ranks — so cache-mode wire framing stays in lockstep
+    // (full replication never misses, so a cache would be dead weight).
+    let mut view = shard.topology.clone();
+    if cfg.adj_cache_bytes > 0 && !shard.policy.is_full() {
+        view.enable_cache(cfg.adj_cache_bytes, cfg.adj_cache_policy);
+    }
+
     // Optional remote-feature cache (paper §5 extension).
     let mut cache = (cfg.cache_capacity > 0).then(|| {
         FeatureCache::new(cfg.cache_policy, cfg.cache_capacity, shard.feat_dim)
@@ -307,8 +337,11 @@ fn worker_loop(
     let mut smoothed_loss: Option<f32> = None;
 
     for epoch in 0..cfg.epochs {
-        comm.barrier();
-        let comm_before = (rank == 0).then(|| comm.counters.snapshot());
+        // Fenced epoch mark: the counters are fabric-global, so the
+        // per-epoch delta is only exact if no rank can charge this
+        // epoch's first bytes before every rank has taken the snapshot.
+        let epoch_mark = comm.fenced_snapshot();
+        let comm_before = (rank == 0).then_some(epoch_mark);
         let epoch_sw = Stopwatch::start();
         let mut times = PhaseTimes::default();
         let mut loss_sum = 0f64;
@@ -325,10 +358,12 @@ fn worker_loop(
             let batch_key = key.fold(epoch as u64).fold(b as u64 + 1);
             let mut sw = Stopwatch::start();
 
-            // ---- Phase 1: sampling (0 or 2(L−1) rounds by scheme).
+            // ---- Phase 1: sampling (0..=2(L−1) measured rounds; the
+            // adjacency cache makes later batches/epochs cheaper).
             let mfgs = sample_mfgs_distributed(
                 comm,
                 shard,
+                &mut view,
                 seeds,
                 &fanouts,
                 batch_key,
@@ -371,11 +406,13 @@ fn worker_loop(
             }
         }
 
-        comm.barrier();
+        // Fenced like the epoch start, so the delta stays exact even if
+        // a future step charges bytes right after the epoch loop.
+        let comm_end = comm.fenced_snapshot();
         let mut sw_end = epoch_sw;
         let wall_s = sw_end.lap();
         smoothed_loss = Some((loss_sum / batches as f64) as f32);
-        let comm_delta = comm_before.map(|before| comm.counters.snapshot().diff(&before));
+        let comm_delta = comm_before.map(|before| comm_end.diff(&before));
         let stats = EpochStats {
             epoch,
             batches,
@@ -466,5 +503,26 @@ mod tests {
         assert_eq!(inf.policy, ReplicationPolicy::hybrid());
         assert!(TrainConfig::mode("x", "nope", 4).is_err());
         assert!(TrainConfig::mode("x", "halo:x", 4).is_err());
+    }
+
+    #[test]
+    fn mode_cache_suffix_sets_the_adjacency_cache() {
+        let plain = TrainConfig::mode("x", "vanilla", 4).unwrap();
+        assert_eq!(plain.adj_cache_bytes, 0);
+        let c = TrainConfig::mode("x", "vanilla+cache:32k", 4).unwrap();
+        assert_eq!(c.adj_cache_bytes, 32 << 10);
+        assert_eq!(c.kernel, KernelKind::Baseline);
+        // Options compose in either order, with +fused.
+        let bcf = TrainConfig::mode("x", "budget:64k+cache:8k+fused", 4).unwrap();
+        assert_eq!(bcf.policy, ReplicationPolicy::budgeted(64 * 1024));
+        assert_eq!(bcf.adj_cache_bytes, 8 << 10);
+        assert_eq!(bcf.kernel, KernelKind::Fused);
+        let bfc = TrainConfig::mode("x", "budget:64k+fused+cache:8k", 4).unwrap();
+        assert_eq!((bfc.adj_cache_bytes, bfc.kernel), (8 << 10, KernelKind::Fused));
+        // An unbounded cache spec maps to an effectively infinite budget.
+        let inf = TrainConfig::mode("x", "vanilla+cache:inf", 4).unwrap();
+        assert!(inf.adj_cache_bytes > 1 << 40);
+        assert!(TrainConfig::mode("x", "vanilla+turbo", 4).is_err());
+        assert!(TrainConfig::mode("x", "vanilla+cache:lots", 4).is_err());
     }
 }

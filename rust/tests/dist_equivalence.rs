@@ -10,11 +10,14 @@
 //!   the first exchange, full replication pays zero.
 //! * The partitioned feature store must return exactly the dataset rows,
 //!   with and without a cache.
+//! * The dynamic remote-adjacency cache preserves bit-equality at every
+//!   (budget, capacity, policy) point, and decays `SampleRequest`
+//!   traffic to zero across epochs once the miss set goes resident.
 
 use std::sync::Arc;
 
 use fastsample::dist::{
-    fetch_features, run_workers_with, sample_mfgs_distributed, CachePolicy, Counters,
+    fetch_features, run_workers_with, sample_mfgs_distributed, CachePolicy, CommStats, Counters,
     FeatureCache, NetworkModel, RoundKind,
 };
 use fastsample::graph::generator::{make_dataset, DatasetParams};
@@ -56,8 +59,9 @@ fn run_policy(d: &Dataset, policy: ReplicationPolicy, fanouts: &[usize], key: Rn
             let shard = &shards_ref[rank];
             let seeds = worker_seeds(d, book_ref, rank, 16);
             let mut ws = SamplerWorkspace::new();
+            let mut view = shard.topology.clone();
             let mfgs = sample_mfgs_distributed(
-                comm, shard, &seeds, fanouts, key, &mut ws, KernelKind::Fused,
+                comm, shard, &mut view, &seeds, fanouts, key, &mut ws, KernelKind::Fused,
             );
             (seeds, mfgs)
         }
@@ -87,8 +91,9 @@ fn vanilla_distributed_equals_single_machine_fused() {
             let shard = &shards_ref[rank];
             let seeds = worker_seeds(d_ref, book_ref, rank, 16);
             let mut ws = SamplerWorkspace::new();
+            let mut view = shard.topology.clone();
             let mfgs = sample_mfgs_distributed(
-                comm, shard, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
+                comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
             );
             (seeds, mfgs)
         }
@@ -130,11 +135,12 @@ fn vanilla_baseline_assembly_matches_fused_assembly() {
             let shard = &shards_ref[rank];
             let seeds = worker_seeds(d_ref, book_ref, rank, 12);
             let mut ws = SamplerWorkspace::new();
+            let mut view = shard.topology.clone();
             let a = sample_mfgs_distributed(
-                comm, shard, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
+                comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
             );
             let b = sample_mfgs_distributed(
-                comm, shard, &seeds, &fanouts, key, &mut ws, KernelKind::Baseline,
+                comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Baseline,
             );
             (a, b)
         }
@@ -161,7 +167,10 @@ fn full_replication_needs_zero_sampling_rounds_and_matches_vanilla() {
             let shard = &hybrid_ref[rank];
             let seeds = worker_seeds(d_ref, book_ref, rank, 16);
             let mut ws = SamplerWorkspace::new();
-            sample_mfgs_distributed(comm, shard, &seeds, &fanouts, key, &mut ws, KernelKind::Fused)
+            let mut view = shard.topology.clone();
+            sample_mfgs_distributed(
+                comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
+            )
         }
     });
 
@@ -224,6 +233,148 @@ fn replication_spectrum_is_bit_identical_with_monotone_rounds() {
         .collect();
     assert!(mems[0] < mems[1] && mems[1] < mems[3], "budgeted memory out of order: {mems:?}");
     assert!(mems[0] < mems[2] && mems[2] < mems[3], "halo memory out of order: {mems:?}");
+}
+
+/// The adjacency-cache acceptance sweep: every (replication budget,
+/// cache capacity, cache policy) point — including capacity 0 (must
+/// behave exactly like the uncached runtime) and a capacity larger than
+/// the whole miss set — stays bit-identical to single-machine sampling
+/// across several minibatches, while rounds never exceed the uncached
+/// baseline's.
+#[test]
+fn adjacency_cache_spectrum_is_bit_identical() {
+    let d = dataset();
+    let fanouts = [4usize, 3];
+    let key = RngKey::new(4242);
+    let batches = 3u64;
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+
+    for policy in [ReplicationPolicy::vanilla(), ReplicationPolicy::budgeted(4 * 1024)] {
+        let shards = build_shards(&d, &book, &policy);
+        let mut uncached_rounds = None;
+        for cache_bytes in [0u64, 600, u64::MAX >> 1] {
+            for cache_policy in [CachePolicy::StaticDegree, CachePolicy::Clock] {
+                let counters = Arc::new(Counters::default());
+                let shards_ref = &shards;
+                let d_ref = &d;
+                let book_ref = &book;
+                let results =
+                    run_workers_with(4, NetworkModel::free(), Arc::clone(&counters), {
+                        move |rank, comm| {
+                            let shard = &shards_ref[rank];
+                            let seeds = worker_seeds(d_ref, book_ref, rank, 16);
+                            let mut ws = SamplerWorkspace::new();
+                            let mut view = shard.topology.clone();
+                            if cache_bytes > 0 {
+                                view.enable_cache(cache_bytes, cache_policy);
+                            }
+                            let per_batch: Vec<_> = (0..batches)
+                                .map(|b| {
+                                    sample_mfgs_distributed(
+                                        comm,
+                                        shard,
+                                        &mut view,
+                                        &seeds,
+                                        &fanouts,
+                                        key.fold(b),
+                                        &mut ws,
+                                        KernelKind::Fused,
+                                    )
+                                })
+                                .collect();
+                            (seeds, per_batch)
+                        }
+                    });
+                let mut ws = SamplerWorkspace::new();
+                for (seeds, per_batch) in &results {
+                    for (b, mfgs) in per_batch.iter().enumerate() {
+                        let expect = sample_mfgs(
+                            &d.graph,
+                            seeds,
+                            &fanouts,
+                            key.fold(b as u64),
+                            &mut ws,
+                            KernelKind::Fused,
+                        );
+                        assert_eq!(
+                            mfgs, &expect,
+                            "{policy:?} cache {cache_bytes}B {cache_policy:?} batch {b} \
+                             diverged from single-machine"
+                        );
+                    }
+                }
+                let rounds = counters.snapshot().sampling_rounds();
+                let baseline = *uncached_rounds.get_or_insert(rounds);
+                if cache_bytes == 0 {
+                    assert_eq!(
+                        rounds, baseline,
+                        "capacity 0 must behave exactly like the uncached runtime"
+                    );
+                } else {
+                    assert!(
+                        rounds <= baseline,
+                        "{policy:?} cache {cache_bytes}B {cache_policy:?}: \
+                         caching increased rounds ({rounds} > {baseline})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The decay regression: a second epoch over the *same* seeds issues
+/// strictly fewer `SampleRequest` bytes than the first, and with a cache
+/// larger than the miss set the second epoch issues none at all — every
+/// exchange is cleared by the round-skip vote.
+#[test]
+fn adjacency_cache_decays_request_traffic_across_epochs() {
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+    let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+    let fanouts = [4usize, 3, 3];
+    let key = RngKey::new(321);
+    let counters = Arc::new(Counters::default());
+    let shards_ref = &shards;
+    let d_ref = &d;
+    let book_ref = &book;
+    let results = run_workers_with(4, NetworkModel::free(), Arc::clone(&counters), {
+        move |rank, comm| {
+            let shard = &shards_ref[rank];
+            let seeds = worker_seeds(d_ref, book_ref, rank, 16);
+            let mut ws = SamplerWorkspace::new();
+            let mut view = shard.topology.clone();
+            view.enable_cache(u64::MAX >> 1, CachePolicy::StaticDegree);
+            // Barrier-fenced epoch marks (`Comm::fenced_snapshot`): the
+            // counters are fabric-global, so no rank may charge an
+            // epoch's bytes before every rank has marked the boundary.
+            let mut marks = Vec::new();
+            let mut epochs = Vec::new();
+            for _e in 0..2 {
+                marks.push(comm.fenced_snapshot());
+                epochs.push(sample_mfgs_distributed(
+                    comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
+                ));
+            }
+            marks.push(comm.fenced_snapshot());
+            let deltas: Vec<CommStats> =
+                marks.windows(2).map(|w| w[1].diff(&w[0])).collect();
+            (seeds, epochs, deltas)
+        }
+    });
+    let mut ws = SamplerWorkspace::new();
+    for (seeds, epochs, deltas) in &results {
+        let expect = sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
+        let (e1, s1) = (&epochs[0], &deltas[0]);
+        let (e2, s2) = (&epochs[1], &deltas[1]);
+        assert_eq!(e1, &expect, "cold epoch diverged from single-machine");
+        assert_eq!(e2, &expect, "warm epoch diverged from single-machine");
+        let b1 = s1.bytes_of(RoundKind::SampleRequest);
+        let b2 = s2.bytes_of(RoundKind::SampleRequest);
+        assert!(b1 > 0, "cold epoch should pay request bytes on this graph");
+        assert!(b2 < b1, "warm epoch must issue strictly fewer request bytes");
+        assert_eq!(b2, 0, "cache larger than the miss set should absorb everything");
+        assert_eq!(s2.sampling_rounds(), 0, "warm epoch should vote every exchange away");
+    }
 }
 
 #[test]

@@ -3,7 +3,9 @@
 //! partitioner, JSON parser, collectives, and padding over hundreds of
 //! randomized cases. Failures print a `check_one(seed, case, ..)` repro.
 
-use fastsample::dist::{run_workers, sample_mfgs_distributed, NetworkModel, RoundKind};
+use fastsample::dist::{
+    run_workers, sample_mfgs_distributed, CachePolicy, NetworkModel, RoundKind,
+};
 use fastsample::graph::generator::{erdos_renyi, make_dataset, planted_communities, rmat, DatasetParams};
 use fastsample::graph::{CooGraph, CscGraph, NodeId};
 use fastsample::partition::{
@@ -266,9 +268,11 @@ fn prop_budgeted_sampling_equals_single_machine() {
                 .take(8)
                 .collect();
             let mut ws = SamplerWorkspace::new();
+            let mut view = shards_ref[rank].topology.clone();
             let mfgs = sample_mfgs_distributed(
                 comm,
                 &shards_ref[rank],
+                &mut view,
                 &seeds,
                 &fanouts,
                 key,
@@ -281,6 +285,91 @@ fn prop_budgeted_sampling_equals_single_machine() {
         for (seeds, mfgs) in &results {
             let expect = sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
             assert_eq!(mfgs, &expect, "{policy:?} diverged from single-machine");
+        }
+    });
+}
+
+#[test]
+fn prop_adjacency_cached_sampling_equals_single_machine() {
+    // The cache spectrum's bit-equality invariant at random points:
+    // random replication budgets (0 included) × random cache capacities
+    // (tiny, mid, unbounded) × both eviction policies, over several
+    // minibatches so later batches actually sample cache-resident rows.
+    check(110, 16, |i, s| {
+        let d = random_dataset(i, s);
+        let parts = gen::size(s, 2, 3);
+        let book = std::sync::Arc::new(partition_graph(
+            &d.graph,
+            &d.train_ids,
+            &PartitionConfig::new(parts),
+        ));
+        let policy = match s.next_below(3) {
+            0 => ReplicationPolicy::vanilla(),
+            1 => ReplicationPolicy::budgeted(s.next_u64() % 4096),
+            _ => ReplicationPolicy::halo(1),
+        };
+        let cache_bytes = match s.next_below(3) {
+            0 => 128 + s.next_u64() % 512,
+            1 => 4096,
+            _ => u64::MAX >> 1,
+        };
+        let cache_policy = if s.next_below(2) == 0 {
+            CachePolicy::StaticDegree
+        } else {
+            CachePolicy::Clock
+        };
+        let shards = build_shards(&d, &book, &policy);
+        if (0..parts).any(|p| !d.train_ids.iter().any(|&v| book.part_of(v) == p)) {
+            return;
+        }
+        let fanouts = [gen::size(s, 1, 4), gen::size(s, 1, 4)];
+        let key = RngKey::new(s.next_u64());
+        let shards_ref = &shards;
+        let d_ref = &d;
+        let book_ref = &book;
+        let results = run_workers(parts, NetworkModel::free(), move |rank, comm| {
+            let seeds: Vec<NodeId> = d_ref
+                .train_ids
+                .iter()
+                .copied()
+                .filter(|&v| book_ref.part_of(v) == rank)
+                .take(8)
+                .collect();
+            let mut ws = SamplerWorkspace::new();
+            let mut view = shards_ref[rank].topology.clone();
+            view.enable_cache(cache_bytes, cache_policy);
+            let per_batch: Vec<_> = (0..3u64)
+                .map(|b| {
+                    sample_mfgs_distributed(
+                        comm,
+                        &shards_ref[rank],
+                        &mut view,
+                        &seeds,
+                        &fanouts,
+                        key.fold(b),
+                        &mut ws,
+                        KernelKind::Fused,
+                    )
+                })
+                .collect();
+            (seeds, per_batch)
+        });
+        let mut ws = SamplerWorkspace::new();
+        for (seeds, per_batch) in &results {
+            for (b, mfgs) in per_batch.iter().enumerate() {
+                let expect = sample_mfgs(
+                    &d.graph,
+                    seeds,
+                    &fanouts,
+                    key.fold(b as u64),
+                    &mut ws,
+                    KernelKind::Fused,
+                );
+                assert_eq!(
+                    mfgs, &expect,
+                    "{policy:?} cache {cache_bytes}B {cache_policy:?} diverged at batch {b}"
+                );
+            }
         }
     });
 }

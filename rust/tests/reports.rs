@@ -67,6 +67,20 @@ fn replication_frontier_curve_holds_its_contract() {
 }
 
 #[test]
+fn cache_decay_report_holds_its_contract() {
+    // The regenerator enforces the decay invariants internally (cache
+    // off ⇒ flat per-epoch request bytes; cache on ⇒ non-increasing;
+    // unbounded cache ⇒ zero traffic after epoch 0), so a successful run
+    // IS the acceptance check; the text assertions pin the summary.
+    let t = exp::cache_decay("quickstart", 4, 3).unwrap();
+    assert!(t.contains("cache:0 (off)"), "{t}");
+    assert!(t.contains("cache:inf static"), "{t}");
+    assert!(t.contains("cache:inf clock"), "{t}");
+    assert!(t.contains("non-increasing"), "{t}");
+    assert!(t.contains("contract held"), "{t}");
+}
+
+#[test]
 fn rounds_report_shows_the_2l_to_2_reduction() {
     if !artifacts_available() {
         eprintln!("SKIP: artifacts missing");
