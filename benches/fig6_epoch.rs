@@ -47,6 +47,6 @@ fn main() -> anyhow::Result<()> {
     println!("{}", fig6(&opts)?);
 
     // A3 rounds accounting rides along (cheap, quickstart-sized).
-    println!("{}", rounds_report(4, 7)?);
+    println!("{}", rounds_report(4, 7, &fastsample::dist::TransportConfig::Inproc)?);
     Ok(())
 }

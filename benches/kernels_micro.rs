@@ -220,7 +220,8 @@ fn main() {
                                 key.fold(b),
                                 &mut ws,
                                 KernelKind::Fused,
-                            );
+                            )
+                            .unwrap();
                             edges += mfgs.iter().map(|m| m.num_edges()).sum::<usize>();
                         }
                         edges
@@ -245,7 +246,7 @@ fn main() {
             || {
                 run_workers(4, NetworkModel::free(), |rank, comm| {
                     let mut data = vec![rank as f32; words];
-                    comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
+                    comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data).unwrap();
                     data[0]
                 })
             },

@@ -63,6 +63,13 @@ pub fn cache_policy(name: &str) -> Result<crate::dist::CachePolicy> {
     }
 }
 
+/// Resolve a transport spec: `inproc` (the in-process channel mesh,
+/// default), `tcp` (per-peer loopback sockets, ephemeral ports), or
+/// `tcp:<base_port>` (rank r binds `base_port + r`).
+pub fn transport(spec: &str) -> Result<crate::dist::TransportConfig> {
+    spec.parse().map_err(|e: String| anyhow::anyhow!(e))
+}
+
 /// Resolve a network model by name: `infiniband` (paper fabric),
 /// `ethernet`, `free` (accounting only).
 pub fn network(name: &str) -> Result<NetworkModel> {
@@ -110,6 +117,15 @@ mod tests {
             crate::dist::CachePolicy::StaticDegree
         );
         assert!(cache_policy("lru").is_err());
+    }
+
+    #[test]
+    fn transport_specs_parse() {
+        use crate::dist::TransportConfig;
+        assert_eq!(transport("inproc").unwrap(), TransportConfig::Inproc);
+        assert_eq!(transport("tcp").unwrap(), TransportConfig::Tcp { base_port: 0 });
+        assert_eq!(transport("tcp:9200").unwrap(), TransportConfig::Tcp { base_port: 9200 });
+        assert!(transport("quic").is_err());
     }
 
     #[test]

@@ -7,13 +7,38 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::config;
-use crate::dist::{CachePolicy, NetworkModel, RoundKind};
+use crate::dist::{CachePolicy, CommError, NetworkModel, RoundKind, TransportConfig};
 use crate::graph::datasets::{self, IGBH_FULL, MAG240M, OGBN_PAPERS100M, OGBN_PRODUCTS};
 use crate::graph::Dataset;
 use crate::runtime::{Engine, Manifest, ModelRuntime};
 use crate::sampling::rng::RngKey;
 use crate::sampling::{sample_mfgs, KernelKind, MinibatchSchedule, SamplerWorkspace};
 use crate::train::{pad_batch, train_distributed, ScheduleKind, TrainConfig};
+
+/// Collapse per-rank fabric results, preferring a *root-cause* error
+/// over cascade `PeerLost`s (a failing rank makes every peer fail with
+/// "exited mid-collective" — same policy as the trainer's aggregation).
+fn collect_ranks<T>(per_rank: Vec<std::result::Result<T, CommError>>) -> Result<Vec<T>> {
+    let mut out = Vec::with_capacity(per_rank.len());
+    let mut cascade: Option<anyhow::Error> = None;
+    for (rank, r) in per_rank.into_iter().enumerate() {
+        match r {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                let is_cascade = matches!(e, CommError::PeerLost { .. });
+                let err = anyhow::Error::new(e).context(format!("worker {rank}"));
+                if !is_cascade {
+                    return Err(err);
+                }
+                cascade.get_or_insert(err);
+            }
+        }
+    }
+    match cascade {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
 
 fn human_bytes(b: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -217,7 +242,7 @@ pub fn replication_frontier(spec: &str, workers: usize, seed: u64) -> Result<Str
         let shards = build_shards(&d, &book, &policy);
         let counters = Arc::new(Counters::default());
         let shards_ref = &shards;
-        let done: Vec<u64> = run_workers_with(
+        let done: Vec<Result<u64, CommError>> = run_workers_with(
             workers,
             NetworkModel::free(),
             Arc::clone(&counters),
@@ -225,7 +250,8 @@ pub fn replication_frontier(spec: &str, workers: usize, seed: u64) -> Result<Str
                 let shard = &shards_ref[rank];
                 let mut view = shard.topology.clone();
                 let schedule = MinibatchSchedule::new(&shard.train_local, batch, key);
-                let nb = comm.all_reduce_min_u64(schedule.num_batches() as u64).min(max_batches);
+                let nb =
+                    comm.all_reduce_min_u64(schedule.num_batches() as u64)?.min(max_batches);
                 let mut ws = SamplerWorkspace::new();
                 let mut feat = Vec::new();
                 for bi in 0..nb {
@@ -239,16 +265,17 @@ pub fn replication_frontier(spec: &str, workers: usize, seed: u64) -> Result<Str
                         key.fold(bi + 1),
                         &mut ws,
                         KernelKind::Fused,
-                    );
-                    fetch_features(comm, shard, &mfgs[0].src_nodes, None, &mut feat);
+                    )?;
+                    fetch_features(comm, shard, &mfgs[0].src_nodes, None, &mut feat)?;
                     // Stand-in gradient sync: the report measures round
                     // structure, not model compute.
                     let mut grad = vec![0.0f32; 8];
-                    comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad);
+                    comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad)?;
                 }
-                nb
+                Ok(nb)
             },
         );
+        let done: Vec<u64> = collect_ranks(done)?;
         let nb = done[0];
         ensure!(
             nb > 0,
@@ -331,8 +358,13 @@ pub fn replication_frontier(spec: &str, workers: usize, seed: u64) -> Result<Str
 /// * an effectively unbounded cache ⇒ epochs after the first pay **zero**
 ///   sampling rounds and bytes — the whole miss set went resident, and
 ///   the round-skip vote clears every exchange.
-pub fn cache_decay(spec: &str, workers: usize, seed: u64) -> Result<String> {
-    use crate::dist::{run_workers_with, sample_mfgs_distributed, CommStats, Counters};
+pub fn cache_decay(
+    spec: &str,
+    workers: usize,
+    seed: u64,
+    transport: &TransportConfig,
+) -> Result<String> {
+    use crate::dist::{run_workers_on, sample_mfgs_distributed, CommStats, Counters};
     use crate::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
     use std::sync::Arc;
 
@@ -360,8 +392,8 @@ pub fn cache_decay(spec: &str, workers: usize, seed: u64) -> Result<String> {
 
     let mut out = String::new();
     out.push_str(&format!(
-        "Cache decay: {} over {workers} workers, vanilla replication, L={}, batch {batch}, \
-         {epochs} epochs of identical seeds/keys\n\n{:<18} {:>7} {}\n",
+        "Cache decay: {} over {workers} workers ({transport} transport), vanilla replication, \
+         L={}, batch {batch}, {epochs} epochs of identical seeds/keys\n\n{:<18} {:>7} {}\n",
         d.name,
         fanouts.len(),
         "arm",
@@ -372,7 +404,8 @@ pub fn cache_decay(spec: &str, workers: usize, seed: u64) -> Result<String> {
     for (label, cache_bytes, cache_policy) in arms {
         let counters = Arc::new(Counters::default());
         let shards_ref = &shards;
-        let per_rank: Vec<(u64, Vec<CommStats>)> = run_workers_with(
+        let per_rank: Vec<Result<(u64, Vec<CommStats>), CommError>> = run_workers_on(
+            transport,
             workers,
             NetworkModel::free(),
             Arc::clone(&counters),
@@ -386,14 +419,14 @@ pub fn cache_decay(spec: &str, workers: usize, seed: u64) -> Result<String> {
                 // fold): the workload repeats, only the cache state moves.
                 let schedule = MinibatchSchedule::new(&shard.train_local, batch, key);
                 let nb =
-                    comm.all_reduce_min_u64(schedule.num_batches() as u64).min(max_batches);
+                    comm.all_reduce_min_u64(schedule.num_batches() as u64)?.min(max_batches);
                 let mut ws = SamplerWorkspace::new();
                 // Barrier-fenced epoch marks (see `Comm::fenced_snapshot`)
                 // so the fabric-global counters slice into exact
                 // per-epoch deltas.
                 let mut marks = Vec::with_capacity(epochs + 1);
                 for _epoch in 0..epochs {
-                    marks.push(comm.fenced_snapshot());
+                    marks.push(comm.fenced_snapshot()?);
                     for bi in 0..nb {
                         let seeds = schedule.batch(bi as usize);
                         let mfgs = sample_mfgs_distributed(
@@ -405,16 +438,17 @@ pub fn cache_decay(spec: &str, workers: usize, seed: u64) -> Result<String> {
                             key.fold(bi + 1),
                             &mut ws,
                             KernelKind::Fused,
-                        );
+                        )?;
                         std::hint::black_box(mfgs.len());
                     }
                 }
-                marks.push(comm.fenced_snapshot());
+                marks.push(comm.fenced_snapshot()?);
                 let deltas: Vec<CommStats> =
                     marks.windows(2).map(|w| w[1].diff(&w[0])).collect();
-                (nb, deltas)
+                Ok((nb, deltas))
             },
-        );
+        )?;
+        let per_rank: Vec<(u64, Vec<CommStats>)> = collect_ranks(per_rank)?;
         let (nb, deltas) = &per_rank[0];
         ensure!(
             *nb > 0,
@@ -717,13 +751,16 @@ pub fn fig6(opts: &Fig6Opts) -> Result<String> {
 
 /// A3: communication rounds + bytes per mode for one minibatch-sized run
 /// — the 2L → 2 reduction, measured, plus budgeted points of the
-/// replication spectrum in between.
-pub fn rounds_report(workers: usize, seed: u64) -> Result<String> {
+/// replication spectrum in between. The counters tally frames actually
+/// serialized for the configured transport, so running with
+/// `--transport tcp` measures real wire payloads.
+pub fn rounds_report(workers: usize, seed: u64, transport: &TransportConfig) -> Result<String> {
     let artifacts = config::artifacts_dir();
     let d = datasets::quickstart(seed);
     let mut out = String::new();
     out.push_str(&format!(
-        "A3: communication rounds per training run (quickstart, {workers} workers, 2 epochs x 2 batches, L=3)\n\n"
+        "A3: communication rounds per training run (quickstart, {workers} workers, \
+         {transport} transport, 2 epochs x 2 batches, L=3)\n\n"
     ));
     for mode in ["vanilla", "budget:16k", "halo:1", "hybrid", "hybrid+fused"] {
         let mut cfg = TrainConfig::mode("quickstart", mode, workers)?;
@@ -731,6 +768,7 @@ pub fn rounds_report(workers: usize, seed: u64) -> Result<String> {
         cfg.max_batches = Some(2);
         cfg.net = NetworkModel::free();
         cfg.seed = seed;
+        cfg.transport = *transport;
         let report = train_distributed(&d, &artifacts, &cfg)?;
         let s = &report.comm_total;
         out.push_str(&format!("mode: {mode}\n{}\n", s.report()));

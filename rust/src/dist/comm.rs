@@ -9,15 +9,25 @@
 //! *worker*), so "vanilla pays 2(L−1) sampling rounds, hybrid pays 0" is
 //! an assertable fact rather than a claim.
 //!
-//! Transport is an in-process mesh of `mpsc` channels between worker
-//! threads (see [`super::worker`]); the seam where a real RPC transport
-//! would slot in is exactly the private `exchange_impl` below. Because
-//! channels are FIFO per (src, dst) pair and every worker executes the
-//! same sequence of collectives, no per-round barrier is needed; payloads
-//! carry a round tag so a desynchronized worker fails loudly instead of
-//! deadlocking or mismatching types.
+//! Transport is pluggable: [`Comm`] drives a [`Transport`] trait object
+//! that moves length-delimited byte [`Frame`]s between peers. Two
+//! implementations ship: [`ChannelMesh`] (an in-process `mpsc` mesh, the
+//! default — one worker thread ≈ one machine) and
+//! [`super::net::TcpMesh`] (per-peer sockets, length-prefixed
+//! little-endian framing). Every off-rank payload is serialized through
+//! the same [`Wire`] encoding on both transports, so the byte counters
+//! tally what is actually framed for the wire, and results are
+//! bit-identical across transports by construction.
+//!
+//! Because each (src, dst) link is FIFO and every worker executes the
+//! same sequence of collectives, no per-round barrier is needed; frames
+//! carry a round tag, an element width, and a per-rank sequence number so
+//! a desynchronized worker fails loudly with
+//! [`CommError::SequenceMismatch`] instead of deadlocking or mismatching
+//! types. A peer that exits mid-collective surfaces as
+//! [`CommError::PeerLost`] on every rank still talking to it — no hang,
+//! no panic.
 
-use std::any::Any;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -172,45 +182,283 @@ impl CommStats {
     }
 }
 
-/// Type-erased payload crossing a (src, dst) channel: a round tag plus the
-/// typed vector, boxed. The tag catches lockstep bugs (two workers issuing
-/// different collective sequences) with a readable panic.
-type Payload = Box<dyn Any + Send>;
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
 
-/// Tags for control-plane collectives that move no accountable data.
-const TAG_BARRIER: u8 = 200;
-const TAG_MIN_U64: u8 = 201;
-
-/// One worker's handle to the fabric: rank/world identity, the channel
-/// mesh, the network cost model, and the shared counters.
-///
-/// All collectives are *uniform*: every rank in the world must call the
-/// same method in the same order (the usual SPMD contract). A violation
-/// panics with a "collective sequence mismatch" rather than deadlocking.
-pub struct Comm {
-    rank: usize,
-    world: usize,
-    /// Shared accounting; public so trainers can snapshot per-epoch deltas.
-    pub counters: Arc<Counters>,
-    net: NetworkModel,
-    /// `tx[dst]` sends to rank `dst`; the self slot exists but is unused.
-    tx: Vec<Sender<Payload>>,
-    /// `rx[src]` receives from rank `src`; the self slot is unused.
-    rx: Vec<Receiver<Payload>>,
+/// What can go wrong on the fabric. Every [`Comm`] collective surfaces
+/// these instead of panicking or hanging, for both transports.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CommError {
+    /// The peer's end of the link closed (thread exited, socket EOF /
+    /// reset) while a collective still expected traffic from it.
+    PeerLost { rank: usize },
+    /// A frame arrived whose round tag, element width, or sequence
+    /// number does not match this rank's collective — the SPMD contract
+    /// (every rank issues the same collective sequence) was violated.
+    SequenceMismatch { src: usize, detail: String },
+    /// A frame violated the wire format (bad length, bad handshake,
+    /// payload not a whole number of elements).
+    Malformed { src: usize, detail: String },
+    /// Transport-level I/O failure talking to `peer` that is not a clean
+    /// peer loss (e.g. a timeout or a kernel error).
+    Io { peer: usize, detail: String },
 }
 
-impl Comm {
-    /// Build the fully-connected channel mesh for `world` ranks.
-    pub(crate) fn mesh(world: usize, net: NetworkModel, counters: Arc<Counters>) -> Vec<Comm> {
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::PeerLost { rank } => {
+                write!(f, "peer rank {rank} exited mid-collective")
+            }
+            CommError::SequenceMismatch { src, detail } => {
+                write!(f, "collective sequence mismatch with rank {src}: {detail}")
+            }
+            CommError::Malformed { src, detail } => {
+                write!(f, "malformed frame from rank {src}: {detail}")
+            }
+            CommError::Io { peer, detail } => {
+                write!(f, "transport I/O error talking to rank {peer}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Map an I/O error on the link to `peer` into a [`CommError`]: clean
+/// closes become [`CommError::PeerLost`], everything else [`CommError::Io`].
+pub(crate) fn io_to_comm(peer: usize, e: std::io::Error) -> CommError {
+    use std::io::ErrorKind::*;
+    match e.kind() {
+        UnexpectedEof | BrokenPipe | ConnectionReset | ConnectionAborted | NotConnected => {
+            CommError::PeerLost { rank: peer }
+        }
+        _ => CommError::Io { peer, detail: e.to_string() },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frames and the wire encoding
+// ---------------------------------------------------------------------------
+
+/// One transport message: the unit both mesh implementations move.
+///
+/// On the TCP wire a frame is length-prefixed, little-endian:
+///
+/// ```text
+/// offset  size  field
+///      0     4  payload length in bytes (u32 LE)
+///      4     1  kind     — RoundKind index, or a control tag (200+)
+///      5     1  elem     — element width in bytes (1, 4, or 8)
+///      6     2  src      — sender rank (u16 LE)
+///      8     4  seq      — sender's collective sequence number (u32 LE)
+///     12     n  payload  — n bytes, a whole number of `elem`-wide cells
+/// ```
+///
+/// `kind`/`elem`/`seq` exist to catch lockstep bugs: a receiver knows
+/// which collective it is in, so any mismatch is a diagnosable
+/// [`CommError::SequenceMismatch`] instead of a silently mis-typed round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: u8,
+    pub elem: u8,
+    pub src: u16,
+    pub seq: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Frame header bytes on the wire (length prefix included).
+pub const FRAME_HEADER: usize = 12;
+
+/// Upper bound on a single frame's payload (sanity guard against a
+/// corrupt length prefix allocating gigabytes).
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 30;
+
+impl Frame {
+    /// Append the wire form (header + payload) to `out`.
+    pub fn encode_to(&self, out: &mut Vec<u8>) {
+        out.reserve(FRAME_HEADER + self.payload.len());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.push(self.kind);
+        out.push(self.elem);
+        out.extend_from_slice(&self.src.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+    }
+
+    /// Read one frame from `r` (blocking until the full frame arrived).
+    /// I/O errors pass through for the caller to attribute to a peer;
+    /// an over-long length prefix is reported as `InvalidData`.
+    pub fn decode_from(r: &mut impl std::io::Read) -> std::io::Result<Frame> {
+        let mut header = [0u8; FRAME_HEADER];
+        r.read_exact(&mut header)?;
+        let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+        if len > MAX_FRAME_PAYLOAD {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame payload length {len} exceeds {MAX_FRAME_PAYLOAD}"),
+            ));
+        }
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload)?;
+        Ok(Frame {
+            kind: header[4],
+            elem: header[5],
+            src: u16::from_le_bytes([header[6], header[7]]),
+            seq: u32::from_le_bytes([header[8], header[9], header[10], header[11]]),
+            payload,
+        })
+    }
+}
+
+/// Element types that can cross the wire: fixed-width, little-endian,
+/// bit-exact round trips (f32 moves by bit pattern, so NaNs and negative
+/// zeros survive — the loss-curve equivalence tests depend on exactness).
+pub trait Wire: Copy + Send + 'static {
+    const SIZE: usize;
+    fn put_le(self, out: &mut Vec<u8>);
+    fn get_le(b: &[u8]) -> Self;
+}
+
+impl Wire for u8 {
+    const SIZE: usize = 1;
+    #[inline]
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.push(self);
+    }
+    #[inline]
+    fn get_le(b: &[u8]) -> Self {
+        b[0]
+    }
+}
+
+impl Wire for u32 {
+    const SIZE: usize = 4;
+    #[inline]
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn get_le(b: &[u8]) -> Self {
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl Wire for u64 {
+    const SIZE: usize = 8;
+    #[inline]
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn get_le(b: &[u8]) -> Self {
+        u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    }
+}
+
+impl Wire for f32 {
+    const SIZE: usize = 4;
+    #[inline]
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+    #[inline]
+    fn get_le(b: &[u8]) -> Self {
+        f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// Serialize a typed payload for the wire.
+pub fn encode_payload<T: Wire>(data: &[T]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * T::SIZE);
+    for &x in data {
+        x.put_le(&mut out);
+    }
+    out
+}
+
+/// Deserialize a wire payload; `Err` carries a human-readable reason
+/// (payload not a whole number of elements).
+pub fn decode_payload<T: Wire>(bytes: &[u8]) -> Result<Vec<T>, String> {
+    if bytes.len() % T::SIZE != 0 {
+        return Err(format!(
+            "payload of {} bytes is not a whole number of {}-byte elements",
+            bytes.len(),
+            T::SIZE
+        ));
+    }
+    Ok(bytes.chunks_exact(T::SIZE).map(T::get_le).collect())
+}
+
+// ---------------------------------------------------------------------------
+// The transport seam
+// ---------------------------------------------------------------------------
+
+/// A fabric endpoint for one rank: point-to-point FIFO frame delivery to
+/// and from every peer. [`Comm`] is written entirely against this trait;
+/// implementations decide whether frames cross threads
+/// ([`ChannelMesh`]) or sockets ([`super::net::TcpMesh`]).
+///
+/// Contract:
+/// * `send`/`recv` are FIFO per (src, dst) pair;
+/// * `send` must not block on the destination's consumption (queue or
+///   deliver immediately) — the collective loop relies on reaching its
+///   receive phase no matter how large a round's payloads are;
+/// * [`Transport::flush`] is called at every round boundary (after a
+///   rank's last send of the round, before its first receive): after it
+///   returns `Ok`, every frame sent so far is guaranteed to reach its
+///   peer without further transport calls, and any already-failed link
+///   must be reported here at the latest;
+/// * a peer that goes away surfaces as [`CommError::PeerLost`] from the
+///   next `send`, `flush`, or `recv` touching it — never a hang.
+pub trait Transport: Send {
+    /// This endpoint's rank.
+    fn rank(&self) -> usize;
+    /// Number of ranks on the fabric.
+    fn world(&self) -> usize;
+    /// Queue `frame` for `dst` (`dst != rank`).
+    fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError>;
+    /// Push all buffered frames toward their peers (round boundary).
+    fn flush(&mut self) -> Result<(), CommError>;
+    /// Next frame from `src` (`src != rank`), blocking until it arrives
+    /// or the link dies.
+    fn recv(&mut self, src: usize) -> Result<Frame, CommError>;
+    /// Implementation name, for logs/reports (`"inproc"`, `"tcp"`).
+    fn name(&self) -> &'static str;
+    /// Best-effort teardown (close sockets, drop channels). Errors are
+    /// swallowed — shutdown is called on paths that are already failing.
+    fn shutdown(&mut self) {}
+}
+
+/// The in-process default: a fully-connected mesh of `mpsc` channels
+/// between worker threads. Unbounded buffering, so `flush` is a no-op;
+/// a dropped peer closes its channel ends, which `send`/`recv` report as
+/// [`CommError::PeerLost`].
+pub struct ChannelMesh {
+    rank: usize,
+    world: usize,
+    /// `tx[dst]` sends to rank `dst`; the self slot is `None`.
+    tx: Vec<Option<Sender<Frame>>>,
+    /// `rx[src]` receives from rank `src`; the self slot is `None`.
+    rx: Vec<Option<Receiver<Frame>>>,
+}
+
+impl ChannelMesh {
+    /// Build the fully-connected mesh for `world` ranks.
+    pub fn mesh(world: usize) -> Vec<ChannelMesh> {
         assert!(world >= 1, "world size must be >= 1");
-        let mut tx_of_rank: Vec<Vec<Sender<Payload>>> =
-            (0..world).map(|_| Vec::with_capacity(world)).collect();
-        let mut rx_of_rank: Vec<Vec<Option<Receiver<Payload>>>> =
+        let mut tx_of_rank: Vec<Vec<Option<Sender<Frame>>>> =
+            (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+        let mut rx_of_rank: Vec<Vec<Option<Receiver<Frame>>>> =
             (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
         for src in 0..world {
             for dst in 0..world {
+                if src == dst {
+                    continue;
+                }
                 let (tx, rx) = channel();
-                tx_of_rank[src].push(tx);
+                tx_of_rank[src][dst] = Some(tx);
                 rx_of_rank[dst][src] = Some(rx);
             }
         }
@@ -218,14 +466,97 @@ impl Comm {
             .into_iter()
             .zip(rx_of_rank)
             .enumerate()
-            .map(|(rank, (tx, rx))| Comm {
-                rank,
-                world,
-                counters: Arc::clone(&counters),
-                net: net.clone(),
-                tx,
-                rx: rx.into_iter().map(|r| r.expect("mesh slot filled")).collect(),
-            })
+            .map(|(rank, (tx, rx))| ChannelMesh { rank, world, tx, rx })
+            .collect()
+    }
+}
+
+impl Transport for ChannelMesh {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError> {
+        self.tx[dst]
+            .as_ref()
+            .expect("send to self goes through the inbox pass-through, not the transport")
+            .send(frame)
+            .map_err(|_| CommError::PeerLost { rank: dst })
+    }
+
+    fn flush(&mut self) -> Result<(), CommError> {
+        Ok(())
+    }
+
+    fn recv(&mut self, src: usize) -> Result<Frame, CommError> {
+        self.rx[src]
+            .as_ref()
+            .expect("recv from self goes through the inbox pass-through, not the transport")
+            .recv()
+            .map_err(|_| CommError::PeerLost { rank: src })
+    }
+
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Comm: typed collectives over any transport
+// ---------------------------------------------------------------------------
+
+/// Tags for control-plane collectives that move no accountable data.
+const TAG_BARRIER: u8 = 200;
+const TAG_MIN_U64: u8 = 201;
+
+/// One worker's handle to the fabric: rank/world identity, the pluggable
+/// transport, the network cost model, and the shared counters.
+///
+/// All collectives are *uniform*: every rank in the world must call the
+/// same method in the same order (the usual SPMD contract). A violation
+/// surfaces as [`CommError::SequenceMismatch`]; a peer dying
+/// mid-collective as [`CommError::PeerLost`] — in both cases an error
+/// return, not a hang or a panic.
+pub struct Comm {
+    rank: usize,
+    world: usize,
+    /// Shared accounting; public so trainers can snapshot per-epoch deltas.
+    pub counters: Arc<Counters>,
+    net: NetworkModel,
+    transport: Box<dyn Transport>,
+    /// This rank's collective counter; equal on every rank in lockstep,
+    /// stamped into each frame so drift is detected at the next round.
+    seq: u32,
+}
+
+impl Comm {
+    /// Wrap an already-connected transport endpoint.
+    pub fn from_transport(
+        transport: Box<dyn Transport>,
+        net: NetworkModel,
+        counters: Arc<Counters>,
+    ) -> Comm {
+        Comm {
+            rank: transport.rank(),
+            world: transport.world(),
+            counters,
+            net,
+            transport,
+            seq: 0,
+        }
+    }
+
+    /// Build the in-process channel mesh for `world` ranks (the default
+    /// transport — see [`super::net::TransportConfig`] for the sockets
+    /// alternative).
+    pub(crate) fn mesh(world: usize, net: NetworkModel, counters: Arc<Counters>) -> Vec<Comm> {
+        ChannelMesh::mesh(world)
+            .into_iter()
+            .map(|t| Comm::from_transport(Box::new(t), net.clone(), Arc::clone(&counters)))
             .collect()
     }
 
@@ -243,43 +574,44 @@ impl Comm {
         &self.net
     }
 
+    /// The underlying transport's name (`"inproc"`, `"tcp"`).
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
     /// One typed all-to-all round: `outboxes[dst]` goes to rank `dst`,
     /// the return value's `[src]` slot is what rank `src` sent here (the
     /// self slot passes through untouched and untaxed).
     ///
     /// Accounting: the round is counted **once** per collective (rank 0
     /// increments), bytes are charged per worker for off-rank payloads
-    /// only, and the network model injects `latency + bytes/bandwidth`
-    /// of wall time on each worker.
-    pub fn exchange<T: Send + 'static>(
+    /// only — measured from the framed wire payloads, identically on
+    /// both transports — and the network model injects
+    /// `latency + bytes/bandwidth` of wall time on each worker.
+    pub fn exchange<T: Wire>(
         &mut self,
         kind: RoundKind,
         outboxes: Vec<Vec<T>>,
-    ) -> Vec<Vec<T>> {
+    ) -> Result<Vec<Vec<T>>, CommError> {
         self.exchange_impl(kind.index() as u8, Some(kind), outboxes)
     }
 
     /// Rendezvous: returns once every rank has entered the barrier.
     /// Control-plane only — not charged to any `RoundKind`.
-    pub fn barrier(&mut self) {
-        let empty: Vec<Vec<u8>> = (0..self.world).map(|_| Vec::new()).collect();
-        let _ = self.exchange_impl(TAG_BARRIER, None, empty);
+    pub fn barrier(&mut self) -> Result<(), CommError> {
+        self.broadcast_impl::<u8>(TAG_BARRIER, None, &[])?;
+        Ok(())
     }
 
     /// Global minimum (used to agree on batches/epoch). Control-plane —
     /// uncharged, like the barrier.
-    pub fn all_reduce_min_u64(&mut self, v: u64) -> u64 {
-        let outboxes: Vec<Vec<u64>> = (0..self.world)
-            .map(|dst| if dst == self.rank { Vec::new() } else { vec![v] })
-            .collect();
-        let inboxes = self.exchange_impl(TAG_MIN_U64, None, outboxes);
+    pub fn all_reduce_min_u64(&mut self, v: u64) -> Result<u64, CommError> {
+        let inboxes = self.broadcast_impl(TAG_MIN_U64, None, &[v])?;
         let mut m = v;
-        for (src, inbox) in inboxes.iter().enumerate() {
-            if src != self.rank {
-                m = m.min(inbox[0]);
-            }
+        for inbox in inboxes.iter().flatten() {
+            m = m.min(inbox[0]);
         }
-        m
+        Ok(m)
     }
 
     /// Barrier-fenced snapshot of the shared counters: every rank gets
@@ -290,11 +622,11 @@ impl Comm {
     /// `barrier(); snapshot()` lets a fast rank charge the next epoch's
     /// first bytes before a slow rank has marked the boundary.
     /// Collective, control-plane only (uncharged).
-    pub fn fenced_snapshot(&mut self) -> CommStats {
-        self.barrier();
+    pub fn fenced_snapshot(&mut self) -> Result<CommStats, CommError> {
+        self.barrier()?;
         let s = self.counters.snapshot();
-        self.barrier();
-        s
+        self.barrier()?;
+        Ok(s)
     }
 
     /// Round-skip vote: true iff `v == 0` on **every** rank. One
@@ -302,8 +634,8 @@ impl Comm {
     /// protocol `dist::sampling` uses to skip a SampleRequest/Response
     /// pair when no rank has frontier misses (so sampling rounds are
     /// measured per level, not assumed per scheme).
-    pub fn all_zero_u64(&mut self, v: u64) -> bool {
-        self.all_reduce_min_u64(u64::from(v == 0)) == 1
+    pub fn all_zero_u64(&mut self, v: u64) -> Result<bool, CommError> {
+        Ok(self.all_reduce_min_u64(u64::from(v == 0))? == 1)
     }
 
     /// Mean all-reduce over `data`, element-wise across ranks, in place.
@@ -314,16 +646,29 @@ impl Comm {
     /// exchange (each rank broadcasts its buffer) rather than a ring:
     /// same math, simpler lockstep; the byte accounting reflects the
     /// broadcast honestly (`(W-1) * len * 4` per worker).
-    pub fn all_reduce_mean_f32(&mut self, kind: RoundKind, data: &mut [f32]) {
+    pub fn all_reduce_mean_f32(
+        &mut self,
+        kind: RoundKind,
+        data: &mut [f32],
+    ) -> Result<(), CommError> {
         let mine = data.to_vec();
-        let outboxes: Vec<Vec<f32>> = (0..self.world)
-            .map(|dst| if dst == self.rank { Vec::new() } else { mine.clone() })
-            .collect();
-        let inboxes = self.exchange(kind, outboxes);
+        let inboxes = self.broadcast_impl(kind.index() as u8, Some(kind), &mine)?;
         data.fill(0.0);
         for src in 0..self.world {
-            let part: &[f32] = if src == self.rank { &mine } else { &inboxes[src] };
-            assert_eq!(part.len(), data.len(), "all-reduce length mismatch across ranks");
+            let part: &[f32] = match &inboxes[src] {
+                None => &mine,
+                Some(v) => v,
+            };
+            if part.len() != data.len() {
+                return Err(CommError::SequenceMismatch {
+                    src,
+                    detail: format!(
+                        "all-reduce length mismatch: {} vs {} elements",
+                        part.len(),
+                        data.len()
+                    ),
+                });
+            }
             for (acc, x) in data.iter_mut().zip(part) {
                 *acc += *x;
             }
@@ -332,27 +677,81 @@ impl Comm {
         for x in data.iter_mut() {
             *x *= inv;
         }
+        Ok(())
     }
 
-    fn exchange_impl<T: Send + 'static>(
+    /// All-to-all with per-destination payloads: serialize each outbox,
+    /// ship, then collect one frame per peer (self slot passes through).
+    fn exchange_impl<T: Wire>(
         &mut self,
         tag: u8,
         track: Option<RoundKind>,
         outboxes: Vec<Vec<T>>,
-    ) -> Vec<Vec<T>> {
+    ) -> Result<Vec<Vec<T>>, CommError> {
         assert_eq!(outboxes.len(), self.world, "need one outbox per rank");
-        let mut inboxes: Vec<Option<Vec<T>>> = (0..self.world).map(|_| None).collect();
+        let seq = self.bump_seq();
+        let my_src = self.rank as u16;
+        let elem = T::SIZE as u8;
+        let mut self_data: Option<Vec<T>> = None;
         let mut sent_bytes = 0u64;
         for (dst, data) in outboxes.into_iter().enumerate() {
             if dst == self.rank {
-                inboxes[dst] = Some(data);
+                self_data = Some(data);
                 continue;
             }
-            sent_bytes += (data.len() * std::mem::size_of::<T>()) as u64;
-            if self.tx[dst].send(Box::new((tag, data))).is_err() {
-                panic!("rank {}: rank {dst} exited mid-collective", self.rank);
-            }
+            let payload = encode_payload(&data);
+            sent_bytes += payload.len() as u64;
+            let frame = Frame { kind: tag, elem, src: my_src, seq, payload };
+            self.transport.send(dst, frame)?;
         }
+        self.finish_sends(track, sent_bytes)?;
+        let mut inboxes = self.recv_round::<T>(tag, seq)?;
+        inboxes[self.rank] = self_data;
+        Ok(inboxes.into_iter().map(|o| o.expect("inbox filled")).collect())
+    }
+
+    /// Broadcast-shaped round: every peer gets the **same** payload, so
+    /// it is encoded once and only the byte buffer is cloned per peer —
+    /// the grad-sync hot path skips W−1 redundant element-wise encodes.
+    /// Returns one inbox per peer; the self slot is `None`.
+    fn broadcast_impl<T: Wire>(
+        &mut self,
+        tag: u8,
+        track: Option<RoundKind>,
+        data: &[T],
+    ) -> Result<Vec<Option<Vec<T>>>, CommError> {
+        let seq = self.bump_seq();
+        let my_src = self.rank as u16;
+        let elem = T::SIZE as u8;
+        let payload = encode_payload(data);
+        let mut sent_bytes = 0u64;
+        for dst in 0..self.world {
+            if dst == self.rank {
+                continue;
+            }
+            sent_bytes += payload.len() as u64;
+            let frame = Frame { kind: tag, elem, src: my_src, seq, payload: payload.clone() };
+            self.transport.send(dst, frame)?;
+        }
+        self.finish_sends(track, sent_bytes)?;
+        self.recv_round::<T>(tag, seq)
+    }
+
+    #[inline]
+    fn bump_seq(&mut self) -> u32 {
+        let seq = self.seq;
+        self.seq = self.seq.wrapping_add(1);
+        seq
+    }
+
+    /// Shared send epilogue: round-boundary flush, accounting, modeled
+    /// fabric delay.
+    fn finish_sends(
+        &mut self,
+        track: Option<RoundKind>,
+        sent_bytes: u64,
+    ) -> Result<(), CommError> {
+        self.transport.flush()?;
         if let Some(kind) = track {
             self.counters.add_bytes(kind, sent_bytes);
             if self.rank == 0 {
@@ -360,30 +759,53 @@ impl Comm {
             }
         }
         self.net.delay(sent_bytes);
-        for src in 0..self.world {
+        Ok(())
+    }
+
+    /// Shared receive half: one frame per peer, validated against this
+    /// rank's (tag, elem, seq) lockstep position. Self slot stays `None`.
+    fn recv_round<T: Wire>(
+        &mut self,
+        tag: u8,
+        seq: u32,
+    ) -> Result<Vec<Option<Vec<T>>>, CommError> {
+        let mut inboxes: Vec<Option<Vec<T>>> = (0..self.world).map(|_| None).collect();
+        for (src, inbox) in inboxes.iter_mut().enumerate() {
             if src == self.rank {
                 continue;
             }
-            let payload = match self.rx[src].recv() {
-                Ok(p) => p,
-                Err(_) => panic!("rank {}: rank {src} exited mid-collective", self.rank),
-            };
-            let boxed: Box<(u8, Vec<T>)> = payload.downcast().unwrap_or_else(|_| {
-                panic!(
-                    "rank {}: payload type mismatch from rank {src} — \
-                     workers issued different collective sequences",
-                    self.rank
-                )
-            });
-            let (got_tag, data) = *boxed;
-            assert_eq!(
-                got_tag, tag,
-                "rank {}: collective sequence mismatch with rank {src}",
-                self.rank
-            );
-            inboxes[src] = Some(data);
+            let frame = self.transport.recv(src)?;
+            if frame.src as usize != src {
+                return Err(CommError::Malformed {
+                    src,
+                    detail: format!("frame stamped src {} arrived on link {src}", frame.src),
+                });
+            }
+            if frame.kind != tag || frame.elem as usize != T::SIZE || frame.seq != seq {
+                return Err(CommError::SequenceMismatch {
+                    src,
+                    detail: format!(
+                        "expected (kind {tag}, elem {}, seq {seq}), \
+                         got (kind {}, elem {}, seq {}) — \
+                         workers issued different collective sequences",
+                        T::SIZE,
+                        frame.kind,
+                        frame.elem,
+                        frame.seq
+                    ),
+                });
+            }
+            let data = decode_payload::<T>(&frame.payload)
+                .map_err(|detail| CommError::Malformed { src, detail })?;
+            *inbox = Some(data);
         }
-        inboxes.into_iter().map(|o| o.expect("inbox filled")).collect()
+        Ok(inboxes)
+    }
+}
+
+impl Drop for Comm {
+    fn drop(&mut self) {
+        self.transport.shutdown();
     }
 }
 
@@ -398,7 +820,7 @@ mod tests {
             // Rank r sends the single value r*10 + dst to each dst.
             let outboxes: Vec<Vec<u32>> =
                 (0..3).map(|dst| vec![(rank * 10 + dst) as u32]).collect();
-            comm.exchange(RoundKind::SampleRequest, outboxes)
+            comm.exchange(RoundKind::SampleRequest, outboxes).unwrap()
         });
         for (rank, inboxes) in results.iter().enumerate() {
             for (src, inbox) in inboxes.iter().enumerate() {
@@ -414,7 +836,7 @@ mod tests {
             // Two rounds; each worker ships 8 bytes (2 u32) to each peer.
             for _ in 0..2 {
                 let outboxes: Vec<Vec<u32>> = (0..4).map(|_| vec![rank as u32, 7]).collect();
-                comm.exchange(RoundKind::FeatureRequest, outboxes);
+                comm.exchange(RoundKind::FeatureRequest, outboxes).unwrap();
             }
         });
         let s = counters.snapshot();
@@ -428,7 +850,7 @@ mod tests {
     fn all_reduce_mean_is_identical_on_every_rank() {
         let results = run_workers(4, NetworkModel::free(), |rank, comm| {
             let mut data = vec![rank as f32, 1.0, -2.0 * rank as f32];
-            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
+            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data).unwrap();
             data
         });
         for r in &results {
@@ -441,8 +863,8 @@ mod tests {
     fn min_and_barrier_are_uncharged() {
         let counters = Arc::new(Counters::default());
         let mins = run_workers_with(3, NetworkModel::free(), Arc::clone(&counters), |rank, comm| {
-            comm.barrier();
-            comm.all_reduce_min_u64(10 + rank as u64)
+            comm.barrier().unwrap();
+            comm.all_reduce_min_u64(10 + rank as u64).unwrap()
         });
         assert!(mins.iter().all(|&m| m == 10));
         let s = counters.snapshot();
@@ -457,8 +879,8 @@ mod tests {
             // Rank-skewed traffic before the fence; the fence must still
             // hand every rank one consistent cut of the counters.
             let outboxes: Vec<Vec<u8>> = (0..3).map(|_| vec![7u8; rank + 1]).collect();
-            comm.exchange(RoundKind::GradSync, outboxes);
-            comm.fenced_snapshot()
+            comm.exchange(RoundKind::GradSync, outboxes).unwrap();
+            comm.fenced_snapshot().unwrap()
         });
         assert_eq!(snaps[0], snaps[1]);
         assert_eq!(snaps[1], snaps[2]);
@@ -472,8 +894,8 @@ mod tests {
         let counters = Arc::new(Counters::default());
         let votes = run_workers_with(3, NetworkModel::free(), Arc::clone(&counters), |rank, comm| {
             // Everyone zero → true; then rank 1 non-zero → false everywhere.
-            let a = comm.all_zero_u64(0);
-            let b = comm.all_zero_u64(if rank == 1 { 5 } else { 0 });
+            let a = comm.all_zero_u64(0).unwrap();
+            let b = comm.all_zero_u64(if rank == 1 { 5 } else { 0 }).unwrap();
             (a, b)
         });
         assert!(votes.iter().all(|&(a, b)| a && !b));
@@ -485,11 +907,11 @@ mod tests {
     #[test]
     fn single_rank_world_degenerates_cleanly() {
         let out = run_workers(1, NetworkModel::free(), |_rank, comm| {
-            comm.barrier();
+            comm.barrier().unwrap();
             let mut data = vec![3.0f32, -1.0];
-            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
-            let m = comm.all_reduce_min_u64(9);
-            let echoed = comm.exchange(RoundKind::SampleRequest, vec![vec![42u32]]);
+            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data).unwrap();
+            let m = comm.all_reduce_min_u64(9).unwrap();
+            let echoed = comm.exchange(RoundKind::SampleRequest, vec![vec![42u32]]).unwrap();
             (data, m, echoed)
         });
         let (data, m, echoed) = &out[0];
@@ -510,5 +932,79 @@ mod tests {
         let rep = b.report();
         assert!(rep.contains("grad-sync"));
         assert!(rep.contains("total"));
+    }
+
+    #[test]
+    fn payload_codec_round_trips_every_wire_type() {
+        let u8s: Vec<u8> = vec![0, 1, 255, 17];
+        assert_eq!(decode_payload::<u8>(&encode_payload(&u8s)).unwrap(), u8s);
+        let u32s: Vec<u32> = vec![0, 1, u32::MAX, 0xDEAD_BEEF];
+        assert_eq!(decode_payload::<u32>(&encode_payload(&u32s)).unwrap(), u32s);
+        let u64s: Vec<u64> = vec![0, u64::MAX, 1 << 40];
+        assert_eq!(decode_payload::<u64>(&encode_payload(&u64s)).unwrap(), u64s);
+        // f32 must round-trip by bit pattern, including NaN and -0.0.
+        let f32s: Vec<f32> = vec![0.0, -0.0, 1.5, f32::NAN, f32::INFINITY, -3.25e-12];
+        let back = decode_payload::<f32>(&encode_payload(&f32s)).unwrap();
+        assert_eq!(f32s.len(), back.len());
+        for (a, b) in f32s.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Ragged byte counts are malformed, not mis-decoded.
+        assert!(decode_payload::<u32>(&[1, 2, 3]).is_err());
+        assert_eq!(decode_payload::<u32>(&[]).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn frame_codec_round_trips_through_a_byte_stream() {
+        let frames = [
+            Frame { kind: 0, elem: 4, src: 3, seq: 9, payload: encode_payload(&[1u32, 2, 3]) },
+            Frame { kind: TAG_BARRIER, elem: 1, src: 0, seq: 0, payload: Vec::new() },
+            Frame { kind: 4, elem: 4, src: 65535, seq: u32::MAX, payload: vec![0u8; 70_000] },
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            f.encode_to(&mut wire);
+        }
+        let mut cursor = std::io::Cursor::new(wire);
+        for f in &frames {
+            assert_eq!(&Frame::decode_from(&mut cursor).unwrap(), f);
+        }
+        // Stream fully consumed — framing is self-delimiting.
+        assert!(Frame::decode_from(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn dropped_peer_surfaces_as_peer_lost_not_a_hang() {
+        // Rank 1 exits before the second collective; the survivors must
+        // get a clean CommError::PeerLost from their next exchange — no
+        // hang. Rank 0 receives from rank 1 before anyone else can
+        // abort, so it names the dead peer exactly; rank 2 may instead
+        // observe the cascade (rank 0 aborting) and name rank 0.
+        let results = run_workers(3, NetworkModel::free(), |rank, comm| {
+            let boxes = |n: u32| (0..3).map(|_| vec![n]).collect::<Vec<Vec<u32>>>();
+            let first = comm.exchange(RoundKind::GradSync, boxes(7));
+            assert!(first.is_ok(), "healthy round failed: {first:?}");
+            if rank == 1 {
+                return None; // dies mid-run; its Comm drops here
+            }
+            Some(comm.exchange(RoundKind::GradSync, boxes(8)))
+        });
+        assert!(results[1].is_none());
+        assert_eq!(results[0], Some(Err(CommError::PeerLost { rank: 1 })));
+        match &results[2] {
+            Some(Err(CommError::PeerLost { rank: lost })) => {
+                assert!(*lost == 0 || *lost == 1, "rank 2 named rank {lost}")
+            }
+            other => panic!("rank 2: expected PeerLost, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn comm_error_display_names_the_peer() {
+        let e = CommError::PeerLost { rank: 3 };
+        assert!(e.to_string().contains("rank 3"));
+        assert!(e.to_string().contains("exited mid-collective"));
+        let m = CommError::SequenceMismatch { src: 2, detail: "kind 1 vs 2".into() };
+        assert!(m.to_string().contains("rank 2"));
     }
 }

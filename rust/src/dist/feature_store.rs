@@ -18,7 +18,7 @@ use std::collections::HashMap;
 use crate::graph::NodeId;
 use crate::partition::WorkerShard;
 
-use super::comm::{Comm, RoundKind};
+use super::comm::{Comm, CommError, RoundKind};
 use super::feature_cache::FeatureCache;
 
 /// Accounting for one `fetch_features` call (per worker, per call — the
@@ -43,14 +43,15 @@ pub struct FetchStats {
 /// Local rows copy straight from the shard; remote rows come from the
 /// cache when resident, otherwise from their owners via the two feature
 /// rounds (deduplicated per call — each missing row crosses the wire at
-/// most once). Freshly fetched rows are offered to the cache.
+/// most once). Freshly fetched rows are offered to the cache. Fabric
+/// failures surface as `Err(CommError)` on every transport.
 pub fn fetch_features(
     comm: &mut Comm,
     shard: &WorkerShard,
     nodes: &[NodeId],
     mut cache: Option<&mut FeatureCache>,
     out: &mut Vec<f32>,
-) -> FetchStats {
+) -> Result<FetchStats, CommError> {
     let f = shard.feat_dim;
     let world = comm.world();
     let rank = comm.rank();
@@ -88,7 +89,7 @@ pub fn fetch_features(
     }
 
     // ---- The two feature rounds (collective even with zero misses).
-    let granted = comm.exchange(RoundKind::FeatureRequest, requests);
+    let granted = comm.exchange(RoundKind::FeatureRequest, requests)?;
     let mut replies: Vec<Vec<f32>> = Vec::with_capacity(world);
     for (src, req) in granted.iter().enumerate() {
         let mut rep: Vec<f32> = Vec::with_capacity(req.len() * f);
@@ -100,7 +101,7 @@ pub fn fetch_features(
         }
         replies.push(rep);
     }
-    let rows = comm.exchange(RoundKind::FeatureResponse, replies);
+    let rows = comm.exchange(RoundKind::FeatureResponse, replies)?;
     for (src, inbox) in rows.iter().enumerate() {
         if src != rank {
             stats.bytes_in += (inbox.len() * 4) as u64;
@@ -117,7 +118,7 @@ pub fn fetch_features(
             c.insert(v, &rows[p][j * f..(j + 1) * f]);
         }
     }
-    stats
+    Ok(stats)
 }
 
 /// Warm a cache with `nodes` (typically
@@ -129,7 +130,7 @@ pub fn prefill_cache(
     shard: &WorkerShard,
     nodes: &[NodeId],
     cache: &mut FeatureCache,
-) -> FetchStats {
+) -> Result<FetchStats, CommError> {
     let mut scratch = Vec::new();
     fetch_features(comm, shard, nodes, Some(cache), &mut scratch)
 }
@@ -175,7 +176,7 @@ mod tests {
             let nodes: Vec<NodeId> =
                 base.iter().chain(base.iter()).chain(base.iter()).copied().collect();
             let mut out = Vec::new();
-            let stats = fetch_features(comm, shard, &nodes, None, &mut out);
+            let stats = fetch_features(comm, shard, &nodes, None, &mut out).unwrap();
             (nodes, out, stats)
         });
         for (nodes, out, stats) in &results {
@@ -204,9 +205,10 @@ mod tests {
                 .collect();
             let mut cache =
                 FeatureCache::new(CachePolicy::StaticDegree, remote.len(), d_ref.feat_dim);
-            prefill_cache(comm, shard, &remote, &mut cache);
+            prefill_cache(comm, shard, &remote, &mut cache).unwrap();
             let mut out = Vec::new();
-            let stats = fetch_features(comm, shard, &remote, Some(&mut cache), &mut out);
+            let stats =
+                fetch_features(comm, shard, &remote, Some(&mut cache), &mut out).unwrap();
             (remote, out, stats)
         });
         for (remote, out, stats) in &results {

@@ -6,13 +6,19 @@
 //!
 //! Structure:
 //!
-//! * [`comm`] — [`RoundKind`]-tagged collectives over an in-process
-//!   channel mesh, charged to shared [`Counters`] (rounds per collective,
-//!   bytes per worker). The seam where a real RPC transport would go.
-//! * [`net`] — [`NetworkModel`]: latency + bandwidth cost per round, so
-//!   Fig 5/6 epoch times are simulatable on one machine.
-//! * [`worker`] — [`run_workers`]/[`run_workers_with`]: spawn W
-//!   rendezvous-connected worker threads, collect per-rank results.
+//! * [`comm`] — [`RoundKind`]-tagged collectives over a pluggable
+//!   [`Transport`] (length-prefixed byte [`Frame`]s), charged to shared
+//!   [`Counters`] (rounds per collective, bytes per worker — measured
+//!   from the framed wire payloads). Fabric failures surface as
+//!   [`CommError`] (a lost peer is named, never hung on).
+//! * [`net`] — [`TcpMesh`]: the socket transport (per-peer loopback/real
+//!   TCP, rank handshake, flush at round boundaries);
+//!   [`TransportConfig`]: transport selection (`inproc` |
+//!   `tcp:<base_port>`); [`NetworkModel`]: latency + bandwidth cost per
+//!   round, so Fig 5/6 epoch times are simulatable on one machine.
+//! * [`worker`] — [`run_workers`]/[`run_workers_with`]/[`run_workers_on`]
+//!   /[`run_workers_over`]: spawn W rendezvous-connected worker threads
+//!   over any transport, collect per-rank results.
 //! * [`sampling`] — [`sample_mfgs_distributed`]: one unified sampler
 //!   over the replication-budget spectrum — frontier nodes with
 //!   materialized adjacency (local rows + budgeted halo + cached rows)
@@ -39,9 +45,11 @@ pub mod sampling;
 pub mod worker;
 
 pub use cache::{CachePolicy, SlabCache};
-pub use comm::{Comm, CommStats, Counters, RoundKind};
+pub use comm::{
+    ChannelMesh, Comm, CommError, CommStats, Counters, Frame, RoundKind, Transport, Wire,
+};
 pub use feature_cache::{hottest_remote_nodes, FeatureCache};
 pub use feature_store::{fetch_features, prefill_cache, FetchStats};
-pub use net::NetworkModel;
+pub use net::{NetworkModel, TcpMesh, TransportConfig};
 pub use sampling::sample_mfgs_distributed;
-pub use worker::{run_workers, run_workers_with};
+pub use worker::{run_workers, run_workers_on, run_workers_over, run_workers_with};

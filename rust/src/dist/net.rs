@@ -1,6 +1,20 @@
-//! Network cost model for the simulated fabric.
+//! The fabric: the socket transport ([`TcpMesh`]), transport selection
+//! ([`TransportConfig`]), and the network cost model ([`NetworkModel`]).
 //!
-//! Every collective round a worker participates in is charged
+//! [`TcpMesh`] backs the typed-round API of [`super::comm`] with real
+//! sockets: one TCP connection per directed (src, dst) pair, a rank
+//! handshake at connect, length-prefixed little-endian frames (see
+//! [`Frame`]), a dedicated writer thread per outgoing link (sends queue
+//! instead of blocking, so the symmetric all-to-all cannot deadlock on
+//! kernel socket buffering — the round-boundary flush is an error
+//! checkpoint), and poisoned-peer error propagation — a dead peer
+//! surfaces as [`CommError::PeerLost`] from the next operation touching
+//! its link, never as a hang or a panic. Because both transports
+//! serialize payloads through the same [`super::comm::Wire`] encoding, a
+//! training run is bit-identical over sockets and over the in-process
+//! channel mesh (`rust/tests/transport_equivalence.rs` pins this).
+//!
+//! [`NetworkModel`] charges each collective round
 //! `latency + bytes_sent / bandwidth` of wall time (injected with
 //! `thread::sleep`, so the phase breakdowns of Fig 5/6 reflect the fabric
 //! even when all "workers" are threads on one machine). The `free()` model
@@ -8,7 +22,15 @@
 //! the equivalence tests and CI run under, so they stay fast and
 //! deterministic in wall time.
 
+use std::io::{BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::Duration;
+
+use super::comm::{io_to_comm, ChannelMesh, CommError, Frame, Transport};
 
 /// Cost model of the fabric connecting workers (one worker ≈ one machine
 /// of the paper's testbed).
@@ -80,6 +102,351 @@ impl NetworkModel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Transport selection
+// ---------------------------------------------------------------------------
+
+/// Which [`Transport`] a run's workers connect through. Parsed from
+/// `--transport inproc|tcp|tcp:<base_port>` and the `+tcp` mode suffix;
+/// uniform across ranks (like the replication policy — it is part of the
+/// SPMD contract, not a per-rank knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportConfig {
+    /// The in-process channel mesh (default): zero-copy-ish, no sockets.
+    #[default]
+    Inproc,
+    /// Per-peer TCP sockets on loopback. `base_port` 0 (the default)
+    /// binds ephemeral ports — always safe; a fixed base binds
+    /// `base_port + rank` per rank, for deployments that need known
+    /// ports.
+    Tcp { base_port: u16 },
+}
+
+impl TransportConfig {
+    /// Connect a full mesh for `world` ranks and return one endpoint per
+    /// rank, in rank order.
+    pub fn build_mesh(&self, world: usize) -> std::io::Result<Vec<Box<dyn Transport>>> {
+        match *self {
+            TransportConfig::Inproc => Ok(ChannelMesh::mesh(world)
+                .into_iter()
+                .map(|t| Box::new(t) as Box<dyn Transport>)
+                .collect()),
+            TransportConfig::Tcp { base_port } => Ok(TcpMesh::loopback(world, base_port)?
+                .into_iter()
+                .map(|t| Box::new(t) as Box<dyn Transport>)
+                .collect()),
+        }
+    }
+}
+
+impl std::str::FromStr for TransportConfig {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "inproc" | "channel" | "chan" => Ok(TransportConfig::Inproc),
+            "tcp" => Ok(TransportConfig::Tcp { base_port: 0 }),
+            other => match other.strip_prefix("tcp:") {
+                Some(port) => port
+                    .parse::<u16>()
+                    .map(|base_port| TransportConfig::Tcp { base_port })
+                    .map_err(|e| format!("bad tcp base port {port:?}: {e}")),
+                None => Err(format!(
+                    "unknown transport {s:?} (inproc | tcp | tcp:<base_port>)"
+                )),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for TransportConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportConfig::Inproc => write!(f, "inproc"),
+            TransportConfig::Tcp { base_port } => write!(f, "tcp:{base_port}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TcpMesh
+// ---------------------------------------------------------------------------
+
+/// Handshake magic ("FSMP") sent once per connection, followed by the
+/// world size and the connecting rank — so an acceptor can demultiplex
+/// incoming links by rank and reject cross-run or cross-world strays.
+const HANDSHAKE_MAGIC: u32 = 0x4653_4D50;
+
+/// One outgoing link: an unbounded frame queue drained by a dedicated
+/// writer thread. Queueing means `Transport::send` never blocks on the
+/// peer's socket buffers — the collective loop always reaches its
+/// receive phase, so the symmetric all-to-all cannot deadlock no matter
+/// how large a round's payloads are. The first write error is parked in
+/// `err` and surfaced by the next `send`/`flush` touching the link.
+struct OutLink {
+    /// `None` once shut down (closing the channel stops the writer).
+    queue: Option<Sender<Vec<u8>>>,
+    err: Arc<Mutex<Option<CommError>>>,
+    writer: Option<JoinHandle<()>>,
+}
+
+impl OutLink {
+    fn last_err(&self) -> Option<CommError> {
+        self.err.lock().expect("writer never poisons the error slot").clone()
+    }
+}
+
+/// A rank's endpoint of the socket mesh: one outgoing queue + writer
+/// thread per peer (this rank's frames to them) and one incoming stream
+/// per peer (their frames to this rank). Frames are length-prefixed and
+/// little-endian (see [`Frame`] for the exact layout); `TCP_NODELAY` is
+/// set, and the writer threads push frames continuously, so
+/// [`Transport::flush`] is purely an error checkpoint at the round
+/// boundary.
+pub struct TcpMesh {
+    rank: usize,
+    world: usize,
+    /// `out[dst]`: this rank's link toward `dst`; self slot `None`.
+    out: Vec<Option<OutLink>>,
+    /// `inc[src]`: reader of `src`'s frames; self slot `None`.
+    inc: Vec<Option<BufReader<TcpStream>>>,
+    /// Maximum bytes per write call, read by the writer threads (tests
+    /// shrink this to force short writes + partial frames on the wire;
+    /// `usize::MAX` normally).
+    max_chunk: Arc<AtomicUsize>,
+}
+
+impl TcpMesh {
+    /// Connect a full `world`-rank mesh on 127.0.0.1 and return the
+    /// per-rank endpoints in rank order. `base_port` 0 binds ephemeral
+    /// ports (collision-free — right for tests and single-host runs); a
+    /// non-zero base binds `base_port + rank` for each rank.
+    ///
+    /// All endpoints are created by the caller and then moved to worker
+    /// threads — the rendezvous happens here, single-threaded, which is
+    /// sound because the kernel completes TCP handshakes into the listen
+    /// backlog before `accept` runs.
+    pub fn loopback(world: usize, base_port: u16) -> std::io::Result<Vec<TcpMesh>> {
+        assert!(world >= 1, "world size must be >= 1");
+        let listeners: Vec<TcpListener> = (0..world)
+            .map(|r| {
+                let port = if base_port == 0 {
+                    0
+                } else {
+                    let p = base_port as u32 + r as u32;
+                    u16::try_from(p).map_err(|_| {
+                        std::io::Error::new(
+                            std::io::ErrorKind::InvalidInput,
+                            format!("base port {base_port} + rank {r} exceeds 65535"),
+                        )
+                    })?
+                };
+                TcpListener::bind(("127.0.0.1", port))
+            })
+            .collect::<std::io::Result<_>>()?;
+        let addrs: Vec<SocketAddr> =
+            listeners.iter().map(|l| l.local_addr()).collect::<std::io::Result<_>>()?;
+
+        // One short-write knob per rank, shared with its writer threads.
+        let chunks: Vec<Arc<AtomicUsize>> =
+            (0..world).map(|_| Arc::new(AtomicUsize::new(usize::MAX))).collect();
+
+        // Connect every directed pair, handshaking each link with the
+        // connecting rank's identity and handing the connected stream to
+        // a dedicated writer thread. Accepts are interleaved per source
+        // rank — each listener holds at most ONE pending connection at a
+        // time — so the single-threaded rendezvous never outruns a
+        // listener's accept backlog, however large the world is.
+        let mut out: Vec<Vec<Option<OutLink>>> =
+            (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+        let mut inc: Vec<Vec<Option<BufReader<TcpStream>>>> =
+            (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+        for src in 0..world {
+            for dst in 0..world {
+                if src == dst {
+                    continue;
+                }
+                let mut s = TcpStream::connect(addrs[dst])?;
+                s.set_nodelay(true)?;
+                let mut hs = [0u8; 8];
+                hs[..4].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+                hs[4..6].copy_from_slice(&(world as u16).to_le_bytes());
+                hs[6..8].copy_from_slice(&(src as u16).to_le_bytes());
+                s.write_all(&hs)?;
+                out[src][dst] = Some(spawn_writer(s, dst, Arc::clone(&chunks[src])));
+
+                // Drain the one pending connection this iteration queued
+                // on `dst`'s listener, demultiplexing by handshaked rank.
+                let (mut s, _) = listeners[dst].accept()?;
+                s.set_nodelay(true)?;
+                let mut hs = [0u8; 8];
+                s.read_exact(&mut hs)?;
+                let magic = u32::from_le_bytes([hs[0], hs[1], hs[2], hs[3]]);
+                let hs_world = u16::from_le_bytes([hs[4], hs[5]]) as usize;
+                let hs_src = u16::from_le_bytes([hs[6], hs[7]]) as usize;
+                let bad = |detail: String| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, detail)
+                };
+                if magic != HANDSHAKE_MAGIC {
+                    return Err(bad(format!("bad handshake magic {magic:#x} on rank {dst}")));
+                }
+                if hs_world != world {
+                    return Err(bad(format!(
+                        "handshake world {hs_world} != mesh world {world}"
+                    )));
+                }
+                if hs_src >= world || hs_src == dst {
+                    return Err(bad(format!(
+                        "handshake rank {hs_src} invalid for rank {dst}"
+                    )));
+                }
+                if inc[dst][hs_src].is_some() {
+                    return Err(bad(format!("duplicate link {hs_src} -> {dst}")));
+                }
+                inc[dst][hs_src] = Some(BufReader::new(s));
+            }
+        }
+
+        Ok(out
+            .into_iter()
+            .zip(inc)
+            .zip(chunks)
+            .enumerate()
+            .map(|(rank, ((out, inc), max_chunk))| TcpMesh { rank, world, out, inc, max_chunk })
+            .collect())
+    }
+
+    /// Cap the bytes per write call, flushing between chunks — frames
+    /// then cross the wire as many short writes, which the receiving
+    /// side must reassemble. Test/diagnostic knob; the fault-injection
+    /// suite drives it.
+    pub fn set_max_chunk(&mut self, n: usize) {
+        self.max_chunk.store(n.max(1), Ordering::Relaxed);
+    }
+
+    /// Bound blocking receives (default: none). A slow healthy peer is
+    /// indistinguishable from a hung one, so production runs wait; tests
+    /// that want a hard bound use this (or an outer deadline).
+    pub fn set_recv_timeout(&mut self, t: Option<Duration>) -> std::io::Result<()> {
+        for r in self.inc.iter().flatten() {
+            r.get_ref().set_read_timeout(t)?;
+        }
+        Ok(())
+    }
+}
+
+/// Spawn the writer thread for one outgoing link. It drains the queue
+/// in FIFO order, splitting frames into `max_chunk`-byte writes when the
+/// knob is set; on the first write error it parks the mapped
+/// [`CommError`] and exits (the closed queue then fails future sends).
+/// On clean shutdown (queue closed) it half-closes the socket so the
+/// peer reads EOF only after every queued frame.
+fn spawn_writer(mut stream: TcpStream, dst: usize, max_chunk: Arc<AtomicUsize>) -> OutLink {
+    let (tx, rx) = channel::<Vec<u8>>();
+    let err: Arc<Mutex<Option<CommError>>> = Arc::new(Mutex::new(None));
+    let err_slot = Arc::clone(&err);
+    let writer = std::thread::spawn(move || {
+        while let Ok(buf) = rx.recv() {
+            let limit = max_chunk.load(Ordering::Relaxed).max(1);
+            let result = if buf.len() <= limit {
+                stream.write_all(&buf)
+            } else {
+                buf.chunks(limit).try_for_each(|c| {
+                    stream.write_all(c)?;
+                    stream.flush()
+                })
+            };
+            if let Err(e) = result {
+                *err_slot.lock().expect("writer error slot") = Some(io_to_comm(dst, e));
+                return;
+            }
+        }
+        let _ = stream.shutdown(Shutdown::Write);
+    });
+    OutLink { queue: Some(tx), err, writer: Some(writer) }
+}
+
+impl Transport for TcpMesh {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError> {
+        let link = self.out[dst]
+            .as_ref()
+            .expect("send to self goes through the inbox pass-through, not the transport");
+        if let Some(e) = link.last_err() {
+            return Err(e);
+        }
+        let mut buf = Vec::with_capacity(super::comm::FRAME_HEADER + frame.payload.len());
+        frame.encode_to(&mut buf);
+        // Queue gone or writer exited: surface the parked error, or a
+        // plain loss when the writer died without recording one.
+        let lost = || link.last_err().unwrap_or(CommError::PeerLost { rank: dst });
+        let Some(q) = &link.queue else {
+            return Err(lost());
+        };
+        if q.send(buf).is_err() {
+            return Err(lost());
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<(), CommError> {
+        // Writer threads push continuously; the round boundary is an
+        // error checkpoint so a poisoned link fails the collective here
+        // rather than surfacing one round later.
+        for link in self.out.iter().flatten() {
+            if let Some(e) = link.last_err() {
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, src: usize) -> Result<Frame, CommError> {
+        let r = self.inc[src]
+            .as_mut()
+            .expect("recv from self goes through the inbox pass-through, not the transport");
+        Frame::decode_from(r).map_err(|e| io_to_comm(src, e))
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn shutdown(&mut self) {
+        // Close the incoming sockets FIRST: this rank is done reading,
+        // and the close is what unblocks any peer writer still pushing
+        // toward it — with every rank closing its read side before
+        // joining its own writers, teardown can never deadlock on a
+        // cycle of full socket buffers.
+        for r in self.inc.iter_mut().flatten() {
+            let _ = r.get_ref().shutdown(Shutdown::Both);
+        }
+        // Then close every queue (writers drain, then FIN) and join.
+        for link in self.out.iter_mut().flatten() {
+            link.queue = None;
+        }
+        for link in self.out.iter_mut().flatten() {
+            if let Some(h) = link.writer.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for TcpMesh {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,5 +486,77 @@ mod tests {
         let ratio = (eth.cost(1 << 30) - eth.latency).as_secs_f64()
             / (ib.cost(1 << 30) - ib.latency).as_secs_f64();
         assert!((ratio - 20.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn transport_config_parses_and_prints() {
+        use std::str::FromStr;
+        assert_eq!(TransportConfig::from_str("inproc").unwrap(), TransportConfig::Inproc);
+        assert_eq!(
+            TransportConfig::from_str("tcp").unwrap(),
+            TransportConfig::Tcp { base_port: 0 }
+        );
+        assert_eq!(
+            TransportConfig::from_str("tcp:9100").unwrap(),
+            TransportConfig::Tcp { base_port: 9100 }
+        );
+        assert!(TransportConfig::from_str("rdma").is_err());
+        assert!(TransportConfig::from_str("tcp:notaport").is_err());
+        assert_eq!(TransportConfig::Inproc.to_string(), "inproc");
+        assert_eq!(TransportConfig::Tcp { base_port: 0 }.to_string(), "tcp:0");
+        assert_eq!(TransportConfig::default(), TransportConfig::Inproc);
+    }
+
+    #[test]
+    fn tcp_mesh_moves_frames_point_to_point() {
+        // 3 ranks, each sends one frame to each peer, then receives —
+        // driven directly at the Transport level, single process.
+        let meshes = TcpMesh::loopback(3, 0).unwrap();
+        let handles: Vec<_> = meshes
+            .into_iter()
+            .map(|mut t| {
+                std::thread::spawn(move || {
+                    let rank = t.rank();
+                    for dst in 0..3 {
+                        if dst == rank {
+                            continue;
+                        }
+                        let frame = Frame {
+                            kind: 0,
+                            elem: 1,
+                            src: rank as u16,
+                            seq: 5,
+                            payload: vec![rank as u8; 3 + dst],
+                        };
+                        t.send(dst, frame).unwrap();
+                    }
+                    t.flush().unwrap();
+                    let mut got = Vec::new();
+                    for src in 0..3 {
+                        if src == rank {
+                            continue;
+                        }
+                        got.push(t.recv(src).unwrap());
+                    }
+                    (rank, got)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, got) = h.join().unwrap();
+            for f in got {
+                let src = f.src as usize;
+                assert_ne!(src, rank);
+                assert_eq!(f.seq, 5);
+                assert_eq!(f.payload, vec![src as u8; 3 + rank]);
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_mesh_single_rank_world_has_no_links() {
+        let meshes = TcpMesh::loopback(1, 0).unwrap();
+        assert_eq!(meshes.len(), 1);
+        assert_eq!(meshes[0].world(), 1);
     }
 }

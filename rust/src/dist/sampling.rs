@@ -62,7 +62,7 @@ use crate::sampling::rng::RngKey;
 use crate::sampling::{KernelKind, Mfg, SamplerWorkspace};
 use crate::util::par;
 
-use super::comm::{Comm, RoundKind};
+use super::comm::{Comm, CommError, RoundKind};
 
 /// "No adjacency row appended" marker in a cache-mode response.
 const NO_ROW: NodeId = NodeId::MAX;
@@ -84,6 +84,10 @@ const NO_ROW: NodeId = NodeId::MAX;
 /// overlay; keep one view alive across minibatches so the cache pays
 /// off.
 ///
+/// Fabric failures (a peer exiting mid-collective, transport I/O
+/// errors) surface as `Err(CommError)` — see [`super::comm::CommError`]
+/// — rather than a hang or a panic, on every transport.
+///
 /// [`sample_mfgs`]: crate::sampling::sample_mfgs
 /// [`ReplicationPolicy`]: crate::partition::ReplicationPolicy
 #[allow(clippy::too_many_arguments)]
@@ -96,7 +100,7 @@ pub fn sample_mfgs_distributed(
     key: RngKey,
     ws: &mut SamplerWorkspace,
     kind: KernelKind,
-) -> Vec<Mfg> {
+) -> Result<Vec<Mfg>, CommError> {
     debug_assert_eq!(
         view.local_rows(),
         shard.topology.local_rows(),
@@ -109,12 +113,12 @@ pub fn sample_mfgs_distributed(
                 None => seeds,
                 Some(prev) => &prev.src_nodes,
             };
-            sample_level(comm, shard, view, cur, f, level_key(key, li), ws, kind)
+            sample_level(comm, shard, view, cur, f, level_key(key, li), ws, kind)?
         };
         out.push(mfg);
     }
     out.reverse();
-    out
+    Ok(out)
 }
 
 /// One level: frontier nodes with materialized adjacency (static or
@@ -133,7 +137,7 @@ fn sample_level(
     key: RngKey,
     ws: &mut SamplerWorkspace,
     kind: KernelKind,
-) -> Mfg {
+) -> Result<Mfg, CommError> {
     assert!(fanout >= 1, "fanout must be >= 1");
     let n = seeds.len();
     let world = comm.world();
@@ -211,9 +215,9 @@ fn sample_level(
     // rounds run only when some rank actually misses — and then *every*
     // rank participates, empty payloads included: rounds are a property
     // of the fabric, not of one worker.
-    let need_exchange = !full && !comm.all_zero_u64(misses);
+    let need_exchange = !full && !comm.all_zero_u64(misses)?;
     if need_exchange {
-        let granted = comm.exchange(RoundKind::SampleRequest, outboxes);
+        let granted = comm.exchange(RoundKind::SampleRequest, outboxes)?;
 
         // Serve: sample each requested node with the same key/stream the
         // single-machine kernel would use. Wire format per node:
@@ -253,7 +257,7 @@ fn sample_level(
             }
             replies.push(rep);
         }
-        let responses = comm.exchange(RoundKind::SampleResponse, replies);
+        let responses = comm.exchange(RoundKind::SampleResponse, replies)?;
 
         // Decode into the strided buffer, walking the recorded miss slots
         // in seed order so each owner's response cursor advances in the
@@ -318,10 +322,10 @@ fn sample_level(
     // ---- Assembly: replay the chosen kernel's relabel pass over the
     // filled buffer. Both produce bit-identical MFGs (the baseline arm
     // just pays the COO round-trip, as it does on a single machine).
-    match kind {
+    Ok(match kind {
         KernelKind::Fused => ws.assemble_fused(seeds, fanout),
         KernelKind::Baseline => ws.assemble_baseline(seeds, fanout),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -374,6 +378,7 @@ mod tests {
                 &mut ws,
                 KernelKind::Fused,
             )
+            .unwrap()
         });
         let mut ws = SamplerWorkspace::new();
         let expect = sample_mfgs(&d.graph, &seeds, &fanouts, key, &mut ws, KernelKind::Fused);
@@ -409,7 +414,8 @@ mod tests {
                 key,
                 &mut ws,
                 KernelKind::Baseline,
-            );
+            )
+            .unwrap();
             (seeds, mfgs)
         });
         let mut ws = SamplerWorkspace::new();
@@ -478,7 +484,8 @@ mod tests {
                     key,
                     &mut ws,
                     KernelKind::Fused,
-                );
+                )
+                .unwrap();
                 (seeds, mfgs)
             });
             let mut ws = SamplerWorkspace::new();
@@ -526,7 +533,8 @@ mod tests {
                 key,
                 &mut ws,
                 KernelKind::Fused,
-            );
+            )
+            .unwrap();
             let cached_after_first = view.cached_rows();
             let b = sample_mfgs_distributed(
                 comm,
@@ -537,7 +545,8 @@ mod tests {
                 key,
                 &mut ws,
                 KernelKind::Fused,
-            );
+            )
+            .unwrap();
             (seeds, a, b, cached_after_first, view.cached_rows())
         });
         let mut ws = SamplerWorkspace::new();

@@ -4,16 +4,26 @@
 //! One worker thread stands in for one machine of the paper's testbed.
 //! The closure receives `(rank, &mut Comm)` and runs SPMD-style: every
 //! rank must issue the same sequence of collectives (the [`Comm`] layer
-//! panics loudly on divergence). Results come back in rank order.
+//! surfaces divergence as a [`CommError`] instead of deadlocking).
+//! Results come back in rank order.
+//!
+//! The fabric under the workers is pluggable: [`run_workers`] /
+//! [`run_workers_with`] use the in-process channel mesh,
+//! [`run_workers_on`] connects whatever a [`TransportConfig`] names
+//! (channel mesh or per-peer TCP sockets on loopback), and
+//! [`run_workers_over`] accepts prebuilt [`Transport`] endpoints — the
+//! hook the fault-injection tests use to wrap transports.
 //!
 //! Threads are scoped, so worker closures may borrow stack data (shards,
 //! datasets, configs) from the caller — the pattern every integration
 //! test and the trainer use.
+//!
+//! [`CommError`]: super::comm::CommError
 
 use std::sync::Arc;
 
-use super::comm::{Comm, Counters};
-use super::net::NetworkModel;
+use super::comm::{Comm, Counters, Transport};
+use super::net::{NetworkModel, TransportConfig};
 
 /// Run `world` workers with a fresh (throwaway) [`Counters`] instance.
 pub fn run_workers<R, F>(world: usize, net: NetworkModel, f: F) -> Vec<R>
@@ -24,9 +34,10 @@ where
     run_workers_with(world, net, Arc::new(Counters::default()), f)
 }
 
-/// Run `world` workers sharing `counters`, returning per-rank results in
-/// rank order. Panics if any worker panics (after all threads finish or
-/// cascade-fail through their channels).
+/// Run `world` workers over the in-process channel mesh, sharing
+/// `counters`, returning per-rank results in rank order. Panics if any
+/// worker panics (after all threads finish or cascade-fail through their
+/// links).
 pub fn run_workers_with<R, F>(
     world: usize,
     net: NetworkModel,
@@ -38,6 +49,55 @@ where
     F: Fn(usize, &mut Comm) -> R + Sync,
 {
     let comms = Comm::mesh(world, net, counters);
+    run_comms(comms, f)
+}
+
+/// Run `world` workers over the transport a [`TransportConfig`] names —
+/// the channel mesh or a TCP loopback mesh. `Err` only for transport
+/// *setup* failures (e.g. a port that cannot be bound); worker results
+/// come back in rank order like [`run_workers_with`].
+pub fn run_workers_on<R, F>(
+    config: &TransportConfig,
+    world: usize,
+    net: NetworkModel,
+    counters: Arc<Counters>,
+    f: F,
+) -> std::io::Result<Vec<R>>
+where
+    R: Send,
+    F: Fn(usize, &mut Comm) -> R + Sync,
+{
+    let transports = config.build_mesh(world)?;
+    Ok(run_workers_over(transports, net, counters, f))
+}
+
+/// Run one worker per prebuilt transport endpoint (rank order must match
+/// endpoint order). This is the seam for test wrappers: build a mesh,
+/// wrap each endpoint (delays, short writes, byte counting), hand the
+/// wrapped endpoints here.
+pub fn run_workers_over<R, F>(
+    transports: Vec<Box<dyn Transport>>,
+    net: NetworkModel,
+    counters: Arc<Counters>,
+    f: F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut Comm) -> R + Sync,
+{
+    let comms: Vec<Comm> = transports
+        .into_iter()
+        .map(|t| Comm::from_transport(t, net.clone(), Arc::clone(&counters)))
+        .collect();
+    run_comms(comms, f)
+}
+
+fn run_comms<R, F>(comms: Vec<Comm>, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut Comm) -> R + Sync,
+{
+    let world = comms.len();
     std::thread::scope(|s| {
         let handles: Vec<_> = comms
             .into_iter()
@@ -56,15 +116,23 @@ where
             }
         }
         if !panics.is_empty() {
-            // A worker dying mid-collective makes its peers panic with
-            // "exited mid-collective"; re-raise the *root cause* (the
-            // first payload that is not such a cascade) so test failures
-            // show the original assertion, not the fallout.
+            // A worker dying mid-collective makes its peers fail with
+            // CommError::PeerLost ("exited mid-collective"), which test
+            // code usually unwraps into a panic mentioning "PeerLost";
+            // re-raise the *root cause* (the first payload that is not
+            // such a cascade) so test failures show the original
+            // assertion, not the fallout.
+            let is_cascade = |msg: &str| {
+                msg.contains("exited mid-collective") || msg.contains("PeerLost")
+            };
             let pick = panics
                 .iter()
                 .position(|e| match e.downcast_ref::<String>() {
-                    Some(msg) => !msg.contains("exited mid-collective"),
-                    None => true,
+                    Some(msg) => !is_cascade(msg),
+                    None => match e.downcast_ref::<&str>() {
+                        Some(msg) => !is_cascade(msg),
+                        None => true,
+                    },
                 })
                 .unwrap_or(0);
             std::panic::resume_unwind(panics.swap_remove(pick));
@@ -81,7 +149,7 @@ mod tests {
     #[test]
     fn results_come_back_in_rank_order() {
         let out = run_workers(5, NetworkModel::free(), |rank, comm| {
-            comm.barrier();
+            comm.barrier().unwrap();
             rank * rank
         });
         assert_eq!(out, [0, 1, 4, 9, 16]);
@@ -92,7 +160,7 @@ mod tests {
         let shared: Vec<u64> = (0..4).map(|i| 100 + i).collect();
         let shared_ref = &shared;
         let out = run_workers(4, NetworkModel::free(), move |rank, comm| {
-            comm.all_reduce_min_u64(shared_ref[rank])
+            comm.all_reduce_min_u64(shared_ref[rank]).unwrap()
         });
         assert!(out.iter().all(|&m| m == 100));
     }
@@ -102,9 +170,41 @@ mod tests {
         let counters = Arc::new(Counters::default());
         for _ in 0..3 {
             run_workers_with(2, NetworkModel::free(), Arc::clone(&counters), |_, comm| {
-                comm.exchange(RoundKind::GradSync, vec![vec![1u8], vec![1u8]]);
+                comm.exchange(RoundKind::GradSync, vec![vec![1u8], vec![1u8]]).unwrap();
             });
         }
         assert_eq!(counters.snapshot().rounds_of(RoundKind::GradSync), 3);
+    }
+
+    #[test]
+    fn tcp_and_inproc_fabrics_run_the_same_collectives() {
+        for config in [TransportConfig::Inproc, TransportConfig::Tcp { base_port: 0 }] {
+            let counters = Arc::new(Counters::default());
+            let out = run_workers_on(
+                &config,
+                3,
+                NetworkModel::free(),
+                Arc::clone(&counters),
+                |rank, comm| {
+                    comm.barrier().unwrap();
+                    let outboxes: Vec<Vec<u32>> =
+                        (0..3).map(|dst| vec![(rank * 10 + dst) as u32]).collect();
+                    let inboxes = comm.exchange(RoundKind::SampleRequest, outboxes).unwrap();
+                    let m = comm.all_reduce_min_u64(rank as u64).unwrap();
+                    (inboxes, m)
+                },
+            )
+            .unwrap();
+            for (rank, (inboxes, m)) in out.iter().enumerate() {
+                assert_eq!(*m, 0, "{config}");
+                for (src, inbox) in inboxes.iter().enumerate() {
+                    assert_eq!(inbox[..], [(src * 10 + rank) as u32], "{config}");
+                }
+            }
+            let s = counters.snapshot();
+            assert_eq!(s.rounds_of(RoundKind::SampleRequest), 1, "{config}");
+            // 3 workers x 2 peers x 4 bytes, identically on both fabrics.
+            assert_eq!(s.bytes_of(RoundKind::SampleRequest), 3 * 2 * 4, "{config}");
+        }
     }
 }

@@ -33,16 +33,21 @@ COMMANDS:
                 [--cache N] [--seed S] [--eval]
                 [--replication-budget 0|64k|2m|inf]  (overrides the
                 mode's replication policy; modes also accept
-                budget:<bytes> and halo:<hops>, optionally +fused
-                and/or +cache:<bytes>)
+                budget:<bytes> and halo:<hops>, optionally +fused,
+                +cache:<bytes>, and/or +tcp)
                 [--adj-cache 0|32k|2m|inf] [--adj-cache-policy clock|static]
                 (the dynamic remote-adjacency cache over the static halo)
+                [--transport inproc|tcp|tcp:<base_port>]  (how collective
+                frames move between workers; tcp uses per-peer loopback
+                sockets, base port 0 = ephemeral)
   partition     --dataset <spec> --parts 8 [--seed S]
   sample-bench  --dataset <spec> --batch 1024 --fanouts 15,10,5 [--iters 10]
   gen-data      --dataset <spec> --out graph.bin [--seed S]
   report        --id table1|fig4|fig5|fig5-e2e|fig6|rounds|cache-ablation|
                      fanout-ablation|memory|replication-frontier|cache-decay
                 [--quick] [--scale S] [--workers W]
+                [--transport inproc|tcp|tcp:<base_port>]  (rounds and
+                cache-decay tally their counters over this transport)
   info
 ";
 
@@ -91,6 +96,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.adj_cache_bytes = config::parse_cache_bytes(&spec)?;
     }
     cfg.adj_cache_policy = config::cache_policy(&args.get_str("adj-cache-policy", "clock"))?;
+    if let Some(spec) = args.get_opt_str("transport") {
+        cfg.transport = config::transport(&spec)?;
+    }
     cfg.max_batches = match args.get("max-batches", 0usize)? {
         0 => None,
         n => Some(n),
@@ -101,13 +109,14 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let dataset = config::dataset(&spec, seed)?;
     eprintln!(
-        "training {} on {} ({} nodes, {} edges), {} workers, mode {}",
+        "training {} on {} ({} nodes, {} edges), {} workers, mode {}, transport {}",
         variant,
         dataset.name,
         dataset.num_nodes(),
         dataset.num_edges(),
         workers,
-        mode
+        mode,
+        cfg.transport
     );
     let report = train_distributed(&dataset, &config::artifacts_dir(), &cfg)?;
     println!(
@@ -208,6 +217,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     let seed = args.get("seed", 7u64)?;
     let workers = args.get("workers", 4usize)?;
     let scale = args.get("scale", 0.0f64)?;
+    let transport = config::transport(&args.get_str("transport", "inproc"))?;
     args.finish()?;
 
     let text = match which.as_str() {
@@ -247,7 +257,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             }
             exp::fig6(&opts)?
         }
-        "rounds" => exp::rounds_report(workers, seed)?,
+        "rounds" => exp::rounds_report(workers, seed, &transport)?,
         "cache-ablation" => exp::cache_ablation(workers, seed)?,
         "fanout-ablation" => exp::fanout_ablation(workers, seed)?,
         "memory" => exp::partition_memory(
@@ -269,7 +279,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             } else {
                 "quickstart".to_string()
             };
-            exp::cache_decay(&spec, workers, seed)?
+            exp::cache_decay(&spec, workers, seed, &transport)?
         }
         other => bail!("unknown report {other:?} — see `fastsample` usage"),
     };

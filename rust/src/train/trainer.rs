@@ -13,8 +13,8 @@ use std::sync::Arc;
 use anyhow::{ensure, Context, Result};
 
 use crate::dist::{
-    fetch_features, run_workers_with, sample_mfgs_distributed, CachePolicy, Comm, CommStats,
-    Counters, FeatureCache, NetworkModel, RoundKind,
+    fetch_features, run_workers_on, sample_mfgs_distributed, CachePolicy, Comm, CommError,
+    CommStats, Counters, FeatureCache, NetworkModel, RoundKind, TransportConfig,
 };
 use crate::graph::Dataset;
 use crate::partition::{
@@ -45,6 +45,11 @@ pub struct TrainConfig {
     pub optimizer: String,
     pub seed: u64,
     pub net: NetworkModel,
+    /// How frames physically move between workers: the in-process
+    /// channel mesh (default) or per-peer TCP sockets (`+tcp` mode
+    /// suffix / `--transport tcp[:<base_port>]`). Uniform across ranks;
+    /// results are bit-identical across transports.
+    pub transport: TransportConfig,
     /// Remote-feature cache rows per worker (0 = disabled).
     pub cache_capacity: usize,
     pub cache_policy: CachePolicy,
@@ -107,6 +112,7 @@ impl TrainConfig {
             optimizer: "adam".into(),
             seed: 0,
             net: NetworkModel::infiniband_200g(),
+            transport: TransportConfig::Inproc,
             cache_capacity: 0,
             cache_policy: CachePolicy::StaticDegree,
             adj_cache_bytes: 0,
@@ -121,9 +127,11 @@ impl TrainConfig {
     /// The Fig 6 scenarios by name, plus budgeted points on the
     /// replication spectrum: `budget:<bytes>` (suffixes `k`/`m`/`g`,
     /// KiB-based) and `halo:<hops>` (complete h-hop halo, no byte cap).
-    /// Any base takes `+`-separated options: `+fused` (the fused kernel)
-    /// and `+cache:<bytes>` (the dynamic remote-adjacency cache), e.g.
-    /// `budget:64k+cache:32k+fused`.
+    /// Any base takes `+`-separated options: `+fused` (the fused
+    /// kernel), `+cache:<bytes>` (the dynamic remote-adjacency cache),
+    /// and `+tcp` (run the collectives over loopback TCP sockets
+    /// instead of the in-process channel mesh), e.g.
+    /// `budget:64k+cache:32k+fused+tcp`.
     pub fn mode(variant: &str, mode: &str, workers: usize) -> Result<Self> {
         let mut parts = mode.split('+');
         let base = parts.next().unwrap_or_default();
@@ -138,22 +146,28 @@ impl TrainConfig {
         } else {
             anyhow::bail!(
                 "unknown mode {mode:?} (vanilla | hybrid | budget:<bytes> | halo:<hops>, \
-                 each optionally +fused and/or +cache:<bytes>)"
+                 each optionally +fused, +cache:<bytes>, and/or +tcp)"
             )
         };
         let mut kernel = KernelKind::Baseline;
         let mut adj_cache_bytes = 0u64;
+        let mut transport = TransportConfig::Inproc;
         for opt in parts {
             if opt == "fused" {
                 kernel = KernelKind::Fused;
+            } else if opt == "tcp" {
+                transport = TransportConfig::Tcp { base_port: 0 };
             } else if let Some(spec) = opt.strip_prefix("cache:") {
                 adj_cache_bytes = crate::config::parse_cache_bytes(spec)?;
             } else {
-                anyhow::bail!("unknown mode option {opt:?} in {mode:?} (fused | cache:<bytes>)");
+                anyhow::bail!(
+                    "unknown mode option {opt:?} in {mode:?} (fused | cache:<bytes> | tcp)"
+                );
             }
         }
         let mut cfg = Self::new(variant, policy, kernel, workers);
         cfg.adj_cache_bytes = adj_cache_bytes;
+        cfg.transport = transport;
         Ok(cfg)
     }
 }
@@ -228,16 +242,38 @@ pub fn train_distributed(
     let counters = Arc::new(Counters::default());
 
     let shards_ref = &shards;
-    let results: Vec<Result<WorkerResult>> = run_workers_with(
+    let results: Vec<Result<WorkerResult>> = run_workers_on(
+        &cfg.transport,
         cfg.workers,
         cfg.net.clone(),
         Arc::clone(&counters),
         move |rank, comm| worker_loop(rank, comm, &shards_ref[rank], &manifest, cfg),
-    );
+    )
+    .context("transport setup failed")?;
 
+    // Surface the *root cause*: a failing worker makes its peers fail
+    // with cascade PeerLost errors, so prefer any non-cascade error over
+    // the first-by-rank one.
     let mut workers = Vec::with_capacity(results.len());
+    let mut cascade: Option<anyhow::Error> = None;
     for (rank, r) in results.into_iter().enumerate() {
-        workers.push(r.with_context(|| format!("worker {rank}"))?);
+        match r {
+            Ok(w) => workers.push(w),
+            Err(e) => {
+                let is_cascade = matches!(
+                    e.downcast_ref::<CommError>(),
+                    Some(CommError::PeerLost { .. })
+                );
+                let e = e.context(format!("worker {rank}"));
+                if !is_cascade {
+                    return Err(e);
+                }
+                cascade.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(e) = cascade {
+        return Err(e);
     }
 
     // Aggregate per epoch.
@@ -311,14 +347,14 @@ fn worker_loop(
                 |v| shard.owns(v),
                 cfg.cache_capacity,
             );
-            crate::dist::feature_store::prefill_cache(comm, shard, &hot, c);
+            crate::dist::feature_store::prefill_cache(comm, shard, &hot, c)?;
         }
     }
 
     // Agree on batches/epoch (paper balances labeled nodes per machine so
     // every worker generates the same number of minibatches).
     let my_batches = (shard.train_local.len() / variant.batch) as u64;
-    let mut batches = comm.all_reduce_min_u64(my_batches) as usize;
+    let mut batches = comm.all_reduce_min_u64(my_batches)? as usize;
     if let Some(cap) = cfg.max_batches {
         batches = batches.min(cap);
     }
@@ -340,7 +376,7 @@ fn worker_loop(
         // Fenced epoch mark: the counters are fabric-global, so the
         // per-epoch delta is only exact if no rank can charge this
         // epoch's first bytes before every rank has taken the snapshot.
-        let epoch_mark = comm.fenced_snapshot();
+        let epoch_mark = comm.fenced_snapshot()?;
         let comm_before = (rank == 0).then_some(epoch_mark);
         let epoch_sw = Stopwatch::start();
         let mut times = PhaseTimes::default();
@@ -369,12 +405,12 @@ fn worker_loop(
                 batch_key,
                 &mut ws,
                 cfg.kernel,
-            );
+            )?;
             times.sample_s += sw.lap();
 
             // ---- Phase 2: input feature exchange (2 rounds).
             let input_nodes = &mfgs[0].src_nodes;
-            fetch_features(comm, shard, input_nodes, cache.as_mut(), &mut feat_buf);
+            fetch_features(comm, shard, input_nodes, cache.as_mut(), &mut feat_buf)?;
             times.feature_s += sw.lap();
 
             // ---- Phase 3: padded AOT train step.
@@ -392,7 +428,7 @@ fn worker_loop(
 
             // ---- Phase 4: gradient all-reduce + local update.
             flatten_into(&out.grads, &mut grad_buf);
-            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad_buf);
+            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad_buf)?;
             let mut grads = out.grads;
             unflatten_from(&grad_buf, &mut grads);
             opt.step(&mut params, &grads)?;
@@ -408,7 +444,7 @@ fn worker_loop(
 
         // Fenced like the epoch start, so the delta stays exact even if
         // a future step charges bytes right after the epoch loop.
-        let comm_end = comm.fenced_snapshot();
+        let comm_end = comm.fenced_snapshot()?;
         let mut sw_end = epoch_sw;
         let wall_s = sw_end.lap();
         smoothed_loss = Some((loss_sum / batches as f64) as f32);
@@ -524,5 +560,18 @@ mod tests {
         assert!(inf.adj_cache_bytes > 1 << 40);
         assert!(TrainConfig::mode("x", "vanilla+turbo", 4).is_err());
         assert!(TrainConfig::mode("x", "vanilla+cache:lots", 4).is_err());
+    }
+
+    #[test]
+    fn mode_tcp_suffix_selects_the_socket_transport() {
+        let plain = TrainConfig::mode("x", "vanilla", 4).unwrap();
+        assert_eq!(plain.transport, TransportConfig::Inproc);
+        let t = TrainConfig::mode("x", "vanilla+tcp", 4).unwrap();
+        assert_eq!(t.transport, TransportConfig::Tcp { base_port: 0 });
+        // Composes with the other options in any order.
+        let all = TrainConfig::mode("x", "budget:64k+tcp+cache:8k+fused", 4).unwrap();
+        assert_eq!(all.transport, TransportConfig::Tcp { base_port: 0 });
+        assert_eq!(all.kernel, KernelKind::Fused);
+        assert_eq!(all.adj_cache_bytes, 8 << 10);
     }
 }

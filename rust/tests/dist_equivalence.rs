@@ -62,7 +62,8 @@ fn run_policy(d: &Dataset, policy: ReplicationPolicy, fanouts: &[usize], key: Rn
             let mut view = shard.topology.clone();
             let mfgs = sample_mfgs_distributed(
                 comm, shard, &mut view, &seeds, fanouts, key, &mut ws, KernelKind::Fused,
-            );
+            )
+            .unwrap();
             (seeds, mfgs)
         }
     });
@@ -94,7 +95,8 @@ fn vanilla_distributed_equals_single_machine_fused() {
             let mut view = shard.topology.clone();
             let mfgs = sample_mfgs_distributed(
                 comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
-            );
+            )
+            .unwrap();
             (seeds, mfgs)
         }
     });
@@ -138,10 +140,12 @@ fn vanilla_baseline_assembly_matches_fused_assembly() {
             let mut view = shard.topology.clone();
             let a = sample_mfgs_distributed(
                 comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
-            );
+            )
+            .unwrap();
             let b = sample_mfgs_distributed(
                 comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Baseline,
-            );
+            )
+            .unwrap();
             (a, b)
         }
     });
@@ -171,6 +175,7 @@ fn full_replication_needs_zero_sampling_rounds_and_matches_vanilla() {
             sample_mfgs_distributed(
                 comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
             )
+            .unwrap()
         }
     });
 
@@ -280,6 +285,7 @@ fn adjacency_cache_spectrum_is_bit_identical() {
                                         &mut ws,
                                         KernelKind::Fused,
                                     )
+                                    .unwrap()
                                 })
                                 .collect();
                             (seeds, per_batch)
@@ -350,12 +356,16 @@ fn adjacency_cache_decays_request_traffic_across_epochs() {
             let mut marks = Vec::new();
             let mut epochs = Vec::new();
             for _e in 0..2 {
-                marks.push(comm.fenced_snapshot());
-                epochs.push(sample_mfgs_distributed(
-                    comm, shard, &mut view, &seeds, &fanouts, key, &mut ws, KernelKind::Fused,
-                ));
+                marks.push(comm.fenced_snapshot().unwrap());
+                epochs.push(
+                    sample_mfgs_distributed(
+                        comm, shard, &mut view, &seeds, &fanouts, key, &mut ws,
+                        KernelKind::Fused,
+                    )
+                    .unwrap(),
+                );
             }
-            marks.push(comm.fenced_snapshot());
+            marks.push(comm.fenced_snapshot().unwrap());
             let deltas: Vec<CommStats> =
                 marks.windows(2).map(|w| w[1].diff(&w[0])).collect();
             (seeds, epochs, deltas)
@@ -393,7 +403,7 @@ fn feature_store_returns_exact_rows() {
                 .map(|i| ((i * 37 + rank * 311) % d_ref.num_nodes()) as NodeId)
                 .collect();
             let mut out = Vec::new();
-            let stats = fetch_features(comm, shard, &nodes, None, &mut out);
+            let stats = fetch_features(comm, shard, &nodes, None, &mut out).unwrap();
             (nodes, out, stats)
         }
     });
@@ -430,10 +440,10 @@ fn feature_cache_cuts_traffic_without_changing_rows() {
                 .map(|i| ((i * 13 + rank * 101) % d_ref.num_nodes()) as NodeId)
                 .collect();
             let mut out1 = Vec::new();
-            let s1 = fetch_features(comm, shard, &nodes, Some(&mut cache), &mut out1);
+            let s1 = fetch_features(comm, shard, &nodes, Some(&mut cache), &mut out1).unwrap();
             // Second fetch of the same nodes: remote rows now cached.
             let mut out2 = Vec::new();
-            let s2 = fetch_features(comm, shard, &nodes, Some(&mut cache), &mut out2);
+            let s2 = fetch_features(comm, shard, &nodes, Some(&mut cache), &mut out2).unwrap();
             (nodes, out1, out2, s1, s2)
         }
     });

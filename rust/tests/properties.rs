@@ -4,7 +4,8 @@
 //! randomized cases. Failures print a `check_one(seed, case, ..)` repro.
 
 use fastsample::dist::{
-    run_workers, sample_mfgs_distributed, CachePolicy, NetworkModel, RoundKind,
+    run_workers, sample_mfgs_distributed, CachePolicy, Frame, NetworkModel, RoundKind, TcpMesh,
+    Transport,
 };
 use fastsample::graph::generator::{erdos_renyi, make_dataset, planted_communities, rmat, DatasetParams};
 use fastsample::graph::{CooGraph, CscGraph, NodeId};
@@ -202,7 +203,7 @@ fn prop_ring_allreduce_matches_serial_sum() {
         let inputs_ref = &inputs;
         let results = run_workers(world, NetworkModel::free(), move |rank, comm| {
             let mut data = inputs_ref[rank].clone();
-            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data);
+            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data).unwrap();
             data
         });
         for r in &results {
@@ -278,7 +279,8 @@ fn prop_budgeted_sampling_equals_single_machine() {
                 key,
                 &mut ws,
                 KernelKind::Fused,
-            );
+            )
+            .unwrap();
             (seeds, mfgs)
         });
         let mut ws = SamplerWorkspace::new();
@@ -350,6 +352,7 @@ fn prop_adjacency_cached_sampling_equals_single_machine() {
                         &mut ws,
                         KernelKind::Fused,
                     )
+                    .unwrap()
                 })
                 .collect();
             (seeds, per_batch)
@@ -417,6 +420,120 @@ fn prop_replica_sets_are_nested_and_budget_respecting() {
         // Full replication covers everything on every worker.
         for sh in build_shards(&d, &book, &ReplicationPolicy::hybrid()) {
             assert!(sh.topology.covers_all());
+        }
+    });
+}
+
+#[test]
+fn prop_frame_codec_round_trips_any_payload() {
+    // The transport frame codec: arbitrary payload sizes (0 bytes and
+    // >64 KiB included), arbitrary round kinds (data and control tags),
+    // arbitrary src/seq — several frames concatenated into one byte
+    // stream decode back exactly and self-delimit.
+    check(112, 40, |i, s| {
+        let n_frames = gen::size(s, 1, 5);
+        let frames: Vec<Frame> = (0..n_frames)
+            .map(|j| {
+                let kind = match s.next_below(3) {
+                    // A data round kind...
+                    0 => RoundKind::ALL[s.next_below(RoundKind::COUNT)].index() as u8,
+                    // ...a control tag...
+                    1 => 200 + s.next_below(4) as u8,
+                    // ...or any byte at all — framing must not care.
+                    _ => s.next_u64() as u8,
+                };
+                let len = if i == 0 && j == 0 {
+                    0 // the smallest case first: the empty payload
+                } else if s.next_below(8) == 0 {
+                    (64 << 10) + gen::size(s, 1, 4096) // > 64 KiB
+                } else {
+                    gen::size(s, 0, 2048)
+                };
+                Frame {
+                    kind,
+                    elem: [1u8, 4, 8][s.next_below(3)],
+                    src: s.next_u64() as u16,
+                    seq: s.next_u64() as u32,
+                    payload: (0..len).map(|_| s.next_u64() as u8).collect(),
+                }
+            })
+            .collect();
+        let mut wire = Vec::new();
+        for f in &frames {
+            f.encode_to(&mut wire);
+        }
+        let mut cursor = std::io::Cursor::new(&wire);
+        for f in &frames {
+            let back = Frame::decode_from(&mut cursor).unwrap();
+            assert_eq!(&back, f);
+        }
+        // Nothing left over: length-prefixed framing is self-delimiting.
+        assert_eq!(cursor.position() as usize, wire.len());
+        assert!(Frame::decode_from(&mut cursor).is_err());
+    });
+}
+
+#[test]
+fn prop_interleaved_frames_demultiplex_by_source() {
+    // Multiple ranks pushing multiple rounds of frames through TcpMesh
+    // concurrently, each sending to its peers in a different (rotated)
+    // destination order with jittered pacing: every frame must come out
+    // of the correct per-source inbox, in per-source FIFO order,
+    // regardless of cross-source arrival interleaving.
+    fn payload(src: usize, dst: usize, round: usize) -> Vec<u8> {
+        let len = (src * 5 + dst * 3 + round * 2) % 11;
+        vec![(src * 31 + dst * 7 + round * 3) as u8; len]
+    }
+    check(113, 10, |_i, s| {
+        let world = gen::size(s, 2, 4);
+        let rounds = gen::size(s, 1, 4);
+        let jitter: Vec<u64> = (0..world).map(|_| s.next_below(200) as u64).collect();
+        let meshes = TcpMesh::loopback(world, 0).unwrap();
+        let handles: Vec<_> = meshes
+            .into_iter()
+            .map(|mut t| {
+                let jitter = jitter.clone();
+                std::thread::spawn(move || {
+                    let rank = t.rank();
+                    // Send everything first (buffered), flushing between
+                    // rounds with rank-dependent pacing, so arrivals from
+                    // different sources interleave at each receiver.
+                    for round in 0..rounds {
+                        for k in 1..world {
+                            let dst = (rank + k) % world;
+                            t.send(
+                                dst,
+                                Frame {
+                                    kind: (round % 200) as u8,
+                                    elem: 1,
+                                    src: rank as u16,
+                                    seq: round as u32,
+                                    payload: payload(rank, dst, round),
+                                },
+                            )
+                            .unwrap();
+                        }
+                        t.flush().unwrap();
+                        std::thread::sleep(std::time::Duration::from_micros(jitter[rank]));
+                    }
+                    // Drain in (round, src) order: each per-source link
+                    // must yield that source's frames in send order.
+                    for round in 0..rounds {
+                        for src in 0..world {
+                            if src == rank {
+                                continue;
+                            }
+                            let f = t.recv(src).unwrap();
+                            assert_eq!(f.src as usize, src, "frame on the wrong link");
+                            assert_eq!(f.seq as usize, round, "per-source FIFO violated");
+                            assert_eq!(f.payload, payload(src, rank, round));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
         }
     });
 }

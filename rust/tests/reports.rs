@@ -72,12 +72,29 @@ fn cache_decay_report_holds_its_contract() {
     // off ⇒ flat per-epoch request bytes; cache on ⇒ non-increasing;
     // unbounded cache ⇒ zero traffic after epoch 0), so a successful run
     // IS the acceptance check; the text assertions pin the summary.
-    let t = exp::cache_decay("quickstart", 4, 3).unwrap();
+    let t = exp::cache_decay("quickstart", 4, 3, &fastsample::dist::TransportConfig::Inproc)
+        .unwrap();
     assert!(t.contains("cache:0 (off)"), "{t}");
     assert!(t.contains("cache:inf static"), "{t}");
     assert!(t.contains("cache:inf clock"), "{t}");
     assert!(t.contains("non-increasing"), "{t}");
     assert!(t.contains("contract held"), "{t}");
+    assert!(t.contains("inproc transport"), "{t}");
+}
+
+#[test]
+fn cache_decay_report_holds_over_tcp_too() {
+    // Same contract, counters tallied from frames serialized to real
+    // loopback sockets — the decay curve is a wire-measured quantity.
+    let t = exp::cache_decay(
+        "quickstart",
+        3,
+        3,
+        &fastsample::dist::TransportConfig::Tcp { base_port: 0 },
+    )
+    .unwrap();
+    assert!(t.contains("contract held"), "{t}");
+    assert!(t.contains("tcp:0 transport"), "{t}");
 }
 
 #[test]
@@ -86,7 +103,7 @@ fn rounds_report_shows_the_2l_to_2_reduction() {
         eprintln!("SKIP: artifacts missing");
         return;
     }
-    let t = exp::rounds_report(3, 5).unwrap();
+    let t = exp::rounds_report(3, 5, &fastsample::dist::TransportConfig::Inproc).unwrap();
     assert!(t.contains("mode: vanilla"));
     assert!(t.contains("mode: hybrid"));
     // Vanilla: 4 sampling rounds per batch (L=3); hybrid: 0.

@@ -1,0 +1,465 @@
+//! Transport equivalence + fault injection: the proof that the socket
+//! transport is a drop-in for the in-process channel mesh.
+//!
+//! * **Equivalence** — for every replication/cache arm (vanilla,
+//!   `budget:<bytes>`, hybrid, `+cache:`), the same seeded run over
+//!   [`ChannelMesh`] and [`TcpMesh`] on loopback produces bit-identical
+//!   MFGs (and, with AOT artifacts present, bit-identical loss curves)
+//!   and **identical** `CommStats` — round counts and byte counts both,
+//!   because both transports serialize payloads through the same wire
+//!   encoding.
+//! * **Accounting** — `CommStats` byte counters equal the sum of framed
+//!   payload lengths actually handed to the transport (verified by a
+//!   counting wrapper under the real mesh).
+//! * **Fault injection** — a [`FlakyTransport`] wrapper (deterministic
+//!   seeded delays; short writes via `TcpMesh::set_max_chunk`) must not
+//!   change a single bit; a peer dropping mid-round must surface as a
+//!   clean `CommError::PeerLost` naming a peer on every survivor — no
+//!   deadlock, no panic (bounded by an explicit test deadline).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use fastsample::dist::{
+    fetch_features, run_workers_on, run_workers_over, sample_mfgs_distributed, CachePolicy,
+    CommError, CommStats, Counters, Frame, NetworkModel, RoundKind, TcpMesh, Transport,
+    TransportConfig,
+};
+use fastsample::graph::generator::{make_dataset, DatasetParams};
+use fastsample::graph::{Dataset, NodeId};
+use fastsample::partition::{
+    build_shards, partition_graph, PartitionBook, PartitionConfig, ReplicationPolicy,
+};
+use fastsample::sampling::rng::{RngKey, RngStream};
+use fastsample::sampling::{sample_mfgs, KernelKind, Mfg, SamplerWorkspace};
+use fastsample::train::{train_distributed, TrainConfig};
+
+const WORKERS: usize = 3;
+const BATCHES: u64 = 3;
+const FANOUTS: [usize; 2] = [4, 3];
+
+fn dataset() -> Dataset {
+    make_dataset(&DatasetParams {
+        name: "transport-eq".into(),
+        num_nodes: 600,
+        avg_degree: 9,
+        feat_dim: 5,
+        num_classes: 4,
+        labeled_frac: 0.25,
+        p_intra: 0.8,
+        noise: 0.25,
+        seed: 99,
+    })
+}
+
+fn worker_seeds(d: &Dataset, book: &PartitionBook, part: usize, n: usize) -> Vec<NodeId> {
+    d.train_ids.iter().copied().filter(|&v| book.part_of(v) == part).take(n).collect()
+}
+
+/// The replication/cache arms the transports must agree on.
+fn arms() -> Vec<(&'static str, ReplicationPolicy, u64)> {
+    vec![
+        ("vanilla", ReplicationPolicy::vanilla(), 0),
+        ("budget:4k", ReplicationPolicy::budgeted(4 * 1024), 0),
+        ("hybrid", ReplicationPolicy::hybrid(), 0),
+        ("vanilla+cache:32k", ReplicationPolicy::vanilla(), 32 << 10),
+    ]
+}
+
+/// One arm's training-shaped workload (sampling + feature exchange +
+/// grad sync per batch) over the given transport: per-rank results plus
+/// the fabric's counter snapshot.
+#[allow(clippy::type_complexity)]
+fn run_arm(
+    d: &Dataset,
+    book: &Arc<PartitionBook>,
+    policy: &ReplicationPolicy,
+    cache_bytes: u64,
+    config: &TransportConfig,
+) -> (Vec<(Vec<NodeId>, Vec<Vec<Mfg>>, Vec<f32>)>, CommStats) {
+    let shards = build_shards(d, book, policy);
+    let counters = Arc::new(Counters::default());
+    let key = RngKey::new(2024);
+    let shards_ref = &shards;
+    let d_ref = d;
+    let book_ref = book;
+    let results = run_workers_on(
+        config,
+        WORKERS,
+        NetworkModel::free(),
+        Arc::clone(&counters),
+        move |rank, comm| {
+            let shard = &shards_ref[rank];
+            let seeds = worker_seeds(d_ref, book_ref, rank, 12);
+            let mut ws = SamplerWorkspace::new();
+            let mut view = shard.topology.clone();
+            if cache_bytes > 0 && !shard.policy.is_full() {
+                view.enable_cache(cache_bytes, CachePolicy::Clock);
+            }
+            let mut feat = Vec::new();
+            let per_batch: Vec<Vec<Mfg>> = (0..BATCHES)
+                .map(|b| {
+                    let mfgs = sample_mfgs_distributed(
+                        comm,
+                        shard,
+                        &mut view,
+                        &seeds,
+                        &FANOUTS,
+                        key.fold(b),
+                        &mut ws,
+                        KernelKind::Fused,
+                    )
+                    .unwrap();
+                    fetch_features(comm, shard, &mfgs[0].src_nodes, None, &mut feat).unwrap();
+                    let mut grad = vec![rank as f32 + 0.5; 16];
+                    comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad).unwrap();
+                    mfgs
+                })
+                .collect();
+            (seeds, per_batch, feat)
+        },
+    )
+    .expect("transport setup");
+    (results, counters.snapshot())
+}
+
+/// The tentpole acceptance test: every arm is bit-identical (MFGs) and
+/// counter-identical (rounds AND bytes) between the channel mesh and
+/// loopback TCP, and both match single-machine sampling.
+#[test]
+fn transports_are_bit_identical_and_round_identical_on_every_arm() {
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(WORKERS)));
+    let key = RngKey::new(2024);
+    for (label, policy, cache_bytes) in arms() {
+        let (inproc, s_inproc) =
+            run_arm(&d, &book, &policy, cache_bytes, &TransportConfig::Inproc);
+        let (tcp, s_tcp) =
+            run_arm(&d, &book, &policy, cache_bytes, &TransportConfig::Tcp { base_port: 0 });
+
+        assert_eq!(inproc, tcp, "{label}: per-rank results diverged across transports");
+        assert_eq!(
+            s_inproc, s_tcp,
+            "{label}: round/byte counters diverged across transports"
+        );
+
+        // And both equal single-machine ground truth.
+        let mut ws = SamplerWorkspace::new();
+        for (seeds, per_batch, _) in &inproc {
+            for (b, mfgs) in per_batch.iter().enumerate() {
+                let expect = sample_mfgs(
+                    &d.graph,
+                    seeds,
+                    &FANOUTS,
+                    key.fold(b as u64),
+                    &mut ws,
+                    KernelKind::Fused,
+                );
+                assert_eq!(mfgs, &expect, "{label} batch {b} != single-machine");
+            }
+        }
+
+        // Sanity on the round structure per arm: hybrid pays zero;
+        // vanilla pays 2(L−1) = 2 per batch on this graph (level 0 seeds
+        // are local, level 1 always has cross-partition misses).
+        if policy.is_full() {
+            assert_eq!(s_tcp.sampling_rounds(), 0, "{label}: hybrid must pay zero");
+        } else if label == "vanilla" {
+            assert_eq!(s_tcp.sampling_rounds(), 2 * BATCHES, "{label}");
+        }
+    }
+}
+
+/// Loss-curve equivalence (the full trainer, AOT artifacts required —
+/// skips politely without them, like `train_e2e`): per arm, inproc and
+/// tcp runs produce bit-identical loss curves and identical comm totals.
+#[test]
+fn loss_curves_are_bit_identical_across_transports() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let d = fastsample::graph::datasets::quickstart(1);
+    for mode in ["vanilla", "budget:16k", "hybrid", "vanilla+cache:8k"] {
+        let run = |transport: TransportConfig| {
+            let mut cfg = TrainConfig::mode("quickstart", mode, 4).unwrap();
+            cfg.epochs = 2;
+            cfg.max_batches = Some(3);
+            cfg.net = NetworkModel::free();
+            cfg.transport = transport;
+            train_distributed(&d, &artifacts, &cfg).unwrap()
+        };
+        let a = run(TransportConfig::Inproc);
+        let b = run(TransportConfig::Tcp { base_port: 0 });
+        assert!(!a.loss_curve.is_empty());
+        assert_eq!(a.loss_curve, b.loss_curve, "{mode}: loss curves diverged");
+        assert_eq!(a.comm_total, b.comm_total, "{mode}: comm totals diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// Test wrapper around any transport: deterministic seeded delays before
+/// every send/recv (so frame arrivals interleave differently from the
+/// lockstep schedule) and an exact count of data-round payload bytes
+/// handed to the wire (for the accounting assertion).
+struct FlakyTransport {
+    inner: Box<dyn Transport>,
+    rng: RngStream,
+    delay_max_us: usize,
+    data_bytes: Arc<AtomicU64>,
+}
+
+impl FlakyTransport {
+    fn new(inner: Box<dyn Transport>, seed: u64, delay_max_us: usize) -> Self {
+        let rank = inner.rank() as u64;
+        FlakyTransport {
+            inner,
+            rng: RngKey::new(seed).fold(rank).stream(0),
+            delay_max_us,
+            data_bytes: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    fn jitter(&mut self) {
+        if self.delay_max_us > 0 {
+            let us = self.rng.next_below(self.delay_max_us) as u64;
+            if us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(us));
+            }
+        }
+    }
+}
+
+impl Transport for FlakyTransport {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError> {
+        if (frame.kind as usize) < RoundKind::COUNT {
+            self.data_bytes.fetch_add(frame.payload.len() as u64, Ordering::Relaxed);
+        }
+        self.jitter();
+        self.inner.send(dst, frame)
+    }
+
+    fn flush(&mut self) -> Result<(), CommError> {
+        self.inner.flush()
+    }
+
+    fn recv(&mut self, src: usize) -> Result<Frame, CommError> {
+        self.jitter();
+        self.inner.recv(src)
+    }
+
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown()
+    }
+}
+
+/// Bound a fault scenario with a hard deadline: if the workers deadlock,
+/// the test fails with a message instead of hanging the suite.
+fn with_deadline<R: Send + 'static>(secs: u64, f: impl FnOnce() -> R + Send + 'static) -> R {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(std::time::Duration::from_secs(secs)) {
+        Ok(r) => r,
+        Err(_) => panic!("fault-injection scenario did not complete within {secs}s — deadlock"),
+    }
+}
+
+/// Seeded delays + short writes (7-byte chunks with eager flushes, so
+/// every frame crosses the wire fragmented) must not change a bit, and
+/// the byte counters must equal the framed payload bytes exactly.
+#[test]
+fn flaky_tcp_with_short_writes_is_still_bit_exact_and_counted() {
+    with_deadline(120, || {
+        let d = dataset();
+        let book =
+            Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(WORKERS)));
+        let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+        let counters = Arc::new(Counters::default());
+        let key = RngKey::new(2024);
+
+        let mut meshes = TcpMesh::loopback(WORKERS, 0).unwrap();
+        for m in &mut meshes {
+            m.set_max_chunk(7); // short writes: frames fragment on the wire
+        }
+        let mut wire_counts = Vec::new();
+        let transports: Vec<Box<dyn Transport>> = meshes
+            .into_iter()
+            .map(|m| {
+                let t = FlakyTransport::new(Box::new(m), 0xF1A2, 120);
+                wire_counts.push(Arc::clone(&t.data_bytes));
+                Box::new(t) as Box<dyn Transport>
+            })
+            .collect();
+
+        let shards_ref = &shards;
+        let d_ref = &d;
+        let book_ref = &book;
+        let results = run_workers_over(
+            transports,
+            NetworkModel::free(),
+            Arc::clone(&counters),
+            move |rank, comm| {
+                let shard = &shards_ref[rank];
+                let seeds = worker_seeds(d_ref, book_ref, rank, 12);
+                let mut ws = SamplerWorkspace::new();
+                let mut view = shard.topology.clone();
+                let mut feat = Vec::new();
+                let per_batch: Vec<Vec<Mfg>> = (0..BATCHES)
+                    .map(|b| {
+                        let mfgs = sample_mfgs_distributed(
+                            comm,
+                            shard,
+                            &mut view,
+                            &seeds,
+                            &FANOUTS,
+                            key.fold(b),
+                            &mut ws,
+                            KernelKind::Fused,
+                        )
+                        .unwrap();
+                        fetch_features(comm, shard, &mfgs[0].src_nodes, None, &mut feat)
+                            .unwrap();
+                        let mut grad = vec![rank as f32; 8];
+                        comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad).unwrap();
+                        mfgs
+                    })
+                    .collect();
+                (seeds, per_batch)
+            },
+        );
+
+        // Bit-exactness under fragmentation + jitter.
+        let mut ws = SamplerWorkspace::new();
+        for (seeds, per_batch) in &results {
+            for (b, mfgs) in per_batch.iter().enumerate() {
+                let expect = sample_mfgs(
+                    &d.graph,
+                    seeds,
+                    &FANOUTS,
+                    key.fold(b as u64),
+                    &mut ws,
+                    KernelKind::Fused,
+                );
+                assert_eq!(mfgs, &expect, "short writes corrupted batch {b}");
+            }
+        }
+
+        // CommStats bytes == sum of framed data payload lengths, exactly.
+        let framed: u64 = wire_counts.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        assert_eq!(
+            counters.snapshot().total_bytes(),
+            framed,
+            "byte counters are not measuring the framed wire payloads"
+        );
+        assert!(framed > 0, "workload moved no data — test too weak");
+    });
+}
+
+/// The same framed-bytes accounting identity over the channel mesh: the
+/// counters measure serialized payloads on every transport.
+#[test]
+fn comm_bytes_match_framed_payloads_on_the_channel_mesh() {
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(WORKERS)));
+    let counters = Arc::new(Counters::default());
+    let mut wire_counts = Vec::new();
+    let transports: Vec<Box<dyn Transport>> = TransportConfig::Inproc
+        .build_mesh(WORKERS)
+        .unwrap()
+        .into_iter()
+        .map(|m| {
+            let t = FlakyTransport::new(m, 0xC0DE, 0); // count only, no delays
+            wire_counts.push(Arc::clone(&t.data_bytes));
+            Box::new(t) as Box<dyn Transport>
+        })
+        .collect();
+    let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+    let key = RngKey::new(7);
+    let shards_ref = &shards;
+    let d_ref = &d;
+    let book_ref = &book;
+    run_workers_over(transports, NetworkModel::free(), Arc::clone(&counters), {
+        move |rank, comm| {
+            let shard = &shards_ref[rank];
+            let seeds = worker_seeds(d_ref, book_ref, rank, 10);
+            let mut ws = SamplerWorkspace::new();
+            let mut view = shard.topology.clone();
+            let mut feat = Vec::new();
+            let mfgs = sample_mfgs_distributed(
+                comm,
+                shard,
+                &mut view,
+                &seeds,
+                &FANOUTS,
+                key,
+                &mut ws,
+                KernelKind::Fused,
+            )
+            .unwrap();
+            fetch_features(comm, shard, &mfgs[0].src_nodes, None, &mut feat).unwrap();
+        }
+    });
+    let framed: u64 = wire_counts.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+    assert_eq!(counters.snapshot().total_bytes(), framed);
+    assert!(framed > 0);
+}
+
+/// One peer drops mid-run: every survivor's next round fails with a
+/// clean `CommError::PeerLost` naming a peer — no deadlock, no panic —
+/// on both transports. The rank whose receive order reaches the dead
+/// peer first must name it precisely.
+#[test]
+fn mid_round_peer_drop_fails_cleanly_on_both_transports() {
+    for config in [TransportConfig::Inproc, TransportConfig::Tcp { base_port: 0 }] {
+        let results = with_deadline(60, move || {
+            let counters = Arc::new(Counters::default());
+            run_workers_on(&config, 3, NetworkModel::free(), counters, |rank, comm| {
+                let boxes = |v: u32| (0..3).map(|_| vec![v]).collect::<Vec<Vec<u32>>>();
+                // Round 1: everyone healthy.
+                comm.exchange(RoundKind::SampleRequest, boxes(1)).unwrap();
+                if rank == 1 {
+                    return None; // rank 1 dies here; its links close on drop
+                }
+                // Round 2: survivors must fail cleanly, not hang.
+                Some(comm.exchange(RoundKind::SampleRequest, boxes(2)))
+            })
+            .unwrap()
+        });
+        assert!(results[1].is_none(), "{config}: the dropped rank should have exited");
+        for rank in [0usize, 2] {
+            match &results[rank] {
+                Some(Err(CommError::PeerLost { rank: lost })) => {
+                    assert_ne!(*lost, rank, "{config}: rank {rank} lost itself?");
+                }
+                other => panic!(
+                    "{config}: rank {rank} expected Err(PeerLost), got {other:?}"
+                ),
+            }
+        }
+        // Rank 0 receives from rank 1 before rank 2, and rank 1's death
+        // is the only fault — rank 0 must name it exactly.
+        assert_eq!(
+            results[0],
+            Some(Err(CommError::PeerLost { rank: 1 })),
+            "{config}: rank 0 did not name the dead peer"
+        );
+    }
+}
