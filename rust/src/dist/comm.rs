@@ -55,7 +55,9 @@ pub enum RoundKind {
 }
 
 impl RoundKind {
+    /// Number of round kinds (the length of the counter arrays).
     pub const COUNT: usize = 5;
+    /// Every kind, in discriminant order (for iteration in reports).
     pub const ALL: [RoundKind; Self::COUNT] = [
         RoundKind::SampleRequest,
         RoundKind::SampleResponse,
@@ -64,11 +66,13 @@ impl RoundKind {
         RoundKind::GradSync,
     ];
 
+    /// The stable discriminant, for indexing `CommStats` arrays.
     #[inline]
     pub fn index(self) -> usize {
         self as usize
     }
 
+    /// Human-readable kind name (report rows).
     pub fn name(self) -> &'static str {
         match self {
             RoundKind::SampleRequest => "sample-request",
@@ -125,10 +129,12 @@ pub struct CommStats {
 }
 
 impl CommStats {
+    /// Collective rounds charged to `kind`.
     pub fn rounds_of(&self, kind: RoundKind) -> u64 {
         self.rounds[kind.index()]
     }
 
+    /// Payload bytes charged to `kind` (summed over workers).
     pub fn bytes_of(&self, kind: RoundKind) -> u64 {
         self.bytes[kind.index()]
     }
@@ -138,14 +144,17 @@ impl CommStats {
         self.rounds_of(RoundKind::SampleRequest) + self.rounds_of(RoundKind::SampleResponse)
     }
 
+    /// Feature-exchange rounds (request + response).
     pub fn feature_rounds(&self) -> u64 {
         self.rounds_of(RoundKind::FeatureRequest) + self.rounds_of(RoundKind::FeatureResponse)
     }
 
+    /// All rounds, every kind.
     pub fn total_rounds(&self) -> u64 {
         self.rounds.iter().sum()
     }
 
+    /// All payload bytes, every kind.
     pub fn total_bytes(&self) -> u64 {
         self.bytes.iter().sum()
     }
@@ -193,6 +202,12 @@ pub enum CommError {
     /// The peer's end of the link closed (thread exited, socket EOF /
     /// reset) while a collective still expected traffic from it.
     PeerLost { rank: usize },
+    /// Multi-process rendezvous failed: a listener could not be bound, a
+    /// peer never appeared within the deadline, or a connection's FSMP
+    /// handshake named the wrong protocol version, world size, or rank
+    /// (see [`super::net::TcpMesh::connect`]). Always an error return at
+    /// connect time — never a hang.
+    Rendezvous { detail: String },
     /// A frame arrived whose round tag, element width, or sequence
     /// number does not match this rank's collective — the SPMD contract
     /// (every rank issues the same collective sequence) was violated.
@@ -210,6 +225,9 @@ impl std::fmt::Display for CommError {
         match self {
             CommError::PeerLost { rank } => {
                 write!(f, "peer rank {rank} exited mid-collective")
+            }
+            CommError::Rendezvous { detail } => {
+                write!(f, "rendezvous failed: {detail}")
             }
             CommError::SequenceMismatch { src, detail } => {
                 write!(f, "collective sequence mismatch with rank {src}: {detail}")
@@ -275,15 +293,43 @@ pub const FRAME_HEADER: usize = 12;
 /// corrupt length prefix allocating gigabytes).
 pub const MAX_FRAME_PAYLOAD: usize = 1 << 30;
 
-impl Frame {
-    /// Append the wire form (header + payload) to `out`.
-    pub fn encode_to(&self, out: &mut Vec<u8>) {
-        out.reserve(FRAME_HEADER + self.payload.len());
-        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+/// The fixed per-frame metadata without the payload — what
+/// [`Transport::send_typed`] carries alongside a still-unencoded typed
+/// payload so a transport can defer serialization to its writer threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// `RoundKind` index or control tag (see [`Frame::kind`] semantics).
+    pub kind: u8,
+    /// Element width in bytes of the typed payload.
+    pub elem: u8,
+    /// Sender rank.
+    pub src: u16,
+    /// Sender's collective sequence number.
+    pub seq: u32,
+}
+
+impl FrameHeader {
+    /// Append the 12-byte wire header for a `payload_len`-byte payload —
+    /// the single source of truth for the header layout (see [`Frame`]).
+    pub fn encode_to(&self, payload_len: usize, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(payload_len as u32).to_le_bytes());
         out.push(self.kind);
         out.push(self.elem);
         out.extend_from_slice(&self.src.to_le_bytes());
         out.extend_from_slice(&self.seq.to_le_bytes());
+    }
+}
+
+impl Frame {
+    /// This frame's metadata as a [`FrameHeader`].
+    pub fn header(&self) -> FrameHeader {
+        FrameHeader { kind: self.kind, elem: self.elem, src: self.src, seq: self.seq }
+    }
+
+    /// Append the wire form (header + payload) to `out`.
+    pub fn encode_to(&self, out: &mut Vec<u8>) {
+        out.reserve(FRAME_HEADER + self.payload.len());
+        self.header().encode_to(self.payload.len(), out);
         out.extend_from_slice(&self.payload);
     }
 
@@ -316,8 +362,11 @@ impl Frame {
 /// bit-exact round trips (f32 moves by bit pattern, so NaNs and negative
 /// zeros survive — the loss-curve equivalence tests depend on exactness).
 pub trait Wire: Copy + Send + 'static {
+    /// Encoded width in bytes (every element of a payload is this wide).
     const SIZE: usize;
+    /// Append this value's little-endian encoding to `out`.
     fn put_le(self, out: &mut Vec<u8>);
+    /// Decode one value from the first [`Wire::SIZE`] bytes of `b`.
     fn get_le(b: &[u8]) -> Self;
 }
 
@@ -378,6 +427,34 @@ pub fn encode_payload<T: Wire>(data: &[T]) -> Vec<u8> {
     out
 }
 
+/// A type-erased typed payload whose wire encoding can be produced
+/// *later* — on a transport's per-link writer thread — instead of on the
+/// collective thread. Implemented for `Vec<T: Wire>`; the encoding is
+/// byte-identical to [`encode_payload`], so deferring it changes nothing
+/// on the wire or in the byte counters (`byte_len` is known without
+/// encoding: `len * T::SIZE`).
+pub trait WirePayload: Send {
+    /// Exact encoded length in bytes.
+    fn byte_len(&self) -> usize;
+    /// Append the little-endian wire encoding to `out` (must produce
+    /// exactly [`WirePayload::byte_len`] bytes, identical to
+    /// [`encode_payload`]).
+    fn append_to(&self, out: &mut Vec<u8>);
+}
+
+impl<T: Wire> WirePayload for Vec<T> {
+    fn byte_len(&self) -> usize {
+        self.len() * T::SIZE
+    }
+
+    fn append_to(&self, out: &mut Vec<u8>) {
+        out.reserve(self.len() * T::SIZE);
+        for &x in self {
+            x.put_le(out);
+        }
+    }
+}
+
 /// Deserialize a wire payload; `Err` carries a human-readable reason
 /// (payload not a whole number of elements).
 pub fn decode_payload<T: Wire>(bytes: &[u8]) -> Result<Vec<T>, String> {
@@ -419,6 +496,32 @@ pub trait Transport: Send {
     fn world(&self) -> usize;
     /// Queue `frame` for `dst` (`dst != rank`).
     fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError>;
+    /// Queue a *typed* payload for `dst`, letting the transport defer the
+    /// wire encoding. The default encodes immediately and forwards to
+    /// [`Transport::send`] — semantically and byte-identically the same;
+    /// [`super::net::TcpMesh`] overrides it to encode on the link's
+    /// writer thread, overlapping serialization with the wire (and with
+    /// the collective thread's progress toward its receive phase) on
+    /// large rounds.
+    fn send_typed(
+        &mut self,
+        dst: usize,
+        header: FrameHeader,
+        data: Box<dyn WirePayload>,
+    ) -> Result<(), CommError> {
+        let mut payload = Vec::with_capacity(data.byte_len());
+        data.append_to(&mut payload);
+        self.send(
+            dst,
+            Frame {
+                kind: header.kind,
+                elem: header.elem,
+                src: header.src,
+                seq: header.seq,
+                payload,
+            },
+        )
+    }
     /// Push all buffered frames toward their peers (round boundary).
     fn flush(&mut self) -> Result<(), CommError>;
     /// Next frame from `src` (`src != rank`), blocking until it arrives
@@ -560,16 +663,19 @@ impl Comm {
             .collect()
     }
 
+    /// This worker's rank.
     #[inline]
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// Number of ranks on the fabric.
     #[inline]
     pub fn world(&self) -> usize {
         self.world
     }
 
+    /// The network cost model charged per round.
     pub fn net(&self) -> &NetworkModel {
         &self.net
     }
@@ -680,8 +786,10 @@ impl Comm {
         Ok(())
     }
 
-    /// All-to-all with per-destination payloads: serialize each outbox,
-    /// ship, then collect one frame per peer (self slot passes through).
+    /// All-to-all with per-destination payloads: hand each typed outbox
+    /// to the transport (which may encode it on a writer thread —
+    /// **overlapped encoding**), then collect one frame per peer (self
+    /// slot passes through unserialized).
     fn exchange_impl<T: Wire>(
         &mut self,
         tag: u8,
@@ -699,10 +807,13 @@ impl Comm {
                 self_data = Some(data);
                 continue;
             }
-            let payload = encode_payload(&data);
-            sent_bytes += payload.len() as u64;
-            let frame = Frame { kind: tag, elem, src: my_src, seq, payload };
-            self.transport.send(dst, frame)?;
+            // Byte accounting without encoding: the wire length of a
+            // typed payload is exactly len * elem size, so the counters
+            // stay identical whether the transport encodes now (channel
+            // mesh) or on its writer threads (TcpMesh).
+            sent_bytes += (data.len() * T::SIZE) as u64;
+            let header = FrameHeader { kind: tag, elem, src: my_src, seq };
+            self.transport.send_typed(dst, header, Box::new(data))?;
         }
         self.finish_sends(track, sent_bytes)?;
         let mut inboxes = self.recv_round::<T>(tag, seq)?;
@@ -1006,5 +1117,51 @@ mod tests {
         assert!(e.to_string().contains("exited mid-collective"));
         let m = CommError::SequenceMismatch { src: 2, detail: "kind 1 vs 2".into() };
         assert!(m.to_string().contains("rank 2"));
+        let r = CommError::Rendezvous { detail: "world 3 != 2".into() };
+        assert!(r.to_string().contains("rendezvous"));
+        assert!(r.to_string().contains("world 3 != 2"));
+    }
+
+    #[test]
+    fn deferred_encoding_is_byte_identical_to_eager() {
+        // The overlapped-encoding invariant: header + WirePayload must
+        // produce exactly the bytes Frame::encode_to produces.
+        let data: Vec<u32> = vec![7, 0, u32::MAX, 0x0102_0304];
+        let frame = Frame {
+            kind: 2,
+            elem: 4,
+            src: 9,
+            seq: 1234,
+            payload: encode_payload(&data),
+        };
+        let mut eager = Vec::new();
+        frame.encode_to(&mut eager);
+        let payload: Box<dyn WirePayload> = Box::new(data);
+        let mut deferred = Vec::new();
+        frame.header().encode_to(payload.byte_len(), &mut deferred);
+        payload.append_to(&mut deferred);
+        assert_eq!(eager, deferred);
+        assert_eq!(payload.byte_len(), frame.payload.len());
+        // f32 payloads defer by bit pattern too (NaN survives).
+        let f: Vec<f32> = vec![f32::NAN, -0.0, 3.5];
+        let mut a = Vec::new();
+        WirePayload::append_to(&f, &mut a);
+        assert_eq!(a, encode_payload(&f));
+    }
+
+    #[test]
+    fn send_typed_default_matches_send_on_the_channel_mesh() {
+        // ChannelMesh uses the default (eager) send_typed; the receiver
+        // must see a frame indistinguishable from a plain send.
+        let mut meshes = ChannelMesh::mesh(2);
+        let mut b = meshes.pop().unwrap();
+        let mut a = meshes.pop().unwrap();
+        let data: Vec<u64> = vec![1, 2, 1 << 40];
+        let header = FrameHeader { kind: 0, elem: 8, src: 0, seq: 3 };
+        a.send_typed(1, header, Box::new(data.clone())).unwrap();
+        a.flush().unwrap();
+        let got = b.recv(0).unwrap();
+        assert_eq!(got.header(), header);
+        assert_eq!(decode_payload::<u64>(&got.payload).unwrap(), data);
     }
 }

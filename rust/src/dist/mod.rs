@@ -12,13 +12,19 @@
 //!   from the framed wire payloads). Fabric failures surface as
 //!   [`CommError`] (a lost peer is named, never hung on).
 //! * [`net`] — [`TcpMesh`]: the socket transport (per-peer loopback/real
-//!   TCP, rank handshake, flush at round boundaries);
-//!   [`TransportConfig`]: transport selection (`inproc` |
-//!   `tcp:<base_port>`); [`NetworkModel`]: latency + bandwidth cost per
-//!   round, so Fig 5/6 epoch times are simulatable on one machine.
+//!   TCP, versioned rank handshake, flush at round boundaries, writer
+//!   threads that encode typed outboxes off the collective thread);
+//!   [`TcpMesh::connect`] + [`RendezvousConfig`]: per-rank multi-process
+//!   rendezvous (retry/backoff/deadline, handshake validation →
+//!   [`CommError::Rendezvous`]); [`TransportConfig`]: transport
+//!   selection (`inproc` | `tcp:<base_port>`); [`NetworkModel`]:
+//!   latency + bandwidth cost per round, so Fig 5/6 epoch times are
+//!   simulatable on one machine.
 //! * [`worker`] — [`run_workers`]/[`run_workers_with`]/[`run_workers_on`]
 //!   /[`run_workers_over`]: spawn W rendezvous-connected worker threads
-//!   over any transport, collect per-rank results.
+//!   over any transport, collect per-rank results;
+//!   [`run_worker_process`]: run one rank in this OS process over the
+//!   real-TCP mesh (the `fastsample worker` harness).
 //! * [`sampling`] — [`sample_mfgs_distributed`]: one unified sampler
 //!   over the replication-budget spectrum — frontier nodes with
 //!   materialized adjacency (local rows + budgeted halo + cached rows)
@@ -46,10 +52,13 @@ pub mod worker;
 
 pub use cache::{CachePolicy, SlabCache};
 pub use comm::{
-    ChannelMesh, Comm, CommError, CommStats, Counters, Frame, RoundKind, Transport, Wire,
+    ChannelMesh, Comm, CommError, CommStats, Counters, Frame, FrameHeader, RoundKind,
+    Transport, Wire, WirePayload,
 };
 pub use feature_cache::{hottest_remote_nodes, FeatureCache};
 pub use feature_store::{fetch_features, prefill_cache, FetchStats};
-pub use net::{NetworkModel, TcpMesh, TransportConfig};
+pub use net::{NetworkModel, PROTOCOL_VERSION, RendezvousConfig, TcpMesh, TransportConfig};
 pub use sampling::sample_mfgs_distributed;
-pub use worker::{run_workers, run_workers_on, run_workers_over, run_workers_with};
+pub use worker::{
+    run_worker_process, run_workers, run_workers_on, run_workers_over, run_workers_with,
+};

@@ -1,18 +1,30 @@
-//! The fabric: the socket transport ([`TcpMesh`]), transport selection
-//! ([`TransportConfig`]), and the network cost model ([`NetworkModel`]).
+//! The fabric: the socket transport ([`TcpMesh`]), multi-process
+//! rendezvous ([`TcpMesh::connect`] + [`RendezvousConfig`]), transport
+//! selection ([`TransportConfig`]), and the network cost model
+//! ([`NetworkModel`]).
 //!
 //! [`TcpMesh`] backs the typed-round API of [`super::comm`] with real
-//! sockets: one TCP connection per directed (src, dst) pair, a rank
-//! handshake at connect, length-prefixed little-endian frames (see
-//! [`Frame`]), a dedicated writer thread per outgoing link (sends queue
-//! instead of blocking, so the symmetric all-to-all cannot deadlock on
-//! kernel socket buffering — the round-boundary flush is an error
-//! checkpoint), and poisoned-peer error propagation — a dead peer
-//! surfaces as [`CommError::PeerLost`] from the next operation touching
-//! its link, never as a hang or a panic. Because both transports
-//! serialize payloads through the same [`super::comm::Wire`] encoding, a
-//! training run is bit-identical over sockets and over the in-process
-//! channel mesh (`rust/tests/transport_equivalence.rs` pins this).
+//! sockets: one TCP connection per directed (src, dst) pair, a
+//! versioned rank handshake at connect, length-prefixed little-endian
+//! frames (see [`Frame`]), a dedicated writer thread per outgoing link
+//! (sends queue instead of blocking, so the symmetric all-to-all cannot
+//! deadlock on kernel socket buffering — the round-boundary flush is an
+//! error checkpoint; typed payloads are **encoded on the writer
+//! thread**, overlapping serialization with the wire), and
+//! poisoned-peer error propagation — a dead peer surfaces as
+//! [`CommError::PeerLost`] from the next operation touching its link,
+//! never as a hang or a panic. Because both transports serialize
+//! payloads through the same [`super::comm::Wire`] encoding, a training
+//! run is bit-identical over sockets and over the in-process channel
+//! mesh (`rust/tests/transport_equivalence.rs` pins this).
+//!
+//! The mesh connects two ways: [`TcpMesh::loopback`] wires all ranks
+//! inside one process (tests, `--transport tcp`), while
+//! [`TcpMesh::connect`] rendezvouses **one rank per OS process** — bind
+//! a listener, dial every peer with retry + exponential backoff under a
+//! deadline, accept and validate every incoming handshake — which is
+//! what `fastsample worker` and the multi-process integration tests run
+//! (misconfiguration surfaces as [`CommError::Rendezvous`], not a hang).
 //!
 //! [`NetworkModel`] charges each collective round
 //! `latency + bytes_sent / bandwidth` of wall time (injected with
@@ -28,9 +40,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::comm::{io_to_comm, ChannelMesh, CommError, Frame, Transport};
+use super::comm::{
+    io_to_comm, ChannelMesh, CommError, Frame, FrameHeader, Transport, WirePayload,
+};
 
 /// Cost model of the fabric connecting workers (one worker ≈ one machine
 /// of the paper's testbed).
@@ -174,11 +188,219 @@ impl std::fmt::Display for TransportConfig {
 // ---------------------------------------------------------------------------
 
 /// Handshake magic ("FSMP") sent once per connection, followed by the
-/// world size and the connecting rank — so an acceptor can demultiplex
-/// incoming links by rank and reject cross-run or cross-world strays.
+/// protocol version, the world size, the connecting rank, and the rank
+/// the connection is *for* — so an acceptor can demultiplex incoming
+/// links by rank and reject cross-run, cross-world, or cross-version
+/// strays at rendezvous time instead of desynchronizing later.
 const HANDSHAKE_MAGIC: u32 = 0x4653_4D50;
 
-/// One outgoing link: an unbounded frame queue drained by a dedicated
+/// Wire version of the FSMP handshake + framing. Bump on any change to
+/// the handshake layout or the frame format; mismatched peers are
+/// rejected at rendezvous ([`CommError::Rendezvous`]) instead of
+/// mis-parsing each other's frames.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Handshake bytes on the wire:
+/// `magic u32 | version u16 | world u16 | src u16 | dst u16` (LE).
+const HANDSHAKE_LEN: usize = 12;
+
+fn encode_handshake(world: usize, src: usize, dst: usize) -> [u8; HANDSHAKE_LEN] {
+    let mut hs = [0u8; HANDSHAKE_LEN];
+    hs[..4].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+    hs[4..6].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    hs[6..8].copy_from_slice(&(world as u16).to_le_bytes());
+    hs[8..10].copy_from_slice(&(src as u16).to_le_bytes());
+    hs[10..12].copy_from_slice(&(dst as u16).to_le_bytes());
+    hs
+}
+
+/// Does the buffer lead with the FSMP magic? Anything else is not a
+/// FastSample peer at all — a stray connection (health check, scanner),
+/// which the multi-process rendezvous drops rather than treating as a
+/// fatal misconfiguration.
+fn handshake_magic_ok(hs: &[u8; HANDSHAKE_LEN]) -> bool {
+    u32::from_le_bytes([hs[0], hs[1], hs[2], hs[3]]) == HANDSHAKE_MAGIC
+}
+
+/// Validate an incoming handshake against this acceptor's identity.
+/// Returns the connecting rank, or a human-readable rejection reason
+/// (mismatched magic, protocol version, world size, or rank).
+fn validate_handshake(
+    hs: &[u8; HANDSHAKE_LEN],
+    world: usize,
+    me: usize,
+) -> Result<usize, String> {
+    let magic = u32::from_le_bytes([hs[0], hs[1], hs[2], hs[3]]);
+    let version = u16::from_le_bytes([hs[4], hs[5]]);
+    let hs_world = u16::from_le_bytes([hs[6], hs[7]]) as usize;
+    let hs_src = u16::from_le_bytes([hs[8], hs[9]]) as usize;
+    let hs_dst = u16::from_le_bytes([hs[10], hs[11]]) as usize;
+    if magic != HANDSHAKE_MAGIC {
+        return Err(format!("bad handshake magic {magic:#x} (not an FSMP peer?)"));
+    }
+    if version != PROTOCOL_VERSION {
+        return Err(format!(
+            "handshake protocol version {version} != {PROTOCOL_VERSION} (mixed builds?)"
+        ));
+    }
+    if hs_world != world {
+        return Err(format!("handshake world {hs_world} != this rank's world {world}"));
+    }
+    if hs_dst != me {
+        return Err(format!(
+            "handshake addressed to rank {hs_dst}, but this is rank {me} (peer list skew?)"
+        ));
+    }
+    if hs_src >= world || hs_src == me {
+        return Err(format!("handshake rank {hs_src} invalid for rank {me}"));
+    }
+    Ok(hs_src)
+}
+
+// ---------------------------------------------------------------------------
+// Rendezvous configuration
+// ---------------------------------------------------------------------------
+
+/// Knobs of the per-rank rendezvous ([`TcpMesh::connect`]): how long the
+/// whole dial + accept phase may take, and how dial retries back off
+/// while a peer's listener has not appeared yet.
+///
+/// Environment fallbacks (read by [`RendezvousConfig::from_env`], flags
+/// override them):
+///
+/// | variable | meaning |
+/// |---|---|
+/// | `FASTSAMPLE_RENDEZVOUS_TIMEOUT_MS` | overall deadline (default 30000) |
+/// | `FASTSAMPLE_RENDEZVOUS_RETRY_MS`   | first dial backoff (default 25) |
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RendezvousConfig {
+    /// Hard deadline for the whole rendezvous (binding, dialing every
+    /// higher-cost peer with retries, accepting every incoming link).
+    /// Expiry is a [`CommError::Rendezvous`], never a hang.
+    pub timeout: Duration,
+    /// Backoff before the first dial retry; doubles per retry.
+    pub retry_initial: Duration,
+    /// Backoff ceiling for dial retries.
+    pub retry_max: Duration,
+    /// Address to bind this rank's listener on instead of its own peer
+    /// entry — for hosts that must listen on a wildcard/internal address
+    /// (e.g. `0.0.0.0:9400`) while peers dial a routable one.
+    pub bind: Option<String>,
+}
+
+impl Default for RendezvousConfig {
+    fn default() -> Self {
+        Self {
+            timeout: Duration::from_secs(30),
+            retry_initial: Duration::from_millis(25),
+            retry_max: Duration::from_secs(1),
+            bind: None,
+        }
+    }
+}
+
+impl RendezvousConfig {
+    /// Defaults with an explicit overall deadline.
+    pub fn with_timeout(timeout: Duration) -> Self {
+        Self { timeout, ..Self::default() }
+    }
+
+    /// Defaults overridden by the `FASTSAMPLE_RENDEZVOUS_*` environment
+    /// variables (see the type-level table) — the CI-able path: a launch
+    /// script exports one timeout for every rank it spawns.
+    pub fn from_env() -> Self {
+        fn env_ms(key: &str) -> Option<Duration> {
+            std::env::var(key).ok()?.trim().parse::<u64>().ok().map(Duration::from_millis)
+        }
+        let mut cfg = Self::default();
+        if let Some(t) = env_ms("FASTSAMPLE_RENDEZVOUS_TIMEOUT_MS") {
+            cfg.timeout = t;
+        }
+        if let Some(t) = env_ms("FASTSAMPLE_RENDEZVOUS_RETRY_MS") {
+            cfg.retry_initial = t.max(Duration::from_millis(1));
+        }
+        cfg
+    }
+}
+
+fn rdv(detail: String) -> CommError {
+    CommError::Rendezvous { detail }
+}
+
+/// Poll interval of the nonblocking accept loop in [`TcpMesh::connect`].
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Longest a single accepted connection may take to deliver its 12-byte
+/// handshake before being dropped as a stray (also capped by the
+/// remaining rendezvous budget). Real peers write the handshake in the
+/// same breath as the connect; only port scanners and health checks sit
+/// silent.
+const STRAY_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Cap on one address's connect attempt within a dial retry, so a
+/// blackholed first address (e.g. an unreachable IPv6) cannot starve
+/// the remaining addresses of a dual-stack peer of budget.
+const DIAL_ATTEMPT_CAP: Duration = Duration::from_secs(5);
+
+/// Dial `addr` until the connection is accepted or the deadline expires.
+/// Every connect error is treated as retryable — the dominant case is
+/// "connection refused" because the peer process has not bound its
+/// listener yet — with exponential backoff (`retry_initial`, doubling,
+/// capped at `retry_max`). Each retry re-resolves the address (DNS may
+/// warm up with the peer) and tries **every** resolved socket address
+/// (dual-stack hosts often listen on only one family), each attempt
+/// bounded by `connect_timeout` under the *remaining* rendezvous
+/// budget — so a blackholed address (dropped SYNs, the classic
+/// firewall misconfiguration) cannot out-wait the deadline the way a
+/// blocking connect's ~2-minute OS retry cycle would. On expiry, the
+/// last error is reported.
+fn dial(addr: &str, deadline: Instant, cfg: &RendezvousConfig) -> Result<TcpStream, String> {
+    use std::net::ToSocketAddrs;
+    let mut backoff = cfg.retry_initial.max(Duration::from_millis(1));
+    loop {
+        let mut last_err: Option<std::io::Error> = None;
+        match addr.to_socket_addrs() {
+            Err(e) => last_err = Some(e),
+            Ok(addrs) => {
+                for sa in addrs {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    match TcpStream::connect_timeout(&sa, remaining.min(DIAL_ATTEMPT_CAP)) {
+                        Ok(s) => return Ok(s),
+                        Err(e) => last_err = Some(e),
+                    }
+                }
+            }
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(match last_err {
+                Some(e) => format!("deadline expired after retries; last error: {e}"),
+                None => "deadline expired (address resolved to nothing)".into(),
+            });
+        }
+        std::thread::sleep(backoff.min(deadline - now));
+        backoff = (backoff * 2).min(cfg.retry_max.max(Duration::from_millis(1)));
+    }
+}
+
+/// One unit of work for a link's writer thread: either a pre-encoded
+/// wire buffer (header + payload) or a typed payload whose encoding is
+/// **deferred to the writer thread** — the overlapped-encoding path of
+/// [`Transport::send_typed`], which lets serialization of one peer's
+/// outbox proceed concurrently with other links' writes and with the
+/// collective thread moving on to its receive phase.
+enum Job {
+    /// Pre-encoded wire bytes, written as-is.
+    Bytes(Vec<u8>),
+    /// Typed payload; the writer encodes `header` + payload into the
+    /// identical wire form `Frame::encode_to` would have produced.
+    Typed { header: FrameHeader, data: Box<dyn WirePayload> },
+}
+
+/// One outgoing link: an unbounded job queue drained by a dedicated
 /// writer thread. Queueing means `Transport::send` never blocks on the
 /// peer's socket buffers — the collective loop always reaches its
 /// receive phase, so the symmetric all-to-all cannot deadlock no matter
@@ -186,7 +408,7 @@ const HANDSHAKE_MAGIC: u32 = 0x4653_4D50;
 /// `err` and surfaced by the next `send`/`flush` touching the link.
 struct OutLink {
     /// `None` once shut down (closing the channel stops the writer).
-    queue: Option<Sender<Vec<u8>>>,
+    queue: Option<Sender<Job>>,
     err: Arc<Mutex<Option<CommError>>>,
     writer: Option<JoinHandle<()>>,
 }
@@ -269,38 +491,20 @@ impl TcpMesh {
                 }
                 let mut s = TcpStream::connect(addrs[dst])?;
                 s.set_nodelay(true)?;
-                let mut hs = [0u8; 8];
-                hs[..4].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
-                hs[4..6].copy_from_slice(&(world as u16).to_le_bytes());
-                hs[6..8].copy_from_slice(&(src as u16).to_le_bytes());
-                s.write_all(&hs)?;
+                s.write_all(&encode_handshake(world, src, dst))?;
                 out[src][dst] = Some(spawn_writer(s, dst, Arc::clone(&chunks[src])));
 
                 // Drain the one pending connection this iteration queued
                 // on `dst`'s listener, demultiplexing by handshaked rank.
                 let (mut s, _) = listeners[dst].accept()?;
                 s.set_nodelay(true)?;
-                let mut hs = [0u8; 8];
+                let mut hs = [0u8; HANDSHAKE_LEN];
                 s.read_exact(&mut hs)?;
-                let magic = u32::from_le_bytes([hs[0], hs[1], hs[2], hs[3]]);
-                let hs_world = u16::from_le_bytes([hs[4], hs[5]]) as usize;
-                let hs_src = u16::from_le_bytes([hs[6], hs[7]]) as usize;
                 let bad = |detail: String| {
                     std::io::Error::new(std::io::ErrorKind::InvalidData, detail)
                 };
-                if magic != HANDSHAKE_MAGIC {
-                    return Err(bad(format!("bad handshake magic {magic:#x} on rank {dst}")));
-                }
-                if hs_world != world {
-                    return Err(bad(format!(
-                        "handshake world {hs_world} != mesh world {world}"
-                    )));
-                }
-                if hs_src >= world || hs_src == dst {
-                    return Err(bad(format!(
-                        "handshake rank {hs_src} invalid for rank {dst}"
-                    )));
-                }
+                let hs_src = validate_handshake(&hs, world, dst)
+                    .map_err(|detail| bad(format!("rank {dst}: {detail}")))?;
                 if inc[dst][hs_src].is_some() {
                     return Err(bad(format!("duplicate link {hs_src} -> {dst}")));
                 }
@@ -315,6 +519,150 @@ impl TcpMesh {
             .enumerate()
             .map(|(rank, ((out, inc), max_chunk))| TcpMesh { rank, world, out, inc, max_chunk })
             .collect())
+    }
+
+    /// Rendezvous **one rank of a multi-process mesh**: every rank —
+    /// its own OS process, possibly its own machine — calls this with
+    /// the same `peers` list (`peers[r]` = where rank `r` listens) and
+    /// its own `rank`, and gets back its endpoint of the same full mesh
+    /// [`TcpMesh::loopback`] builds inside one process.
+    ///
+    /// Three phases, all bounded by `cfg.timeout`:
+    ///
+    /// 1. **Bind** the listener at `peers[rank]` (or `cfg.bind`), first,
+    ///    so peers' dials can land in the kernel backlog while this rank
+    ///    is still dialing — the property that makes the symmetric
+    ///    rendezvous deadlock-free in any start order.
+    /// 2. **Dial** every peer to originate this rank's outgoing links,
+    ///    retrying with exponential backoff (`cfg.retry_initial`,
+    ///    doubling up to `cfg.retry_max`) while the peer's listener has
+    ///    not appeared yet, and write the FSMP handshake
+    ///    (`magic | version | world | src | dst`).
+    /// 3. **Accept** `world − 1` incoming links, demultiplexed by the
+    ///    handshaked source rank. A handshake naming the wrong protocol
+    ///    version, world size, or destination rank fails the rendezvous
+    ///    with [`CommError::Rendezvous`] — a misconfigured launch is
+    ///    diagnosed at connect time, never by a hang or a desynchronized
+    ///    collective later. (The misconfigured peer itself sees its
+    ///    connection close, which surfaces as [`CommError::PeerLost`]
+    ///    from its first collective.)
+    ///
+    /// Deadline expiry at any phase is a [`CommError::Rendezvous`]
+    /// naming the ranks still missing.
+    ///
+    /// ```
+    /// use fastsample::dist::{RendezvousConfig, TcpMesh, Transport};
+    ///
+    /// // A single-rank world rendezvouses with itself: it binds an
+    /// // ephemeral port ("tcp:0"-style) and has no peers to dial.
+    /// let peers = vec!["127.0.0.1:0".to_string()];
+    /// let mesh = TcpMesh::connect(0, &peers, &RendezvousConfig::default()).unwrap();
+    /// assert_eq!((mesh.rank(), mesh.world()), (0, 1));
+    /// ```
+    ///
+    /// A 4-rank run is 4 shell commands (see `OPERATIONS.md`):
+    ///
+    /// ```sh
+    /// PEERS=127.0.0.1:9400,127.0.0.1:9401,127.0.0.1:9402,127.0.0.1:9403
+    /// for R in 1 2 3; do fastsample worker --rank $R --peers $PEERS & done
+    /// fastsample worker --rank 0 --peers $PEERS
+    /// ```
+    pub fn connect(
+        rank: usize,
+        peers: &[String],
+        cfg: &RendezvousConfig,
+    ) -> Result<TcpMesh, CommError> {
+        let world = peers.len();
+        if world == 0 || rank >= world {
+            return Err(rdv(format!(
+                "rank {rank} out of range for a {world}-entry peer list"
+            )));
+        }
+        let deadline = Instant::now() + cfg.timeout;
+        let bind_addr = cfg.bind.as_deref().unwrap_or(peers[rank].as_str());
+        let io_ctx = |what: &str, e: std::io::Error| rdv(format!("rank {rank}: {what}: {e}"));
+        let listener = TcpListener::bind(bind_addr)
+            .map_err(|e| io_ctx(&format!("cannot bind listener on {bind_addr}"), e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| io_ctx("cannot poll the listener", e))?;
+
+        let max_chunk = Arc::new(AtomicUsize::new(usize::MAX));
+        let mut out: Vec<Option<OutLink>> = (0..world).map(|_| None).collect();
+        let mut inc: Vec<Option<BufReader<TcpStream>>> = (0..world).map(|_| None).collect();
+
+        // ---- Dial phase: originate the outgoing half of every directed
+        // pair this rank is the source of. Connects complete into the
+        // peers' listen backlogs even while those peers are themselves
+        // still dialing, so no ordering between ranks is required.
+        for dst in 0..world {
+            if dst == rank {
+                continue;
+            }
+            let mut s = dial(&peers[dst], deadline, cfg).map_err(|detail| {
+                rdv(format!("rank {rank} dialing rank {dst} ({}): {detail}", peers[dst]))
+            })?;
+            s.set_nodelay(true).map_err(|e| io_ctx("set_nodelay", e))?;
+            s.write_all(&encode_handshake(world, rank, dst))
+                .map_err(|e| io_ctx(&format!("handshaking rank {dst}"), e))?;
+            out[dst] = Some(spawn_writer(s, dst, Arc::clone(&max_chunk)));
+        }
+
+        // ---- Accept phase: collect world − 1 incoming links, validated
+        // and demultiplexed by the handshaked source rank.
+        let mut pending = world - 1;
+        while pending > 0 {
+            match listener.accept() {
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        let missing: Vec<usize> =
+                            (0..world).filter(|&p| p != rank && inc[p].is_none()).collect();
+                        return Err(rdv(format!(
+                            "rank {rank}: rendezvous deadline ({:?}) expired with no \
+                             incoming link from ranks {missing:?}",
+                            cfg.timeout
+                        )));
+                    }
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => return Err(io_ctx("accept failed", e)),
+                Ok((mut s, from)) => {
+                    s.set_nonblocking(false)
+                        .map_err(|e| io_ctx("unsetting listener nonblock", e))?;
+                    // Bound the handshake read tightly: a stray that
+                    // connects and sends nothing (health check, port
+                    // scanner) must neither consume the deadline nor
+                    // abort the rendezvous.
+                    let hs_budget = deadline
+                        .saturating_duration_since(Instant::now())
+                        .min(STRAY_HANDSHAKE_TIMEOUT)
+                        .max(Duration::from_millis(1));
+                    s.set_read_timeout(Some(hs_budget))
+                        .map_err(|e| io_ctx("set handshake timeout", e))?;
+                    let mut hs = [0u8; HANDSHAKE_LEN];
+                    if s.read_exact(&mut hs).is_err() || !handshake_magic_ok(&hs) {
+                        // Not an FSMP peer: drop it and keep accepting.
+                        continue;
+                    }
+                    // An actual FSMP peer whose identity disagrees IS a
+                    // fatal misconfiguration (mixed builds, divergent
+                    // peer lists) — diagnosed now, not mid-run.
+                    let src = validate_handshake(&hs, world, rank).map_err(|detail| {
+                        rdv(format!("rank {rank}: rejecting connection from {from}: {detail}"))
+                    })?;
+                    if inc[src].is_some() {
+                        return Err(rdv(format!(
+                            "rank {rank}: duplicate incoming link from rank {src}"
+                        )));
+                    }
+                    s.set_read_timeout(None).map_err(|e| io_ctx("clear handshake timeout", e))?;
+                    s.set_nodelay(true).map_err(|e| io_ctx("set_nodelay", e))?;
+                    inc[src] = Some(BufReader::new(s));
+                    pending -= 1;
+                }
+            }
+        }
+        Ok(TcpMesh { rank, world, out, inc, max_chunk })
     }
 
     /// Cap the bytes per write call, flushing between chunks — frames
@@ -334,20 +682,56 @@ impl TcpMesh {
         }
         Ok(())
     }
+
+    /// Queue one writer job on the link to `dst`, surfacing any parked
+    /// link error (shared by `send` and `send_typed`).
+    fn enqueue(&self, dst: usize, job: Job) -> Result<(), CommError> {
+        let link = self.out[dst]
+            .as_ref()
+            .expect("send to self goes through the inbox pass-through, not the transport");
+        if let Some(e) = link.last_err() {
+            return Err(e);
+        }
+        // Queue gone or writer exited: surface the parked error, or a
+        // plain loss when the writer died without recording one.
+        let lost = || link.last_err().unwrap_or(CommError::PeerLost { rank: dst });
+        let Some(q) = &link.queue else {
+            return Err(lost());
+        };
+        if q.send(job).is_err() {
+            return Err(lost());
+        }
+        Ok(())
+    }
 }
 
 /// Spawn the writer thread for one outgoing link. It drains the queue
-/// in FIFO order, splitting frames into `max_chunk`-byte writes when the
-/// knob is set; on the first write error it parks the mapped
-/// [`CommError`] and exits (the closed queue then fails future sends).
-/// On clean shutdown (queue closed) it half-closes the socket so the
-/// peer reads EOF only after every queued frame.
+/// in FIFO order, encoding deferred typed payloads ([`Job::Typed`]) into
+/// wire form on this thread and splitting frames into `max_chunk`-byte
+/// writes when the knob is set; on the first write error it parks the
+/// mapped [`CommError`] and exits (the closed queue then fails future
+/// sends). On clean shutdown (queue closed) it half-closes the socket so
+/// the peer reads EOF only after every queued frame.
 fn spawn_writer(mut stream: TcpStream, dst: usize, max_chunk: Arc<AtomicUsize>) -> OutLink {
-    let (tx, rx) = channel::<Vec<u8>>();
+    let (tx, rx) = channel::<Job>();
     let err: Arc<Mutex<Option<CommError>>> = Arc::new(Mutex::new(None));
     let err_slot = Arc::clone(&err);
     let writer = std::thread::spawn(move || {
-        while let Ok(buf) = rx.recv() {
+        while let Ok(job) = rx.recv() {
+            let buf = match job {
+                Job::Bytes(buf) => buf,
+                Job::Typed { header, data } => {
+                    // Overlapped encoding: serialize here, off the
+                    // collective thread, byte-identical to the eager path
+                    // (pinned by `deferred_encoding_is_byte_identical_to_
+                    // eager` in comm.rs).
+                    let len = data.byte_len();
+                    let mut buf = Vec::with_capacity(super::comm::FRAME_HEADER + len);
+                    header.encode_to(len, &mut buf);
+                    data.append_to(&mut buf);
+                    buf
+                }
+            };
             let limit = max_chunk.load(Ordering::Relaxed).max(1);
             let result = if buf.len() <= limit {
                 stream.write_all(&buf)
@@ -377,24 +761,20 @@ impl Transport for TcpMesh {
     }
 
     fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError> {
-        let link = self.out[dst]
-            .as_ref()
-            .expect("send to self goes through the inbox pass-through, not the transport");
-        if let Some(e) = link.last_err() {
-            return Err(e);
-        }
         let mut buf = Vec::with_capacity(super::comm::FRAME_HEADER + frame.payload.len());
         frame.encode_to(&mut buf);
-        // Queue gone or writer exited: surface the parked error, or a
-        // plain loss when the writer died without recording one.
-        let lost = || link.last_err().unwrap_or(CommError::PeerLost { rank: dst });
-        let Some(q) = &link.queue else {
-            return Err(lost());
-        };
-        if q.send(buf).is_err() {
-            return Err(lost());
-        }
-        Ok(())
+        self.enqueue(dst, Job::Bytes(buf))
+    }
+
+    fn send_typed(
+        &mut self,
+        dst: usize,
+        header: FrameHeader,
+        data: Box<dyn WirePayload>,
+    ) -> Result<(), CommError> {
+        // Overlapped encoding: hand the still-typed outbox straight to
+        // the link's writer thread, which serializes it there.
+        self.enqueue(dst, Job::Typed { header, data })
     }
 
     fn flush(&mut self) -> Result<(), CommError> {
@@ -558,5 +938,206 @@ mod tests {
         let meshes = TcpMesh::loopback(1, 0).unwrap();
         assert_eq!(meshes.len(), 1);
         assert_eq!(meshes[0].world(), 1);
+    }
+
+    /// Reserve `n` distinct loopback ports by binding and dropping
+    /// ephemeral listeners. The tiny window between drop and re-bind is
+    /// the standard multi-process test trade-off; `connect`'s dial
+    /// retries absorb start-order races, not port theft (vanishingly
+    /// rare in CI).
+    fn free_peer_list(n: usize) -> Vec<String> {
+        let listeners: Vec<TcpListener> =
+            (0..n).map(|_| TcpListener::bind(("127.0.0.1", 0)).unwrap()).collect();
+        listeners
+            .iter()
+            .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+            .collect()
+    }
+
+    fn quick_rdv() -> RendezvousConfig {
+        RendezvousConfig {
+            timeout: Duration::from_secs(20),
+            retry_initial: Duration::from_millis(5),
+            retry_max: Duration::from_millis(100),
+            bind: None,
+        }
+    }
+
+    #[test]
+    fn connect_rendezvouses_ranks_that_start_in_any_order() {
+        // 3 "processes" (threads here — the real child-process run lives
+        // in rust/tests/process_rendezvous.rs) starting staggered, the
+        // highest rank last: dial retries must bridge the gap, and the
+        // connected mesh must move frames exactly like the loopback one.
+        let peers = free_peer_list(3);
+        let handles: Vec<_> = (0..3)
+            .map(|rank| {
+                let peers = peers.clone();
+                std::thread::spawn(move || {
+                    // Reverse start order: rank 0 first, rank 2 300ms late.
+                    std::thread::sleep(Duration::from_millis(150 * rank as u64));
+                    let mut t = TcpMesh::connect(rank, &peers, &quick_rdv()).unwrap();
+                    for dst in 0..3 {
+                        if dst == rank {
+                            continue;
+                        }
+                        let frame = Frame {
+                            kind: 0,
+                            elem: 1,
+                            src: rank as u16,
+                            seq: 1,
+                            payload: vec![rank as u8; dst + 1],
+                        };
+                        t.send(dst, frame).unwrap();
+                    }
+                    t.flush().unwrap();
+                    let mut got = Vec::new();
+                    for src in 0..3 {
+                        if src == rank {
+                            continue;
+                        }
+                        got.push(t.recv(src).unwrap());
+                    }
+                    (rank, got)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, got) = h.join().unwrap();
+            for f in got {
+                let src = f.src as usize;
+                assert_eq!(f.payload, vec![src as u8; rank + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn connect_deadline_expiry_is_a_rendezvous_error_not_a_hang() {
+        // Nothing ever listens on the second peer: rank 0's dial must
+        // give up at the deadline with CommError::Rendezvous.
+        let peers = free_peer_list(2);
+        let cfg = RendezvousConfig {
+            timeout: Duration::from_millis(300),
+            retry_initial: Duration::from_millis(5),
+            retry_max: Duration::from_millis(50),
+            bind: None,
+        };
+        let t0 = Instant::now();
+        let err = TcpMesh::connect(0, &peers, &cfg).unwrap_err();
+        assert!(
+            matches!(err, CommError::Rendezvous { .. }),
+            "expected Rendezvous, got {err:?}"
+        );
+        assert!(err.to_string().contains("deadline"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(10), "did not respect the deadline");
+    }
+
+    #[test]
+    fn connect_rejects_mismatched_handshakes() {
+        // An FSMP peer whose handshake names the wrong world size or the
+        // wrong destination rank is a real misconfiguration: it must
+        // fail the acceptor's rendezvous with a named Rendezvous error.
+        for (bad_hs, needle) in [
+            (encode_handshake(3, 1, 0), "world 3"), // wrong world
+            (encode_handshake(2, 1, 5), "rank 5"),  // wrong destination
+        ] {
+            let peers = free_peer_list(2);
+            let cfg = RendezvousConfig {
+                timeout: Duration::from_secs(10),
+                retry_initial: Duration::from_millis(5),
+                retry_max: Duration::from_millis(50),
+                bind: None,
+            };
+            // Rank 1's slot accepts rank 0's dial but never handshakes
+            // back correctly — instead the impostor dials rank 0.
+            let impostor_target = peers[0].clone();
+            let fake_rank1 = TcpListener::bind(peers[1].as_str()).unwrap();
+            let impostor = std::thread::spawn(move || {
+                // Keep rank 0's outgoing dial parked in the backlog.
+                let _hold = fake_rank1;
+                let mut s = loop {
+                    match TcpStream::connect(impostor_target.as_str()) {
+                        Ok(s) => break s,
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                };
+                s.write_all(&bad_hs).unwrap();
+                // Hold the socket open until the acceptor has judged it.
+                std::thread::sleep(Duration::from_millis(500));
+            });
+            let err = TcpMesh::connect(0, &peers, &cfg).unwrap_err();
+            impostor.join().unwrap();
+            match &err {
+                CommError::Rendezvous { detail } => {
+                    assert!(detail.contains(needle), "{needle:?} not in {detail:?}")
+                }
+                other => panic!("expected Rendezvous, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn connect_drops_non_fsmp_strays_and_still_rendezvouses() {
+        // A stray (wrong magic — e.g. a health check or scanner) hits
+        // rank 0's listener during the rendezvous window. It must be
+        // dropped, not fatal: the real rank 1, arriving later, still
+        // completes the mesh and frames flow.
+        let peers = free_peer_list(2);
+        let stray_target = peers[0].clone();
+        let stray = std::thread::spawn(move || {
+            let mut s = loop {
+                match TcpStream::connect(stray_target.as_str()) {
+                    Ok(s) => break s,
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            };
+            let _ = s.write_all(&[0xFFu8; HANDSHAKE_LEN]); // full-length garbage
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let handles: Vec<_> = (0..2)
+            .map(|rank| {
+                let peers = peers.clone();
+                std::thread::spawn(move || {
+                    // Rank 1 arrives after the stray has already landed.
+                    std::thread::sleep(Duration::from_millis(200 * rank as u64));
+                    let mut t = TcpMesh::connect(rank, &peers, &quick_rdv()).unwrap();
+                    let dst = 1 - rank;
+                    let frame = Frame {
+                        kind: 0,
+                        elem: 1,
+                        src: rank as u16,
+                        seq: 0,
+                        payload: vec![rank as u8; 2],
+                    };
+                    t.send(dst, frame).unwrap();
+                    t.flush().unwrap();
+                    t.recv(dst).unwrap()
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            assert_eq!(got.payload, vec![(1 - rank) as u8; 2]);
+        }
+        stray.join().unwrap();
+    }
+
+    #[test]
+    fn rendezvous_config_reads_env_fallbacks() {
+        // Serialize env mutation within this test only (no other test
+        // reads these variables).
+        std::env::set_var("FASTSAMPLE_RENDEZVOUS_TIMEOUT_MS", "1234");
+        std::env::set_var("FASTSAMPLE_RENDEZVOUS_RETRY_MS", "7");
+        let cfg = RendezvousConfig::from_env();
+        std::env::remove_var("FASTSAMPLE_RENDEZVOUS_TIMEOUT_MS");
+        std::env::remove_var("FASTSAMPLE_RENDEZVOUS_RETRY_MS");
+        assert_eq!(cfg.timeout, Duration::from_millis(1234));
+        assert_eq!(cfg.retry_initial, Duration::from_millis(7));
+        let plain = RendezvousConfig::from_env();
+        assert_eq!(plain, RendezvousConfig::default());
+        assert_eq!(
+            RendezvousConfig::with_timeout(Duration::from_secs(5)).timeout,
+            Duration::from_secs(5)
+        );
     }
 }

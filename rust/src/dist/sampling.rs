@@ -26,6 +26,11 @@
 //! cache bytes). The owner serves every miss as before and, for nodes
 //! whose degree falls under the threshold, appends the **full**
 //! adjacency row; the decode inserts it into the requester's overlay.
+//! When such a node's degree also clears the fanout (so the sample *is*
+//! the full row), the sampled ids are **elided** — one `ELIDED` marker
+//! plus the row replaces both copies, and the decode reuses the row as
+//! the sampled set (see the batching regression test
+//! `cache_mode_elides_duplicate_ids_when_degree_clears_fanout`).
 //! Future levels and future minibatches then sample those nodes
 //! locally, so measured `SampleRequest` rounds/bytes *decay over
 //! epochs* on skewed workloads (report id `cache-decay`). With the
@@ -66,6 +71,17 @@ use super::comm::{Comm, CommError, RoundKind};
 
 /// "No adjacency row appended" marker in a cache-mode response.
 const NO_ROW: NodeId = NodeId::MAX;
+
+/// Cache-mode response marker in the *count* position: the sampled ids
+/// are elided because the appended full adjacency row IS the sample
+/// (`deg <= fanout` means `sample_node` took every neighbor in row
+/// order). The decode reads the row once, using it both as the sampled
+/// set and as the cache insert — cutting `2 + 2·deg` response words to
+/// `2 + deg` for exactly the rows the cache wants most (low-degree
+/// ones). Distinct from any real count (counts never exceed the fanout)
+/// and only ever emitted while the requester's admission limit is
+/// non-zero, so the uncached wire shape is untouched.
+const ELIDED: NodeId = NodeId::MAX - 1;
 
 /// Sample all levels of one minibatch against a worker shard. Same
 /// contract as single-machine [`sample_mfgs`] (fanouts top level first,
@@ -242,12 +258,22 @@ fn sample_level(
                     .expect("received a sampling request for a node this worker does not own");
                 let cnt =
                     sample_node(neigh, u, fanout, key, &mut ws.serve_scratch, &mut ws.serve_chunk);
+                let admissible = peer_limit > 0 && (neigh.len() as u64) < peer_limit as u64;
+                if admissible && cnt as usize == neigh.len() {
+                    // deg <= fanout: the sample is the full row in row
+                    // order, so ship the row once (`ELIDED, deg, row`)
+                    // instead of `cnt, ids, deg, row`.
+                    rep.push(ELIDED);
+                    rep.push(neigh.len() as NodeId);
+                    rep.extend_from_slice(neigh);
+                    continue;
+                }
                 rep.push(cnt);
                 rep.extend_from_slice(&ws.serve_chunk[..cnt as usize]);
                 // Row/marker suffix only while the requester can still
                 // admit something (peer_limit 0 ⇒ the bare uncached shape).
                 if peer_limit > 0 {
-                    if (neigh.len() as u64) < peer_limit as u64 {
+                    if admissible {
                         rep.push(neigh.len() as NodeId);
                         rep.extend_from_slice(neigh);
                     } else {
@@ -273,6 +299,20 @@ fn sample_level(
             let p = shard.book.part_of(v);
             let resp = &responses[p];
             let mut cur = ws.owner_cursor[p];
+            if limit > 0 && resp[cur] == ELIDED {
+                // Elided shape: the appended full row doubles as the
+                // sampled set (deg <= fanout ⇒ sample_node took every
+                // neighbor in row order — bit-identical to the eager
+                // shape by construction).
+                let deg = resp[cur + 1] as usize;
+                debug_assert!(deg <= fanout);
+                let row = &resp[cur + 2..cur + 2 + deg];
+                ws.samples[i * fanout..i * fanout + deg].copy_from_slice(row);
+                ws.counts[i] = deg as u32;
+                view.cache_insert(v, row);
+                ws.owner_cursor[p] = cur + 2 + deg;
+                continue;
+            }
             let cnt = resp[cur] as usize;
             debug_assert!(cnt <= fanout);
             ws.samples[i * fanout..i * fanout + cnt]
@@ -498,6 +538,93 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Regression for the response-batching satellite: under cache mode,
+    /// a miss whose degree clears both the admission limit and the
+    /// fanout must cost exactly `2 + deg` response words (ELIDED marker,
+    /// degree, row) — not the old `2 + 2·deg` (sample AND row) — while
+    /// staying bit-identical to single-machine sampling.
+    #[test]
+    fn cache_mode_elides_duplicate_ids_when_degree_clears_fanout() {
+        use super::super::comm::Counters;
+        use super::super::worker::run_workers_with;
+        use std::sync::Arc as StdArc;
+
+        let d = dataset();
+        let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(2)));
+        let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+        // Fanout >= every degree ⇒ every served miss samples its full
+        // row ⇒ every admissible response uses the elided shape.
+        let max_deg = (0..d.num_nodes() as NodeId).map(|v| d.graph.degree(v)).max().unwrap();
+        let fanouts = [max_deg.max(1)];
+        let key = RngKey::new(11);
+        // Seeds: each rank's first 6 locals + first 6 remotes, so level 0
+        // has deterministic cross-partition misses.
+        let mk_seeds = |rank: usize| -> Vec<NodeId> {
+            let mut local = Vec::new();
+            let mut remote = Vec::new();
+            for v in 0..d.num_nodes() as NodeId {
+                if book.part_of(v) == rank {
+                    if local.len() < 6 {
+                        local.push(v);
+                    }
+                } else if remote.len() < 6 {
+                    remote.push(v);
+                }
+            }
+            local.into_iter().chain(remote).collect()
+        };
+        let counters = StdArc::new(Counters::default());
+        let shards_ref = &shards;
+        let mk_seeds_ref = &mk_seeds;
+        let results = run_workers_with(
+            2,
+            NetworkModel::free(),
+            StdArc::clone(&counters),
+            move |rank, comm| {
+                let seeds = mk_seeds_ref(rank);
+                let mut ws = SamplerWorkspace::new();
+                let mut view = shards_ref[rank].topology.clone();
+                view.enable_cache(u64::MAX >> 1, CachePolicy::StaticDegree);
+                let mfgs = sample_mfgs_distributed(
+                    comm,
+                    &shards_ref[rank],
+                    &mut view,
+                    &seeds,
+                    &fanouts,
+                    key,
+                    &mut ws,
+                    KernelKind::Fused,
+                )
+                .unwrap();
+                (seeds, mfgs)
+            },
+        );
+        // Bit-equality first.
+        let mut ws = SamplerWorkspace::new();
+        for (seeds, mfgs) in &results {
+            let expect = sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
+            assert_eq!(mfgs, &expect, "elided responses decoded wrong");
+        }
+        // Exact response byte count: every miss is elided, so each costs
+        // (2 + deg) u32 words. Misses are exactly each rank's remote
+        // seeds (single level, unbounded cold cache admits everything).
+        let mut expect_words = 0u64;
+        for rank in 0..2usize {
+            for v in mk_seeds(rank) {
+                if book.part_of(v) != rank {
+                    expect_words += 2 + d.graph.degree(v) as u64;
+                }
+            }
+        }
+        let s = counters.snapshot();
+        assert_eq!(
+            s.bytes_of(RoundKind::SampleResponse),
+            expect_words * 4,
+            "response bytes are not the elided shape"
+        );
+        assert!(expect_words > 0, "workload produced no misses — test too weak");
     }
 
     /// The cache fast path end to end: the same worker resampling the

@@ -14,6 +14,12 @@
 //! [`run_workers_over`] accepts prebuilt [`Transport`] endpoints — the
 //! hook the fault-injection tests use to wrap transports.
 //!
+//! [`run_worker_process`] is the multi-process twin: it runs **one**
+//! rank in *this* OS process, rendezvousing with the other ranks'
+//! processes over real TCP ([`super::net::TcpMesh::connect`]) — the
+//! harness behind the `fastsample worker` subcommand and the
+//! re-exec'd children of `rust/tests/process_rendezvous.rs`.
+//!
 //! Threads are scoped, so worker closures may borrow stack data (shards,
 //! datasets, configs) from the caller — the pattern every integration
 //! test and the trainer use.
@@ -21,9 +27,10 @@
 //! [`CommError`]: super::comm::CommError
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use super::comm::{Comm, Counters, Transport};
-use super::net::{NetworkModel, TransportConfig};
+use super::comm::{Comm, CommError, Counters, Transport};
+use super::net::{NetworkModel, RendezvousConfig, TcpMesh, TransportConfig};
 
 /// Run `world` workers with a fresh (throwaway) [`Counters`] instance.
 pub fn run_workers<R, F>(world: usize, net: NetworkModel, f: F) -> Vec<R>
@@ -90,6 +97,41 @@ where
         .map(|t| Comm::from_transport(t, net.clone(), Arc::clone(&counters)))
         .collect();
     run_comms(comms, f)
+}
+
+/// Run **one rank of a multi-process world** in this OS process: bind,
+/// dial, and accept the rank's share of the TCP mesh
+/// ([`TcpMesh::connect`] under `rdv`'s deadline/backoff), optionally
+/// bound every blocking receive by `recv_timeout` (`None` — the default
+/// posture — waits indefinitely, because a slow healthy peer is
+/// indistinguishable from a hung one), then run `f` SPMD-style and
+/// return its result.
+///
+/// Unlike the thread harnesses above, `counters` are **per-process**
+/// here: rank 0's snapshot carries the fabric-global *round* counts (it
+/// is the rank that increments them) while each rank's *byte* counts
+/// cover only its own outgoing payloads — sum them across ranks to
+/// reproduce the single-process totals (OPERATIONS.md shows how).
+///
+/// Rendezvous failures surface as `Err`; fabric failures inside `f`
+/// (e.g. a killed peer) surface through `f`'s own result type, exactly
+/// as with the thread harnesses.
+pub fn run_worker_process<R>(
+    rank: usize,
+    peers: &[String],
+    rdv: &RendezvousConfig,
+    recv_timeout: Option<Duration>,
+    net: NetworkModel,
+    counters: Arc<Counters>,
+    f: impl FnOnce(usize, &mut Comm) -> R,
+) -> Result<R, CommError> {
+    let mut mesh = TcpMesh::connect(rank, peers, rdv)?;
+    if let Some(t) = recv_timeout {
+        mesh.set_recv_timeout(Some(t))
+            .map_err(|e| CommError::Io { peer: rank, detail: format!("set recv timeout: {e}") })?;
+    }
+    let mut comm = Comm::from_transport(Box::new(mesh), net, counters);
+    Ok(f(rank, &mut comm))
 }
 
 fn run_comms<R, F>(comms: Vec<Comm>, f: F) -> Vec<R>

@@ -1,24 +1,30 @@
 //! `fastsample` — CLI for the FastSample reproduction.
 //!
 //! Subcommands:
-//!   train         distributed training (vanilla | hybrid | hybrid+fused)
+//!   train         distributed training, all ranks in this process
+//!   worker        ONE rank of a multi-process run (real TCP rendezvous)
 //!   partition     partition a dataset and print quality metrics
 //!   sample-bench  quick fused-vs-baseline sampling comparison
 //!   gen-data      generate + save a synthetic dataset to disk
 //!   report        regenerate a paper table/figure or ablation
 //!   info          list AOT variants and environment
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
 
 use fastsample::config;
 use fastsample::coordinator::experiments as exp;
-use fastsample::dist::NetworkModel;
+use fastsample::dist::{
+    run_worker_process, Comm, Counters, NetworkModel, RendezvousConfig, TransportConfig,
+};
 use fastsample::graph::{datasets, io as graph_io};
 use fastsample::partition::{partition_graph, PartitionBook, PartitionConfig, ReplicationPolicy};
 use fastsample::runtime::Manifest;
 use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{sample_mfgs, KernelKind, MinibatchSchedule, SamplerWorkspace};
-use fastsample::train::{train_distributed, TrainConfig};
+use fastsample::train::{sample_rank, train_distributed, train_rank, TrainConfig};
 use fastsample::util::cli::Args;
 
 const USAGE: &str = "\
@@ -40,6 +46,25 @@ COMMANDS:
                 [--transport inproc|tcp|tcp:<base_port>]  (how collective
                 frames move between workers; tcp uses per-peer loopback
                 sockets, base port 0 = ephemeral)
+  worker        ONE rank of a multi-process training run: launch N of
+                these (one per rank, any machines) and they rendezvous
+                over real TCP. See OPERATIONS.md for the full guide.
+                --rank R (or env FASTSAMPLE_RANK)
+                --peers host:port,host:port,...  (rank r listens on the
+                r-th entry; or env FASTSAMPLE_PEERS) [--world N  (cross-
+                check against the peer list)] [--bind addr  (listen
+                address override, e.g. 0.0.0.0:9400)]
+                [--rendezvous-timeout SECS]  (default 30; env fallback
+                FASTSAMPLE_RENDEZVOUS_TIMEOUT_MS) [--recv-timeout SECS]
+                (0 = wait forever, the default)
+                [--task auto|train|sample]  (train = real training, needs
+                artifacts; sample = artifact-free sampling + feature +
+                grad-sync rounds with a merged digest curve; auto picks
+                train iff artifacts exist)
+                plus the train flags (--dataset --variant --mode --epochs
+                --lr --optimizer --seed --net --max-batches --cache
+                --adj-cache --adj-cache-policy --replication-budget) and,
+                for the sample task, [--batch 32] [--fanouts 4,3]
   partition     --dataset <spec> --parts 8 [--seed S]
   sample-bench  --dataset <spec> --batch 1024 --fanouts 15,10,5 [--iters 10]
   gen-data      --dataset <spec> --out graph.bin [--seed S]
@@ -66,6 +91,7 @@ fn run() -> Result<()> {
     };
     match cmd.as_str() {
         "train" => cmd_train(&args),
+        "worker" => cmd_worker(&args),
         "partition" => cmd_partition(&args),
         "sample-bench" => cmd_sample_bench(&args),
         "gen-data" => cmd_gen_data(&args),
@@ -75,11 +101,19 @@ fn run() -> Result<()> {
     }
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+/// Parse the training-shaped flags shared by `train` and `worker` into a
+/// [`TrainConfig`] for `workers` ranks, returning the dataset spec too.
+/// `default_net` differs per caller: the in-process harness simulates
+/// the paper fabric by default, a real multi-process run defaults to
+/// `free` (the actual network provides the latency).
+fn parse_train_flags(
+    args: &Args,
+    workers: usize,
+    default_net: &str,
+) -> Result<(String, TrainConfig)> {
     let spec = args.get_str("dataset", "quickstart");
     let variant = args.get_str("variant", "quickstart");
     let mode = args.get_str("mode", "hybrid+fused");
-    let workers = args.get("workers", 4usize)?;
     let seed = args.get("seed", 0u64)?;
 
     let mut cfg = TrainConfig::mode(&variant, &mode, workers)?;
@@ -90,7 +124,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.lr = args.get("lr", 0.006f32)?;
     cfg.optimizer = args.get_str("optimizer", "adam");
     cfg.seed = seed;
-    cfg.net = config::network(&args.get_str("net", "infiniband"))?;
+    cfg.net = config::network(&args.get_str("net", default_net))?;
     cfg.cache_capacity = args.get("cache", 0usize)?;
     if let Some(spec) = args.get_opt_str("adj-cache") {
         cfg.adj_cache_bytes = config::parse_cache_bytes(&spec)?;
@@ -105,17 +139,23 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     cfg.eval_last_batch = args.has("eval");
     cfg.verbose = true;
+    Ok((spec, cfg))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let workers = args.get("workers", 4usize)?;
+    let (spec, cfg) = parse_train_flags(args, workers, "infiniband")?;
     args.finish()?;
 
-    let dataset = config::dataset(&spec, seed)?;
+    let dataset = config::dataset(&spec, cfg.seed)?;
     eprintln!(
         "training {} on {} ({} nodes, {} edges), {} workers, mode {}, transport {}",
-        variant,
+        cfg.variant,
         dataset.name,
         dataset.num_nodes(),
         dataset.num_edges(),
         workers,
-        mode,
+        cfg.policy.label(),
         cfg.transport
     );
     let report = train_distributed(&dataset, &config::artifacts_dir(), &cfg)?;
@@ -125,6 +165,145 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.comm_total.total_bytes()
     );
     println!("{}", report.comm_total.report());
+    Ok(())
+}
+
+/// Every rank must run the same task, but `--task auto` resolves from
+/// the **local** filesystem (are artifacts present?), which can diverge
+/// across machines. Two uncharged control-plane votes before the first
+/// data collective turn a mixed launch into a clear startup error on
+/// every rank instead of a confusing mid-run `SequenceMismatch`.
+fn agree_on_task(comm: &mut Comm, train_task: bool) -> Result<()> {
+    let code = u64::from(train_task);
+    let all_sample = comm.all_zero_u64(code)?;
+    let all_train = comm.all_zero_u64(1 - code)?;
+    ensure!(
+        all_sample || all_train,
+        "ranks disagree on the worker task (train vs sample): artifacts exist on some \
+         machines but not others — pass --task explicitly on every rank"
+    );
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    // Identity: flags first, env fallbacks second, so a launch script
+    // can export FASTSAMPLE_PEERS once and vary only the rank.
+    let rank = match args.get_opt_str("rank") {
+        Some(v) => v.parse::<usize>().with_context(|| format!("--rank {v:?}"))?,
+        None => std::env::var("FASTSAMPLE_RANK")
+            .context("worker needs --rank (or env FASTSAMPLE_RANK)")?
+            .trim()
+            .parse::<usize>()
+            .context("FASTSAMPLE_RANK")?,
+    };
+    let peers_spec = match args.get_opt_str("peers") {
+        Some(p) => p,
+        None => std::env::var("FASTSAMPLE_PEERS")
+            .context("worker needs --peers host:port,... (or env FASTSAMPLE_PEERS)")?,
+    };
+    let peers: Vec<String> = peers_spec
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let world = peers.len();
+    ensure!(world >= 1, "--peers lists no addresses");
+    ensure!(rank < world, "--rank {rank} out of range for {world} peers");
+    if let Some(w) = args.get_opt_str("world") {
+        let w: usize = w.parse().with_context(|| format!("--world {w:?}"))?;
+        ensure!(w == world, "--world {w} does not match the {world}-entry peer list");
+    }
+
+    let mut rdv = RendezvousConfig::from_env();
+    if let Some(secs) = args.get_opt_str("rendezvous-timeout") {
+        let secs: f64 =
+            secs.parse().with_context(|| format!("--rendezvous-timeout {secs:?}"))?;
+        ensure!(secs > 0.0, "--rendezvous-timeout must be positive");
+        rdv.timeout = Duration::from_secs_f64(secs);
+    }
+    rdv.bind = args.get_opt_str("bind");
+    let recv_timeout = {
+        let secs = args.get("recv-timeout", 0.0f64)?;
+        (secs > 0.0).then(|| Duration::from_secs_f64(secs))
+    };
+
+    let task = args.get_str("task", "auto");
+    let batch = args.get("batch", 32usize)?;
+    let fanouts = args.get_list("fanouts", &[4, 3])?;
+    let (spec, cfg) = parse_train_flags(args, world, "free")?;
+    args.finish()?;
+
+    let train_task = match task.as_str() {
+        "train" => true,
+        "sample" => false,
+        "auto" => config::artifacts_available(),
+        other => bail!("unknown worker task {other:?} (auto | train | sample)"),
+    };
+    let dataset = config::dataset(&spec, cfg.seed)?;
+    if cfg.transport != TransportConfig::Inproc {
+        eprintln!(
+            "[rank {rank}] note: --transport/+tcp is ignored by `worker` — the \
+             multi-process mesh is always real TCP"
+        );
+    }
+    eprintln!(
+        "[rank {rank}/{world}] task {} on {} ({} nodes), mode {}, rendezvous timeout {:?}",
+        if train_task { "train" } else { "sample" },
+        dataset.name,
+        dataset.num_nodes(),
+        cfg.policy.label(),
+        rdv.timeout
+    );
+    let counters = Arc::new(Counters::default());
+    if train_task {
+        let report = run_worker_process(
+            rank,
+            &peers,
+            &rdv,
+            recv_timeout,
+            cfg.net.clone(),
+            counters,
+            |rank, comm| {
+                agree_on_task(comm, train_task)?;
+                train_rank(&dataset, &config::artifacts_dir(), &cfg, rank, comm)
+            },
+        )
+        .context("multi-process rendezvous failed")??;
+        for e in &report.epochs {
+            println!(
+                "[rank {rank}] epoch {} loss {:.4} wall {:.2}s",
+                e.epoch, e.mean_loss, e.wall_s
+            );
+        }
+        if rank == 0 {
+            println!("loss curve: {:?}", report.loss_curve);
+        }
+        println!("comm (per-process view — see OPERATIONS.md):");
+        println!("{}", report.comm_total.report());
+    } else {
+        let report = run_worker_process(
+            rank,
+            &peers,
+            &rdv,
+            recv_timeout,
+            cfg.net.clone(),
+            counters,
+            |rank, comm| {
+                agree_on_task(comm, train_task)?;
+                sample_rank(&dataset, &cfg, batch, &fanouts, false, rank, comm)
+            },
+        )
+        .context("multi-process rendezvous failed")??;
+        println!(
+            "[rank {rank}] {} steps, {} sampled edges",
+            report.steps, report.sampled_edges
+        );
+        if rank == 0 {
+            println!("digest curve: {:?}", report.curve);
+        }
+        println!("comm (per-process view — see OPERATIONS.md):");
+        println!("{}", report.comm_total.report());
+    }
     Ok(())
 }
 

@@ -21,4 +21,6 @@ pub mod shard;
 
 pub use book::{HaloProfile, PartitionBook};
 pub use metis_like::{partition_graph, PartitionConfig};
-pub use shard::{build_shards, HaloPriority, ReplicationPolicy, TopologyView, WorkerShard};
+pub use shard::{
+    build_shard, build_shards, HaloPriority, ReplicationPolicy, TopologyView, WorkerShard,
+};

@@ -394,73 +394,111 @@ fn build_view(
     }
 }
 
-/// Materialize all worker shards for a dataset under `policy`.
+/// The shared arrays of a full-replication run: indptr, indices,
+/// identity `row_of`, and the total adjacency bytes (one copy per
+/// *process*; in the paper it is one copy per machine).
+type FullArrays = (Arc<Vec<usize>>, Arc<Vec<NodeId>>, Arc<Vec<u32>>, u64);
+
+fn full_replication_arrays(dataset: &Dataset) -> FullArrays {
+    let g = &dataset.graph;
+    let n = dataset.num_nodes();
+    let total_adj_bytes: u64 = (0..n as NodeId).map(|v| row_cost(g.degree(v))).sum();
+    (
+        Arc::new(g.indptr().to_vec()),
+        Arc::new(g.indices().to_vec()),
+        Arc::new((0..n as u32).collect::<Vec<u32>>()),
+        total_adj_bytes,
+    )
+}
+
+fn build_one(
+    dataset: &Dataset,
+    book: &Arc<PartitionBook>,
+    policy: &ReplicationPolicy,
+    p: usize,
+    labels: &Arc<Vec<i32>>,
+    full_arrays: Option<&FullArrays>,
+) -> WorkerShard {
+    let n = dataset.num_nodes();
+    let local_nodes = book.nodes_of(p);
+    let mut feat_row = vec![u32::MAX; n];
+    for (i, &v) in local_nodes.iter().enumerate() {
+        feat_row[v as usize] = i as u32;
+    }
+    let f = dataset.feat_dim;
+    let mut feats = Vec::with_capacity(local_nodes.len() * f);
+    for &v in &local_nodes {
+        feats.extend_from_slice(dataset.feat(v));
+    }
+    let topology = match full_arrays {
+        Some((indptr, indices, row_of, total_adj_bytes)) => {
+            let local_adj: u64 =
+                local_nodes.iter().map(|&v| row_cost(dataset.graph.degree(v))).sum();
+            TopologyView {
+                indptr: Arc::clone(indptr),
+                indices: Arc::clone(indices),
+                row_of: Arc::clone(row_of),
+                local_rows: local_nodes.len(),
+                replicated_rows: n - local_nodes.len(),
+                replicated_bytes: *total_adj_bytes - local_adj,
+                full: true,
+                overlay: None,
+            }
+        }
+        None => build_view(dataset, &local_nodes, policy),
+    };
+    let train_local: Vec<NodeId> =
+        dataset.train_ids.iter().copied().filter(|&v| book.part_of(v) == p).collect();
+    WorkerShard {
+        part: p,
+        num_parts: book.num_parts(),
+        book: Arc::clone(book),
+        policy: *policy,
+        topology,
+        local_nodes,
+        feat_row,
+        feats,
+        feat_dim: f,
+        labels: Arc::clone(labels),
+        train_local,
+    }
+}
+
+/// Materialize all worker shards for a dataset under `policy` — the
+/// in-process path (threads as machines). Full replication shares one
+/// set of topology arrays across every shard of the process.
 pub fn build_shards(
     dataset: &Dataset,
     book: &Arc<PartitionBook>,
     policy: &ReplicationPolicy,
 ) -> Vec<WorkerShard> {
-    let parts = book.num_parts();
-    let n = dataset.num_nodes();
     let labels = Arc::new(dataset.labels.clone());
-    // Full replication shares one set of arrays across all workers (one
-    // copy per *process*; in the paper it is one copy per machine).
-    let full_arrays = policy.is_full().then(|| {
-        let g = &dataset.graph;
-        let total_adj_bytes: u64 = (0..n as NodeId).map(|v| row_cost(g.degree(v))).sum();
-        (
-            Arc::new(g.indptr().to_vec()),
-            Arc::new(g.indices().to_vec()),
-            Arc::new((0..n as u32).collect::<Vec<u32>>()),
-            total_adj_bytes,
-        )
-    });
-    (0..parts)
-        .map(|p| {
-            let local_nodes = book.nodes_of(p);
-            let mut feat_row = vec![u32::MAX; n];
-            for (i, &v) in local_nodes.iter().enumerate() {
-                feat_row[v as usize] = i as u32;
-            }
-            let f = dataset.feat_dim;
-            let mut feats = Vec::with_capacity(local_nodes.len() * f);
-            for &v in &local_nodes {
-                feats.extend_from_slice(dataset.feat(v));
-            }
-            let topology = match &full_arrays {
-                Some((indptr, indices, row_of, total_adj_bytes)) => {
-                    let local_adj: u64 =
-                        local_nodes.iter().map(|&v| row_cost(dataset.graph.degree(v))).sum();
-                    TopologyView {
-                        indptr: Arc::clone(indptr),
-                        indices: Arc::clone(indices),
-                        row_of: Arc::clone(row_of),
-                        local_rows: local_nodes.len(),
-                        replicated_rows: n - local_nodes.len(),
-                        replicated_bytes: *total_adj_bytes - local_adj,
-                        full: true,
-                        overlay: None,
-                    }
-                }
-                None => build_view(dataset, &local_nodes, policy),
-            };
-            let train_local: Vec<NodeId> =
-                dataset.train_ids.iter().copied().filter(|&v| book.part_of(v) == p).collect();
-            WorkerShard {
-                part: p,
-                num_parts: parts,
-                book: Arc::clone(book),
-                policy: *policy,
-                topology,
-                local_nodes,
-                feat_row,
-                feats,
-                feat_dim: f,
-                labels: Arc::clone(&labels),
-                train_local,
-            }
-        })
+    let full_arrays = policy.is_full().then(|| full_replication_arrays(dataset));
+    (0..book.num_parts())
+        .map(|p| build_one(dataset, book, policy, p, &labels, full_arrays.as_ref()))
         .collect()
+}
+
+/// Materialize **one** worker's shard — the multi-process path, where
+/// each OS process (`fastsample worker --rank R`) holds only its own
+/// rank's topology view, feature rows, and seed pool. Identical to
+/// `build_shards(dataset, book, policy)[part]` by construction (both
+/// call the same per-part builder), which is what keeps a multi-process
+/// run bit-equal to the in-process harness.
+pub fn build_shard(
+    dataset: &Dataset,
+    book: &Arc<PartitionBook>,
+    policy: &ReplicationPolicy,
+    part: usize,
+) -> WorkerShard {
+    assert!(
+        part < book.num_parts(),
+        "part {part} out of range for a {}-way partition",
+        book.num_parts()
+    );
+    let labels = Arc::new(dataset.labels.clone());
+    let full_arrays = policy.is_full().then(|| full_replication_arrays(dataset));
+    build_one(dataset, book, policy, part, &labels, full_arrays.as_ref())
 }
 
 #[cfg(test)]
@@ -667,6 +705,48 @@ mod tests {
         let mut empty = s.topology.clone();
         empty.enable_cache(0, CachePolicy::StaticDegree);
         assert_eq!(empty.cache_admission_limit(), 0);
+    }
+
+    #[test]
+    fn single_shard_build_matches_the_batch_build() {
+        // The multi-process path (each rank builds only its own shard)
+        // must be indistinguishable from indexing the in-process batch
+        // build — the bit-equality prerequisite for `fastsample worker`.
+        let d = toy_dataset();
+        let book =
+            Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+        for policy in [
+            ReplicationPolicy::vanilla(),
+            ReplicationPolicy::budgeted(2048),
+            ReplicationPolicy::hybrid(),
+        ] {
+            let all = build_shards(&d, &book, &policy);
+            for p in 0..4 {
+                let one = build_shard(&d, &book, &policy, p);
+                let batch = &all[p];
+                assert_eq!(one.part, batch.part);
+                assert_eq!(one.local_nodes, batch.local_nodes);
+                assert_eq!(one.feat_row, batch.feat_row);
+                assert_eq!(one.feats, batch.feats);
+                assert_eq!(one.train_local, batch.train_local);
+                assert_eq!(
+                    one.topology.replicated_rows(),
+                    batch.topology.replicated_rows(),
+                    "{policy:?} part {p}"
+                );
+                assert_eq!(
+                    one.topology.replicated_bytes(),
+                    batch.topology.replicated_bytes()
+                );
+                for v in 0..d.num_nodes() as NodeId {
+                    assert_eq!(
+                        one.topology.try_neighbors(v),
+                        batch.topology.try_neighbors(v),
+                        "{policy:?} part {p} node {v}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -10,4 +10,7 @@ pub mod trainer;
 pub use metrics::{accuracy, EpochStats, PhaseTimes, Stopwatch};
 pub use optimizer::{Adam, Optimizer, Sgd};
 pub use padding::pad_batch;
-pub use trainer::{train_distributed, AggEpoch, ScheduleKind, TrainConfig, TrainReport};
+pub use trainer::{
+    sample_rank, train_distributed, train_rank, AggEpoch, RankTrainReport, SampleRankReport,
+    ScheduleKind, TrainConfig, TrainReport,
+};

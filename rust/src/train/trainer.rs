@@ -16,13 +16,13 @@ use crate::dist::{
     fetch_features, run_workers_on, sample_mfgs_distributed, CachePolicy, Comm, CommError,
     CommStats, Counters, FeatureCache, NetworkModel, RoundKind, TransportConfig,
 };
-use crate::graph::Dataset;
+use crate::graph::{Dataset, NodeId};
 use crate::partition::{
-    build_shards, partition_graph, PartitionConfig, ReplicationPolicy, WorkerShard,
+    build_shard, build_shards, partition_graph, PartitionConfig, ReplicationPolicy, WorkerShard,
 };
 use crate::runtime::{Engine, HostTensor, Manifest, ModelRuntime};
 use crate::sampling::rng::RngKey;
-use crate::sampling::{KernelKind, MinibatchSchedule, SamplerWorkspace};
+use crate::sampling::{KernelKind, Mfg, MinibatchSchedule, SamplerWorkspace};
 
 use super::metrics::{accuracy, EpochStats, PhaseTimes, Stopwatch};
 use super::optimizer;
@@ -209,14 +209,9 @@ struct WorkerResult {
     loss_curve: Vec<f32>,
 }
 
-/// Run distributed training of `cfg` over `dataset`, loading AOT
-/// artifacts from `artifacts_dir`.
-pub fn train_distributed(
-    dataset: &Dataset,
-    artifacts_dir: &Path,
-    cfg: &TrainConfig,
-) -> Result<TrainReport> {
-    let manifest = Manifest::load(artifacts_dir)?;
+/// Shape compatibility between a dataset and an AOT variant, checked
+/// once per run (shared by the in-process and per-rank entry points).
+fn check_variant(manifest: &Manifest, dataset: &Dataset, cfg: &TrainConfig) -> Result<()> {
     let variant = manifest.variant(&cfg.variant)?;
     ensure!(
         variant.feat_dim == dataset.feat_dim,
@@ -232,6 +227,207 @@ pub fn train_distributed(
         variant.classes,
         dataset.num_classes
     );
+    Ok(())
+}
+
+/// What one rank of a **multi-process** training run reports (see
+/// [`train_rank`]). The full-run aggregation of [`TrainReport`] needs
+/// every rank's results in one process, so a multi-process run reports
+/// per rank and merges externally (rank 0's loss curve is the canonical
+/// one — it is the curve [`TrainReport::loss_curve`] carries too).
+#[derive(Debug)]
+pub struct RankTrainReport {
+    /// This rank's per-epoch stats (loss, wall, phase times, comm delta
+    /// on rank 0).
+    pub epochs: Vec<EpochStats>,
+    /// Per-step loss curve — populated on rank 0 only, like
+    /// [`TrainReport::loss_curve`].
+    pub loss_curve: Vec<f32>,
+    /// This process's counter snapshot. Multi-process counters are
+    /// per-process: rank 0 carries the global *round* counts, each rank
+    /// its own *byte* counts (sum over ranks = the in-process totals).
+    pub comm_total: CommStats,
+}
+
+/// Train exactly **one rank** over an already-connected [`Comm`] — the
+/// entry point of `fastsample worker` (one OS process per rank, fabric
+/// built by [`crate::dist::run_worker_process`]). Deterministic
+/// partitioning plus [`build_shard`] mean this process loads only its
+/// own shard, and the run is bit-identical to the in-process
+/// [`train_distributed`] with the same config (pinned by
+/// `rust/tests/process_rendezvous.rs`).
+pub fn train_rank(
+    dataset: &Dataset,
+    artifacts_dir: &Path,
+    cfg: &TrainConfig,
+    rank: usize,
+    comm: &mut Comm,
+) -> Result<RankTrainReport> {
+    ensure!(
+        comm.rank() == rank,
+        "comm endpoint is rank {}, asked to train rank {rank}",
+        comm.rank()
+    );
+    ensure!(
+        comm.world() == cfg.workers,
+        "fabric has {} ranks, config says {} workers",
+        comm.world(),
+        cfg.workers
+    );
+    let manifest = Manifest::load(artifacts_dir)?;
+    check_variant(&manifest, dataset, cfg)?;
+    let book = Arc::new(partition_graph(
+        &dataset.graph,
+        &dataset.train_ids,
+        &PartitionConfig::new(cfg.workers),
+    ));
+    let shard = build_shard(dataset, &book, &cfg.policy, rank);
+    let w = worker_loop(rank, comm, &shard, &manifest, cfg)?;
+    Ok(RankTrainReport {
+        epochs: w.epochs,
+        loss_curve: w.loss_curve,
+        comm_total: comm.counters.snapshot(),
+    })
+}
+
+/// What [`sample_rank`] reports for one rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleRankReport {
+    /// Merged per-step digest curve (all-reduced in rank order, so
+    /// **identical on every rank** and across transports — the
+    /// artifact-free stand-in for the loss curve).
+    pub curve: Vec<f32>,
+    /// Steps executed (epochs × batches).
+    pub steps: usize,
+    /// Total edges this rank sampled across all steps and levels.
+    pub sampled_edges: u64,
+    /// This rank's sampled MFGs, one `Vec<Mfg>` per step — retained
+    /// only under `keep_mfgs` (the equivalence tests); empty otherwise,
+    /// so long CLI runs don't accumulate every step's graphs in memory.
+    pub mfgs: Vec<Vec<Mfg>>,
+    /// This rank's seed pool (prefix of its labeled nodes, shuffled per
+    /// epoch by the schedule).
+    pub seeds: Vec<NodeId>,
+    /// This process's counter snapshot (per-process semantics, as in
+    /// [`RankTrainReport::comm_total`]).
+    pub comm_total: CommStats,
+}
+
+/// The artifact-free **training-shaped workload** for one rank: per
+/// step, distributed sampling → feature fetch → one `GradSync`
+/// all-reduce of a deterministic digest of what arrived (mean feature
+/// value + sampled-edge count). No AOT artifacts or PJRT engine needed,
+/// so `fastsample worker --task sample` and the CI smoke can exercise
+/// the full multi-process fabric anywhere; the digest curve plays the
+/// loss curve's role in equivalence checks (bit-identical across ranks,
+/// transports, and process layouts).
+///
+/// `batch` seeds per step from this rank's labeled pool; steps per
+/// epoch = the cross-rank minimum of available batches, capped by
+/// `cfg.max_batches`; `cfg.epochs` epochs. `keep_mfgs` retains every
+/// step's MFGs in the report for bit-equality tests — leave it off for
+/// real runs (memory grows with run length otherwise). SPMD-collective
+/// like everything else: every rank must call it with the same config.
+#[allow(clippy::too_many_arguments)]
+pub fn sample_rank(
+    dataset: &Dataset,
+    cfg: &TrainConfig,
+    batch: usize,
+    fanouts: &[usize],
+    keep_mfgs: bool,
+    rank: usize,
+    comm: &mut Comm,
+) -> Result<SampleRankReport> {
+    ensure!(!fanouts.is_empty(), "need at least one fanout level");
+    ensure!(batch >= 1, "batch must be >= 1");
+    ensure!(comm.rank() == rank, "comm endpoint is rank {}, not {rank}", comm.rank());
+    ensure!(
+        comm.world() == cfg.workers,
+        "fabric has {} ranks, config says {} workers",
+        comm.world(),
+        cfg.workers
+    );
+    let book = Arc::new(partition_graph(
+        &dataset.graph,
+        &dataset.train_ids,
+        &PartitionConfig::new(cfg.workers),
+    ));
+    let shard = build_shard(dataset, &book, &cfg.policy, rank);
+    let mut view = shard.topology.clone();
+    if cfg.adj_cache_bytes > 0 && !shard.policy.is_full() {
+        view.enable_cache(cfg.adj_cache_bytes, cfg.adj_cache_policy);
+    }
+    let mut ws = SamplerWorkspace::new();
+    let key = RngKey::new(cfg.seed).fold(0xD16E57);
+    let batch = batch.min(shard.train_local.len().max(1));
+    let my_batches = (shard.train_local.len() / batch) as u64;
+    let mut batches = comm.all_reduce_min_u64(my_batches)? as usize;
+    if let Some(cap) = cfg.max_batches {
+        batches = batches.min(cap);
+    }
+    ensure!(
+        batches > 0,
+        "partition {rank} has too few labeled nodes ({}) for one batch of {batch}",
+        shard.train_local.len()
+    );
+
+    let mut curve = Vec::new();
+    let mut all_mfgs = Vec::new();
+    let mut feat = Vec::new();
+    let mut first_seeds = Vec::new();
+    let mut steps = 0usize;
+    let mut sampled_edges = 0u64;
+    for epoch in 0..cfg.epochs {
+        let schedule =
+            MinibatchSchedule::new(&shard.train_local, batch, key.fold(epoch as u64));
+        for b in 0..batches {
+            let seeds = schedule.batch(b);
+            if epoch == 0 && b == 0 {
+                first_seeds = seeds.to_vec();
+            }
+            let batch_key = key.fold(epoch as u64).fold(b as u64 + 1);
+            let mfgs = sample_mfgs_distributed(
+                comm, &shard, &mut view, seeds, fanouts, batch_key, &mut ws, cfg.kernel,
+            )?;
+            fetch_features(comm, &shard, &mfgs[0].src_nodes, None, &mut feat)?;
+            // Deterministic digest: sequential f32 sum (fixed order) of
+            // the fetched features, plus the sampled-edge count — then
+            // rank-order all-reduced, so every rank (and every
+            // transport/process layout) holds the identical value.
+            let mut acc = 0.0f32;
+            for &x in &feat {
+                acc += x;
+            }
+            let edges: usize = mfgs.iter().map(|m| m.num_edges()).sum();
+            let mut digest = [acc / (feat.len().max(1) as f32) + edges as f32 * 1e-3];
+            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut digest)?;
+            curve.push(digest[0]);
+            steps += 1;
+            sampled_edges += edges as u64;
+            if keep_mfgs {
+                all_mfgs.push(mfgs);
+            }
+        }
+    }
+    Ok(SampleRankReport {
+        curve,
+        steps,
+        sampled_edges,
+        mfgs: all_mfgs,
+        seeds: first_seeds,
+        comm_total: comm.counters.snapshot(),
+    })
+}
+
+/// Run distributed training of `cfg` over `dataset`, loading AOT
+/// artifacts from `artifacts_dir`.
+pub fn train_distributed(
+    dataset: &Dataset,
+    artifacts_dir: &Path,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    check_variant(&manifest, dataset, cfg)?;
 
     let book = Arc::new(partition_graph(
         &dataset.graph,

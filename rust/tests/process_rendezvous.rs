@@ -1,0 +1,426 @@
+//! Multi-process rendezvous: N **real OS processes** (re-exec'd children
+//! of this test binary) rendezvous over `TcpMesh::connect` and must be
+//! bit-equal to the in-process `ChannelMesh` harness.
+//!
+//! * `spawned_worker_child_entry` is the child role: inert under a
+//!   normal test run, but when the parent re-execs this binary with the
+//!   `FASTSAMPLE_TEST_CHILD_*` environment set, it runs one rank of the
+//!   workload through `run_worker_process` and writes its full report
+//!   (digest curve, seeds, MFGs, per-process counters — all in exact
+//!   textual form, f32 by bit pattern) to a file.
+//! * The parent spawns 4 children, computes the same per-rank reports
+//!   over the in-process channel mesh, and compares **strings**: equal
+//!   encodings ⇒ bit-identical MFGs and digest curves. Counters are
+//!   compared by their multi-process semantics: rank 0 carries the
+//!   global round counts, and per-rank bytes sum to the in-process
+//!   totals.
+//! * A rank that exits early must surface as `CommError::PeerLost` in
+//!   every survivor — no hang — bounded by a hard parent-side deadline.
+//! * With AOT artifacts present, the same harness runs real training
+//!   (`train_rank`) and pins the loss curve (skips politely otherwise,
+//!   like `train_e2e`).
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastsample::dist::{
+    run_worker_process, run_workers_with, Counters, NetworkModel, RendezvousConfig, RoundKind,
+};
+use fastsample::graph::generator::{make_dataset, DatasetParams};
+use fastsample::graph::Dataset;
+use fastsample::train::{sample_rank, train_distributed, train_rank, SampleRankReport, TrainConfig};
+
+const WORLD: usize = 4;
+const BATCH: usize = 8;
+const FANOUTS: [usize; 2] = [3, 2];
+
+fn sample_dataset() -> Dataset {
+    make_dataset(&DatasetParams {
+        name: "process-rendezvous".into(),
+        num_nodes: 500,
+        avg_degree: 8,
+        feat_dim: 5,
+        num_classes: 4,
+        labeled_frac: 0.3,
+        p_intra: 0.8,
+        noise: 0.2,
+        seed: 41,
+    })
+}
+
+/// The sample-task config every rank (thread or process) runs with.
+fn task_config(world: usize, epochs: usize, max_batches: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::mode("quickstart", "vanilla", world).unwrap();
+    cfg.epochs = epochs;
+    cfg.max_batches = Some(max_batches);
+    cfg.net = NetworkModel::free();
+    cfg.seed = 7;
+    cfg.verbose = false;
+    cfg
+}
+
+fn quick_rdv() -> RendezvousConfig {
+    RendezvousConfig {
+        timeout: Duration::from_secs(60),
+        retry_initial: Duration::from_millis(5),
+        retry_max: Duration::from_millis(100),
+        bind: None,
+    }
+}
+
+/// Exact textual encoding of a rank's report: first the counter lines
+/// (per-process semantics), then the bit-exact body (digest curve as f32
+/// bit patterns, seeds, every MFG's arrays).
+fn encode_report(r: &SampleRankReport) -> String {
+    let mut s = String::new();
+    write!(s, "rounds").unwrap();
+    for k in RoundKind::ALL {
+        write!(s, " {}", r.comm_total.rounds_of(k)).unwrap();
+    }
+    writeln!(s).unwrap();
+    write!(s, "bytes").unwrap();
+    for k in RoundKind::ALL {
+        write!(s, " {}", r.comm_total.bytes_of(k)).unwrap();
+    }
+    writeln!(s).unwrap();
+    s.push_str(&encode_body(r));
+    s
+}
+
+/// The counter-free part of the encoding (identical between process
+/// layouts; the counters are compared by their own rules).
+fn encode_body(r: &SampleRankReport) -> String {
+    let mut s = String::new();
+    write!(s, "curve").unwrap();
+    for v in &r.curve {
+        write!(s, " {:08x}", v.to_bits()).unwrap();
+    }
+    writeln!(s).unwrap();
+    write!(s, "seeds").unwrap();
+    for v in &r.seeds {
+        write!(s, " {v}").unwrap();
+    }
+    writeln!(s).unwrap();
+    for (step, mfgs) in r.mfgs.iter().enumerate() {
+        for (li, m) in mfgs.iter().enumerate() {
+            write!(s, "mfg {step} {li} ndst {} indptr", m.n_dst).unwrap();
+            for v in &m.indptr {
+                write!(s, " {v}").unwrap();
+            }
+            write!(s, " indices").unwrap();
+            for v in &m.indices {
+                write!(s, " {v}").unwrap();
+            }
+            write!(s, " src").unwrap();
+            for v in &m.src_nodes {
+                write!(s, " {v}").unwrap();
+            }
+            writeln!(s).unwrap();
+        }
+    }
+    s
+}
+
+/// Parse one `rounds ...` / `bytes ...` counter line back into numbers.
+fn parse_counter_line(line: &str, tag: &str) -> Vec<u64> {
+    let mut it = line.split_whitespace();
+    assert_eq!(it.next(), Some(tag), "bad counter line {line:?}");
+    it.map(|t| t.parse().unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// The child role (inert unless the parent set the environment)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spawned_worker_child_entry() {
+    let Ok(rank) = std::env::var("FASTSAMPLE_TEST_CHILD_RANK") else {
+        return; // normal test run: nothing to do
+    };
+    let rank: usize = rank.parse().unwrap();
+    let peers: Vec<String> = std::env::var("FASTSAMPLE_TEST_CHILD_PEERS")
+        .unwrap()
+        .split(',')
+        .map(String::from)
+        .collect();
+    let out_path = std::env::var("FASTSAMPLE_TEST_CHILD_OUT").unwrap();
+    let epochs: usize = std::env::var("FASTSAMPLE_TEST_CHILD_EPOCHS").unwrap().parse().unwrap();
+    let steps: usize = std::env::var("FASTSAMPLE_TEST_CHILD_STEPS").unwrap().parse().unwrap();
+    let task = std::env::var("FASTSAMPLE_TEST_CHILD_TASK").unwrap_or_else(|_| "sample".into());
+    let counters = Arc::new(Counters::default());
+
+    let body = if task == "train" {
+        let artifacts =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let d = fastsample::graph::datasets::quickstart(1);
+        let mut cfg = TrainConfig::mode("quickstart", "vanilla", peers.len()).unwrap();
+        cfg.epochs = epochs;
+        cfg.max_batches = Some(steps);
+        cfg.net = NetworkModel::free();
+        cfg.seed = 3;
+        cfg.verbose = false;
+        let result = run_worker_process(
+            rank,
+            &peers,
+            &quick_rdv(),
+            None,
+            NetworkModel::free(),
+            counters,
+            |rank, comm| train_rank(&d, &artifacts, &cfg, rank, comm),
+        )
+        .expect("rendezvous failed");
+        match result {
+            Ok(r) => {
+                let mut s = String::new();
+                write!(s, "loss").unwrap();
+                for v in &r.loss_curve {
+                    write!(s, " {:08x}", v.to_bits()).unwrap();
+                }
+                writeln!(s).unwrap();
+                s
+            }
+            Err(e) => format!("ERROR {e:#}\n"),
+        }
+    } else {
+        let d = sample_dataset();
+        let cfg = task_config(peers.len(), epochs, steps);
+        let result = run_worker_process(
+            rank,
+            &peers,
+            &quick_rdv(),
+            None,
+            NetworkModel::free(),
+            counters,
+            |rank, comm| sample_rank(&d, &cfg, BATCH, &FANOUTS, true, rank, comm),
+        )
+        .expect("rendezvous failed");
+        match result {
+            Ok(r) => encode_report(&r),
+            Err(e) => format!("ERROR {e:#}\n"),
+        }
+    };
+    std::fs::write(&out_path, body).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// The parent side
+// ---------------------------------------------------------------------------
+
+/// Reserve `n` distinct loopback ports (bind-then-drop; the dial retries
+/// of the rendezvous absorb start-order races).
+fn free_peer_csv(n: usize) -> String {
+    let listeners: Vec<std::net::TcpListener> =
+        (0..n).map(|_| std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap()).collect();
+    listeners
+        .iter()
+        .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+struct ChildSpec {
+    rank: usize,
+    steps: usize,
+    epochs: usize,
+    task: &'static str,
+}
+
+/// Re-exec this test binary as one worker child, filtered down to the
+/// child entry test.
+fn spawn_child(spec: &ChildSpec, peers_csv: &str, out: &PathBuf) -> Child {
+    Command::new(std::env::current_exe().unwrap())
+        .args(["spawned_worker_child_entry", "--exact", "--nocapture", "--test-threads=1"])
+        .env("FASTSAMPLE_TEST_CHILD_RANK", spec.rank.to_string())
+        .env("FASTSAMPLE_TEST_CHILD_PEERS", peers_csv)
+        .env("FASTSAMPLE_TEST_CHILD_OUT", out)
+        .env("FASTSAMPLE_TEST_CHILD_EPOCHS", spec.epochs.to_string())
+        .env("FASTSAMPLE_TEST_CHILD_STEPS", spec.steps.to_string())
+        .env("FASTSAMPLE_TEST_CHILD_TASK", spec.task)
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn child worker process")
+}
+
+/// Wait for every child under one hard deadline; a child that neither
+/// exits nor fails within it is a hang (kill them all, fail the test).
+fn join_children(mut children: Vec<(usize, Child)>, secs: u64) {
+    let t0 = Instant::now();
+    while !children.is_empty() {
+        let mut still = Vec::new();
+        for (rank, mut c) in children {
+            match c.try_wait().unwrap() {
+                Some(status) => {
+                    assert!(status.success(), "child rank {rank} exited with {status}")
+                }
+                None => still.push((rank, c)),
+            }
+        }
+        children = still;
+        if children.is_empty() {
+            break;
+        }
+        if t0.elapsed() > Duration::from_secs(secs) {
+            let hung: Vec<usize> = children.iter().map(|(r, _)| *r).collect();
+            for (_, c) in &mut children {
+                let _ = c.kill();
+            }
+            panic!("child ranks {hung:?} did not exit within {secs}s — multi-process hang");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn out_path(test: &str, rank: usize) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "fastsample-{test}-{}-rank{rank}.txt",
+        std::process::id()
+    ))
+}
+
+/// The tentpole acceptance test: 4 separate OS processes produce
+/// bit-identical MFGs and digest curves to the in-process channel mesh,
+/// and their per-process counters recombine into the in-process totals.
+#[test]
+fn four_child_processes_match_the_in_process_channel_mesh() {
+    let peers = free_peer_csv(WORLD);
+    let mut children = Vec::new();
+    let mut outs = Vec::new();
+    for rank in 0..WORLD {
+        let out = out_path("match", rank);
+        let _ = std::fs::remove_file(&out);
+        let spec = ChildSpec { rank, steps: 2, epochs: 2, task: "sample" };
+        children.push((rank, spawn_child(&spec, &peers, &out)));
+        outs.push(out);
+    }
+    join_children(children, 180);
+
+    // Ground truth: the same per-rank workload over the in-process
+    // channel mesh (shared counters — snapshot after all threads join).
+    let d = sample_dataset();
+    let cfg = task_config(WORLD, 2, 2);
+    let counters = Arc::new(Counters::default());
+    let d_ref = &d;
+    let cfg_ref = &cfg;
+    let expected = run_workers_with(
+        WORLD,
+        NetworkModel::free(),
+        Arc::clone(&counters),
+        move |rank, comm| sample_rank(d_ref, cfg_ref, BATCH, &FANOUTS, true, rank, comm).unwrap(),
+    );
+    let global = counters.snapshot();
+
+    let mut byte_sums = vec![0u64; RoundKind::COUNT];
+    for (rank, out) in outs.iter().enumerate() {
+        let text = std::fs::read_to_string(out)
+            .unwrap_or_else(|e| panic!("child rank {rank} wrote no report: {e}"));
+        let mut lines = text.lines();
+        let rounds = parse_counter_line(lines.next().unwrap(), "rounds");
+        let bytes = parse_counter_line(lines.next().unwrap(), "bytes");
+        // Rank 0 increments the global round counters; other ranks none.
+        for k in RoundKind::ALL {
+            let want = if rank == 0 { global.rounds_of(k) } else { 0 };
+            assert_eq!(rounds[k.index()], want, "rank {rank} {} rounds", k.name());
+            byte_sums[k.index()] += bytes[k.index()];
+        }
+        // Body: bit-identical to the in-process rank.
+        let body: String = lines.map(|l| format!("{l}\n")).collect();
+        assert_eq!(
+            body,
+            encode_body(&expected[rank]),
+            "rank {rank}: multi-process run diverged from the channel mesh"
+        );
+        let _ = std::fs::remove_file(out);
+    }
+    // Per-process byte counters sum to the fabric-global totals.
+    for k in RoundKind::ALL {
+        assert_eq!(byte_sums[k.index()], global.bytes_of(k), "{} bytes", k.name());
+    }
+    // The digest curves are identical across ranks by construction.
+    for r in &expected {
+        assert_eq!(r.curve, expected[0].curve);
+    }
+    assert!(global.total_bytes() > 0, "workload moved no data — test too weak");
+}
+
+/// A rank that finishes early and exits (its process gone, sockets
+/// closed by the OS) must surface as a clean `CommError` in every
+/// survivor — no hang — well within the deadline.
+#[test]
+fn early_exiting_rank_surfaces_comm_error_in_survivors_without_hanging() {
+    let peers = free_peer_csv(WORLD);
+    let mut children = Vec::new();
+    let mut outs = Vec::new();
+    for rank in 0..WORLD {
+        let out = out_path("die", rank);
+        let _ = std::fs::remove_file(&out);
+        // Rank 1 caps itself at 1 step and exits; the others expect 3.
+        let steps = if rank == 1 { 1 } else { 3 };
+        let spec = ChildSpec { rank, steps, epochs: 1, task: "sample" };
+        children.push((rank, spawn_child(&spec, &peers, &out)));
+        outs.push(out);
+    }
+    join_children(children, 180);
+    for (rank, out) in outs.iter().enumerate() {
+        let text = std::fs::read_to_string(out)
+            .unwrap_or_else(|e| panic!("child rank {rank} wrote no report: {e}"));
+        if rank == 1 {
+            assert!(
+                text.starts_with("rounds"),
+                "rank 1 (the early exiter) should have finished cleanly: {text:?}"
+            );
+        } else {
+            assert!(
+                text.starts_with("ERROR") && text.contains("exited mid-collective"),
+                "rank {rank} should have seen PeerLost, got: {text:?}"
+            );
+        }
+        let _ = std::fs::remove_file(out);
+    }
+}
+
+/// Full training across processes (needs the AOT artifacts — skips
+/// politely without them): the 4-process loss curve is bit-identical to
+/// the in-process `train_distributed` run.
+#[test]
+fn multi_process_loss_curve_matches_in_process_training() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let peers = free_peer_csv(WORLD);
+    let mut children = Vec::new();
+    let mut outs = Vec::new();
+    for rank in 0..WORLD {
+        let out = out_path("train", rank);
+        let _ = std::fs::remove_file(&out);
+        let spec = ChildSpec { rank, steps: 2, epochs: 2, task: "train" };
+        children.push((rank, spawn_child(&spec, &peers, &out)));
+        outs.push(out);
+    }
+    join_children(children, 300);
+
+    let d = fastsample::graph::datasets::quickstart(1);
+    let mut cfg = TrainConfig::mode("quickstart", "vanilla", WORLD).unwrap();
+    cfg.epochs = 2;
+    cfg.max_batches = Some(2);
+    cfg.net = NetworkModel::free();
+    cfg.seed = 3;
+    let report = train_distributed(&d, &artifacts, &cfg).unwrap();
+    let mut want = String::from("loss");
+    for v in &report.loss_curve {
+        write!(want, " {:08x}", v.to_bits()).unwrap();
+    }
+    want.push('\n');
+
+    let rank0 = std::fs::read_to_string(&outs[0]).unwrap();
+    assert_eq!(rank0, want, "multi-process loss curve diverged");
+    for out in &outs {
+        let text = std::fs::read_to_string(out).unwrap();
+        assert!(text.starts_with("loss"), "a rank failed: {text:?}");
+        let _ = std::fs::remove_file(out);
+    }
+}

@@ -1,0 +1,40 @@
+#!/usr/bin/env sh
+# Launch an N-rank fastsample multi-process run on one host: N OS
+# processes, one per rank, rendezvousing over real TCP. Extra arguments
+# are passed through to every `fastsample worker` (e.g. --task sample
+# --dataset quickstart --epochs 2). Rank 0 runs in the foreground (its
+# stdout is yours); ranks 1..N-1 log to worker-<rank>.log in $PWD.
+#
+#   ./scripts/launch_workers.sh 4 127.0.0.1 9400 --task sample
+#
+# Exit status is non-zero if ANY rank fails. See OPERATIONS.md.
+set -eu
+
+WORLD=${1:?usage: launch_workers.sh <world> <host> <base_port> [worker flags...]}
+HOST=${2:?usage: launch_workers.sh <world> <host> <base_port> [worker flags...]}
+BASE=${3:?usage: launch_workers.sh <world> <host> <base_port> [worker flags...]}
+shift 3
+
+BIN=${FASTSAMPLE_BIN:-target/release/fastsample}
+
+PEERS=""
+i=0
+while [ "$i" -lt "$WORLD" ]; do
+    PEERS="$PEERS${PEERS:+,}$HOST:$((BASE + i))"
+    i=$((i + 1))
+done
+
+PIDS=""
+r=1
+while [ "$r" -lt "$WORLD" ]; do
+    "$BIN" worker --rank "$r" --peers "$PEERS" "$@" >"worker-$r.log" 2>&1 &
+    PIDS="$PIDS $!"
+    r=$((r + 1))
+done
+
+rc=0
+"$BIN" worker --rank 0 --peers "$PEERS" "$@" || rc=$?
+for p in $PIDS; do
+    wait "$p" || rc=1
+done
+exit "$rc"
