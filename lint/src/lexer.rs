@@ -1,0 +1,300 @@
+//! A minimal, dependency-free Rust lexer — just enough token structure for
+//! the SPMD rules: identifiers, punctuation (maximal-munch multi-char
+//! operators), and correctly *skipped* comments, strings (incl. raw/byte
+//! forms), char literals, and lifetimes, each with a 1-based line number.
+//!
+//! This is deliberately not a full Rust lexer: the rules in
+//! [`crate::rules`] only ever look at identifier/punctuation shapes, so
+//! literals carry no text and a handful of exotic forms (raw identifiers,
+//! exponent floats) degrade gracefully into harmless token splits.
+
+/// Token class. `Str` covers every literal whose content the rules never
+/// inspect (strings, chars, byte strings).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// Multi-char operators, longest first (maximal munch).
+const THREE: [&str; 3] = ["..=", "<<=", ">>="];
+const TWO: [&str; 19] = [
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=", "*=", "/=", "%=", "^=",
+    "&=", "|=", "<<", ">>",
+];
+// ".." is matched after the TWO list on purpose: "..=" wins first.
+const TWO_TAIL: [&str; 1] = [".."];
+
+pub fn lex(src: &str) -> Vec<Token> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut out: Vec<Token> = Vec::new();
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments (line, and nested block).
+        if c == '/' && i + 1 < n {
+            if b[i + 1] == '/' {
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+                continue;
+            }
+            if b[i + 1] == '*' {
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+        }
+        // Identifiers (and the raw/byte-string prefixes that look like them).
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let ident: String = b[start..i].iter().collect();
+            if (ident == "r" || ident == "br") && i < n && (b[i] == '"' || b[i] == '#') {
+                let mut hashes = 0usize;
+                while i < n && b[i] == '#' {
+                    hashes += 1;
+                    i += 1;
+                }
+                if i < n && b[i] == '"' {
+                    i += 1;
+                    while i < n {
+                        if b[i] == '\n' {
+                            line += 1;
+                            i += 1;
+                            continue;
+                        }
+                        if b[i] == '"' {
+                            let mut k = 0usize;
+                            let mut j = i + 1;
+                            while j < n && b[j] == '#' && k < hashes {
+                                k += 1;
+                                j += 1;
+                            }
+                            if k == hashes {
+                                i = j;
+                                break;
+                            }
+                            i += 1;
+                            continue;
+                        }
+                        i += 1;
+                    }
+                    out.push(Token { kind: Kind::Str, text: String::new(), line });
+                    continue;
+                }
+                out.push(Token { kind: Kind::Ident, text: ident, line });
+                continue;
+            }
+            if ident == "b" && i < n && (b[i] == '"' || b[i] == '\'') {
+                // Byte string / byte char: the quote branches below handle
+                // the literal; the `b` prefix itself emits nothing.
+                continue;
+            }
+            out.push(Token { kind: Kind::Ident, text: ident, line });
+            continue;
+        }
+        // String literals.
+        if c == '"' {
+            i += 1;
+            while i < n {
+                match b[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            out.push(Token { kind: Kind::Str, text: String::new(), line });
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                out.push(Token { kind: Kind::Str, text: String::new(), line });
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                i += 3;
+                out.push(Token { kind: Kind::Str, text: String::new(), line });
+                continue;
+            }
+            i += 1;
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.push(Token {
+                kind: Kind::Lifetime,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Numbers. A `.` joins only when followed by a digit, so `0..n`
+        // lexes as `0`, `..`, `n`.
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let d = b[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                    continue;
+                }
+                if d == '.' && i + 1 < n && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    continue;
+                }
+                break;
+            }
+            out.push(Token {
+                kind: Kind::Num,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Punctuation, maximal munch.
+        let mut got: Option<&str> = None;
+        let peek3: String = b[i..n.min(i + 3)].iter().collect();
+        for op in THREE {
+            if peek3 == op {
+                got = Some(op);
+                break;
+            }
+        }
+        if got.is_none() {
+            let peek2: String = b[i..n.min(i + 2)].iter().collect();
+            for op in TWO.iter().chain(TWO_TAIL.iter()) {
+                if peek2 == **op {
+                    got = Some(op);
+                    break;
+                }
+            }
+        }
+        match got {
+            Some(op) => {
+                i += op.chars().count();
+                out.push(Token { kind: Kind::Punct, text: op.to_string(), line });
+            }
+            None => {
+                i += 1;
+                out.push(Token { kind: Kind::Punct, text: c.to_string(), line });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_vanish() {
+        let toks = lex("let x = \"a // not a comment\"; // gone\n/* gone /* nested */ too */ y");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "x", "y"]);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = lex("'a' 'x: &'static str");
+        assert_eq!(toks[0].kind, Kind::Str);
+        assert_eq!(toks[1].kind, Kind::Lifetime);
+        let lt: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lt, ["x", "static"]);
+    }
+
+    #[test]
+    fn ranges_do_not_eat_numbers() {
+        assert_eq!(texts("0..world"), ["0", "..", "world"]);
+        assert_eq!(texts("1.5..=2.5"), ["1.5", "..=", "2.5"]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings_skip() {
+        let toks = lex(r####"r#"has "quotes" inside"# b"bytes" b'x' tail"####);
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["tail"]);
+    }
+
+    #[test]
+    fn lines_are_tracked() {
+        let toks = lex("a\nb\n\nc");
+        let lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, [1, 2, 4]);
+    }
+
+    #[test]
+    fn multichar_operators_munch_maximally() {
+        assert_eq!(texts("a==>b"), ["a", "==", ">", "b"]);
+        assert_eq!(texts("x=>y"), ["x", "=>", "y"]);
+        assert_eq!(texts("p::<q>()"), ["p", "::", "<", "q", ">", "(", ")"]);
+    }
+}

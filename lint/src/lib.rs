@@ -1,0 +1,147 @@
+//! spmd-lint — static enforcement of the fastsample SPMD fabric contract.
+//!
+//! The distributed layer (`rust/src/dist/`) is correct only if every rank
+//! walks the same sequence of collectives and every fabric error propagates
+//! as a `CommError` instead of a panic or a silent discard. Those are
+//! *global* properties that unit tests probe pointwise; this crate checks
+//! them lexically over the whole tree on every CI run:
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | R1   | no collective under rank-conditional control flow            |
+//! | R2   | no `unwrap`/`expect`/panic-family in `dist/` library code    |
+//! | R3   | collective results propagate (`Result` fns, no discards)     |
+//! | R4   | `RoundKind` coverage: COUNT / ALL / match arms, cross-file   |
+//! | R5   | no transport send/flush while a `MutexGuard` is live         |
+//!
+//! Run it as `cargo run -p spmd-lint -- rust/src` (add `--json` for machine
+//! output), or through the tier-1 test `spmd_lint_clean` which pins the tree
+//! at zero findings.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_sources, Finding};
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Collect `(path, source)` for every `.rs` file under `root` (which may be
+/// a single file or a directory), sorted by path.
+pub fn collect_sources(root: &Path) -> io::Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    collect_into(root, &mut files)?;
+    files.sort();
+    Ok(files)
+}
+
+fn collect_into(p: &Path, out: &mut Vec<(String, String)>) -> io::Result<()> {
+    if p.is_dir() {
+        let mut entries = Vec::new();
+        for e in fs::read_dir(p)? {
+            entries.push(e?.path());
+        }
+        entries.sort();
+        for e in entries {
+            collect_into(&e, out)?;
+        }
+        return Ok(());
+    }
+    if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+        let src = fs::read_to_string(p)?;
+        out.push((p.to_string_lossy().into_owned(), src));
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root`. Findings come back sorted by
+/// `(file, line, rule)`; an empty vector means the tree honors the contract.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let files = collect_sources(root)?;
+    Ok(lint_sources(&files))
+}
+
+/// One `path:line: rule: message` line per finding.
+pub fn render_human(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    for f in findings {
+        s.push_str(&f.file);
+        s.push(':');
+        s.push_str(&f.line.to_string());
+        s.push_str(": ");
+        s.push_str(&f.rule);
+        s.push_str(": ");
+        s.push_str(&f.message);
+        s.push('\n');
+    }
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `{"findings":[{"rule":...,"file":...,"line":...,"message":...}],"count":N}`
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut s = String::from("{\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("{\"rule\":\"");
+        s.push_str(&json_escape(&f.rule));
+        s.push_str("\",\"file\":\"");
+        s.push_str(&json_escape(&f.file));
+        s.push_str("\",\"line\":");
+        s.push_str(&f.line.to_string());
+        s.push_str(",\"message\":\"");
+        s.push_str(&json_escape(&f.message));
+        s.push_str("\"}");
+    }
+    s.push_str("],\"count\":");
+    s.push_str(&findings.len().to_string());
+    s.push('}');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping_covers_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn render_json_is_well_formed_when_empty() {
+        assert_eq!(render_json(&[]), "{\"findings\":[],\"count\":0}");
+    }
+
+    #[test]
+    fn render_human_one_line_per_finding() {
+        let f = Finding {
+            rule: "R2".to_string(),
+            file: "x/dist/y.rs".to_string(),
+            line: 7,
+            message: "m".to_string(),
+        };
+        assert_eq!(render_human(&[f]), "x/dist/y.rs:7: R2: m\n");
+    }
+}

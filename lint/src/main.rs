@@ -1,0 +1,62 @@
+//! CLI driver: `spmd-lint [--json] <path>...`
+//!
+//! Exit codes: 0 = clean, 1 = findings, 2 = usage or I/O error. All named
+//! paths are linted as ONE source set so the cross-file R4 checks see the
+//! whole picture.
+
+use std::env;
+use std::path::PathBuf;
+use std::process::exit;
+
+const USAGE: &str = "usage: spmd-lint [--json] <path>...\n\
+    \n\
+    Lints .rs files (recursively for directories) against the SPMD fabric\n\
+    contract: R1 rank-divergent collectives, R2 panics in dist/, R3 dropped\n\
+    fabric errors, R4 RoundKind coverage, R5 sends under a held lock.\n\
+    \n\
+    exit status: 0 clean, 1 findings, 2 usage/io error";
+
+fn main() {
+    let mut json = false;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for arg in env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "-h" | "--help" => {
+                println!("{USAGE}");
+                exit(0);
+            }
+            other if other.starts_with('-') => {
+                eprintln!("spmd-lint: unknown flag `{other}`\n{USAGE}");
+                exit(2);
+            }
+            other => roots.push(PathBuf::from(other)),
+        }
+    }
+    if roots.is_empty() {
+        eprintln!("{USAGE}");
+        exit(2);
+    }
+
+    let mut files: Vec<(String, String)> = Vec::new();
+    for root in &roots {
+        match spmd_lint::collect_sources(root) {
+            Ok(mut f) => files.append(&mut f),
+            Err(e) => {
+                eprintln!("spmd-lint: {}: {e}", root.display());
+                exit(2);
+            }
+        }
+    }
+    files.sort();
+    files.dedup_by(|a, b| a.0 == b.0);
+
+    let findings = spmd_lint::lint_sources(&files);
+    if json {
+        println!("{}", spmd_lint::render_json(&findings));
+    } else {
+        print!("{}", spmd_lint::render_human(&findings));
+        println!("{} finding(s) in {} file(s)", findings.len(), files.len());
+    }
+    exit(if findings.is_empty() { 0 } else { 1 });
+}

@@ -1,0 +1,1026 @@
+//! The SPMD rule engine: a single pass over the token stream of each file,
+//! tracking a block stack (fn / closure / match-body / other), statement
+//! shape, and live Mutex guards. Five rules:
+//!
+//! - **R1** — no collective call under rank-conditional control flow.
+//! - **R2** — no `unwrap`/`expect`/panic-family macros in `dist/` library
+//!   code (test modules exempt; `// spmd-lint: allow(R2) — why` escapes).
+//! - **R3** — collective results must propagate: no `.ok()` / `let _ =`
+//!   discards, and the enclosing `fn` must return `Result`.
+//! - **R4** — cross-file `RoundKind` coverage: `COUNT` matches the variant
+//!   count, every variant appears in the `ALL` array and in at least one
+//!   match arm, and no wildcard arm defeats exhaustiveness.
+//! - **R5** — no `Transport` send/flush while a `MutexGuard` is live.
+//!
+//! The analysis is lexical by design — no type information, no name
+//! resolution. Where that approximates (any `Result` return satisfies R3,
+//! any `.lock()` binding is a guard for R5), the approximation is
+//! deliberately conservative and documented in DESIGN.md.
+
+use crate::lexer::{lex, Kind, Token};
+use std::collections::{BTreeMap, BTreeSet};
+
+pub const RULES: [&str; 5] = ["R1", "R2", "R3", "R4", "R5"];
+pub const ALLOW_RULE: &str = "allow";
+
+const COLLECTIVE_EXACT: [&str; 6] = [
+    "barrier",
+    "fenced_snapshot",
+    "all_zero_u64",
+    "sample_mfgs_distributed",
+    "fetch_features",
+    "prefill_cache",
+];
+const COLLECTIVE_PREFIX: [&str; 2] = ["all_reduce_", "exchange"];
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+const SEND_METHODS: [&str; 3] = ["send", "send_typed", "flush"];
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+fn push(findings: &mut Vec<Finding>, rule: &str, file: &str, line: u32, message: String) {
+    findings.push(Finding {
+        rule: rule.to_string(),
+        file: file.to_string(),
+        line,
+        message,
+    });
+}
+
+fn is_collective(name: &str) -> bool {
+    COLLECTIVE_EXACT.contains(&name) || COLLECTIVE_PREFIX.iter().any(|p| name.starts_with(p))
+}
+
+fn is_dist_path(path: &str) -> bool {
+    path.replace('\\', "/").split('/').any(|c| c == "dist")
+}
+
+// --- allow directives ------------------------------------------------------
+
+/// Scan comment text for `// spmd-lint: allow(<rule>) — <why>` directives.
+/// Well-formed directives suppress findings of `<rule>` on their own line or
+/// the line below; malformed ones are themselves findings.
+fn parse_allows(path: &str, src: &str, findings: &mut Vec<Finding>) -> BTreeSet<(u32, String)> {
+    let mut allows = BTreeSet::new();
+    let strip: &[char] = &['—', '-', ':', ' ', '\t'];
+    for (idx, raw) in src.lines().enumerate() {
+        let ln = idx as u32 + 1;
+        let cpos = match raw.find("//") {
+            Some(p) => p,
+            None => continue,
+        };
+        let c = &raw[cpos..];
+        let p = match c.find("spmd-lint:") {
+            Some(p) => p,
+            None => continue,
+        };
+        let rest = c[p + "spmd-lint:".len()..].trim_start();
+        let rest = match rest.strip_prefix("allow(") {
+            Some(r) => r,
+            None => {
+                push(
+                    findings,
+                    ALLOW_RULE,
+                    path,
+                    ln,
+                    "malformed spmd-lint directive (expected `allow(<rule>) — <why>`)".to_string(),
+                );
+                continue;
+            }
+        };
+        let close = match rest.find(')') {
+            Some(c) => c,
+            None => {
+                push(
+                    findings,
+                    ALLOW_RULE,
+                    path,
+                    ln,
+                    "malformed spmd-lint directive (unclosed `allow(`)".to_string(),
+                );
+                continue;
+            }
+        };
+        let rule = rest[..close].trim();
+        let just = rest[close + 1..].trim().trim_start_matches(strip).trim();
+        if !RULES.contains(&rule) {
+            push(
+                findings,
+                ALLOW_RULE,
+                path,
+                ln,
+                format!("unknown rule `{rule}` in spmd-lint allow directive"),
+            );
+            continue;
+        }
+        if just.is_empty() {
+            push(
+                findings,
+                ALLOW_RULE,
+                path,
+                ln,
+                format!("spmd-lint allow({rule}) is missing its justification"),
+            );
+            continue;
+        }
+        allows.insert((ln, rule.to_string()));
+    }
+    allows
+}
+
+// --- R4 cross-file state ---------------------------------------------------
+
+#[derive(Default)]
+pub struct R4State {
+    variants: Vec<String>,
+    enum_file: Option<String>,
+    enum_line: u32,
+    count_decl: Option<(String, u32, u64)>,
+    all_refs: Option<(String, u32, BTreeSet<String>)>,
+    matched: BTreeSet<String>,
+}
+
+fn parse_int(s: &str) -> Option<u64> {
+    let s = s.replace('_', "");
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else if let Some(oct) = s.strip_prefix("0o") {
+        u64::from_str_radix(oct, 8).ok()
+    } else if let Some(bin) = s.strip_prefix("0b") {
+        u64::from_str_radix(bin, 2).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+// --- per-file analysis -----------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum BlockKind {
+    Fn,
+    Closure,
+    MatchBody,
+    Other,
+}
+
+struct Block {
+    kind: BlockKind,
+    rank_cond: bool,
+    cfg_test: bool,
+    returns_result: bool,
+    fn_name: String,
+    guards: Vec<(String, u32)>,
+    // MatchBody state: between `{`/`,` and the arm's `=>` we are collecting
+    // the pattern; afterwards (non-braced arm) we track expression depth so
+    // the `,` ending the arm re-enters pattern mode.
+    arm_pattern: bool,
+    expr_depth: i32,
+    cur_pattern: Vec<String>,
+    is_roundkind: bool,
+    wildcard_line: u32,
+    pat_line: u32,
+}
+
+impl Block {
+    fn new(kind: BlockKind, rank_cond: bool, cfg_test: bool) -> Self {
+        Block {
+            kind,
+            rank_cond,
+            cfg_test,
+            returns_result: false,
+            fn_name: String::new(),
+            guards: Vec::new(),
+            arm_pattern: false,
+            expr_depth: 0,
+            cur_pattern: Vec::new(),
+            is_roundkind: false,
+            wildcard_line: 0,
+            pat_line: 0,
+        }
+    }
+}
+
+fn t_text(toks: &[Token], i: usize) -> &str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+fn t_kind(toks: &[Token], i: usize) -> Kind {
+    toks.get(i).map(|t| t.kind).unwrap_or(Kind::Punct)
+}
+
+/// `i` points at `(`; returns the index of the matching `)` (or `toks.len()`).
+fn find_close_paren(toks: &[Token], mut i: usize) -> usize {
+    let mut depth = 0i32;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Punct {
+            match toks[i].text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i;
+                    }
+                }
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// `toks[i]` is a collective-named Ident. Returns the index of the call's
+/// `(`, skipping one `::<...>` turbofish, or None if this is not a call.
+fn call_paren_index(toks: &[Token], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    if t_kind(toks, j) == Kind::Punct && t_text(toks, j) == "::" {
+        if t_kind(toks, j + 1) == Kind::Punct && t_text(toks, j + 1) == "<" {
+            let mut depth = 0i32;
+            let mut k = j + 1;
+            while k < toks.len() {
+                if toks[k].kind == Kind::Punct {
+                    match toks[k].text.as_str() {
+                        "<" => depth += 1,
+                        ">" | ">>" => {
+                            depth -= if toks[k].text == ">>" { 2 } else { 1 };
+                            if depth <= 0 {
+                                k += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                k += 1;
+            }
+            j = k;
+        } else {
+            // path continues (e.g. `use foo::barrier;` has no call parens)
+            return None;
+        }
+    }
+    if t_kind(toks, j) == Kind::Punct && t_text(toks, j) == "(" {
+        Some(j)
+    } else {
+        None
+    }
+}
+
+#[derive(Default)]
+struct Stmt {
+    first: Vec<String>,
+    has_lock: bool,
+    is_let: bool,
+    bind: Option<String>,
+    line: u32,
+}
+
+impl Stmt {
+    fn reset(&mut self) {
+        *self = Stmt::default();
+    }
+}
+
+fn end_stmt(stack: &mut [Block], stmt: &mut Stmt) {
+    if stmt.is_let && stmt.has_lock {
+        if let Some(b) = &stmt.bind {
+            if b != "_" {
+                let last = stack.len() - 1;
+                stack[last].guards.push((b.clone(), stmt.line));
+            }
+        }
+    }
+    stmt.reset();
+}
+
+fn finalize_arm_pattern(blk: &mut Block, r4: &mut R4State) {
+    let mut j = 0;
+    while j + 2 < blk.cur_pattern.len() {
+        if blk.cur_pattern[j] == "RoundKind" && blk.cur_pattern[j + 1] == "::" {
+            blk.is_roundkind = true;
+            r4.matched.insert(blk.cur_pattern[j + 2].clone());
+            j += 3;
+            continue;
+        }
+        j += 1;
+    }
+    let stripped: Vec<&String> = blk
+        .cur_pattern
+        .iter()
+        .filter(|p| p.as_str() != ",")
+        .collect();
+    if stripped.len() == 1 && stripped[0] == "_" {
+        blk.wildcard_line = blk.pat_line;
+    }
+    blk.cur_pattern.clear();
+    blk.arm_pattern = false;
+    blk.expr_depth = 0;
+}
+
+fn analyze_file(path: &str, src: &str, r4: &mut R4State, findings: &mut Vec<Finding>) {
+    let toks = lex(src);
+    let in_dist = is_dist_path(path);
+    let n = toks.len();
+
+    let mut stack: Vec<Block> = vec![Block::new(BlockKind::Other, false, false)];
+    let mut pending_cfg_test = false;
+    let mut pending_fn: Option<(String, bool)> = None;
+    let mut pending_cond: Option<(BlockKind, bool)> = None;
+    let mut pending_else_rank = false;
+
+    // condition-collection mode (between `if`/`while`/`match` and its `{`)
+    let mut cond_mode = false;
+    let mut cond_kind = BlockKind::Other;
+    let mut cond_depth = 0i32;
+    let mut cond_has_rank = false;
+
+    // fn-signature mode (between `fn name` and the body `{` or decl `;`)
+    let mut sig_mode = false;
+    let mut sig_name = String::new();
+    let mut sig_paren = 0i32;
+    let mut sig_angle = 0i32;
+    let mut sig_ret_mode = false;
+    let mut sig_in_where = false;
+    let mut sig_returns_result = false;
+
+    let mut stmt = Stmt::default();
+
+    let mut i = 0usize;
+    while i < n {
+        let kind = toks[i].kind;
+        let text = toks[i].text.as_str();
+        let line = toks[i].line;
+
+        // ---------- attribute skip ----------
+        if kind == Kind::Punct && text == "#" && !cond_mode && !sig_mode {
+            let mut j = i + 1;
+            if t_kind(&toks, j) == Kind::Punct && t_text(&toks, j) == "!" {
+                j += 1;
+            }
+            if t_kind(&toks, j) == Kind::Punct && t_text(&toks, j) == "[" {
+                let mut depth = 0i32;
+                let mut has_cfg = false;
+                let mut has_test = false;
+                let mut has_not = false;
+                while j < n {
+                    let tx = t_text(&toks, j);
+                    if t_kind(&toks, j) == Kind::Punct && tx == "[" {
+                        depth += 1;
+                    } else if t_kind(&toks, j) == Kind::Punct && tx == "]" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    } else {
+                        match tx {
+                            "cfg" => has_cfg = true,
+                            "test" => has_test = true,
+                            "not" => has_not = true,
+                            _ => {}
+                        }
+                    }
+                    j += 1;
+                }
+                if has_cfg && has_test && !has_not {
+                    pending_cfg_test = true;
+                }
+                i = j + 1;
+                continue;
+            }
+        }
+
+        // ---------- fn-signature mode ----------
+        if sig_mode {
+            if kind == Kind::Punct {
+                let mut body_opens = false;
+                match text {
+                    "(" => sig_paren += 1,
+                    ")" => sig_paren -= 1,
+                    "<" => sig_angle += 1,
+                    ">" => sig_angle -= 1,
+                    ">>" => sig_angle -= 2,
+                    "->" => {
+                        if sig_paren == 0 && sig_angle <= 0 && !sig_in_where {
+                            sig_ret_mode = true;
+                        }
+                    }
+                    ";" => {
+                        if sig_paren == 0 {
+                            // declaration only (trait method without body)
+                            sig_mode = false;
+                            pending_fn = None;
+                        }
+                    }
+                    "{" => {
+                        if sig_paren == 0 {
+                            sig_mode = false;
+                            pending_fn = Some((sig_name.clone(), sig_returns_result));
+                            body_opens = true;
+                        }
+                    }
+                    _ => {}
+                }
+                if !body_opens {
+                    i += 1;
+                    continue;
+                }
+                // fall through: the `{` is handled by the block-open branch
+            } else {
+                if kind == Kind::Ident && text == "where" && sig_paren == 0 {
+                    sig_in_where = true;
+                    sig_ret_mode = false;
+                } else if sig_ret_mode && kind == Kind::Ident && text == "Result" {
+                    sig_returns_result = true;
+                }
+                i += 1;
+                continue;
+            }
+        }
+
+        // ---------- block open ----------
+        if kind == Kind::Punct && text == "{" && !cond_mode {
+            let (rank, ctest) = {
+                let parent = &stack[stack.len() - 1];
+                (parent.rank_cond, parent.cfg_test || pending_cfg_test)
+            };
+            pending_cfg_test = false;
+            let blk = if let Some((bkind, crank)) = pending_cond.take() {
+                let mut b = Block::new(bkind, rank || crank || pending_else_rank, ctest);
+                if bkind == BlockKind::MatchBody {
+                    b.arm_pattern = true;
+                    b.pat_line = line;
+                }
+                pending_else_rank = false;
+                b
+            } else if let Some((name, rr)) = pending_fn.take() {
+                let mut b = Block::new(BlockKind::Fn, rank || pending_else_rank, ctest);
+                b.returns_result = rr;
+                b.fn_name = name;
+                pending_else_rank = false;
+                b
+            } else {
+                let mut is_closure = false;
+                if i >= 1 {
+                    let j = i - 1;
+                    let jt = t_text(&toks, j);
+                    if t_kind(&toks, j) == Kind::Punct && (jt == "|" || jt == "||") {
+                        is_closure = true;
+                    } else {
+                        // `|args| -> Type {` — walk back over type-ish tokens
+                        let mut k = j as isize;
+                        let mut steps = 0;
+                        while k >= 0 && steps < 12 {
+                            let ku = k as usize;
+                            let tx = t_text(&toks, ku);
+                            let tk = t_kind(&toks, ku);
+                            if tk == Kind::Punct && tx == "->" {
+                                if ku >= 1 {
+                                    let pt = t_text(&toks, ku - 1);
+                                    if t_kind(&toks, ku - 1) == Kind::Punct
+                                        && (pt == "|" || pt == "||")
+                                    {
+                                        is_closure = true;
+                                    }
+                                }
+                                break;
+                            }
+                            let typeish = matches!(tk, Kind::Ident | Kind::Lifetime)
+                                || (tk == Kind::Punct
+                                    && matches!(
+                                        tx,
+                                        "::" | "<"
+                                            | ">"
+                                            | ">>"
+                                            | "&"
+                                            | "("
+                                            | ")"
+                                            | "["
+                                            | "]"
+                                            | ","
+                                    ));
+                            if typeish {
+                                k -= 1;
+                                steps += 1;
+                                continue;
+                            }
+                            break;
+                        }
+                    }
+                }
+                let b = Block::new(
+                    if is_closure {
+                        BlockKind::Closure
+                    } else {
+                        BlockKind::Other
+                    },
+                    rank || pending_else_rank,
+                    ctest,
+                );
+                pending_else_rank = false;
+                b
+            };
+            stack.push(blk);
+            stmt.reset();
+            i += 1;
+            continue;
+        }
+
+        // ---------- inside a MatchBody: pattern mode ----------
+        {
+            let last = stack.len() - 1;
+            if stack[last].kind == BlockKind::MatchBody && stack[last].arm_pattern && !cond_mode {
+                if kind == Kind::Punct && text == "=>" {
+                    finalize_arm_pattern(&mut stack[last], r4);
+                    stmt.reset();
+                    i += 1;
+                    continue;
+                }
+                if !(kind == Kind::Punct && text == "}") {
+                    if kind == Kind::Punct && text == "," && stack[last].cur_pattern.is_empty() {
+                        i += 1;
+                        continue;
+                    }
+                    if stack[last].cur_pattern.is_empty() {
+                        stack[last].pat_line = line;
+                    }
+                    stack[last].cur_pattern.push(text.to_string());
+                    i += 1;
+                    continue;
+                }
+                // a `}` with an open pattern closes the match itself
+                // (trailing comma / empty arm) — handled by block close below
+            }
+        }
+
+        // ---------- inside a MatchBody: non-braced arm body ----------
+        {
+            let last = stack.len() - 1;
+            if stack[last].kind == BlockKind::MatchBody
+                && !stack[last].arm_pattern
+                && !cond_mode
+                && kind == Kind::Punct
+            {
+                if text == "(" || text == "[" {
+                    stack[last].expr_depth += 1;
+                } else if text == ")" || text == "]" {
+                    stack[last].expr_depth -= 1;
+                } else if text == "," && stack[last].expr_depth == 0 {
+                    stack[last].arm_pattern = true;
+                    stack[last].cur_pattern.clear();
+                    stmt.reset();
+                    i += 1;
+                    continue;
+                }
+            }
+        }
+
+        // ---------- block close ----------
+        if kind == Kind::Punct && text == "}" && !cond_mode {
+            if stack.len() > 1 {
+                let blk = stack.pop().expect("stack always has a root block");
+                if blk.kind == BlockKind::MatchBody
+                    && blk.is_roundkind
+                    && blk.wildcard_line > 0
+                    && !blk.cfg_test
+                {
+                    push(
+                        findings,
+                        "R4",
+                        path,
+                        blk.wildcard_line,
+                        "wildcard `_` arm in a RoundKind match defeats cross-file \
+                         exhaustiveness — write every variant out"
+                            .to_string(),
+                    );
+                }
+                let last = stack.len() - 1;
+                if stack[last].kind == BlockKind::MatchBody {
+                    // a braced arm body just closed: next tokens are the
+                    // following arm's pattern
+                    stack[last].arm_pattern = true;
+                    stack[last].cur_pattern.clear();
+                    stack[last].pat_line = line;
+                }
+                let was_rank_if = blk.rank_cond && !stack[last].rank_cond;
+                if was_rank_if
+                    && t_kind(&toks, i + 1) == Kind::Ident
+                    && t_text(&toks, i + 1) == "else"
+                {
+                    pending_else_rank = true;
+                }
+            }
+            stmt.reset();
+            i += 1;
+            continue;
+        }
+
+        // ---------- condition-collection mode ----------
+        if cond_mode {
+            if kind == Kind::Punct {
+                match text {
+                    "(" | "[" => cond_depth += 1,
+                    ")" | "]" => cond_depth -= 1,
+                    "{" => {
+                        if cond_depth == 0 {
+                            // condition ends; re-handle `{` as the body block
+                            cond_mode = false;
+                            pending_cond = Some((cond_kind, cond_has_rank));
+                            continue;
+                        }
+                        cond_depth += 1;
+                    }
+                    "}" => cond_depth -= 1,
+                    _ => {}
+                }
+            } else if kind == Kind::Ident && text == "rank" {
+                cond_has_rank = true;
+            }
+            // no continue: call rules still apply inside conditions
+        }
+
+        // ---------- statement tracking ----------
+        if kind == Kind::Punct && text == ";" {
+            end_stmt(&mut stack, &mut stmt);
+            i += 1;
+            continue;
+        }
+        if kind == Kind::Punct && text == "=>" {
+            stmt.reset();
+            i += 1;
+            continue;
+        }
+        if stmt.first.len() < 3 {
+            stmt.first.push(text.to_string());
+            if stmt.first.len() == 1 && stmt.first[0] == "let" {
+                stmt.is_let = true;
+                stmt.line = line;
+            }
+        }
+        if stmt.is_let && stmt.bind.is_none() && kind == Kind::Ident && text != "let" && text != "mut"
+        {
+            stmt.bind = Some(text.to_string());
+        }
+        if kind == Kind::Ident
+            && text == "lock"
+            && t_text(&toks, i.wrapping_sub(1)) == "."
+            && t_text(&toks, i + 1) == "("
+        {
+            stmt.has_lock = true;
+        }
+
+        // ---------- keywords starting control flow / items ----------
+        if kind == Kind::Ident && !cond_mode {
+            if text == "fn" {
+                if t_kind(&toks, i + 1) == Kind::Ident {
+                    sig_mode = true;
+                    sig_name = t_text(&toks, i + 1).to_string();
+                    sig_paren = 0;
+                    sig_angle = 0;
+                    sig_ret_mode = false;
+                    sig_in_where = false;
+                    sig_returns_result = false;
+                    i += 2;
+                    continue;
+                }
+            } else if text == "if" || text == "while" || text == "match" {
+                cond_mode = true;
+                cond_kind = if text == "match" {
+                    BlockKind::MatchBody
+                } else {
+                    BlockKind::Other
+                };
+                cond_depth = 0;
+                cond_has_rank = false;
+                i += 1;
+                continue;
+            } else if text == "enum"
+                && t_text(&toks, i + 1) == "RoundKind"
+                && t_text(&toks, i + 2) == "{"
+                && !stack[stack.len() - 1].cfg_test
+            {
+                r4.enum_file = Some(path.to_string());
+                r4.enum_line = line;
+                let mut j = i + 3;
+                let mut depth = 1i32;
+                let mut expecting = true;
+                while j < n && depth > 0 {
+                    let tx = t_text(&toks, j);
+                    let tk = t_kind(&toks, j);
+                    if tk == Kind::Punct && (tx == "{" || tx == "(" || tx == "[") {
+                        depth += 1;
+                    } else if tk == Kind::Punct && (tx == "}" || tx == ")" || tx == "]") {
+                        depth -= 1;
+                    } else if depth == 1 && tk == Kind::Punct && tx == "," {
+                        expecting = true;
+                    } else if depth == 1 && tk == Kind::Punct && tx == "#" {
+                        // variant attribute: skip the bracketed group
+                        if t_text(&toks, j + 1) == "[" {
+                            let mut d2 = 0i32;
+                            j += 1;
+                            while j < n {
+                                let t2 = t_text(&toks, j);
+                                if t2 == "[" {
+                                    d2 += 1;
+                                } else if t2 == "]" {
+                                    d2 -= 1;
+                                    if d2 == 0 {
+                                        break;
+                                    }
+                                }
+                                j += 1;
+                            }
+                        }
+                    } else if depth == 1 && tk == Kind::Ident && expecting {
+                        r4.variants.push(tx.to_string());
+                        expecting = false;
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            } else if text == "const"
+                && (t_text(&toks, i + 1) == "COUNT" || t_text(&toks, i + 1) == "ALL")
+                && !stack[stack.len() - 1].cfg_test
+            {
+                let cname = t_text(&toks, i + 1).to_string();
+                let mut j = i + 2;
+                let mut depth = 0i32;
+                let mut refs: BTreeSet<String> = BTreeSet::new();
+                let mut num: Option<String> = None;
+                while j < n {
+                    let tx = t_text(&toks, j);
+                    let tk = t_kind(&toks, j);
+                    if tk == Kind::Punct && (tx == "(" || tx == "[" || tx == "{") {
+                        depth += 1;
+                    } else if tk == Kind::Punct && (tx == ")" || tx == "]" || tx == "}") {
+                        depth -= 1;
+                    } else if tk == Kind::Punct && tx == ";" && depth == 0 {
+                        // the `;` inside `[RoundKind; COUNT]` sits at depth 1
+                        // and must not end the scan
+                        break;
+                    } else if tk == Kind::Ident
+                        && tx == "RoundKind"
+                        && t_text(&toks, j + 1) == "::"
+                        && t_kind(&toks, j + 2) == Kind::Ident
+                    {
+                        refs.insert(t_text(&toks, j + 2).to_string());
+                        j += 2;
+                    } else if tk == Kind::Num && num.is_none() {
+                        num = Some(tx.to_string());
+                    }
+                    j += 1;
+                }
+                if cname == "COUNT" && r4.count_decl.is_none() {
+                    if let Some(nm) = &num {
+                        if let Some(v) = parse_int(nm) {
+                            r4.count_decl = Some((path.to_string(), line, v));
+                        }
+                    }
+                }
+                if cname == "ALL" && !refs.is_empty() && r4.all_refs.is_none() {
+                    r4.all_refs = Some((path.to_string(), line, refs));
+                }
+                i = j;
+                continue;
+            }
+        }
+
+        // ---------- call-site rules ----------
+        if kind == Kind::Ident && !stack[stack.len() - 1].cfg_test {
+            let prev = t_text(&toks, i.wrapping_sub(1)).to_string();
+            let nxt = t_text(&toks, i + 1).to_string();
+
+            // R2: panic-freedom in dist/ library paths
+            if in_dist {
+                if (text == "unwrap" || text == "expect") && prev == "." && nxt == "(" {
+                    push(
+                        findings,
+                        "R2",
+                        path,
+                        line,
+                        format!(
+                            "`.{text}()` in dist/ library code — propagate a CommError \
+                             (or add a justified spmd-lint allow)"
+                        ),
+                    );
+                } else if PANIC_MACROS.contains(&text) && nxt == "!" {
+                    push(
+                        findings,
+                        "R2",
+                        path,
+                        line,
+                        format!(
+                            "`{text}!` in dist/ library code — return Err(CommError) so \
+                             peers see PeerLost, not a hang"
+                        ),
+                    );
+                }
+            }
+
+            // R5: no transport send/flush while a MutexGuard is live
+            if in_dist && SEND_METHODS.contains(&text) && prev == "." && nxt == "(" {
+                let live: Vec<(String, u32)> = stack
+                    .iter()
+                    .flat_map(|b| b.guards.iter().cloned())
+                    .collect();
+                if let Some((gname, gline)) = live.last() {
+                    push(
+                        findings,
+                        "R5",
+                        path,
+                        line,
+                        format!(
+                            "`.{text}()` while MutexGuard `{gname}` (line {gline}) is \
+                             live — drop the guard before touching the transport"
+                        ),
+                    );
+                } else if stmt.has_lock {
+                    push(
+                        findings,
+                        "R5",
+                        path,
+                        line,
+                        format!(
+                            "`.{text}()` in the same statement as a `.lock()` temporary \
+                             — the guard is live across the call"
+                        ),
+                    );
+                }
+            }
+
+            // drop(guard) releases an R5 guard
+            if text == "drop"
+                && nxt == "("
+                && t_kind(&toks, i + 2) == Kind::Ident
+                && t_text(&toks, i + 3) == ")"
+            {
+                let victim = t_text(&toks, i + 2).to_string();
+                for blk in stack.iter_mut() {
+                    blk.guards.retain(|g| g.0 != victim);
+                }
+            }
+
+            // collective calls: R1 + R3
+            if is_collective(text) && prev != "fn" {
+                if let Some(cp) = call_paren_index(&toks, i) {
+                    if stack[stack.len() - 1].rank_cond || (cond_mode && cond_has_rank) {
+                        push(
+                            findings,
+                            "R1",
+                            path,
+                            line,
+                            format!(
+                                "collective `{text}` under rank-conditional control flow \
+                                 — every rank must reach every collective in the same \
+                                 order"
+                            ),
+                        );
+                    }
+                    let close = find_close_paren(&toks, cp);
+                    if t_text(&toks, close + 1) == "."
+                        && t_text(&toks, close + 2) == "ok"
+                        && t_text(&toks, close + 3) == "("
+                    {
+                        push(
+                            findings,
+                            "R3",
+                            path,
+                            line,
+                            format!(
+                                "result of collective `{text}` discarded via `.ok()` — a \
+                                 swallowed CommError desynchronizes the world"
+                            ),
+                        );
+                    }
+                    if stmt.first.len() >= 3
+                        && stmt.first[0] == "let"
+                        && stmt.first[1] == "_"
+                        && stmt.first[2] == "="
+                    {
+                        push(
+                            findings,
+                            "R3",
+                            path,
+                            line,
+                            format!(
+                                "result of collective `{text}` discarded via `let _ =` — \
+                                 propagate the CommError"
+                            ),
+                        );
+                    }
+                    // the enclosing fn must return Result (closures exempt)
+                    let mut encl: Option<&Block> = None;
+                    for blk in stack.iter().rev() {
+                        if blk.kind == BlockKind::Fn || blk.kind == BlockKind::Closure {
+                            encl = Some(blk);
+                            break;
+                        }
+                    }
+                    if let Some(e) = encl {
+                        if e.kind == BlockKind::Fn && !e.returns_result {
+                            push(
+                                findings,
+                                "R3",
+                                path,
+                                line,
+                                format!(
+                                    "fn `{}` calls collective `{text}` but does not \
+                                     return Result — fabric errors must propagate",
+                                    e.fn_name
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        i += 1;
+    }
+}
+
+fn finalize_r4(r4: &R4State, findings: &mut Vec<Finding>) {
+    if r4.variants.is_empty() {
+        return;
+    }
+    let vs = &r4.variants;
+    if let Some((f, ln, val)) = &r4.count_decl {
+        if *val != vs.len() as u64 {
+            push(
+                findings,
+                "R4",
+                f,
+                *ln,
+                format!(
+                    "RoundKind::COUNT is {val} but the enum has {} variants",
+                    vs.len()
+                ),
+            );
+        }
+    }
+    if let Some((f, ln, refs)) = &r4.all_refs {
+        for v in vs {
+            if !refs.contains(v) {
+                push(
+                    findings,
+                    "R4",
+                    f,
+                    *ln,
+                    format!(
+                        "RoundKind::{v} is missing from the ALL array — encode-side \
+                         iteration will skip it"
+                    ),
+                );
+            }
+        }
+    }
+    for v in vs {
+        if !r4.matched.contains(v) {
+            let ef = r4.enum_file.clone().unwrap_or_default();
+            push(
+                findings,
+                "R4",
+                &ef,
+                r4.enum_line,
+                format!(
+                    "RoundKind::{v} appears in no match arm — decode-side dispatch does \
+                     not cover it"
+                ),
+            );
+        }
+    }
+}
+
+/// Lint a set of `(path, source)` pairs as one unit (R4 is cross-file).
+/// Returns findings sorted by `(file, line, rule)`, with suppressed findings
+/// removed.
+pub fn lint_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut r4 = R4State::default();
+    let mut suppress: BTreeMap<String, BTreeSet<(u32, String)>> = BTreeMap::new();
+    for (path, src) in files {
+        let sup = parse_allows(path, src, &mut findings);
+        suppress.insert(path.clone(), sup);
+        analyze_file(path, src, &mut r4, &mut findings);
+    }
+    finalize_r4(&r4, &mut findings);
+    let mut out: Vec<Finding> = findings
+        .into_iter()
+        .filter(|f| match suppress.get(&f.file) {
+            Some(sup) => {
+                !sup.contains(&(f.line, f.rule.clone()))
+                    && !sup.contains(&(f.line.saturating_sub(1), f.rule.clone()))
+            }
+            None => true,
+        })
+        .collect();
+    out.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+    });
+    out
+}

@@ -1,0 +1,17 @@
+//! Clean fixture: the patterns the rules must NOT flag. Never compiled.
+
+use crate::dist::{Comm, CommError, RoundKind};
+
+pub fn lockstep_mean(comm: &mut Comm, grad: &mut [f32]) -> Result<(), CommError> {
+    comm.all_reduce_mean_f32(RoundKind::GradSync, grad)?;
+    if comm.rank() == 0 {
+        log_progress(); // rank-conditional is fine when no collective is inside
+    }
+    Ok(())
+}
+
+pub fn vote(comm: &mut Comm, misses: u64) -> Result<bool, CommError> {
+    comm.all_zero_u64(misses)
+}
+
+fn log_progress() {}

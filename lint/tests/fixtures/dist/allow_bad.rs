@@ -1,0 +1,12 @@
+//! Malformed escape hatches: each is itself a finding AND suppresses
+//! nothing. Never compiled.
+
+pub fn probe(v: Option<u32>) -> u32 {
+    // spmd-lint: allow(R9) — no rule by that name
+    v.unwrap() // line 6: R2 still fires (bad directives do not suppress)
+}
+
+pub fn probe2(v: Option<u32>) -> u32 {
+    // spmd-lint: allow(R2)
+    v.unwrap() // line 11: R2 still fires (justification missing above)
+}

@@ -1,0 +1,9 @@
+//! Escape-hatch fixture: a justified allow suppresses its finding. Never
+//! compiled.
+
+use std::sync::Mutex;
+
+pub fn probe(slot: &Mutex<Option<u32>>) -> Option<u32> {
+    // spmd-lint: allow(R2) — lock is private to this fn and never crosses a panic
+    *slot.lock().unwrap()
+}

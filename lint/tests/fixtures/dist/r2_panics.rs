@@ -1,0 +1,21 @@
+//! R2 fixture: panics in dist/ library paths (the `dist/` path segment is
+//! what puts this file in R2 scope). Never compiled.
+
+use std::sync::Mutex;
+
+pub fn poll(slot: &Mutex<Option<u32>>) -> u32 {
+    let v = slot.lock().expect("poisoned"); // line 7: R2 expect
+    v.unwrap() // line 8: R2 unwrap
+}
+
+pub fn refuse() {
+    panic!("unroutable frame") // line 12: R2 panic!
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_unwraps_stay_legal() {
+        Some(1).unwrap(); // not flagged: test code
+    }
+}

@@ -1,0 +1,20 @@
+//! R5 fixture: transport calls while a MutexGuard is live. Never compiled.
+
+use std::sync::Mutex;
+
+pub fn flush_stats(m: &Mutex<u64>, link: &mut Link) -> Result<(), ()> {
+    let stats = m.lock().unwrap_or_else(|p| p.into_inner());
+    link.send(*stats) // line 7: R5 — `stats` guard still live
+}
+
+pub fn flush_inline(m: &Mutex<Link>) {
+    // line 12: R5 — the `.lock()` temporary is live across the flush
+    m.lock().unwrap_or_else(|p| p.into_inner()).flush();
+}
+
+pub fn flush_after_drop(m: &Mutex<u64>, link: &mut Link) -> Result<(), ()> {
+    let stats = m.lock().unwrap_or_else(|p| p.into_inner());
+    let snapshot = *stats;
+    drop(stats);
+    link.send(snapshot) // not flagged: guard dropped first
+}

@@ -1,0 +1,21 @@
+//! R1 fixture: a collective under rank-conditional control flow.
+//! Never compiled — consumed as text by `lint/tests/rules.rs`.
+
+use crate::dist::{Comm, CommError};
+
+pub fn epoch_mark(comm: &mut Comm, rank: usize) -> Result<(), CommError> {
+    if rank == 0 {
+        comm.barrier()?; // line 8: R1 — only rank 0 reaches the barrier
+    }
+    Ok(())
+}
+
+pub fn staged_sync(comm: &mut Comm) -> Result<(), CommError> {
+    match comm.rank() {
+        0 => {
+            comm.fenced_snapshot()?; // line 16: R1 — match over the rank
+        }
+        _ => {}
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! R3 fixture: collective results discarded or unpropagatable. Never
+//! compiled.
+
+use crate::dist::{Comm, RoundKind};
+
+pub fn sync_loss(comm: &mut Comm, grad: &mut [f32]) {
+    // line 8: R3 twice — `.ok()` discard AND the enclosing fn returns ()
+    comm.all_reduce_mean_f32(RoundKind::GradSync, grad).ok();
+}
+
+pub fn mark(comm: &mut Comm) {
+    let _ = comm.barrier(); // line 12: R3 twice — `let _ =` discard + fn returns ()
+}

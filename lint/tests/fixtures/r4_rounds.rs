@@ -1,0 +1,21 @@
+//! R4 fixture: RoundKind coverage holes. Never compiled.
+
+pub enum RoundKind {
+    SampleRequest = 0,
+    SampleResponse = 1,
+    GradSync = 2,
+}
+
+impl RoundKind {
+    pub const COUNT: usize = 2; // line 10: R4 — enum has 3 variants
+
+    // line 13: R4 — GradSync missing from the encode-side iteration array
+    pub const ALL: [RoundKind; 2] = [RoundKind::SampleRequest, RoundKind::SampleResponse];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoundKind::SampleRequest => "sample-request",
+            _ => "other", // line 18: R4 — wildcard defeats exhaustiveness
+        }
+    }
+}

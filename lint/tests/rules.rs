@@ -1,0 +1,131 @@
+//! Fixture-driven rule tests: every rule must fire on its violating fixture
+//! at the exact lines, and must stay silent on the clean/allowed fixtures.
+//! Fixtures are consumed as text (never compiled), so each one can violate
+//! the contract freely.
+
+use spmd_lint::{lint_sources, Finding};
+use std::fs;
+use std::path::Path;
+
+/// Read a fixture; lint under its *relative* path so `dist/` scoping is
+/// exercised exactly as it is on the real tree.
+fn fixture(rel: &str) -> (String, String) {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(rel);
+    let src = fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", p.display()));
+    (rel.to_string(), src)
+}
+
+fn lint_one(rel: &str) -> Vec<Finding> {
+    lint_sources(&[fixture(rel)])
+}
+
+fn keys(findings: &[Finding]) -> Vec<(&str, u32)> {
+    findings.iter().map(|f| (f.rule.as_str(), f.line)).collect()
+}
+
+#[test]
+fn r1_fires_on_rank_conditional_collectives() {
+    let f = lint_one("r1_divergence.rs");
+    assert_eq!(keys(&f), [("R1", 8), ("R1", 16)], "{f:#?}");
+    assert!(f[0].message.contains("rank-conditional"), "{f:#?}");
+}
+
+#[test]
+fn r2_fires_on_panics_in_dist() {
+    let f = lint_one("dist/r2_panics.rs");
+    assert_eq!(keys(&f), [("R2", 7), ("R2", 8), ("R2", 12)], "{f:#?}");
+    assert!(f[0].message.contains("expect"), "{f:#?}");
+    assert!(f[1].message.contains("unwrap"), "{f:#?}");
+    assert!(f[2].message.contains("panic"), "{f:#?}");
+}
+
+#[test]
+fn r2_is_scoped_to_dist_paths() {
+    // The same source under a non-dist path is out of R2's jurisdiction.
+    let (_, src) = fixture("dist/r2_panics.rs");
+    let f = lint_sources(&[("lib/r2_panics.rs".to_string(), src)]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn r3_fires_on_discarded_collective_results() {
+    let f = lint_one("r3_discard.rs");
+    assert_eq!(
+        keys(&f),
+        [("R3", 8), ("R3", 8), ("R3", 12), ("R3", 12)],
+        "{f:#?}"
+    );
+    assert!(f[0].message.contains(".ok()"), "{f:#?}");
+    assert!(f[1].message.contains("does not return Result"), "{f:#?}");
+    assert!(f[2].message.contains("let _ ="), "{f:#?}");
+    assert!(f[3].message.contains("does not return Result"), "{f:#?}");
+}
+
+#[test]
+fn r4_fires_on_roundkind_coverage_holes() {
+    let f = lint_one("r4_rounds.rs");
+    assert_eq!(
+        keys(&f),
+        [("R4", 3), ("R4", 3), ("R4", 10), ("R4", 13), ("R4", 18)],
+        "{f:#?}"
+    );
+    assert!(f[0].message.contains("SampleResponse"), "{f:#?}");
+    assert!(f[1].message.contains("GradSync"), "{f:#?}");
+    assert!(f[2].message.contains("COUNT is 2"), "{f:#?}");
+    assert!(f[3].message.contains("missing from the ALL array"), "{f:#?}");
+    assert!(f[4].message.contains("wildcard"), "{f:#?}");
+}
+
+#[test]
+fn r5_fires_on_sends_under_a_live_guard() {
+    let f = lint_one("dist/r5_locks.rs");
+    assert_eq!(keys(&f), [("R5", 7), ("R5", 12)], "{f:#?}");
+    assert!(f[0].message.contains("`stats` (line 6)"), "{f:#?}");
+    assert!(f[1].message.contains("same statement"), "{f:#?}");
+}
+
+#[test]
+fn clean_code_produces_no_findings() {
+    let f = lint_one("clean.rs");
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn justified_allow_suppresses_its_finding() {
+    let f = lint_one("dist/allowed.rs");
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn malformed_allows_are_findings_and_suppress_nothing() {
+    let f = lint_one("dist/allow_bad.rs");
+    assert_eq!(
+        keys(&f),
+        [("allow", 5), ("R2", 6), ("allow", 10), ("R2", 11)],
+        "{f:#?}"
+    );
+    assert!(f[0].message.contains("unknown rule `R9`"), "{f:#?}");
+    assert!(f[2].message.contains("missing its justification"), "{f:#?}");
+}
+
+#[test]
+fn all_fixtures_lint_as_one_set_without_cross_talk() {
+    // R4 state is cross-file; linting everything together must not change
+    // any per-file verdict (only one fixture declares RoundKind).
+    let rels = [
+        "clean.rs",
+        "dist/allow_bad.rs",
+        "dist/allowed.rs",
+        "dist/r2_panics.rs",
+        "dist/r5_locks.rs",
+        "r1_divergence.rs",
+        "r3_discard.rs",
+        "r4_rounds.rs",
+    ];
+    let files: Vec<(String, String)> = rels.iter().map(|&r| fixture(r)).collect();
+    let f = lint_sources(&files);
+    assert_eq!(f.len(), 2 + 3 + 4 + 5 + 2 + 4, "{f:#?}");
+}

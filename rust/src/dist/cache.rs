@@ -327,6 +327,7 @@ impl<V: Copy> Clone for SlabCache<V> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

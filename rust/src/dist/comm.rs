@@ -584,11 +584,18 @@ impl Transport for ChannelMesh {
     }
 
     fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError> {
-        self.tx[dst]
-            .as_ref()
-            .expect("send to self goes through the inbox pass-through, not the transport")
-            .send(frame)
-            .map_err(|_| CommError::PeerLost { rank: dst })
+        // Self-sends go through the inbox pass-through, not the transport;
+        // reaching the vacant slot is a routing bug on this rank, reported
+        // as Malformed rather than a panic so peers observe PeerLost.
+        match self.tx[dst].as_ref() {
+            Some(tx) => tx
+                .send(frame)
+                .map_err(|_| CommError::PeerLost { rank: dst }),
+            None => Err(CommError::Malformed {
+                src: dst,
+                detail: "transport-level send to self (self slots bypass the transport)".into(),
+            }),
+        }
     }
 
     fn flush(&mut self) -> Result<(), CommError> {
@@ -596,11 +603,13 @@ impl Transport for ChannelMesh {
     }
 
     fn recv(&mut self, src: usize) -> Result<Frame, CommError> {
-        self.rx[src]
-            .as_ref()
-            .expect("recv from self goes through the inbox pass-through, not the transport")
-            .recv()
-            .map_err(|_| CommError::PeerLost { rank: src })
+        match self.rx[src].as_ref() {
+            Some(rx) => rx.recv().map_err(|_| CommError::PeerLost { rank: src }),
+            None => Err(CommError::Malformed {
+                src,
+                detail: "transport-level recv from self (self slots bypass the transport)".into(),
+            }),
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -818,7 +827,19 @@ impl Comm {
         self.finish_sends(track, sent_bytes)?;
         let mut inboxes = self.recv_round::<T>(tag, seq)?;
         inboxes[self.rank] = self_data;
-        Ok(inboxes.into_iter().map(|o| o.expect("inbox filled")).collect())
+        let mut out = Vec::with_capacity(inboxes.len());
+        for (src, slot) in inboxes.into_iter().enumerate() {
+            match slot {
+                Some(data) => out.push(data),
+                None => {
+                    return Err(CommError::Malformed {
+                        src,
+                        detail: "exchange inbox missing after receive round".into(),
+                    })
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// Broadcast-shaped round: every peer gets the **same** payload, so
@@ -921,6 +942,7 @@ impl Drop for Comm {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::super::worker::{run_workers, run_workers_with};
     use super::*;

@@ -104,6 +104,7 @@ pub fn hottest_remote_nodes(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

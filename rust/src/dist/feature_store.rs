@@ -94,6 +94,15 @@ pub fn fetch_features(
     for (src, req) in granted.iter().enumerate() {
         let mut rep: Vec<f32> = Vec::with_capacity(req.len() * f);
         for &v in req {
+            // Remote ids are untrusted: a request for a node outside the
+            // id space or not stored here is a malformed round from `src`,
+            // failing the collective instead of panicking this rank.
+            if (v as usize) >= shard.feat_row.len() || !shard.owns(v) {
+                return Err(CommError::Malformed {
+                    src,
+                    detail: format!("feature request for node {v} not owned by rank {rank}"),
+                });
+            }
             rep.extend_from_slice(shard.local_feat(v));
         }
         if src != rank {
@@ -109,9 +118,17 @@ pub fn fetch_features(
     }
 
     // ---- Pass 2: fill deferred slots from the responses, warm the cache.
+    // Owners answer in request order, so slot `j` of our request to `p`
+    // must exist in their reply; a short reply is a malformed round.
     for (i, v) in deferred {
         let (p, j) = fetched[&v];
-        out[i * f..(i + 1) * f].copy_from_slice(&rows[p][j * f..(j + 1) * f]);
+        let row = rows[p].get(j * f..(j + 1) * f).ok_or_else(|| CommError::Malformed {
+            src: p,
+            detail: format!(
+                "feature response from rank {p} truncated: row {j} of node {v} missing"
+            ),
+        })?;
+        out[i * f..(i + 1) * f].copy_from_slice(row);
     }
     if let Some(c) = cache.as_deref_mut() {
         for (&v, &(p, j)) in &fetched {
@@ -136,6 +153,7 @@ pub fn prefill_cache(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use std::sync::Arc;
 

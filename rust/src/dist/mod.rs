@@ -42,6 +42,12 @@
 //! * [`feature_cache`] — [`FeatureCache`], the fixed-width typed wrapper
 //!   over the slab, plus the [`hottest_remote_nodes`] warm-up heuristic.
 
+// Panic-freedom is part of the fabric contract (spmd-lint rule R2): a rank
+// that panics mid-collective hangs every peer waiting on its frames. The
+// same invariant is enforced twice — structurally here (test modules carry
+// an explicit allow), and lexically by `cargo run -p spmd-lint`.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod cache;
 pub mod comm;
 pub mod feature_cache;

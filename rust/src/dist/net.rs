@@ -415,7 +415,9 @@ struct OutLink {
 
 impl OutLink {
     fn last_err(&self) -> Option<CommError> {
-        self.err.lock().expect("writer never poisons the error slot").clone()
+        // A panicked writer poisons the slot; the parked error (if any) is
+        // still the truth, so recover the guard instead of panicking here.
+        self.err.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 }
 
@@ -686,9 +688,14 @@ impl TcpMesh {
     /// Queue one writer job on the link to `dst`, surfacing any parked
     /// link error (shared by `send` and `send_typed`).
     fn enqueue(&self, dst: usize, job: Job) -> Result<(), CommError> {
-        let link = self.out[dst]
-            .as_ref()
-            .expect("send to self goes through the inbox pass-through, not the transport");
+        // Self-sends go through the inbox pass-through, never the transport;
+        // a vacant slot here is a routing bug reported as Malformed.
+        let Some(link) = self.out[dst].as_ref() else {
+            return Err(CommError::Malformed {
+                src: dst,
+                detail: "transport-level send to self (self slots bypass the transport)".into(),
+            });
+        };
         if let Some(e) = link.last_err() {
             return Err(e);
         }
@@ -742,7 +749,7 @@ fn spawn_writer(mut stream: TcpStream, dst: usize, max_chunk: Arc<AtomicUsize>) 
                 })
             };
             if let Err(e) = result {
-                *err_slot.lock().expect("writer error slot") = Some(io_to_comm(dst, e));
+                *err_slot.lock().unwrap_or_else(|p| p.into_inner()) = Some(io_to_comm(dst, e));
                 return;
             }
         }
@@ -790,9 +797,12 @@ impl Transport for TcpMesh {
     }
 
     fn recv(&mut self, src: usize) -> Result<Frame, CommError> {
-        let r = self.inc[src]
-            .as_mut()
-            .expect("recv from self goes through the inbox pass-through, not the transport");
+        let Some(r) = self.inc[src].as_mut() else {
+            return Err(CommError::Malformed {
+                src,
+                detail: "transport-level recv from self (self slots bypass the transport)".into(),
+            });
+        };
         Frame::decode_from(r).map_err(|e| io_to_comm(src, e))
     }
 
@@ -828,6 +838,7 @@ impl Drop for TcpMesh {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -83,6 +83,33 @@ const NO_ROW: NodeId = NodeId::MAX;
 /// non-zero, so the uncached wire shape is untouched.
 const ELIDED: NodeId = NodeId::MAX - 1;
 
+/// Checked read of one word of rank `src`'s response. Remote data is
+/// untrusted: a short buffer is a malformed round from that peer, reported
+/// as a `CommError` instead of an index panic on this rank.
+fn read_word(resp: &[NodeId], cur: usize, src: usize) -> Result<NodeId, CommError> {
+    resp.get(cur).copied().ok_or_else(|| CommError::Malformed {
+        src,
+        detail: format!("sampling response truncated at word {cur} of {}", resp.len()),
+    })
+}
+
+/// Checked read of `len` contiguous words of rank `src`'s response.
+fn read_run<'a>(
+    resp: &'a [NodeId],
+    cur: usize,
+    len: usize,
+    src: usize,
+) -> Result<&'a [NodeId], CommError> {
+    resp.get(cur..cur + len).ok_or_else(|| CommError::Malformed {
+        src,
+        detail: format!(
+            "sampling response truncated: words {cur}..{} of {}",
+            cur + len,
+            resp.len()
+        ),
+    })
+}
+
 /// Sample all levels of one minibatch against a worker shard. Same
 /// contract as single-machine [`sample_mfgs`] (fanouts top level first,
 /// MFGs returned bottom first) plus the SPMD one: every rank in the
@@ -244,7 +271,7 @@ fn sample_level(
         ws.serve_chunk.clear();
         ws.serve_chunk.resize(fanout, 0);
         let mut replies: Vec<Vec<NodeId>> = Vec::with_capacity(world);
-        for req in &granted {
+        for (src, req) in granted.iter().enumerate() {
             let mut rep = ws.vec_pool.pop().unwrap_or_default();
             rep.clear();
             let (peer_limit, ids) = match req.split_first() {
@@ -253,9 +280,24 @@ fn sample_level(
             };
             rep.reserve(ids.len() * (fanout + 1));
             for &u in ids {
-                let neigh = view
-                    .try_neighbors(u)
-                    .expect("received a sampling request for a node this worker does not own");
+                // A request for a node this rank does not hold (or an id
+                // past the node space) is a malformed round from `src`:
+                // fail the collective so every peer sees the error, rather
+                // than panicking this server rank and hanging the rest.
+                let neigh = if (u as usize) < shard.book.num_nodes() {
+                    view.try_neighbors(u)
+                } else {
+                    None
+                };
+                let Some(neigh) = neigh else {
+                    return Err(CommError::Malformed {
+                        src,
+                        detail: format!(
+                            "sampling request for node {u}, which rank {} does not hold",
+                            shard.part
+                        ),
+                    });
+                };
                 let cnt =
                     sample_node(neigh, u, fanout, key, &mut ws.serve_scratch, &mut ws.serve_chunk);
                 let admissible = peer_limit > 0 && (neigh.len() as u64) < peer_limit as u64;
@@ -299,51 +341,67 @@ fn sample_level(
             let p = shard.book.part_of(v);
             let resp = &responses[p];
             let mut cur = ws.owner_cursor[p];
-            if limit > 0 && resp[cur] == ELIDED {
+            if limit > 0 && read_word(resp, cur, p)? == ELIDED {
                 // Elided shape: the appended full row doubles as the
                 // sampled set (deg <= fanout ⇒ sample_node took every
                 // neighbor in row order — bit-identical to the eager
                 // shape by construction).
-                let deg = resp[cur + 1] as usize;
-                debug_assert!(deg <= fanout);
-                let row = &resp[cur + 2..cur + 2 + deg];
+                let deg = read_word(resp, cur + 1, p)? as usize;
+                if deg > fanout {
+                    return Err(CommError::Malformed {
+                        src: p,
+                        detail: format!("elided row of degree {deg} exceeds fanout {fanout}"),
+                    });
+                }
+                let row = read_run(resp, cur + 2, deg, p)?;
                 ws.samples[i * fanout..i * fanout + deg].copy_from_slice(row);
                 ws.counts[i] = deg as u32;
                 view.cache_insert(v, row);
                 ws.owner_cursor[p] = cur + 2 + deg;
                 continue;
             }
-            let cnt = resp[cur] as usize;
-            debug_assert!(cnt <= fanout);
+            let cnt = read_word(resp, cur, p)? as usize;
+            if cnt > fanout {
+                return Err(CommError::Malformed {
+                    src: p,
+                    detail: format!("sample count {cnt} exceeds fanout {fanout}"),
+                });
+            }
             ws.samples[i * fanout..i * fanout + cnt]
-                .copy_from_slice(&resp[cur + 1..cur + 1 + cnt]);
+                .copy_from_slice(read_run(resp, cur + 1, cnt, p)?);
             ws.counts[i] = cnt as u32;
             cur += 1 + cnt;
             // Owners append the row/marker suffix iff the limit we sent
             // this level was non-zero (mirrors the serve side above).
             if limit > 0 {
-                let marker = resp[cur];
+                let marker = read_word(resp, cur, p)?;
                 cur += 1;
                 if marker != NO_ROW {
                     let deg = marker as usize;
-                    view.cache_insert(v, &resp[cur..cur + deg]);
+                    view.cache_insert(v, read_run(resp, cur, deg, p)?);
                     cur += deg;
                 }
             }
             ws.owner_cursor[p] = cur;
         }
         ws.miss_slots = miss_slots;
-        // The ordering invariant, asserted: every byte of every response
+        // The ordering invariant, checked: every byte of every response
         // was matched to a miss slot — a skewed cursor would mean seed
-        // order and request order diverged somewhere.
+        // order and request order diverged somewhere, and trailing bytes
+        // must fail the round, not linger as silent desync.
         for (p, resp) in responses.iter().enumerate() {
-            assert_eq!(
-                ws.owner_cursor[p],
-                resp.len(),
-                "rank {}: response from rank {p} not fully consumed — \
-                 remote-slot ordering invariant violated",
-                shard.part
-            );
+            if ws.owner_cursor[p] != resp.len() {
+                return Err(CommError::Malformed {
+                    src: p,
+                    detail: format!(
+                        "rank {}: consumed {} of {} response words — remote-slot \
+                         ordering invariant violated",
+                        shard.part,
+                        ws.owner_cursor[p],
+                        resp.len()
+                    ),
+                });
+            }
         }
 
         // Recycle the buffers that came back from the fabric (our own
@@ -369,6 +427,7 @@ fn sample_level(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use std::sync::Arc;
 

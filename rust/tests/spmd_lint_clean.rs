@@ -1,0 +1,21 @@
+//! Tier-1 gate: the shipped tree honors the SPMD fabric contract.
+//!
+//! `spmd-lint` walks every source file and reports R1-R5 violations
+//! (rank-divergent collectives, panics in dist/, dropped fabric errors,
+//! RoundKind coverage holes, sends under a held lock). The tree ships at
+//! ZERO findings — if this test fails, fix the code or add a justified
+//! `// spmd-lint: allow(<rule>) — <why>` at the site, never here.
+
+use std::path::Path;
+
+#[test]
+fn tree_has_zero_spmd_lint_findings() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let findings = spmd_lint::lint_tree(&root).expect("rust/src is readable");
+    assert!(
+        findings.is_empty(),
+        "spmd-lint found {} violation(s):\n{}",
+        findings.len(),
+        spmd_lint::render_human(&findings)
+    );
+}
