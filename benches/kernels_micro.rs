@@ -16,7 +16,8 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use fastsample::dist::{
-    run_workers, sample_mfgs_distributed, CachePolicy, NetworkModel, RoundKind,
+    run_workers, sample_mfgs_distributed_wire, CachePolicy, NetworkModel, RoundKind,
+    SamplingWire,
 };
 use fastsample::graph::generator::{make_dataset, planted_communities, rmat, DatasetParams};
 use fastsample::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
@@ -170,10 +171,12 @@ fn main() {
         }
     }
 
-    // ---- Distributed sampling with and without the remote-adjacency
-    // cache (vanilla replication, 4 workers, 4 minibatches per run so
-    // the cached arm actually warms up and later batches sample cached
-    // rows locally — the effect the `cache-decay` report measures).
+    // ---- Distributed sampling across the wire × cache grid (vanilla
+    // replication, 4 workers, 4 minibatches per run so the cached arms
+    // actually warm up and later batches sample cached rows locally —
+    // the effect the `cache-decay` report measures). Scalar-vs-bulk at
+    // the same cache point isolates the columnar kernel's serve/decode
+    // speedup; the sampled MFGs are bit-identical across wires.
     {
         let n = if quick { 2_048 } else { 16_384 };
         let d = make_dataset(&DatasetParams {
@@ -195,41 +198,46 @@ fn main() {
         let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
         let fanouts = [10usize, 5];
         let key = RngKey::new(23);
-        for (tag, cache_bytes) in [("uncached", 0u64), ("cache=1m", 1 << 20)] {
-            let shards_ref = &shards;
-            let s = bench.run(
-                &format!("dist/sample_mfgs {}k x4 {tag}", n / 1024),
-                || {
-                    run_workers(4, NetworkModel::free(), move |rank, comm| {
-                        let shard = &shards_ref[rank];
-                        let mut view = shard.topology.clone();
-                        if cache_bytes > 0 {
-                            view.enable_cache(cache_bytes, CachePolicy::Clock);
-                        }
-                        let seeds: Vec<u32> =
-                            shard.train_local.iter().copied().take(256).collect();
-                        let mut ws = SamplerWorkspace::new();
-                        let mut edges = 0usize;
-                        for b in 0..4u64 {
-                            let mfgs = sample_mfgs_distributed(
-                                comm,
-                                shard,
-                                &mut view,
-                                &seeds,
-                                &fanouts,
-                                key.fold(b),
-                                &mut ws,
-                                KernelKind::Fused,
-                            )
-                            .unwrap();
-                            edges += mfgs.iter().map(|m| m.num_edges()).sum::<usize>();
-                        }
-                        edges
-                    })
-                },
-            );
-            println!("{}", s.row());
-            all.push(s);
+        for (wire_tag, wire) in
+            [("scalar", SamplingWire::Scalar), ("bulk", SamplingWire::Bulk)]
+        {
+            for (tag, cache_bytes) in [("uncached", 0u64), ("cache=1m", 1 << 20)] {
+                let shards_ref = &shards;
+                let s = bench.run(
+                    &format!("dist/sample_mfgs {}k x4 {wire_tag} {tag}", n / 1024),
+                    || {
+                        run_workers(4, NetworkModel::free(), move |rank, comm| {
+                            let shard = &shards_ref[rank];
+                            let mut view = shard.topology.clone();
+                            if cache_bytes > 0 {
+                                view.enable_cache(cache_bytes, CachePolicy::Clock);
+                            }
+                            let seeds: Vec<u32> =
+                                shard.train_local.iter().copied().take(256).collect();
+                            let mut ws = SamplerWorkspace::new();
+                            let mut edges = 0usize;
+                            for b in 0..4u64 {
+                                let mfgs = sample_mfgs_distributed_wire(
+                                    comm,
+                                    shard,
+                                    &mut view,
+                                    &seeds,
+                                    &fanouts,
+                                    key.fold(b),
+                                    &mut ws,
+                                    KernelKind::Fused,
+                                    wire,
+                                )
+                                .unwrap();
+                                edges += mfgs.iter().map(|m| m.num_edges()).sum::<usize>();
+                            }
+                            edges
+                        })
+                    },
+                );
+                println!("{}", s.row());
+                all.push(s);
+            }
         }
     }
 

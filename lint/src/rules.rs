@@ -23,11 +23,12 @@ use std::collections::{BTreeMap, BTreeSet};
 pub const RULES: [&str; 5] = ["R1", "R2", "R3", "R4", "R5"];
 pub const ALLOW_RULE: &str = "allow";
 
-const COLLECTIVE_EXACT: [&str; 6] = [
+const COLLECTIVE_EXACT: [&str; 7] = [
     "barrier",
     "fenced_snapshot",
     "all_zero_u64",
     "sample_mfgs_distributed",
+    "sample_mfgs_distributed_wire",
     "fetch_features",
     "prefill_cache",
 ];

@@ -63,6 +63,18 @@ pub fn cache_policy(name: &str) -> Result<crate::dist::CachePolicy> {
     }
 }
 
+/// Resolve a sampling wire format by name (`wire:<fmt>` mode suffix /
+/// `--sampling-wire`): `bulk` (columnar counts + ids blob, the default)
+/// or `scalar` (the run-length per-node stream). Content is
+/// bit-identical either way; only the response encoding differs.
+pub fn sampling_wire(name: &str) -> Result<crate::dist::SamplingWire> {
+    match name {
+        "bulk" => Ok(crate::dist::SamplingWire::Bulk),
+        "scalar" => Ok(crate::dist::SamplingWire::Scalar),
+        other => anyhow::bail!("unknown sampling wire {other:?} (scalar | bulk)"),
+    }
+}
+
 /// Resolve a transport spec: `inproc` (the in-process channel mesh,
 /// default), `tcp` (per-peer loopback sockets, ephemeral ports), or
 /// `tcp:<base_port>` (rank r binds `base_port + r`).
@@ -117,6 +129,15 @@ mod tests {
             crate::dist::CachePolicy::StaticDegree
         );
         assert!(cache_policy("lru").is_err());
+    }
+
+    #[test]
+    fn sampling_wire_names_resolve() {
+        use crate::dist::SamplingWire;
+        assert_eq!(sampling_wire("bulk").unwrap(), SamplingWire::Bulk);
+        assert_eq!(sampling_wire("scalar").unwrap(), SamplingWire::Scalar);
+        assert_eq!(SamplingWire::default(), SamplingWire::Bulk);
+        assert!(sampling_wire("columnar").is_err());
     }
 
     #[test]

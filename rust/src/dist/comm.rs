@@ -44,7 +44,11 @@ use super::net::NetworkModel;
 pub enum RoundKind {
     /// Vanilla sampling: frontier nodes shipped to their owners.
     SampleRequest = 0,
-    /// Vanilla sampling: sampled neighborhoods shipped back.
+    /// Vanilla sampling: sampled neighborhoods shipped back — as the
+    /// columnar bulk layout (counts block + ids blob + cache-row
+    /// section) or the run-length scalar stream, per the uniform
+    /// [`SamplingWire`](crate::dist::SamplingWire) choice; the round
+    /// kind and count are the same either way.
     SampleResponse = 1,
     /// Feature exchange: input-node ids shipped to feature owners.
     FeatureRequest = 2,

@@ -33,6 +33,11 @@
 //!   rank misses. Rounds per minibatch are measured in `0..=2(L−1)`
 //!   (budget 0 ⇒ the paper's vanilla counts, full replication ⇒ hybrid's
 //!   zero), bit-equal to the single-machine pipeline at every budget.
+//!   Responses move on one of two [`SamplingWire`] encodings — the
+//!   default columnar *bulk* layout (counts block + ids blob + cache-row
+//!   section, served and decoded by parallel two-phase kernels) or the
+//!   run-length *scalar* stream ([`sample_mfgs_distributed_wire`] is the
+//!   wire-explicit entry point; both are bit-identical in content).
 //! * [`cache`] — [`SlabCache`]: the generic byte-budgeted slab
 //!   (fixed- and variable-width rows) under [`CachePolicy::StaticDegree`]
 //!   or [`CachePolicy::Clock`], shared by the feature cache and the
@@ -64,7 +69,7 @@ pub use comm::{
 pub use feature_cache::{hottest_remote_nodes, FeatureCache};
 pub use feature_store::{fetch_features, prefill_cache, FetchStats};
 pub use net::{NetworkModel, PROTOCOL_VERSION, RendezvousConfig, TcpMesh, TransportConfig};
-pub use sampling::sample_mfgs_distributed;
+pub use sampling::{sample_mfgs_distributed, sample_mfgs_distributed_wire, SamplingWire};
 pub use worker::{
     run_worker_process, run_workers, run_workers_on, run_workers_over, run_workers_with,
 };

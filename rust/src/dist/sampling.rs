@@ -39,6 +39,27 @@
 //! per-rank halo coverage: it only changes each rank's miss count
 //! feeding the uniform `all_zero_u64` vote.
 //!
+//! **Wire formats.** The miss exchange speaks one of two response
+//! encodings ([`SamplingWire`], a uniform SPMD-contract setting like the
+//! policy): the historical *scalar* stream — per miss, an interleaved
+//! `cnt, ids…` run plus the cache suffix above — or the default *bulk*
+//! columnar layout, where each owner→requester payload is three
+//! sections: a `counts[]` block (one flag-bearing word per miss — the
+//! validated header), an `ids[]` blob (all sampled ids back to back,
+//! segment offsets recovered by prefix-summing the counts), and a
+//! trailing cache-row section. The bulk serve is a two-phase kernel —
+//! serial count/offset pass, then a parallel ragged sweep
+//! ([`par::par_ragged_chunks`]) filling the blob with the same
+//! `sample_node` calls the local path makes — and the bulk decode is one
+//! header validation, a prefix sum, and parallel strided copies into the
+//! sample buffer ([`par::par_scatter_rows`]), replacing the scalar
+//! word-at-a-time cursor walk. Both wires carry bit-identical
+//! information (requests, rounds, and sampled MFGs are invariant across
+//! the choice; cache inserts replay in the same seed order); response
+//! bytes are equal with the cache off and strictly smaller in bulk for
+//! every `NO_ROW`/`ELIDED` entry with it on. See DESIGN.md §"Bulk
+//! sampling kernel" for the frame diagram.
+//!
 //! Equality with the single-machine sampler holds bit-for-bit because
 //! neighbor choice depends only on `(level_key, node, its neighbor
 //! list)` — `sample_node` keyed by the counter-based RNG — and any
@@ -82,6 +103,54 @@ const NO_ROW: NodeId = NodeId::MAX;
 /// and only ever emitted while the requester's admission limit is
 /// non-zero, so the uncached wire shape is untouched.
 const ELIDED: NodeId = NodeId::MAX - 1;
+
+/// Bulk-wire count-word flag: this miss's full adjacency row follows in
+/// the trailing row section (`deg, row[deg]`, in count-word order) — the
+/// bulk twin of the scalar row suffix, minus the per-miss `NO_ROW`
+/// marker (absence of the flag already says it).
+const ROW_FLAG: NodeId = 1 << 31;
+
+/// Bulk-wire count-word flag: the blob segment IS the full adjacency row
+/// (the bulk twin of [`ELIDED`]). The count field holds `deg`
+/// (`deg <= fanout`), and the decode uses the segment both as the
+/// sampled set and as the cache insert.
+const ELIDED_FLAG: NodeId = 1 << 30;
+
+/// Low bits of a bulk count word: the sample count (or elided degree).
+/// Counts never exceed the fanout, so reserving the two flag bits is
+/// free; flags are only legal while the requester's admission limit is
+/// non-zero, keeping the uncached bulk wire flag-less.
+const COUNT_MASK: NodeId = ELIDED_FLAG - 1;
+
+/// Wire format of the per-level miss exchange — how one owner's
+/// [`RoundKind::SampleResponse`] payload to one requester is laid out.
+/// Uniform across ranks (an SPMD-contract setting, like the replication
+/// policy and the cache capacity). Both formats carry bit-identical
+/// information: sampled MFGs, measured rounds, request bytes, and the
+/// cache-insert order are invariant across the choice — only response
+/// bytes differ, and bulk is never larger (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SamplingWire {
+    /// Interleaved run-length stream: per miss, `cnt, ids[cnt]` plus the
+    /// cache-mode `NO_ROW`-marker / row / `ELIDED` suffix. Served by a
+    /// serial per-request push loop, decoded by a per-word cursor walk.
+    Scalar,
+    /// Columnar sections: `counts[]` block, `ids[]` blob, cache-row
+    /// section. Served by a two-phase bulk kernel (serial prefix sum,
+    /// parallel blob fill), decoded by one header validation plus
+    /// parallel strided scatters.
+    #[default]
+    Bulk,
+}
+
+impl std::fmt::Display for SamplingWire {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SamplingWire::Scalar => "scalar",
+            SamplingWire::Bulk => "bulk",
+        })
+    }
+}
 
 /// Checked read of one word of rank `src`'s response. Remote data is
 /// untrusted: a short buffer is a malformed round from that peer, reported
@@ -144,6 +213,36 @@ pub fn sample_mfgs_distributed(
     ws: &mut SamplerWorkspace,
     kind: KernelKind,
 ) -> Result<Vec<Mfg>, CommError> {
+    sample_mfgs_distributed_wire(
+        comm,
+        shard,
+        view,
+        seeds,
+        fanouts,
+        key,
+        ws,
+        kind,
+        SamplingWire::default(),
+    )
+}
+
+/// [`sample_mfgs_distributed`] with an explicit miss-exchange wire
+/// format — the `--sampling-wire` escape hatch. `wire` is part of the
+/// SPMD contract: every rank must pass the same value (like the policy
+/// and the cache capacity), or the columnar and run-length codecs
+/// disagree and the round fails as [`CommError::Malformed`].
+#[allow(clippy::too_many_arguments)]
+pub fn sample_mfgs_distributed_wire(
+    comm: &mut Comm,
+    shard: &WorkerShard,
+    view: &mut TopologyView,
+    seeds: &[NodeId],
+    fanouts: &[usize],
+    key: RngKey,
+    ws: &mut SamplerWorkspace,
+    kind: KernelKind,
+    wire: SamplingWire,
+) -> Result<Vec<Mfg>, CommError> {
     debug_assert_eq!(
         view.local_rows(),
         shard.topology.local_rows(),
@@ -156,7 +255,7 @@ pub fn sample_mfgs_distributed(
                 None => seeds,
                 Some(prev) => &prev.src_nodes,
             };
-            sample_level(comm, shard, view, cur, f, level_key(key, li), ws, kind)?
+            sample_level(comm, shard, view, cur, f, level_key(key, li), ws, kind, wire)?
         };
         out.push(mfg);
     }
@@ -180,8 +279,13 @@ fn sample_level(
     key: RngKey,
     ws: &mut SamplerWorkspace,
     kind: KernelKind,
+    wire: SamplingWire,
 ) -> Result<Mfg, CommError> {
     assert!(fanout >= 1, "fanout must be >= 1");
+    assert!(
+        (fanout as u64) <= COUNT_MASK as u64,
+        "fanout must fit the bulk count encoding"
+    );
     let n = seeds.len();
     let world = comm.world();
     ws.begin(shard.book.num_nodes());
@@ -203,7 +307,19 @@ fn sample_level(
     // row/marker suffix entirely, so a saturated cache stops paying
     // response-side overhead; the decode below mirrors the same rule.
     let limit = if full { 0 } else { view.cache_admission_limit() };
+    let bulk = wire == SamplingWire::Bulk;
     ws.miss_slots.clear();
+    if bulk {
+        // The bulk decode consumes each owner's columnar response as a
+        // unit, so record which seed slots went to which owner (in the
+        // same order the outboxes queue them).
+        if ws.owner_slots.len() < world {
+            ws.owner_slots.resize_with(world, Vec::new);
+        }
+        for slots in &mut ws.owner_slots[..world] {
+            slots.clear();
+        }
+    }
     let mut outboxes: Vec<Vec<NodeId>> = Vec::new();
     if !full {
         outboxes.reserve(world);
@@ -220,6 +336,9 @@ fn sample_level(
                     outboxes[p].push(limit);
                 }
                 outboxes[p].push(v);
+                if bulk {
+                    ws.owner_slots[p].push(i as u32);
+                }
                 ws.miss_slots.push(i as u32);
             }
         }
@@ -261,147 +380,16 @@ fn sample_level(
     let need_exchange = !full && !comm.all_zero_u64(misses)?;
     if need_exchange {
         let granted = comm.exchange(RoundKind::SampleRequest, outboxes)?;
-
-        // Serve: sample each requested node with the same key/stream the
-        // single-machine kernel would use. Wire format per node:
-        // `count, id*count` (u32 each) in request arrival order; when the
-        // requester's prefixed admission limit is non-zero, additionally
-        // `deg, id*deg` (the full adjacency row) if `deg` clears that
-        // limit, else `NO_ROW`.
-        ws.serve_chunk.clear();
-        ws.serve_chunk.resize(fanout, 0);
-        let mut replies: Vec<Vec<NodeId>> = Vec::with_capacity(world);
-        for (src, req) in granted.iter().enumerate() {
-            let mut rep = ws.vec_pool.pop().unwrap_or_default();
-            rep.clear();
-            let (peer_limit, ids) = match req.split_first() {
-                Some((&peer_limit, ids)) if cache_on => (peer_limit, ids),
-                _ => (0, &req[..]),
-            };
-            rep.reserve(ids.len() * (fanout + 1));
-            for &u in ids {
-                // A request for a node this rank does not hold (or an id
-                // past the node space) is a malformed round from `src`:
-                // fail the collective so every peer sees the error, rather
-                // than panicking this server rank and hanging the rest.
-                let neigh = if (u as usize) < shard.book.num_nodes() {
-                    view.try_neighbors(u)
-                } else {
-                    None
-                };
-                let Some(neigh) = neigh else {
-                    return Err(CommError::Malformed {
-                        src,
-                        detail: format!(
-                            "sampling request for node {u}, which rank {} does not hold",
-                            shard.part
-                        ),
-                    });
-                };
-                let cnt =
-                    sample_node(neigh, u, fanout, key, &mut ws.serve_scratch, &mut ws.serve_chunk);
-                let admissible = peer_limit > 0 && (neigh.len() as u64) < peer_limit as u64;
-                if admissible && cnt as usize == neigh.len() {
-                    // deg <= fanout: the sample is the full row in row
-                    // order, so ship the row once (`ELIDED, deg, row`)
-                    // instead of `cnt, ids, deg, row`.
-                    rep.push(ELIDED);
-                    rep.push(neigh.len() as NodeId);
-                    rep.extend_from_slice(neigh);
-                    continue;
-                }
-                rep.push(cnt);
-                rep.extend_from_slice(&ws.serve_chunk[..cnt as usize]);
-                // Row/marker suffix only while the requester can still
-                // admit something (peer_limit 0 ⇒ the bare uncached shape).
-                if peer_limit > 0 {
-                    if admissible {
-                        rep.push(neigh.len() as NodeId);
-                        rep.extend_from_slice(neigh);
-                    } else {
-                        rep.push(NO_ROW);
-                    }
-                }
-            }
-            replies.push(rep);
-        }
+        let replies = match wire {
+            SamplingWire::Scalar => serve_scalar(shard, view, &granted, fanout, key, cache_on, ws)?,
+            SamplingWire::Bulk => serve_bulk(shard, view, &granted, fanout, key, cache_on, ws)?,
+        };
         let responses = comm.exchange(RoundKind::SampleResponse, replies)?;
-
-        // Decode into the strided buffer, walking the recorded miss slots
-        // in seed order so each owner's response cursor advances in the
-        // order we requested. Appended adjacency rows go straight into
-        // the cache overlay (inserts may be rejected once the budget
-        // fills — correctness never depends on residency).
-        ws.owner_cursor.clear();
-        ws.owner_cursor.resize(world, 0);
-        let miss_slots = std::mem::take(&mut ws.miss_slots);
-        for &slot in &miss_slots {
-            let i = slot as usize;
-            let v = seeds[i];
-            let p = shard.book.part_of(v);
-            let resp = &responses[p];
-            let mut cur = ws.owner_cursor[p];
-            if limit > 0 && read_word(resp, cur, p)? == ELIDED {
-                // Elided shape: the appended full row doubles as the
-                // sampled set (deg <= fanout ⇒ sample_node took every
-                // neighbor in row order — bit-identical to the eager
-                // shape by construction).
-                let deg = read_word(resp, cur + 1, p)? as usize;
-                if deg > fanout {
-                    return Err(CommError::Malformed {
-                        src: p,
-                        detail: format!("elided row of degree {deg} exceeds fanout {fanout}"),
-                    });
-                }
-                let row = read_run(resp, cur + 2, deg, p)?;
-                ws.samples[i * fanout..i * fanout + deg].copy_from_slice(row);
-                ws.counts[i] = deg as u32;
-                view.cache_insert(v, row);
-                ws.owner_cursor[p] = cur + 2 + deg;
-                continue;
+        match wire {
+            SamplingWire::Scalar => {
+                decode_scalar(shard, view, seeds, &responses, fanout, limit, ws)?
             }
-            let cnt = read_word(resp, cur, p)? as usize;
-            if cnt > fanout {
-                return Err(CommError::Malformed {
-                    src: p,
-                    detail: format!("sample count {cnt} exceeds fanout {fanout}"),
-                });
-            }
-            ws.samples[i * fanout..i * fanout + cnt]
-                .copy_from_slice(read_run(resp, cur + 1, cnt, p)?);
-            ws.counts[i] = cnt as u32;
-            cur += 1 + cnt;
-            // Owners append the row/marker suffix iff the limit we sent
-            // this level was non-zero (mirrors the serve side above).
-            if limit > 0 {
-                let marker = read_word(resp, cur, p)?;
-                cur += 1;
-                if marker != NO_ROW {
-                    let deg = marker as usize;
-                    view.cache_insert(v, read_run(resp, cur, deg, p)?);
-                    cur += deg;
-                }
-            }
-            ws.owner_cursor[p] = cur;
-        }
-        ws.miss_slots = miss_slots;
-        // The ordering invariant, checked: every byte of every response
-        // was matched to a miss slot — a skewed cursor would mean seed
-        // order and request order diverged somewhere, and trailing bytes
-        // must fail the round, not linger as silent desync.
-        for (p, resp) in responses.iter().enumerate() {
-            if ws.owner_cursor[p] != resp.len() {
-                return Err(CommError::Malformed {
-                    src: p,
-                    detail: format!(
-                        "rank {}: consumed {} of {} response words — remote-slot \
-                         ordering invariant violated",
-                        shard.part,
-                        ws.owner_cursor[p],
-                        resp.len()
-                    ),
-                });
-            }
+            SamplingWire::Bulk => decode_bulk(shard, view, seeds, &responses, fanout, limit, ws)?,
         }
 
         // Recycle the buffers that came back from the fabric (our own
@@ -424,6 +412,418 @@ fn sample_level(
         KernelKind::Fused => ws.assemble_fused(seeds, fanout),
         KernelKind::Baseline => ws.assemble_baseline(seeds, fanout),
     })
+}
+
+/// Resolve one requested node's adjacency row. A request for a node this
+/// rank does not hold (or an id past the node space) is a malformed
+/// round from `src`: fail the collective so every peer sees the error,
+/// rather than panicking this server rank and hanging the rest.
+fn resolve<'a>(
+    shard: &WorkerShard,
+    view: &'a TopologyView,
+    src: usize,
+    u: NodeId,
+) -> Result<&'a [NodeId], CommError> {
+    let neigh =
+        if (u as usize) < shard.book.num_nodes() { view.try_neighbors(u) } else { None };
+    neigh.ok_or_else(|| CommError::Malformed {
+        src,
+        detail: format!(
+            "sampling request for node {u}, which rank {} does not hold",
+            shard.part
+        ),
+    })
+}
+
+/// Scalar-wire serve: sample each requested node with the same
+/// key/stream the single-machine kernel would use, pushing the
+/// interleaved run-length stream. Wire format per node: `count,
+/// id*count` (u32 each) in request arrival order; when the requester's
+/// prefixed admission limit is non-zero, additionally `deg, id*deg` (the
+/// full adjacency row) if `deg` clears that limit, else `NO_ROW` — or
+/// the combined `ELIDED, deg, row` shape when the sample is the row.
+fn serve_scalar(
+    shard: &WorkerShard,
+    view: &TopologyView,
+    granted: &[Vec<NodeId>],
+    fanout: usize,
+    key: RngKey,
+    cache_on: bool,
+    ws: &mut SamplerWorkspace,
+) -> Result<Vec<Vec<NodeId>>, CommError> {
+    ws.serve_chunk.clear();
+    ws.serve_chunk.resize(fanout, 0);
+    let mut replies: Vec<Vec<NodeId>> = Vec::with_capacity(granted.len());
+    for (src, req) in granted.iter().enumerate() {
+        let mut rep = ws.vec_pool.pop().unwrap_or_default();
+        rep.clear();
+        let (peer_limit, ids) = match req.split_first() {
+            Some((&peer_limit, ids)) if cache_on => (peer_limit, ids),
+            _ => (0, &req[..]),
+        };
+        if peer_limit == 0 {
+            // Bare shape: `1 + cnt <= 1 + fanout` words per node, so this
+            // bound can only over-shoot — never reallocates mid-loop.
+            rep.reserve(ids.len() * (fanout + 1));
+        } else {
+            // Cache mode appends a row/marker suffix per node, so the
+            // fanout bound reallocates mid-loop; pre-pass the exact shape
+            // instead (counts need no sampling: cnt = min(deg, fanout)).
+            let mut need = 0usize;
+            for &u in ids {
+                let deg = resolve(shard, view, src, u)?.len();
+                let cnt = deg.min(fanout);
+                let admissible = (deg as u64) < peer_limit as u64;
+                need += if admissible && cnt == deg {
+                    2 + deg
+                } else if admissible {
+                    1 + cnt + 1 + deg
+                } else {
+                    1 + cnt + 1
+                };
+            }
+            rep.reserve(need);
+        }
+        for &u in ids {
+            let neigh = resolve(shard, view, src, u)?;
+            let cnt =
+                sample_node(neigh, u, fanout, key, &mut ws.serve_scratch, &mut ws.serve_chunk);
+            let admissible = peer_limit > 0 && (neigh.len() as u64) < peer_limit as u64;
+            if admissible && cnt as usize == neigh.len() {
+                // deg <= fanout: the sample is the full row in row
+                // order, so ship the row once (`ELIDED, deg, row`)
+                // instead of `cnt, ids, deg, row`.
+                rep.push(ELIDED);
+                rep.push(neigh.len() as NodeId);
+                rep.extend_from_slice(neigh);
+                continue;
+            }
+            rep.push(cnt);
+            rep.extend_from_slice(&ws.serve_chunk[..cnt as usize]);
+            // Row/marker suffix only while the requester can still
+            // admit something (peer_limit 0 ⇒ the bare uncached shape).
+            if peer_limit > 0 {
+                if admissible {
+                    rep.push(neigh.len() as NodeId);
+                    rep.extend_from_slice(neigh);
+                } else {
+                    rep.push(NO_ROW);
+                }
+            }
+        }
+        replies.push(rep);
+    }
+    Ok(replies)
+}
+
+/// Bulk-wire serve: the two-phase columnar kernel. Phase A (serial)
+/// resolves each request once, emits its flagged count word, and
+/// prefix-sums the blob segment offsets — no sampling happens yet, since
+/// a segment's length is `min(deg, fanout)` either way. Phase B fills
+/// the blob with a parallel ragged sweep making the same [`sample_node`]
+/// calls the local path makes (`sample_node` writes exactly
+/// `min(deg, fanout)` words — precisely each segment's length; an elided
+/// segment is the full row, which is what sampling a `deg <= fanout`
+/// node produces, in row order). Phase C (serial) appends the cache-row
+/// section: `deg, row[deg]` per `ROW_FLAG`-ged count word, in order.
+fn serve_bulk(
+    shard: &WorkerShard,
+    view: &TopologyView,
+    granted: &[Vec<NodeId>],
+    fanout: usize,
+    key: RngKey,
+    cache_on: bool,
+    ws: &mut SamplerWorkspace,
+) -> Result<Vec<Vec<NodeId>>, CommError> {
+    let mut replies: Vec<Vec<NodeId>> = Vec::with_capacity(granted.len());
+    for (src, req) in granted.iter().enumerate() {
+        let mut rep = ws.vec_pool.pop().unwrap_or_default();
+        rep.clear();
+        let (peer_limit, ids) = match req.split_first() {
+            Some((&peer_limit, ids)) if cache_on => (peer_limit, ids),
+            _ => (0, &req[..]),
+        };
+        let n = ids.len();
+        // Phase A: the counts block — the validated header the decode
+        // mirrors — plus the blob prefix sum and the row-section tally.
+        ws.offsets.clear();
+        ws.offsets.push(0);
+        let mut blob = 0usize;
+        let mut row_words = 0usize;
+        rep.reserve(n);
+        for &u in ids {
+            let deg = resolve(shard, view, src, u)?.len();
+            let cnt = deg.min(fanout);
+            let admissible = peer_limit > 0 && (deg as u64) < peer_limit as u64;
+            let word = if admissible && cnt == deg {
+                ELIDED_FLAG | deg as NodeId
+            } else if admissible {
+                row_words += 1 + deg;
+                ROW_FLAG | cnt as NodeId
+            } else {
+                cnt as NodeId
+            };
+            rep.push(word);
+            blob += cnt; // elided segments carry deg == cnt words
+            ws.offsets.push(blob);
+        }
+        // The exact remaining shape is now known — one reservation, no
+        // mid-fill reallocation.
+        rep.reserve(blob + row_words);
+        // Phase B: parallel blob fill.
+        rep.resize(n + blob, 0);
+        par::par_ragged_chunks(&mut rep[n..], &ws.offsets, Vec::new, |scratch, k, seg| {
+            // Phase A resolved every id against the same immutable view,
+            // so the lookup cannot fail; the empty-row fallback keeps
+            // the closure total without a panic path in fabric code.
+            let neigh = view.try_neighbors(ids[k]).unwrap_or(&[]);
+            sample_node(neigh, ids[k], fanout, key, scratch, seg);
+        });
+        // Phase C: the cache-row section.
+        if row_words > 0 {
+            for (k, &u) in ids.iter().enumerate() {
+                if rep[k] & ROW_FLAG != 0 {
+                    let neigh = resolve(shard, view, src, u)?;
+                    rep.push(neigh.len() as NodeId);
+                    rep.extend_from_slice(neigh);
+                }
+            }
+        }
+        replies.push(rep);
+    }
+    Ok(replies)
+}
+
+/// Scalar-wire decode: walk the recorded miss slots in seed order so
+/// each owner's response cursor advances in the order we requested,
+/// copying runs into the strided buffer one checked word at a time.
+/// Appended adjacency rows go straight into the cache overlay (inserts
+/// may be rejected once the budget fills — correctness never depends on
+/// residency).
+fn decode_scalar(
+    shard: &WorkerShard,
+    view: &mut TopologyView,
+    seeds: &[NodeId],
+    responses: &[Vec<NodeId>],
+    fanout: usize,
+    limit: NodeId,
+    ws: &mut SamplerWorkspace,
+) -> Result<(), CommError> {
+    let world = responses.len();
+    ws.owner_cursor.clear();
+    ws.owner_cursor.resize(world, 0);
+    let miss_slots = std::mem::take(&mut ws.miss_slots);
+    for &slot in &miss_slots {
+        let i = slot as usize;
+        let v = seeds[i];
+        let p = shard.book.part_of(v);
+        let resp = &responses[p];
+        let mut cur = ws.owner_cursor[p];
+        if limit > 0 && read_word(resp, cur, p)? == ELIDED {
+            // Elided shape: the appended full row doubles as the
+            // sampled set (deg <= fanout ⇒ sample_node took every
+            // neighbor in row order — bit-identical to the eager
+            // shape by construction).
+            let deg = read_word(resp, cur + 1, p)? as usize;
+            if deg > fanout {
+                return Err(CommError::Malformed {
+                    src: p,
+                    detail: format!("elided row of degree {deg} exceeds fanout {fanout}"),
+                });
+            }
+            let row = read_run(resp, cur + 2, deg, p)?;
+            ws.samples[i * fanout..i * fanout + deg].copy_from_slice(row);
+            ws.counts[i] = deg as u32;
+            view.cache_insert(v, row);
+            ws.owner_cursor[p] = cur + 2 + deg;
+            continue;
+        }
+        let cnt = read_word(resp, cur, p)? as usize;
+        if cnt > fanout {
+            return Err(CommError::Malformed {
+                src: p,
+                detail: format!("sample count {cnt} exceeds fanout {fanout}"),
+            });
+        }
+        ws.samples[i * fanout..i * fanout + cnt]
+            .copy_from_slice(read_run(resp, cur + 1, cnt, p)?);
+        ws.counts[i] = cnt as u32;
+        cur += 1 + cnt;
+        // Owners append the row/marker suffix iff the limit we sent
+        // this level was non-zero (mirrors the serve side above).
+        if limit > 0 {
+            let marker = read_word(resp, cur, p)?;
+            cur += 1;
+            if marker != NO_ROW {
+                let deg = marker as usize;
+                view.cache_insert(v, read_run(resp, cur, deg, p)?);
+                cur += deg;
+            }
+        }
+        ws.owner_cursor[p] = cur;
+    }
+    ws.miss_slots = miss_slots;
+    // The ordering invariant, checked: every byte of every response
+    // was matched to a miss slot — a skewed cursor would mean seed
+    // order and request order diverged somewhere, and trailing bytes
+    // must fail the round, not linger as silent desync.
+    for (p, resp) in responses.iter().enumerate() {
+        if ws.owner_cursor[p] != resp.len() {
+            return Err(CommError::Malformed {
+                src: p,
+                detail: format!(
+                    "rank {}: consumed {} of {} response words — remote-slot \
+                     ordering invariant violated",
+                    shard.part,
+                    ws.owner_cursor[p],
+                    resp.len()
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Bulk-wire decode, mirroring [`serve_bulk`]'s sections. Pass 1, per
+/// owner: validate the counts block (the header — length, flag legality,
+/// count <= fanout), prefix-sum the blob offsets, bounds-check the blob
+/// and row section against the payload length (exact consumption
+/// included — the columnar restatement of the remote-slot ordering
+/// invariant), record each miss's count, then scatter the blob segments
+/// into the strided sample buffer in parallel (seed slots are unique, so
+/// the destination rows are disjoint). Pass 2 (cache mode only): replay
+/// the cache inserts in global seed order — the same order the scalar
+/// wire inserts in, so the overlay reaches a byte-identical state
+/// whichever wire ran.
+fn decode_bulk(
+    shard: &WorkerShard,
+    view: &mut TopologyView,
+    seeds: &[NodeId],
+    responses: &[Vec<NodeId>],
+    fanout: usize,
+    limit: NodeId,
+    ws: &mut SamplerWorkspace,
+) -> Result<(), CommError> {
+    let world = responses.len();
+    ws.owner_cursor.clear();
+    ws.owner_cursor.resize(world, 0);
+    for (p, resp) in responses.iter().enumerate() {
+        let slots = &ws.owner_slots[p];
+        let n = slots.len();
+        if n == 0 {
+            if !resp.is_empty() {
+                return Err(CommError::Malformed {
+                    src: p,
+                    detail: format!("unsolicited sampling response of {} words", resp.len()),
+                });
+            }
+            continue;
+        }
+        if resp.len() < n {
+            return Err(CommError::Malformed {
+                src: p,
+                detail: format!("truncated counts block: {} of {n} count words", resp.len()),
+            });
+        }
+        ws.scatter.clear();
+        let mut blob = 0usize;
+        for (k, &slot) in slots.iter().enumerate() {
+            let word = resp[k];
+            let flags = word & (ROW_FLAG | ELIDED_FLAG);
+            if flags != 0 && limit == 0 {
+                return Err(CommError::Malformed {
+                    src: p,
+                    detail: format!("cache flags {flags:#010x} on an uncached round"),
+                });
+            }
+            if flags == (ROW_FLAG | ELIDED_FLAG) {
+                return Err(CommError::Malformed {
+                    src: p,
+                    detail: "count word carries both ROW and ELIDED flags".into(),
+                });
+            }
+            let cnt = (word & COUNT_MASK) as usize;
+            if cnt > fanout {
+                return Err(CommError::Malformed {
+                    src: p,
+                    detail: format!("sample count {cnt} exceeds fanout {fanout}"),
+                });
+            }
+            ws.scatter.push((slot, (n + blob) as u32, cnt as u32));
+            ws.counts[slot as usize] = cnt as u32;
+            blob += cnt;
+        }
+        let blob_end = n + blob;
+        if resp.len() < blob_end {
+            return Err(CommError::Malformed {
+                src: p,
+                detail: format!(
+                    "ids blob shorter than its prefix sum: {} of {blob_end} words",
+                    resp.len()
+                ),
+            });
+        }
+        // Row-section structural walk (contents are consumed by pass 2);
+        // every word of the payload must be accounted for.
+        let mut cur = blob_end;
+        if limit > 0 {
+            for &word in &resp[..n] {
+                if word & ROW_FLAG != 0 {
+                    let deg = read_word(resp, cur, p)? as usize;
+                    read_run(resp, cur + 1, deg, p)?;
+                    cur += 1 + deg;
+                }
+            }
+        }
+        if cur != resp.len() {
+            return Err(CommError::Malformed {
+                src: p,
+                detail: format!(
+                    "rank {}: consumed {cur} of {} response words — remote-slot \
+                     ordering invariant violated",
+                    shard.part,
+                    resp.len()
+                ),
+            });
+        }
+        // Row-section start, kept for pass 2.
+        ws.owner_cursor[p] = blob_end;
+        par::par_scatter_rows(&mut ws.samples, fanout, resp, &ws.scatter);
+    }
+
+    if limit > 0 {
+        ws.owner_entry.clear();
+        ws.owner_entry.resize(world, 0);
+        ws.owner_blob.clear();
+        ws.owner_blob.resize(world, 0);
+        // Blob cursors start right after each owner's counts block.
+        for (blob_cur, slots) in ws.owner_blob.iter_mut().zip(&ws.owner_slots) {
+            *blob_cur = slots.len();
+        }
+        for &slot in &ws.miss_slots {
+            let i = slot as usize;
+            let v = seeds[i];
+            let p = shard.book.part_of(v);
+            let resp = &responses[p];
+            let k = ws.owner_entry[p];
+            ws.owner_entry[p] += 1;
+            let word = read_word(resp, k, p)?;
+            let cnt = (word & COUNT_MASK) as usize;
+            if word & ELIDED_FLAG != 0 {
+                // The blob segment IS the full row (deg <= fanout):
+                // sampled set and cache insert from one wire copy.
+                let row = read_run(resp, ws.owner_blob[p], cnt, p)?;
+                view.cache_insert(v, row);
+            } else if word & ROW_FLAG != 0 {
+                let cur = ws.owner_cursor[p];
+                let deg = read_word(resp, cur, p)? as usize;
+                view.cache_insert(v, read_run(resp, cur + 1, deg, p)?);
+                ws.owner_cursor[p] = cur + 1 + deg;
+            }
+            ws.owner_blob[p] += cnt;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -601,9 +1001,11 @@ mod tests {
 
     /// Regression for the response-batching satellite: under cache mode,
     /// a miss whose degree clears both the admission limit and the
-    /// fanout must cost exactly `2 + deg` response words (ELIDED marker,
-    /// degree, row) — not the old `2 + 2·deg` (sample AND row) — while
-    /// staying bit-identical to single-machine sampling.
+    /// fanout must cost exactly `2 + deg` response words on the scalar
+    /// wire (ELIDED marker, degree, row) — not the old `2 + 2·deg`
+    /// (sample AND row) — and exactly `1 + deg` on the bulk wire (one
+    /// flagged count word, the row as the blob segment), while staying
+    /// bit-identical to single-machine sampling on both.
     #[test]
     fn cache_mode_elides_duplicate_ids_when_degree_clears_fanout() {
         use super::super::comm::Counters;
@@ -634,56 +1036,65 @@ mod tests {
             }
             local.into_iter().chain(remote).collect()
         };
-        let counters = StdArc::new(Counters::default());
-        let shards_ref = &shards;
-        let mk_seeds_ref = &mk_seeds;
-        let results = run_workers_with(
-            2,
-            NetworkModel::free(),
-            StdArc::clone(&counters),
-            move |rank, comm| {
-                let seeds = mk_seeds_ref(rank);
-                let mut ws = SamplerWorkspace::new();
-                let mut view = shards_ref[rank].topology.clone();
-                view.enable_cache(u64::MAX >> 1, CachePolicy::StaticDegree);
-                let mfgs = sample_mfgs_distributed(
-                    comm,
-                    &shards_ref[rank],
-                    &mut view,
-                    &seeds,
-                    &fanouts,
-                    key,
-                    &mut ws,
-                    KernelKind::Fused,
-                )
-                .unwrap();
-                (seeds, mfgs)
-            },
-        );
-        // Bit-equality first.
-        let mut ws = SamplerWorkspace::new();
-        for (seeds, mfgs) in &results {
-            let expect = sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
-            assert_eq!(mfgs, &expect, "elided responses decoded wrong");
-        }
-        // Exact response byte count: every miss is elided, so each costs
-        // (2 + deg) u32 words. Misses are exactly each rank's remote
-        // seeds (single level, unbounded cold cache admits everything).
-        let mut expect_words = 0u64;
+        // Elided misses are exactly each rank's remote seeds (single
+        // level, unbounded cold cache admits everything). Scalar pays
+        // `2 + deg` words per miss, bulk `1 + deg`.
+        let mut elided = 0u64;
+        let mut deg_sum = 0u64;
         for rank in 0..2usize {
             for v in mk_seeds(rank) {
                 if book.part_of(v) != rank {
-                    expect_words += 2 + d.graph.degree(v) as u64;
+                    elided += 1;
+                    deg_sum += d.graph.degree(v) as u64;
                 }
             }
         }
-        let s = counters.snapshot();
-        assert_eq!(
-            s.bytes_of(RoundKind::SampleResponse),
-            expect_words * 4,
-            "response bytes are not the elided shape"
-        );
-        assert!(expect_words > 0, "workload produced no misses — test too weak");
+        assert!(elided > 0, "workload produced no misses — test too weak");
+        for (wire, expect_words) in [
+            (SamplingWire::Scalar, 2 * elided + deg_sum),
+            (SamplingWire::Bulk, elided + deg_sum),
+        ] {
+            let counters = StdArc::new(Counters::default());
+            let shards_ref = &shards;
+            let mk_seeds_ref = &mk_seeds;
+            let results = run_workers_with(
+                2,
+                NetworkModel::free(),
+                StdArc::clone(&counters),
+                move |rank, comm| {
+                    let seeds = mk_seeds_ref(rank);
+                    let mut ws = SamplerWorkspace::new();
+                    let mut view = shards_ref[rank].topology.clone();
+                    view.enable_cache(u64::MAX >> 1, CachePolicy::StaticDegree);
+                    let mfgs = sample_mfgs_distributed_wire(
+                        comm,
+                        &shards_ref[rank],
+                        &mut view,
+                        &seeds,
+                        &fanouts,
+                        key,
+                        &mut ws,
+                        KernelKind::Fused,
+                        wire,
+                    )
+                    .unwrap();
+                    (seeds, mfgs)
+                },
+            );
+            // Bit-equality first.
+            let mut ws = SamplerWorkspace::new();
+            for (seeds, mfgs) in &results {
+                let expect =
+                    sample_mfgs(&d.graph, seeds, &fanouts, key, &mut ws, KernelKind::Fused);
+                assert_eq!(mfgs, &expect, "elided responses decoded wrong ({wire})");
+            }
+            let s = counters.snapshot();
+            assert_eq!(
+                s.bytes_of(RoundKind::SampleResponse),
+                expect_words * 4,
+                "response bytes are not the elided shape ({wire})"
+            );
+        }
     }
 
     /// The cache fast path end to end: the same worker resampling the

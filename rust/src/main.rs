@@ -40,9 +40,12 @@ COMMANDS:
                 [--replication-budget 0|64k|2m|inf]  (overrides the
                 mode's replication policy; modes also accept
                 budget:<bytes> and halo:<hops>, optionally +fused,
-                +cache:<bytes>, and/or +tcp)
+                +cache:<bytes>, +tcp, and/or +wire:<scalar|bulk>)
                 [--adj-cache 0|32k|2m|inf] [--adj-cache-policy clock|static]
                 (the dynamic remote-adjacency cache over the static halo)
+                [--sampling-wire scalar|bulk]  (miss-response encoding:
+                bulk = columnar counts + ids blob, the default; scalar =
+                the run-length stream — bit-identical content either way)
                 [--transport inproc|tcp|tcp:<base_port>]  (how collective
                 frames move between workers; tcp uses per-peer loopback
                 sockets, base port 0 = ephemeral)
@@ -63,8 +66,9 @@ COMMANDS:
                 train iff artifacts exist)
                 plus the train flags (--dataset --variant --mode --epochs
                 --lr --optimizer --seed --net --max-batches --cache
-                --adj-cache --adj-cache-policy --replication-budget) and,
-                for the sample task, [--batch 32] [--fanouts 4,3]
+                --adj-cache --adj-cache-policy --sampling-wire
+                --replication-budget) and, for the sample task,
+                [--batch 32] [--fanouts 4,3]
   partition     --dataset <spec> --parts 8 [--seed S]
   sample-bench  --dataset <spec> --batch 1024 --fanouts 15,10,5 [--iters 10]
   gen-data      --dataset <spec> --out graph.bin [--seed S]
@@ -130,6 +134,9 @@ fn parse_train_flags(
         cfg.adj_cache_bytes = config::parse_cache_bytes(&spec)?;
     }
     cfg.adj_cache_policy = config::cache_policy(&args.get_str("adj-cache-policy", "clock"))?;
+    if let Some(spec) = args.get_opt_str("sampling-wire") {
+        cfg.sampling_wire = config::sampling_wire(&spec)?;
+    }
     if let Some(spec) = args.get_opt_str("transport") {
         cfg.transport = config::transport(&spec)?;
     }

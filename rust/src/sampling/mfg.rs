@@ -107,6 +107,22 @@ pub struct SamplerWorkspace {
     /// Serve-side Floyd-sampling scratch and fanout-sized sample chunk.
     pub(crate) serve_scratch: Vec<usize>,
     pub(crate) serve_chunk: Vec<NodeId>,
+    // --- Bulk-wire scratch (`dist::sampling`, `SamplingWire::Bulk`).
+    /// Per-owner request slot lists, filled at miss-queue time in the
+    /// same seed order as the outboxes — the decode's map from the k-th
+    /// count word of owner p's columnar response back to a seed slot.
+    pub(crate) owner_slots: Vec<Vec<u32>>,
+    /// Prefix-sum offsets of the current blob (serve: segment fill
+    /// bounds; one entry per request plus the leading 0).
+    pub(crate) offsets: Vec<usize>,
+    /// Decode scatter triples `(seed slot, blob offset, length)` for the
+    /// parallel strided copy into `samples`.
+    pub(crate) scatter: Vec<(u32, u32, u32)>,
+    /// Per-owner cursors for the decode's cache-insert pass: next count
+    /// word and next blob word (`owner_cursor` above doubles as the
+    /// row-section cursor).
+    pub(crate) owner_entry: Vec<usize>,
+    pub(crate) owner_blob: Vec<usize>,
 }
 
 impl SamplerWorkspace {

@@ -13,8 +13,8 @@ use std::sync::Arc;
 use anyhow::{ensure, Context, Result};
 
 use crate::dist::{
-    fetch_features, run_workers_on, sample_mfgs_distributed, CachePolicy, Comm, CommError,
-    CommStats, Counters, FeatureCache, NetworkModel, RoundKind, TransportConfig,
+    fetch_features, run_workers_on, sample_mfgs_distributed_wire, CachePolicy, Comm, CommError,
+    CommStats, Counters, FeatureCache, NetworkModel, RoundKind, SamplingWire, TransportConfig,
 };
 use crate::graph::{Dataset, NodeId};
 use crate::partition::{
@@ -59,6 +59,10 @@ pub struct TrainConfig {
     /// ranks, like the policy: the sampler's wire format is keyed off it.
     pub adj_cache_bytes: u64,
     pub adj_cache_policy: CachePolicy,
+    /// Response encoding of the sampler's miss rounds (`wire:<fmt>` mode
+    /// suffix / `--sampling-wire`). Uniform across ranks — the wire is
+    /// part of the SPMD contract; content is bit-identical either way.
+    pub sampling_wire: SamplingWire,
     /// Cap batches per epoch (benches); `None` = full epoch.
     pub max_batches: Option<usize>,
     /// Compute last-batch accuracy each epoch via the eval executable.
@@ -117,6 +121,7 @@ impl TrainConfig {
             cache_policy: CachePolicy::StaticDegree,
             adj_cache_bytes: 0,
             adj_cache_policy: CachePolicy::Clock,
+            sampling_wire: SamplingWire::default(),
             max_batches: None,
             eval_last_batch: false,
             schedule: ScheduleKind::Fixed,
@@ -129,8 +134,9 @@ impl TrainConfig {
     /// KiB-based) and `halo:<hops>` (complete h-hop halo, no byte cap).
     /// Any base takes `+`-separated options: `+fused` (the fused
     /// kernel), `+cache:<bytes>` (the dynamic remote-adjacency cache),
-    /// and `+tcp` (run the collectives over loopback TCP sockets
-    /// instead of the in-process channel mesh), e.g.
+    /// `+tcp` (run the collectives over loopback TCP sockets instead of
+    /// the in-process channel mesh), and `+wire:<scalar|bulk>` (the
+    /// sampler's miss-response encoding; default bulk), e.g.
     /// `budget:64k+cache:32k+fused+tcp`.
     pub fn mode(variant: &str, mode: &str, workers: usize) -> Result<Self> {
         let mut parts = mode.split('+');
@@ -146,12 +152,13 @@ impl TrainConfig {
         } else {
             anyhow::bail!(
                 "unknown mode {mode:?} (vanilla | hybrid | budget:<bytes> | halo:<hops>, \
-                 each optionally +fused, +cache:<bytes>, and/or +tcp)"
+                 each optionally +fused, +cache:<bytes>, +tcp, and/or +wire:<scalar|bulk>)"
             )
         };
         let mut kernel = KernelKind::Baseline;
         let mut adj_cache_bytes = 0u64;
         let mut transport = TransportConfig::Inproc;
+        let mut sampling_wire = SamplingWire::default();
         for opt in parts {
             if opt == "fused" {
                 kernel = KernelKind::Fused;
@@ -159,15 +166,19 @@ impl TrainConfig {
                 transport = TransportConfig::Tcp { base_port: 0 };
             } else if let Some(spec) = opt.strip_prefix("cache:") {
                 adj_cache_bytes = crate::config::parse_cache_bytes(spec)?;
+            } else if let Some(spec) = opt.strip_prefix("wire:") {
+                sampling_wire = crate::config::sampling_wire(spec)?;
             } else {
                 anyhow::bail!(
-                    "unknown mode option {opt:?} in {mode:?} (fused | cache:<bytes> | tcp)"
+                    "unknown mode option {opt:?} in {mode:?} \
+                     (fused | cache:<bytes> | tcp | wire:<scalar|bulk>)"
                 );
             }
         }
         let mut cfg = Self::new(variant, policy, kernel, workers);
         cfg.adj_cache_bytes = adj_cache_bytes;
         cfg.transport = transport;
+        cfg.sampling_wire = sampling_wire;
         Ok(cfg)
     }
 }
@@ -386,8 +397,16 @@ pub fn sample_rank(
                 first_seeds = seeds.to_vec();
             }
             let batch_key = key.fold(epoch as u64).fold(b as u64 + 1);
-            let mfgs = sample_mfgs_distributed(
-                comm, &shard, &mut view, seeds, fanouts, batch_key, &mut ws, cfg.kernel,
+            let mfgs = sample_mfgs_distributed_wire(
+                comm,
+                &shard,
+                &mut view,
+                seeds,
+                fanouts,
+                batch_key,
+                &mut ws,
+                cfg.kernel,
+                cfg.sampling_wire,
             )?;
             fetch_features(comm, &shard, &mfgs[0].src_nodes, None, &mut feat)?;
             // Deterministic digest: sequential f32 sum (fixed order) of
@@ -592,7 +611,7 @@ fn worker_loop(
 
             // ---- Phase 1: sampling (0..=2(L−1) measured rounds; the
             // adjacency cache makes later batches/epochs cheaper).
-            let mfgs = sample_mfgs_distributed(
+            let mfgs = sample_mfgs_distributed_wire(
                 comm,
                 shard,
                 &mut view,
@@ -601,6 +620,7 @@ fn worker_loop(
                 batch_key,
                 &mut ws,
                 cfg.kernel,
+                cfg.sampling_wire,
             )?;
             times.sample_s += sw.lap();
 
@@ -769,5 +789,22 @@ mod tests {
         assert_eq!(all.transport, TransportConfig::Tcp { base_port: 0 });
         assert_eq!(all.kernel, KernelKind::Fused);
         assert_eq!(all.adj_cache_bytes, 8 << 10);
+    }
+
+    #[test]
+    fn mode_wire_suffix_selects_the_sampling_encoding() {
+        // Bulk is the default; `wire:` overrides either way.
+        let plain = TrainConfig::mode("x", "vanilla", 4).unwrap();
+        assert_eq!(plain.sampling_wire, SamplingWire::Bulk);
+        let s = TrainConfig::mode("x", "vanilla+wire:scalar", 4).unwrap();
+        assert_eq!(s.sampling_wire, SamplingWire::Scalar);
+        let b = TrainConfig::mode("x", "budget:64k+wire:bulk", 4).unwrap();
+        assert_eq!(b.sampling_wire, SamplingWire::Bulk);
+        // Composes with the other options in any order.
+        let all = TrainConfig::mode("x", "budget:64k+wire:scalar+cache:8k+fused", 4).unwrap();
+        assert_eq!(all.sampling_wire, SamplingWire::Scalar);
+        assert_eq!(all.kernel, KernelKind::Fused);
+        assert_eq!(all.adj_cache_bytes, 8 << 10);
+        assert!(TrainConfig::mode("x", "vanilla+wire:columnar", 4).is_err());
     }
 }

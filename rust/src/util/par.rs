@@ -1,8 +1,10 @@
 //! Scoped-thread data-parallel helpers (offline substitute for rayon).
 //!
-//! The sampling kernels and generators need exactly three patterns:
-//! a parallel indexed map, a parallel mutable-chunk sweep, and a parallel
-//! sweep over (strided chunk, per-item slot, shared input) triples. All are
+//! The sampling kernels and generators need exactly five patterns:
+//! a parallel indexed map, a parallel mutable-chunk sweep, a parallel
+//! sweep over (strided chunk, per-item slot, shared input) triples, a
+//! parallel sweep over *ragged* (prefix-sum delimited) chunks, and a
+//! parallel scatter of segments into disjoint strided rows. All are
 //! implemented with `std::thread::scope` over contiguous ranges — no work
 //! stealing, which is fine because our loops are statically balanced (the
 //! per-seed work varies only within a fanout factor).
@@ -141,6 +143,120 @@ pub fn par_zip_chunks<A: Send, B: Send, S>(
     });
 }
 
+/// Parallel sweep over contiguous **variable-length** chunks of `data`:
+/// chunk `k` is `data[offsets[k]..offsets[k + 1]]`, so `offsets` is a
+/// prefix-sum array (monotone, `offsets[0] == 0`, last entry ==
+/// `data.len()`). Thread-local scratch is created once per worker via
+/// `init`, like [`par_zip_chunks`]. This is the bulk serve kernel's
+/// pattern: fill a response blob whose per-request segment lengths were
+/// prefix-summed up front.
+pub fn par_ragged_chunks<T: Send, S>(
+    data: &mut [T],
+    offsets: &[usize],
+    init: impl Fn() -> S + Sync,
+    f: impl Fn(&mut S, usize, &mut [T]) + Sync,
+) {
+    assert!(!offsets.is_empty() && offsets[0] == 0, "offsets must start at 0");
+    assert!(offsets.windows(2).all(|w| w[0] <= w[1]), "offsets must be monotone");
+    let n = offsets.len() - 1;
+    assert_eq!(offsets[n], data.len(), "offsets must cover data exactly");
+    let threads = threads_for(n);
+    if threads <= 1 {
+        let mut scratch = init();
+        for (k, w) in offsets.windows(2).enumerate() {
+            f(&mut scratch, k, &mut data[w[0]..w[1]]);
+        }
+        return;
+    }
+    // Contiguous ranges of chunks per thread, split at range-boundary
+    // offsets; within a thread, chunks are peeled off by split_at_mut.
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut consumed = 0usize;
+        let mut base = 0usize;
+        while base < n {
+            let take = per.min(n - base);
+            let end = offsets[base + take];
+            let (head, tail) = rest.split_at_mut(end - consumed);
+            rest = tail;
+            consumed = end;
+            let start = base;
+            base += take;
+            let f = &f;
+            let init = &init;
+            s.spawn(move || {
+                let mut scratch = init();
+                let mut head = head;
+                for k in start..start + take {
+                    let (chunk, t) = head.split_at_mut(offsets[k + 1] - offsets[k]);
+                    head = t;
+                    f(&mut scratch, k, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel scatter of variable-length source segments into **disjoint**
+/// strided rows: for every `(row, off, len)` triple,
+/// `dst[row * stride ..][.. len]` is overwritten with
+/// `src[off ..][.. len]`. Every triple is bounds-checked up front (and
+/// row uniqueness in debug builds), so the raw-pointer parallel phase
+/// cannot fault and the destination writes are provably disjoint. This
+/// is the bulk decode's pattern: scatter a response blob's per-request
+/// segments into the strided sample buffer.
+pub fn par_scatter_rows<T: Copy + Send + Sync>(
+    dst: &mut [T],
+    stride: usize,
+    src: &[T],
+    rows: &[(u32, u32, u32)],
+) {
+    assert!(stride > 0, "stride must be >= 1");
+    for &(row, off, len) in rows {
+        let (row, off, len) = (row as usize, off as usize, len as usize);
+        assert!(len <= stride, "segment longer than a destination row");
+        assert!(row * stride + len <= dst.len(), "destination row out of range");
+        assert!(off + len <= src.len(), "source segment out of range");
+    }
+    #[cfg(debug_assertions)]
+    {
+        let mut seen = std::collections::HashSet::with_capacity(rows.len());
+        for &(row, _, _) in rows {
+            debug_assert!(seen.insert(row), "duplicate destination row {row}");
+        }
+    }
+    let threads = threads_for(rows.len());
+    if threads <= 1 {
+        for &(row, off, len) in rows {
+            let (row, off, len) = (row as usize, off as usize, len as usize);
+            dst[row * stride..row * stride + len].copy_from_slice(&src[off..off + len]);
+        }
+        return;
+    }
+    let base = dst.as_mut_ptr() as usize;
+    let per = rows.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for part in rows.chunks(per) {
+            s.spawn(move || {
+                for &(row, off, len) in part {
+                    let (row, off, len) = (row as usize, off as usize, len as usize);
+                    // Safety: triples were bounds-checked above and rows
+                    // are unique, so every write range is in-bounds and
+                    // disjoint from every other thread's writes.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            src.as_ptr().add(off),
+                            (base as *mut T).add(row * stride),
+                            len,
+                        );
+                    }
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,5 +322,76 @@ mod tests {
         let mut a = vec![0u8; 10];
         let mut b = vec![0u8; 4];
         par_zip_chunks(&mut a, &mut b, 3, || (), |_, _, _, _| {});
+    }
+
+    #[test]
+    fn par_ragged_chunks_writes_every_segment() {
+        // Ragged lengths cycling 0..=6 over enough chunks to go parallel.
+        let n = 5000;
+        let lens: Vec<usize> = (0..n).map(|k| k % 7).collect();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        for &l in &lens {
+            offsets.push(offsets.last().copied().unwrap() + l);
+        }
+        let mut data = vec![0u64; *offsets.last().unwrap()];
+        par_ragged_chunks(&mut data, &offsets, Vec::<u8>::new, |scratch, k, seg| {
+            scratch.push(0); // exercise per-thread scratch
+            assert_eq!(seg.len(), k % 7);
+            for (j, x) in seg.iter_mut().enumerate() {
+                *x = (k * 10 + j) as u64;
+            }
+        });
+        for k in 0..n {
+            for j in 0..lens[k] {
+                assert_eq!(data[offsets[k] + j], (k * 10 + j) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn par_ragged_chunks_empty_and_serial() {
+        par_ragged_chunks::<u32, ()>(&mut [], &[0], || (), |_, _, _| panic!("no chunks"));
+        let mut data = vec![0u32; 5];
+        par_ragged_chunks(&mut data, &[0, 2, 2, 5], || (), |_, k, seg| {
+            seg.fill(k as u32 + 1);
+        });
+        assert_eq!(data, [1, 1, 3, 3, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn par_ragged_chunks_rejects_short_offsets() {
+        let mut data = vec![0u32; 4];
+        par_ragged_chunks(&mut data, &[0, 2], || (), |_, _, _| {});
+    }
+
+    #[test]
+    fn par_scatter_rows_fills_disjoint_rows() {
+        let stride = 5;
+        let n = 4000;
+        let src: Vec<u32> = (0..n as u32 * 3).collect();
+        // Row k gets the segment [3k, 3k+1, 3k+2) of length k % 4 from a
+        // shuffled row order, so destination order != triple order.
+        let rows: Vec<(u32, u32, u32)> =
+            (0..n).map(|k| (((k * 997) % n) as u32, (k * 3) as u32, (k % 4) as u32)).collect();
+        let mut dst = vec![u32::MAX; n * stride];
+        par_scatter_rows(&mut dst, stride, &src, &rows);
+        for &(row, off, len) in &rows {
+            let base = row as usize * stride;
+            for j in 0..len as usize {
+                assert_eq!(dst[base + j], src[off as usize + j]);
+            }
+            for j in len as usize..stride {
+                assert_eq!(dst[base + j], u32::MAX, "untouched tail overwritten");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn par_scatter_rows_rejects_out_of_range_row() {
+        let mut dst = vec![0u32; 6];
+        par_scatter_rows(&mut dst, 3, &[1, 2], &[(2, 0, 2)]);
     }
 }

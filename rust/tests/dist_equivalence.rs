@@ -13,18 +13,26 @@
 //! * The dynamic remote-adjacency cache preserves bit-equality at every
 //!   (budget, capacity, policy) point, and decays `SampleRequest`
 //!   traffic to zero across epochs once the miss set goes resident.
+//! * The bulk (columnar) and scalar (run-length) miss-response wires are
+//!   bit-identical in content at every (budget, cache) point — same
+//!   MFGs, rounds, and request bytes; bulk response bytes never exceed
+//!   scalar's — and malformed bulk frames fail the round as
+//!   `CommError::Malformed` instead of panicking or hanging.
 
 use std::sync::Arc;
 
 use fastsample::dist::{
-    fetch_features, run_workers_with, sample_mfgs_distributed, CachePolicy, CommStats, Counters,
-    FeatureCache, NetworkModel, RoundKind,
+    fetch_features, run_workers_with, sample_mfgs_distributed, sample_mfgs_distributed_wire,
+    CachePolicy, CommError, CommStats, Counters, FeatureCache, NetworkModel, RoundKind,
+    SamplingWire,
 };
 use fastsample::graph::generator::{make_dataset, DatasetParams};
 use fastsample::graph::{Dataset, NodeId};
-use fastsample::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
+use fastsample::partition::{
+    build_shards, partition_graph, PartitionConfig, ReplicationPolicy, WorkerShard,
+};
 use fastsample::sampling::rng::RngKey;
-use fastsample::sampling::{sample_mfgs, KernelKind, SamplerWorkspace};
+use fastsample::sampling::{sample_mfgs, KernelKind, Mfg, SamplerWorkspace};
 
 fn dataset() -> Dataset {
     make_dataset(&DatasetParams {
@@ -385,6 +393,240 @@ fn adjacency_cache_decays_request_traffic_across_epochs() {
         assert_eq!(b2, 0, "cache larger than the miss set should absorb everything");
         assert_eq!(s2.sampling_rounds(), 0, "warm epoch should vote every exchange away");
     }
+}
+
+/// Run 4 workers sampling 3 minibatches each over an explicit wire
+/// format, returning every rank's (seeds, per-batch MFGs) plus the
+/// fabric's counter snapshot.
+fn run_wire(
+    d: &Dataset,
+    book: &Arc<fastsample::partition::PartitionBook>,
+    shards: &[WorkerShard],
+    cache: (u64, CachePolicy),
+    wire: SamplingWire,
+    fanouts: &[usize],
+    key: RngKey,
+) -> (Vec<(Vec<NodeId>, Vec<Vec<Mfg>>)>, CommStats) {
+    let (cache_bytes, cache_policy) = cache;
+    let counters = Arc::new(Counters::default());
+    let results = run_workers_with(4, NetworkModel::free(), Arc::clone(&counters), {
+        move |rank, comm| {
+            let shard = &shards[rank];
+            let seeds = worker_seeds(d, book, rank, 16);
+            let mut ws = SamplerWorkspace::new();
+            let mut view = shard.topology.clone();
+            if cache_bytes > 0 {
+                view.enable_cache(cache_bytes, cache_policy);
+            }
+            let per_batch: Vec<Vec<Mfg>> = (0..3u64)
+                .map(|b| {
+                    sample_mfgs_distributed_wire(
+                        comm,
+                        shard,
+                        &mut view,
+                        &seeds,
+                        fanouts,
+                        key.fold(b),
+                        &mut ws,
+                        KernelKind::Fused,
+                        wire,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            (seeds, per_batch)
+        }
+    });
+    (results, counters.snapshot())
+}
+
+/// The bulk-kernel acceptance sweep: at every (replication budget, cache
+/// capacity, cache policy) point, the columnar bulk wire and the scalar
+/// run-length wire produce bit-identical MFGs (both equal to
+/// single-machine sampling), identical measured rounds and request
+/// bytes (the multi-batch runs pin identical cache-state evolution too),
+/// and bulk response bytes never exceed scalar's — exactly equal with
+/// the cache off, where the two encodings are the same size by
+/// construction.
+#[test]
+fn bulk_and_scalar_wires_are_bit_identical_across_the_spectrum() {
+    let d = dataset();
+    let fanouts = [4usize, 3];
+    let key = RngKey::new(2024);
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(4)));
+    for policy in [
+        ReplicationPolicy::vanilla(),
+        ReplicationPolicy::budgeted(4 * 1024),
+        ReplicationPolicy::halo(1),
+        ReplicationPolicy::hybrid(),
+    ] {
+        let shards = build_shards(&d, &book, &policy);
+        for cache in [
+            (0u64, CachePolicy::Clock),
+            (600, CachePolicy::Clock),
+            (600, CachePolicy::StaticDegree),
+            (u64::MAX >> 1, CachePolicy::Clock),
+        ] {
+            let (scalar, s_stats) =
+                run_wire(&d, &book, &shards, cache, SamplingWire::Scalar, &fanouts, key);
+            let (bulk, b_stats) =
+                run_wire(&d, &book, &shards, cache, SamplingWire::Bulk, &fanouts, key);
+            let tag = format!("{policy:?} cache {cache:?}");
+            assert_eq!(scalar, bulk, "{tag}: wires diverged");
+            let mut ws = SamplerWorkspace::new();
+            for (seeds, per_batch) in &bulk {
+                for (b, mfgs) in per_batch.iter().enumerate() {
+                    let expect = sample_mfgs(
+                        &d.graph,
+                        seeds,
+                        &fanouts,
+                        key.fold(b as u64),
+                        &mut ws,
+                        KernelKind::Fused,
+                    );
+                    assert_eq!(mfgs, &expect, "{tag} batch {b}: != single-machine");
+                }
+            }
+            // The wire choice must not change what the fabric *did* —
+            // only how response payloads were laid out.
+            assert_eq!(
+                s_stats.sampling_rounds(),
+                b_stats.sampling_rounds(),
+                "{tag}: rounds diverged"
+            );
+            assert_eq!(
+                s_stats.bytes_of(RoundKind::SampleRequest),
+                b_stats.bytes_of(RoundKind::SampleRequest),
+                "{tag}: request bytes diverged"
+            );
+            let sb = s_stats.bytes_of(RoundKind::SampleResponse);
+            let bb = b_stats.bytes_of(RoundKind::SampleResponse);
+            assert!(bb <= sb, "{tag}: bulk responses larger than scalar ({bb} > {sb})");
+            if cache.0 == 0 {
+                assert_eq!(bb, sb, "{tag}: uncached encodings must be the same size");
+            }
+        }
+    }
+}
+
+/// Malformed bulk responses must surface as `CommError::Malformed` —
+/// naming the offending peer — never as a panic or a hang. Rank 1 plays
+/// a byzantine owner: it mimics the level's round sequence by hand
+/// (vote, request exchange, response exchange) but answers rank 0's
+/// misses with a corrupted columnar frame.
+#[test]
+fn malformed_bulk_responses_fail_the_round_cleanly() {
+    type ReplyFn = fn(usize, usize) -> Vec<NodeId>; // (n_requests, fanout)
+    let cases: [(&str, ReplyFn, &str); 5] = [
+        ("truncated counts block", |_n, _f| Vec::new(), "truncated counts block"),
+        (
+            "blob shorter than prefix sum",
+            |n, f| vec![f as NodeId; n],
+            "ids blob shorter than its prefix sum",
+        ),
+        (
+            "cache flags on an uncached round",
+            |n, _f| {
+                let mut r = vec![0 as NodeId; n];
+                r[0] = 1 << 31; // ROW_FLAG with limit == 0
+                r
+            },
+            "on an uncached round",
+        ),
+        (
+            "count exceeds fanout",
+            |n, f| {
+                let mut r = vec![0 as NodeId; n];
+                r[0] = f as NodeId + 1;
+                r
+            },
+            "exceeds fanout",
+        ),
+        (
+            "trailing words",
+            |n, _f| vec![0 as NodeId; n + 1],
+            "ordering invariant violated",
+        ),
+    ];
+    for (name, make_reply, expect) in cases {
+        let err = run_byzantine_owner(SamplingWire::Bulk, make_reply);
+        match &err {
+            CommError::Malformed { src, detail } => {
+                assert_eq!(*src, 1, "{name}: wrong peer blamed");
+                assert!(
+                    detail.contains(expect),
+                    "{name}: detail {detail:?} missing {expect:?}"
+                );
+            }
+            other => panic!("{name}: expected Malformed, got {other:?}"),
+        }
+    }
+    // The scalar decode rejects truncation the same way.
+    let err = run_byzantine_owner(SamplingWire::Scalar, |_n, f| vec![f as NodeId]);
+    match &err {
+        CommError::Malformed { src, .. } => assert_eq!(*src, 1),
+        other => panic!("scalar truncation: expected Malformed, got {other:?}"),
+    }
+}
+
+/// 2-rank harness for the byzantine-owner tests: rank 0 runs the real
+/// sampler (uncached, one level, every seed owned by rank 1, so all
+/// misses route there); rank 1 replays the identical round sequence but
+/// substitutes `make_reply(n, fanout)` for its response payload. Returns
+/// rank 0's sampling error.
+fn run_byzantine_owner(
+    wire: SamplingWire,
+    make_reply: fn(usize, usize) -> Vec<NodeId>,
+) -> CommError {
+    const FANOUT: usize = 3;
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(2)));
+    let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+    let key = RngKey::new(99);
+    let shards_ref = &shards;
+    let d_ref = &d;
+    let book_ref = &book;
+    let mut results = run_workers_with(2, NetworkModel::free(), Arc::new(Counters::default()), {
+        move |rank, comm| {
+            if rank == 0 {
+                // Seeds owned by rank 1: every one is a level-0 miss.
+                let seeds = worker_seeds(d_ref, book_ref, 1, 6);
+                assert!(!seeds.is_empty(), "dataset has no rank-1 labeled nodes");
+                let mut ws = SamplerWorkspace::new();
+                let mut view = shards_ref[0].topology.clone();
+                sample_mfgs_distributed_wire(
+                    comm,
+                    &shards_ref[0],
+                    &mut view,
+                    &seeds,
+                    &[FANOUT],
+                    key,
+                    &mut ws,
+                    KernelKind::Fused,
+                    wire,
+                )
+                .map(|_| ())
+            } else {
+                // The byzantine owner: same vote + two data rounds, bad
+                // payload. (Its own calls must all succeed — the
+                // corruption is semantic, not a fabric failure.)
+                let all_zero = comm.all_zero_u64(0).unwrap();
+                assert!(!all_zero, "rank 0 must have misses");
+                let granted: Vec<Vec<NodeId>> = comm
+                    .exchange(RoundKind::SampleRequest, vec![Vec::new(), Vec::new()])
+                    .unwrap();
+                let n = granted[0].len();
+                assert!(n > 0, "rank 0's misses should all route to rank 1");
+                let reply = make_reply(n, FANOUT);
+                comm.exchange(RoundKind::SampleResponse, vec![reply, Vec::new()]).unwrap();
+                Ok(())
+            }
+        }
+    });
+    assert_eq!(results[1], Ok(()), "the byzantine rank itself must not fail");
+    results
+        .swap_remove(0)
+        .expect_err("rank 0 must reject the corrupted response")
 }
 
 #[test]

@@ -4,8 +4,8 @@
 //! randomized cases. Failures print a `check_one(seed, case, ..)` repro.
 
 use fastsample::dist::{
-    run_workers, sample_mfgs_distributed, CachePolicy, Frame, NetworkModel, RoundKind, TcpMesh,
-    Transport,
+    run_workers, sample_mfgs_distributed, sample_mfgs_distributed_wire, CachePolicy, Frame,
+    NetworkModel, RoundKind, SamplingWire, TcpMesh, Transport,
 };
 use fastsample::graph::generator::{erdos_renyi, make_dataset, planted_communities, rmat, DatasetParams};
 use fastsample::graph::{CooGraph, CscGraph, NodeId};
@@ -374,6 +374,86 @@ fn prop_adjacency_cached_sampling_equals_single_machine() {
                 );
             }
         }
+    });
+}
+
+#[test]
+fn prop_bulk_wire_equals_scalar_wire() {
+    // The wire-invariance property at random points: random replication
+    // budgets × random cache capacities (off included) × random fanouts,
+    // over several minibatches — the columnar bulk encoding and the
+    // run-length scalar encoding must yield bit-identical MFGs on every
+    // rank at every batch (cache-state evolution included, since later
+    // batches sample whatever earlier decodes inserted).
+    check(114, 16, |i, s| {
+        let d = random_dataset(i + 7, s);
+        let parts = gen::size(s, 2, 3);
+        let book = std::sync::Arc::new(partition_graph(
+            &d.graph,
+            &d.train_ids,
+            &PartitionConfig::new(parts),
+        ));
+        let policy = match s.next_below(3) {
+            0 => ReplicationPolicy::vanilla(),
+            1 => ReplicationPolicy::budgeted(s.next_u64() % 4096),
+            _ => ReplicationPolicy::halo(1),
+        };
+        let cache_bytes = match s.next_below(3) {
+            0 => 0,
+            1 => 128 + s.next_u64() % 512,
+            _ => u64::MAX >> 1,
+        };
+        let cache_policy = if s.next_below(2) == 0 {
+            CachePolicy::StaticDegree
+        } else {
+            CachePolicy::Clock
+        };
+        let shards = build_shards(&d, &book, &policy);
+        if (0..parts).any(|p| !d.train_ids.iter().any(|&v| book.part_of(v) == p)) {
+            return;
+        }
+        let fanouts = [gen::size(s, 1, 4), gen::size(s, 1, 4)];
+        let key = RngKey::new(s.next_u64());
+        let shards_ref = &shards;
+        let d_ref = &d;
+        let book_ref = &book;
+        let mut per_wire = Vec::new();
+        for wire in [SamplingWire::Scalar, SamplingWire::Bulk] {
+            per_wire.push(run_workers(parts, NetworkModel::free(), move |rank, comm| {
+                let seeds: Vec<NodeId> = d_ref
+                    .train_ids
+                    .iter()
+                    .copied()
+                    .filter(|&v| book_ref.part_of(v) == rank)
+                    .take(8)
+                    .collect();
+                let mut ws = SamplerWorkspace::new();
+                let mut view = shards_ref[rank].topology.clone();
+                if cache_bytes > 0 {
+                    view.enable_cache(cache_bytes, cache_policy);
+                }
+                (0..3u64)
+                    .map(|b| {
+                        sample_mfgs_distributed_wire(
+                            comm,
+                            &shards_ref[rank],
+                            &mut view,
+                            &seeds,
+                            &fanouts,
+                            key.fold(b),
+                            &mut ws,
+                            KernelKind::Fused,
+                            wire,
+                        )
+                        .unwrap()
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        assert_eq!(
+            per_wire[0], per_wire[1],
+            "{policy:?} cache {cache_bytes}B {cache_policy:?}: wires diverged"
+        );
     });
 }
 

@@ -21,9 +21,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use fastsample::dist::{
-    fetch_features, run_workers_on, run_workers_over, sample_mfgs_distributed, CachePolicy,
-    CommError, CommStats, Counters, Frame, NetworkModel, RoundKind, TcpMesh, Transport,
-    TransportConfig,
+    fetch_features, run_workers_on, run_workers_over, sample_mfgs_distributed,
+    sample_mfgs_distributed_wire, CachePolicy, CommError, CommStats, Counters, Frame,
+    NetworkModel, RoundKind, SamplingWire, TcpMesh, Transport, TransportConfig,
 };
 use fastsample::graph::generator::{make_dataset, DatasetParams};
 use fastsample::graph::{Dataset, NodeId};
@@ -76,6 +76,7 @@ fn run_arm(
     policy: &ReplicationPolicy,
     cache_bytes: u64,
     config: &TransportConfig,
+    wire: SamplingWire,
 ) -> (Vec<(Vec<NodeId>, Vec<Vec<Mfg>>, Vec<f32>)>, CommStats) {
     let shards = build_shards(d, book, policy);
     let counters = Arc::new(Counters::default());
@@ -99,7 +100,7 @@ fn run_arm(
             let mut feat = Vec::new();
             let per_batch: Vec<Vec<Mfg>> = (0..BATCHES)
                 .map(|b| {
-                    let mfgs = sample_mfgs_distributed(
+                    let mfgs = sample_mfgs_distributed_wire(
                         comm,
                         shard,
                         &mut view,
@@ -108,6 +109,7 @@ fn run_arm(
                         key.fold(b),
                         &mut ws,
                         KernelKind::Fused,
+                        wire,
                     )
                     .unwrap();
                     fetch_features(comm, shard, &mfgs[0].src_nodes, None, &mut feat).unwrap();
@@ -132,10 +134,22 @@ fn transports_are_bit_identical_and_round_identical_on_every_arm() {
     let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(WORKERS)));
     let key = RngKey::new(2024);
     for (label, policy, cache_bytes) in arms() {
-        let (inproc, s_inproc) =
-            run_arm(&d, &book, &policy, cache_bytes, &TransportConfig::Inproc);
-        let (tcp, s_tcp) =
-            run_arm(&d, &book, &policy, cache_bytes, &TransportConfig::Tcp { base_port: 0 });
+        let (inproc, s_inproc) = run_arm(
+            &d,
+            &book,
+            &policy,
+            cache_bytes,
+            &TransportConfig::Inproc,
+            SamplingWire::default(),
+        );
+        let (tcp, s_tcp) = run_arm(
+            &d,
+            &book,
+            &policy,
+            cache_bytes,
+            &TransportConfig::Tcp { base_port: 0 },
+            SamplingWire::default(),
+        );
 
         assert_eq!(inproc, tcp, "{label}: per-rank results diverged across transports");
         assert_eq!(
@@ -167,6 +181,53 @@ fn transports_are_bit_identical_and_round_identical_on_every_arm() {
         } else if label == "vanilla" {
             assert_eq!(s_tcp.sampling_rounds(), 2 * BATCHES, "{label}");
         }
+    }
+}
+
+/// The sampling-wire grid over both transports: scalar and bulk produce
+/// bit-identical per-rank results on the channel mesh AND over loopback
+/// TCP; counters for a given wire are transport-invariant; and bulk
+/// response bytes never exceed scalar's on either transport (this arm
+/// runs cache-on, where bulk saves a word per `NO_ROW`/elided entry —
+/// the exact per-entry savings are pinned by the elision unit test in
+/// `dist::sampling`).
+#[test]
+fn wire_formats_match_across_transports() {
+    let d = dataset();
+    let book = Arc::new(partition_graph(&d.graph, &d.train_ids, &PartitionConfig::new(WORKERS)));
+    let policy = ReplicationPolicy::vanilla();
+    let cache_bytes = 32 << 10;
+    let mut results = Vec::new();
+    let mut stats = Vec::new();
+    for config in [TransportConfig::Inproc, TransportConfig::Tcp { base_port: 0 }] {
+        for wire in [SamplingWire::Scalar, SamplingWire::Bulk] {
+            let (r, s) = run_arm(&d, &book, &policy, cache_bytes, &config, wire);
+            results.push(r);
+            stats.push((config.clone(), wire, s));
+        }
+    }
+    // All four (transport, wire) cells are bit-identical in content.
+    for (cell, r) in results.iter().enumerate().skip(1) {
+        assert_eq!(&results[0], r, "cell {cell} diverged from inproc+scalar");
+    }
+    // A wire's counters are transport-invariant (inproc cells 0/1 pair
+    // with tcp cells 2/3)...
+    assert_eq!(stats[0].2, stats[2].2, "scalar counters diverged across transports");
+    assert_eq!(stats[1].2, stats[3].2, "bulk counters diverged across transports");
+    // ...and within each transport, requests match while bulk responses
+    // never exceed scalar's (each `NO_ROW`/elided entry saves a word).
+    for pair in stats.chunks(2) {
+        let (scalar, bulk) = (&pair[0].2, &pair[1].2);
+        assert_eq!(
+            scalar.bytes_of(RoundKind::SampleRequest),
+            bulk.bytes_of(RoundKind::SampleRequest),
+            "request bytes must be wire-invariant"
+        );
+        assert!(
+            bulk.bytes_of(RoundKind::SampleResponse)
+                <= scalar.bytes_of(RoundKind::SampleResponse),
+            "bulk responses must never be larger than scalar"
+        );
     }
 }
 
