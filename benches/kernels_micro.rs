@@ -13,18 +13,20 @@
 //! regeneration path stay exercised on every push.
 
 use std::collections::BTreeMap;
+use std::sync::mpsc;
 use std::time::Duration;
 
 use fastsample::dist::{
-    run_workers, sample_mfgs_distributed_wire, CachePolicy, NetworkModel, RoundKind,
-    SamplingWire,
+    fetch_features, run_workers, sample_mfgs_distributed_wire, CachePolicy, NetworkModel, Plane,
+    RoundKind, SamplingWire,
 };
 use fastsample::graph::generator::{make_dataset, planted_communities, rmat, DatasetParams};
 use fastsample::partition::{build_shards, partition_graph, PartitionConfig, ReplicationPolicy};
 use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{
-    sample_level_baseline, sample_level_fused, KernelKind, SamplerWorkspace,
+    sample_level_baseline, sample_level_fused, KernelKind, MinibatchSchedule, SamplerWorkspace,
 };
+use fastsample::train::prefetch::{sampler_epochs, Produced, ProducerPlan};
 use fastsample::util::bench::{header, Bencher, Stats};
 use fastsample::util::json::Json;
 
@@ -238,6 +240,128 @@ fn main() {
                 println!("{}", s.row());
                 all.push(s);
             }
+        }
+    }
+
+    // ---- Serial vs pipelined epoch (the `--pipeline` overlap): per
+    // batch, distributed sampling + feature fetch plus a deterministic
+    // f32 "train step" over the fetched rows. The pipelined arm runs the
+    // sampler on its own thread over the Sampling plane (the production
+    // `sampler_epochs` producer, depth-1 channel) so batch t+1's
+    // sampling + fetch overlaps batch t's compute; the serial arm runs
+    // the identical phase sequence inline. Bit-equality of the two modes
+    // is pinned by the equivalence suites — these rows pin the
+    // wall-clock direction (pipelined ≤ serial).
+    {
+        let n = if quick { 2_048 } else { 16_384 };
+        let batch = if quick { 16 } else { 64 };
+        let batches = 4usize;
+        let d = make_dataset(&DatasetParams {
+            name: "bench-pipe".into(),
+            num_nodes: n,
+            avg_degree: 10,
+            feat_dim: 4,
+            num_classes: 4,
+            labeled_frac: 0.2,
+            p_intra: 0.7,
+            noise: 0.2,
+            seed: 29,
+        });
+        let book = std::sync::Arc::new(partition_graph(
+            &d.graph,
+            &d.train_ids,
+            &PartitionConfig::new(4),
+        ));
+        let shards = build_shards(&d, &book, &ReplicationPolicy::vanilla());
+        let fanouts = vec![10usize, 5];
+        let key = RngKey::new(31);
+
+        /// Deterministic consumer-side compute: a dense mul-add sweep
+        /// over the fetched feature rows, sized to take about as long as
+        /// one batch's sampling + fetch so the overlap is visible.
+        fn train_step(feats: &[f32]) -> f32 {
+            let mut acc = 0.0f32;
+            for _ in 0..64 {
+                for &v in feats {
+                    acc = acc.mul_add(0.999_9, v);
+                }
+            }
+            acc
+        }
+
+        for pipelined in [false, true] {
+            let shards_ref = &shards;
+            let fan = &fanouts;
+            let tag = if pipelined { "pipelined" } else { "serial" };
+            let s = bench.run(&format!("pipeline/epoch {}k x4 {tag}", n / 1024), || {
+                run_workers(4, NetworkModel::free(), move |rank, comm| {
+                    let shard = &shards_ref[rank];
+                    let mut view = shard.topology.clone();
+                    let mut ws = SamplerWorkspace::new();
+                    let mut scomm = comm.plane(Plane::Sampling);
+                    let mut acc = 0.0f32;
+                    if pipelined {
+                        let plan = ProducerPlan {
+                            key,
+                            epochs: 1,
+                            batches,
+                            batch,
+                            kernel: KernelKind::Fused,
+                            wire: SamplingWire::Scalar,
+                        };
+                        let (items_tx, items_rx) = mpsc::sync_channel::<Produced>(1);
+                        let (go_tx, go_rx) = mpsc::channel::<Vec<usize>>();
+                        std::thread::scope(|scope| {
+                            let scomm = &mut scomm;
+                            let view = &mut view;
+                            let ws = &mut ws;
+                            let plan = &plan;
+                            scope.spawn(move || {
+                                sampler_epochs(
+                                    scomm, shard, view, ws, None, plan, &items_tx, &go_rx,
+                                )
+                                .unwrap();
+                            });
+                            go_tx.send(fan.clone()).unwrap();
+                            for _ in 0..batches {
+                                let Ok(Produced::Batch { feats, .. }) = items_rx.recv() else {
+                                    panic!("prefetcher stopped early");
+                                };
+                                acc += train_step(&feats);
+                            }
+                            match items_rx.recv() {
+                                Ok(Produced::EpochEnd { .. }) => {}
+                                other => panic!("expected epoch end, got {other:?}"),
+                            }
+                        });
+                    } else {
+                        let schedule =
+                            MinibatchSchedule::new(&shard.train_local, batch, key.fold(0));
+                        for b in 0..batches {
+                            let seeds = schedule.batch(b).to_vec();
+                            let mfgs = sample_mfgs_distributed_wire(
+                                &mut scomm,
+                                shard,
+                                &mut view,
+                                &seeds,
+                                fan,
+                                key.fold(0).fold(b as u64 + 1),
+                                &mut ws,
+                                KernelKind::Fused,
+                                SamplingWire::Scalar,
+                            )
+                            .unwrap();
+                            let mut feats = Vec::new();
+                            fetch_features(&mut scomm, shard, &mfgs[0].src_nodes, None, &mut feats)
+                                .unwrap();
+                            acc += train_step(&feats);
+                        }
+                    }
+                    acc
+                })
+            });
+            println!("{}", s.row());
+            all.push(s);
         }
     }
 

@@ -13,6 +13,7 @@
 //! | R3   | collective results propagate (`Result` fns, no discards)     |
 //! | R4   | `RoundKind` coverage: COUNT / ALL / match arms, cross-file   |
 //! | R5   | no transport send/flush while a `MutexGuard` is live         |
+//! | R6   | sampler-thread code (`prefetch` paths) never switches planes |
 //!
 //! Run it as `cargo run -p spmd-lint -- rust/src` (add `--json` for machine
 //! output), or through the tier-1 test `spmd_lint_clean` which pins the tree

@@ -12,7 +12,8 @@ const USAGE: &str = "usage: spmd-lint [--json] <path>...\n\
     \n\
     Lints .rs files (recursively for directories) against the SPMD fabric\n\
     contract: R1 rank-divergent collectives, R2 panics in dist/, R3 dropped\n\
-    fabric errors, R4 RoundKind coverage, R5 sends under a held lock.\n\
+    fabric errors, R4 RoundKind coverage, R5 sends under a held lock, R6\n\
+    plane switches in sampler-thread (prefetch) code.\n\
     \n\
     exit status: 0 clean, 1 findings, 2 usage/io error";
 

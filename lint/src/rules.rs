@@ -1,6 +1,6 @@
 //! The SPMD rule engine: a single pass over the token stream of each file,
 //! tracking a block stack (fn / closure / match-body / other), statement
-//! shape, and live Mutex guards. Five rules:
+//! shape, and live Mutex guards. Six rules:
 //!
 //! - **R1** — no collective call under rank-conditional control flow.
 //! - **R2** — no `unwrap`/`expect`/panic-family macros in `dist/` library
@@ -11,6 +11,11 @@
 //!   count, every variant appears in the `ALL` array and in at least one
 //!   match arm, and no wildcard arm defeats exhaustiveness.
 //! - **R5** — no `Transport` send/flush while a `MutexGuard` is live.
+//! - **R6** — sampler-thread code (paths containing `prefetch`) stays on
+//!   the one plane handle it was given: no `.plane(...)` re-derivation,
+//!   no `Plane::Gradient` reference. A cross-plane collective from the
+//!   sampler thread would interleave with the trainer's in-flight round
+//!   on the same seq stream and desynchronize the world.
 //!
 //! The analysis is lexical by design — no type information, no name
 //! resolution. Where that approximates (any `Result` return satisfies R3,
@@ -20,10 +25,10 @@
 use crate::lexer::{lex, Kind, Token};
 use std::collections::{BTreeMap, BTreeSet};
 
-pub const RULES: [&str; 5] = ["R1", "R2", "R3", "R4", "R5"];
+pub const RULES: [&str; 6] = ["R1", "R2", "R3", "R4", "R5", "R6"];
 pub const ALLOW_RULE: &str = "allow";
 
-const COLLECTIVE_EXACT: [&str; 7] = [
+const COLLECTIVE_EXACT: [&str; 8] = [
     "barrier",
     "fenced_snapshot",
     "all_zero_u64",
@@ -31,6 +36,7 @@ const COLLECTIVE_EXACT: [&str; 7] = [
     "sample_mfgs_distributed_wire",
     "fetch_features",
     "prefill_cache",
+    "sampler_epochs",
 ];
 const COLLECTIVE_PREFIX: [&str; 2] = ["all_reduce_", "exchange"];
 const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
@@ -59,6 +65,12 @@ fn is_collective(name: &str) -> bool {
 
 fn is_dist_path(path: &str) -> bool {
     path.replace('\\', "/").split('/').any(|c| c == "dist")
+}
+
+/// Sampler-thread code for R6: any path whose file or directory name
+/// mentions `prefetch` (the module the sampler thread runs).
+fn is_prefetch_path(path: &str) -> bool {
+    path.replace('\\', "/").split('/').any(|c| c.contains("prefetch"))
 }
 
 // --- allow directives ------------------------------------------------------
@@ -326,6 +338,7 @@ fn finalize_arm_pattern(blk: &mut Block, r4: &mut R4State) {
 fn analyze_file(path: &str, src: &str, r4: &mut R4State, findings: &mut Vec<Finding>) {
     let toks = lex(src);
     let in_dist = is_dist_path(path);
+    let in_prefetch = is_prefetch_path(path);
     let n = toks.len();
 
     let mut stack: Vec<Block> = vec![Block::new(BlockKind::Other, false, false)];
@@ -819,6 +832,35 @@ fn analyze_file(path: &str, src: &str, r4: &mut R4State, findings: &mut Vec<Find
                             "`{text}!` in dist/ library code — return Err(CommError) so \
                              peers see PeerLost, not a hang"
                         ),
+                    );
+                }
+            }
+
+            // R6: sampler-thread code must not switch planes
+            if in_prefetch {
+                if text == "plane" && prev == "." && nxt == "(" {
+                    push(
+                        findings,
+                        "R6",
+                        path,
+                        line,
+                        "`.plane()` in sampler-thread code — the sampler owns exactly \
+                         the one plane handle it was given; deriving another would let \
+                         its rounds interleave with the trainer's"
+                            .to_string(),
+                    );
+                } else if text == "Plane"
+                    && nxt == "::"
+                    && t_text(&toks, i + 2) == "Gradient"
+                {
+                    push(
+                        findings,
+                        "R6",
+                        path,
+                        line,
+                        "`Plane::Gradient` in sampler-thread code — the gradient plane \
+                         belongs to the trainer thread"
+                            .to_string(),
                     );
                 }
             }

@@ -1,0 +1,10 @@
+//! R6 clean fixture: the sampler uses only the handle it was given.
+
+pub fn sampler_epochs(comm: &mut Comm, items: &Sender<u32>) -> Result<(), CommError> {
+    let mark = comm.fenced_snapshot()?;
+    comm.barrier()?;
+    if items.send(mark).is_err() {
+        return Ok(());
+    }
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! R6 fixture: sampler-thread code reaching for another plane.
+
+fn sampler_epochs_bad(comm: &mut Comm) -> Result<(), CommError> {
+    let mut other = comm.plane(Plane::Sampling);
+    other.barrier()?;
+    let g = Plane::Gradient;
+    let _ = g;
+    Ok(())
+}

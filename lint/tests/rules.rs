@@ -88,8 +88,30 @@ fn r5_fires_on_sends_under_a_live_guard() {
 }
 
 #[test]
+fn r6_fires_on_plane_switches_in_prefetch_code() {
+    let f = lint_one("prefetch/r6_planes.rs");
+    assert_eq!(keys(&f), [("R6", 4), ("R6", 6)], "{f:#?}");
+    assert!(f[0].message.contains(".plane()"), "{f:#?}");
+    assert!(f[1].message.contains("Plane::Gradient"), "{f:#?}");
+}
+
+#[test]
+fn r6_is_scoped_to_prefetch_paths() {
+    // The same source under a trainer path may switch planes freely.
+    let (_, src) = fixture("prefetch/r6_planes.rs");
+    let f = lint_sources(&[("train/trainer.rs".to_string(), src)]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
 fn clean_code_produces_no_findings() {
     let f = lint_one("clean.rs");
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn clean_prefetch_code_produces_no_findings() {
+    let f = lint_one("prefetch/clean.rs");
     assert!(f.is_empty(), "{f:#?}");
 }
 
@@ -121,11 +143,13 @@ fn all_fixtures_lint_as_one_set_without_cross_talk() {
         "dist/allowed.rs",
         "dist/r2_panics.rs",
         "dist/r5_locks.rs",
+        "prefetch/clean.rs",
+        "prefetch/r6_planes.rs",
         "r1_divergence.rs",
         "r3_discard.rs",
         "r4_rounds.rs",
     ];
     let files: Vec<(String, String)> = rels.iter().map(|&r| fixture(r)).collect();
     let f = lint_sources(&files);
-    assert_eq!(f.len(), 2 + 3 + 4 + 5 + 2 + 4, "{f:#?}");
+    assert_eq!(f.len(), 2 + 3 + 4 + 5 + 2 + 2 + 4, "{f:#?}");
 }

@@ -75,6 +75,18 @@ pub fn sampling_wire(name: &str) -> Result<crate::dist::SamplingWire> {
     }
 }
 
+/// Resolve a pipeline switch (`--pipeline on|off`, the `+pipe` mode
+/// suffix's flag twin): `on` overlaps minibatch t+1's sampling + feature
+/// fetch with minibatch t's compute + grad sync; `off` (default) runs
+/// the phases serially. Results are bit-identical either way.
+pub fn pipeline(spec: &str) -> Result<bool> {
+    match spec {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => anyhow::bail!("unknown pipeline setting {other:?} (on | off)"),
+    }
+}
+
 /// Resolve a transport spec: `inproc` (the in-process channel mesh,
 /// default), `tcp` (per-peer loopback sockets, ephemeral ports), or
 /// `tcp:<base_port>` (rank r binds `base_port + r`).
@@ -138,6 +150,14 @@ mod tests {
         assert_eq!(sampling_wire("scalar").unwrap(), SamplingWire::Scalar);
         assert_eq!(SamplingWire::default(), SamplingWire::Bulk);
         assert!(sampling_wire("columnar").is_err());
+    }
+
+    #[test]
+    fn pipeline_settings_parse() {
+        assert!(pipeline("on").unwrap());
+        assert!(!pipeline("off").unwrap());
+        assert!(pipeline("yes").is_err());
+        assert!(pipeline("").is_err());
     }
 
     #[test]

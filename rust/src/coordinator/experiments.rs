@@ -688,7 +688,9 @@ impl Default for Fig6Opts {
             workers: vec![4, 8],
             modes: vec![
                 "vanilla".into(),
+                "budget:64k".into(),
                 "budget:256k".into(),
+                "budget:1m".into(),
                 "hybrid".into(),
                 "hybrid+fused".into(),
             ],
@@ -702,8 +704,9 @@ impl Default for Fig6Opts {
 
 /// Paper Fig 6: distributed epoch time per mode × worker counts ×
 /// datasets, with phase breakdown. Modes default to {vanilla, a
-/// mid-spectrum replication budget, hybrid, hybrid+fused}; any
-/// `budget:<bytes>` / `halo:<hops>` mode string works.
+/// three-point replication-budget sweep (64k / 256k / 1m), hybrid,
+/// hybrid+fused}; any `budget:<bytes>` / `halo:<hops>` mode string
+/// works.
 pub fn fig6(opts: &Fig6Opts) -> Result<String> {
     let artifacts = config::artifacts_dir();
     let mut out = String::new();

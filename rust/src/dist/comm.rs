@@ -27,10 +27,25 @@
 //! types. A peer that exits mid-collective surfaces as
 //! [`CommError::PeerLost`] on every rank still talking to it — no hang,
 //! no panic.
+//!
+//! The fabric is split into independent **communication planes**
+//! ([`Plane`]): every frame is stamped with a plane byte, each plane has
+//! its own sequence stream, per-peer inboxes, and per-plane byte/round
+//! accounting, and [`Comm::plane`] mints a handle scoped to one plane.
+//! Two planes can have rounds in flight concurrently — the pipelined
+//! trainer runs sampling collectives for minibatch *t+1* on
+//! [`Plane::Sampling`] from a sampler thread while the trainer drives
+//! gradient collectives for minibatch *t* on [`Plane::Gradient`] — and
+//! the per-source demultiplexer guarantees the two streams can never
+//! interleave. A [`CommError`] on either plane poisons the shared
+//! endpoint: the transport is shut down, every blocked receive on every
+//! plane unblocks promptly, and all subsequent collectives on any handle
+//! return the root-cause error instead of hanging.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use super::net::NetworkModel;
 
@@ -84,6 +99,53 @@ impl RoundKind {
             RoundKind::FeatureRequest => "feature-request",
             RoundKind::FeatureResponse => "feature-response",
             RoundKind::GradSync => "grad-sync",
+        }
+    }
+}
+
+/// Independent communication planes multiplexed over one transport.
+///
+/// A plane is a logical fabric: its own per-rank sequence stream, its own
+/// per-peer inboxes (see the endpoint demultiplexer), and its own
+/// [`CommStats`] slice — so a round in flight on one plane can never
+/// interleave with, desynchronize, or consume frames belonging to the
+/// other. The `u8` discriminant is stamped into every frame header
+/// (offset 6) and is part of the wire format (FSMP protocol version 2).
+///
+/// Discipline: at most **one thread drives a given plane** at a time.
+/// The pipelined trainer gives the sampler thread the `Sampling` handle
+/// and keeps `Gradient` (the default) for itself; serial mode uses both
+/// handles from one thread, which is always safe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Plane {
+    /// Trainer-side traffic: gradient all-reduce plus the control
+    /// collectives (barriers, fences, votes on batch counts / tasks).
+    /// The plane of every freshly constructed [`Comm`].
+    Gradient = 0,
+    /// Sampler-side traffic: sampling miss requests/responses and the
+    /// feature exchange — everything the MFG prefetcher issues.
+    Sampling = 1,
+}
+
+/// Number of communication planes (the demux/seq/stat array length).
+pub const PLANE_COUNT: usize = 2;
+
+impl Plane {
+    /// Every plane, in discriminant order.
+    pub const ALL: [Plane; PLANE_COUNT] = [Plane::Gradient, Plane::Sampling];
+
+    /// The stable discriminant, for indexing per-plane arrays.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Human-readable plane name (logs/reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            Plane::Gradient => "gradient",
+            Plane::Sampling => "sampling",
         }
     }
 }
@@ -273,25 +335,32 @@ pub(crate) fn io_to_comm(peer: usize, e: std::io::Error) -> CommError {
 ///      0     4  payload length in bytes (u32 LE)
 ///      4     1  kind     — RoundKind index, or a control tag (200+)
 ///      5     1  elem     — element width in bytes (1, 4, or 8)
-///      6     2  src      — sender rank (u16 LE)
-///      8     4  seq      — sender's collective sequence number (u32 LE)
-///     12     n  payload  — n bytes, a whole number of `elem`-wide cells
+///      6     1  plane    — communication plane (Plane discriminant)
+///      7     2  src      — sender rank (u16 LE)
+///      9     4  seq      — sender's collective sequence number on
+///                          `plane` (u32 LE — each plane counts its own)
+///     13     n  payload  — n bytes, a whole number of `elem`-wide cells
 /// ```
 ///
 /// `kind`/`elem`/`seq` exist to catch lockstep bugs: a receiver knows
 /// which collective it is in, so any mismatch is a diagnosable
 /// [`CommError::SequenceMismatch`] instead of a silently mis-typed round.
+/// `plane` routes the frame into the right per-plane inbox at the
+/// receiving endpoint; the codec itself round-trips any plane byte, and
+/// an out-of-range plane is rejected as [`CommError::Malformed`] at the
+/// demultiplexer (not here), so the framing layer stays policy-free.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Frame {
     pub kind: u8,
     pub elem: u8,
+    pub plane: u8,
     pub src: u16,
     pub seq: u32,
     pub payload: Vec<u8>,
 }
 
 /// Frame header bytes on the wire (length prefix included).
-pub const FRAME_HEADER: usize = 12;
+pub const FRAME_HEADER: usize = 13;
 
 /// Upper bound on a single frame's payload (sanity guard against a
 /// corrupt length prefix allocating gigabytes).
@@ -306,19 +375,22 @@ pub struct FrameHeader {
     pub kind: u8,
     /// Element width in bytes of the typed payload.
     pub elem: u8,
+    /// Communication plane ([`Plane`] discriminant).
+    pub plane: u8,
     /// Sender rank.
     pub src: u16,
-    /// Sender's collective sequence number.
+    /// Sender's collective sequence number on this plane.
     pub seq: u32,
 }
 
 impl FrameHeader {
-    /// Append the 12-byte wire header for a `payload_len`-byte payload —
+    /// Append the 13-byte wire header for a `payload_len`-byte payload —
     /// the single source of truth for the header layout (see [`Frame`]).
     pub fn encode_to(&self, payload_len: usize, out: &mut Vec<u8>) {
         out.extend_from_slice(&(payload_len as u32).to_le_bytes());
         out.push(self.kind);
         out.push(self.elem);
+        out.push(self.plane);
         out.extend_from_slice(&self.src.to_le_bytes());
         out.extend_from_slice(&self.seq.to_le_bytes());
     }
@@ -327,7 +399,13 @@ impl FrameHeader {
 impl Frame {
     /// This frame's metadata as a [`FrameHeader`].
     pub fn header(&self) -> FrameHeader {
-        FrameHeader { kind: self.kind, elem: self.elem, src: self.src, seq: self.seq }
+        FrameHeader {
+            kind: self.kind,
+            elem: self.elem,
+            plane: self.plane,
+            src: self.src,
+            seq: self.seq,
+        }
     }
 
     /// Append the wire form (header + payload) to `out`.
@@ -355,8 +433,9 @@ impl Frame {
         Ok(Frame {
             kind: header[4],
             elem: header[5],
-            src: u16::from_le_bytes([header[6], header[7]]),
-            seq: u32::from_le_bytes([header[8], header[9], header[10], header[11]]),
+            plane: header[6],
+            src: u16::from_le_bytes([header[7], header[8]]),
+            seq: u32::from_le_bytes([header[9], header[10], header[11], header[12]]),
             payload,
         })
     }
@@ -492,14 +571,20 @@ pub fn decode_payload<T: Wire>(bytes: &[u8]) -> Result<Vec<T>, String> {
 ///   peer without further transport calls, and any already-failed link
 ///   must be reported here at the latest;
 /// * a peer that goes away surfaces as [`CommError::PeerLost`] from the
-///   next `send`, `flush`, or `recv` touching it — never a hang.
-pub trait Transport: Send {
+///   next `send`, `flush`, or `recv` touching it — never a hang;
+/// * methods take `&self` and the endpoint is `Sync`: two plane handles
+///   (sampler + trainer threads) send concurrently and `shutdown` can be
+///   issued while another thread is blocked in `recv` (it must unblock
+///   that receive promptly — the cross-plane cancellation path). The
+///   per-source receive serialization is the *caller's* job (the
+///   endpoint demultiplexer admits one reader per source at a time).
+pub trait Transport: Send + Sync {
     /// This endpoint's rank.
     fn rank(&self) -> usize;
     /// Number of ranks on the fabric.
     fn world(&self) -> usize;
     /// Queue `frame` for `dst` (`dst != rank`).
-    fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError>;
+    fn send(&self, dst: usize, frame: Frame) -> Result<(), CommError>;
     /// Queue a *typed* payload for `dst`, letting the transport defer the
     /// wire encoding. The default encodes immediately and forwards to
     /// [`Transport::send`] — semantically and byte-identically the same;
@@ -508,7 +593,7 @@ pub trait Transport: Send {
     /// the collective thread's progress toward its receive phase) on
     /// large rounds.
     fn send_typed(
-        &mut self,
+        &self,
         dst: usize,
         header: FrameHeader,
         data: Box<dyn WirePayload>,
@@ -520,6 +605,7 @@ pub trait Transport: Send {
             Frame {
                 kind: header.kind,
                 elem: header.elem,
+                plane: header.plane,
                 src: header.src,
                 seq: header.seq,
                 payload,
@@ -527,15 +613,25 @@ pub trait Transport: Send {
         )
     }
     /// Push all buffered frames toward their peers (round boundary).
-    fn flush(&mut self) -> Result<(), CommError>;
+    fn flush(&self) -> Result<(), CommError>;
     /// Next frame from `src` (`src != rank`), blocking until it arrives
-    /// or the link dies.
-    fn recv(&mut self, src: usize) -> Result<Frame, CommError>;
+    /// or the link dies. At most one thread calls `recv` for a given
+    /// `src` at a time (enforced by the endpoint demultiplexer).
+    fn recv(&self, src: usize) -> Result<Frame, CommError>;
     /// Implementation name, for logs/reports (`"inproc"`, `"tcp"`).
     fn name(&self) -> &'static str;
-    /// Best-effort teardown (close sockets, drop channels). Errors are
-    /// swallowed — shutdown is called on paths that are already failing.
-    fn shutdown(&mut self) {}
+    /// Best-effort teardown (close sockets, drop channels). Idempotent;
+    /// errors are swallowed — shutdown runs on paths that are already
+    /// failing. Must unblock any peer (and, where the medium allows it,
+    /// any local thread) blocked on this endpoint's links.
+    fn shutdown(&self) {}
+}
+
+/// Lock a mutex, recovering the inner data if a holder panicked: fabric
+/// state must degrade into typed `CommError`s on the surviving threads,
+/// never cascade a second panic.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// The in-process default: a fully-connected mesh of `mpsc` channels
@@ -545,10 +641,14 @@ pub trait Transport: Send {
 pub struct ChannelMesh {
     rank: usize,
     world: usize,
-    /// `tx[dst]` sends to rank `dst`; the self slot is `None`.
-    tx: Vec<Option<Sender<Frame>>>,
-    /// `rx[src]` receives from rank `src`; the self slot is `None`.
-    rx: Vec<Option<Receiver<Frame>>>,
+    /// `tx[dst]` sends to rank `dst`; the self slot is `None`, and
+    /// `shutdown` takes the senders (dropping them is what surfaces
+    /// `PeerLost` on every peer still receiving from this rank).
+    tx: Vec<Mutex<Option<Sender<Frame>>>>,
+    /// `rx[src]` receives from rank `src`; the self slot is `None`. The
+    /// per-slot mutex gives `&self` receives; it is uncontended because
+    /// the endpoint demultiplexer admits one reader per source.
+    rx: Vec<Option<Mutex<Receiver<Frame>>>>,
 }
 
 impl ChannelMesh {
@@ -573,7 +673,12 @@ impl ChannelMesh {
             .into_iter()
             .zip(rx_of_rank)
             .enumerate()
-            .map(|(rank, (tx, rx))| ChannelMesh { rank, world, tx, rx })
+            .map(|(rank, (tx, rx))| ChannelMesh {
+                rank,
+                world,
+                tx: tx.into_iter().map(Mutex::new).collect(),
+                rx: rx.into_iter().map(|r| r.map(Mutex::new)).collect(),
+            })
             .collect()
     }
 }
@@ -587,28 +692,30 @@ impl Transport for ChannelMesh {
         self.world
     }
 
-    fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError> {
-        // Self-sends go through the inbox pass-through, not the transport;
-        // reaching the vacant slot is a routing bug on this rank, reported
-        // as Malformed rather than a panic so peers observe PeerLost.
-        match self.tx[dst].as_ref() {
-            Some(tx) => tx
-                .send(frame)
-                .map_err(|_| CommError::PeerLost { rank: dst }),
-            None => Err(CommError::Malformed {
+    fn send(&self, dst: usize, frame: Frame) -> Result<(), CommError> {
+        // Clone the sender out of the slot so no lock is held across the
+        // channel send (cheap: an Arc bump). A vacant self slot is a
+        // routing bug on this rank, reported as Malformed rather than a
+        // panic so peers observe PeerLost; a vacant peer slot means the
+        // mesh was shut down.
+        let tx = lock(&self.tx[dst]).clone();
+        match tx {
+            Some(tx) => tx.send(frame).map_err(|_| CommError::PeerLost { rank: dst }),
+            None if dst == self.rank => Err(CommError::Malformed {
                 src: dst,
                 detail: "transport-level send to self (self slots bypass the transport)".into(),
             }),
+            None => Err(CommError::PeerLost { rank: dst }),
         }
     }
 
-    fn flush(&mut self) -> Result<(), CommError> {
+    fn flush(&self) -> Result<(), CommError> {
         Ok(())
     }
 
-    fn recv(&mut self, src: usize) -> Result<Frame, CommError> {
+    fn recv(&self, src: usize) -> Result<Frame, CommError> {
         match self.rx[src].as_ref() {
-            Some(rx) => rx.recv().map_err(|_| CommError::PeerLost { rank: src }),
+            Some(rx) => lock(rx).recv().map_err(|_| CommError::PeerLost { rank: src }),
             None => Err(CommError::Malformed {
                 src,
                 detail: "transport-level recv from self (self slots bypass the transport)".into(),
@@ -618,6 +725,173 @@ impl Transport for ChannelMesh {
 
     fn name(&self) -> &'static str {
         "inproc"
+    }
+
+    fn shutdown(&self) {
+        // Dropping the senders closes every outgoing link: peers blocked
+        // in recv on this rank unblock with PeerLost. Local receives stay
+        // open — the peers' own shutdowns (the cascade) close those.
+        for slot in &self.tx {
+            lock(slot).take();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The shared endpoint: per-source, per-plane demultiplexing + poison
+// ---------------------------------------------------------------------------
+
+/// Per-source receive state: one frame queue per plane, a sticky link
+/// error, and the "help protocol" flag marking that some thread is
+/// currently inside `Transport::recv` for this source.
+struct SrcState {
+    queues: [VecDeque<Frame>; PLANE_COUNT],
+    /// First transport/format error seen on this link; sticky — the link
+    /// is FIFO, so nothing after an error can be trusted.
+    err: Option<CommError>,
+    /// A thread is blocked in `Transport::recv(src)` right now. Other
+    /// planes' receivers wait on the condvar instead of double-reading.
+    reading: bool,
+}
+
+/// One source's demux slot: the state plus the condvar that wakes
+/// waiting planes when a frame is routed, an error lands, or the
+/// in-flight reader retires.
+struct SrcDemux {
+    state: Mutex<SrcState>,
+    cond: Condvar,
+}
+
+/// The per-rank fabric endpoint shared by every [`Comm`] plane handle:
+/// the transport, the per-source/per-plane demultiplexer, one sequence
+/// stream and one `Counters` per plane, and the endpoint-wide poison
+/// slot that implements cross-plane cancellation.
+struct Endpoint {
+    transport: Box<dyn Transport>,
+    demux: Vec<SrcDemux>,
+    seqs: [AtomicU32; PLANE_COUNT],
+    plane_counters: [Counters; PLANE_COUNT],
+    /// First fabric error seen on *any* plane. Once set: the transport is
+    /// shut down, all demux waiters are woken, and every subsequent
+    /// collective on every handle returns a clone of this root cause.
+    poison: Mutex<Option<CommError>>,
+}
+
+impl Endpoint {
+    fn new(transport: Box<dyn Transport>) -> Endpoint {
+        let world = transport.world();
+        Endpoint {
+            transport,
+            demux: (0..world)
+                .map(|_| SrcDemux {
+                    state: Mutex::new(SrcState {
+                        queues: std::array::from_fn(|_| VecDeque::new()),
+                        err: None,
+                        reading: false,
+                    }),
+                    cond: Condvar::new(),
+                })
+                .collect(),
+            seqs: std::array::from_fn(|_| AtomicU32::new(0)),
+            plane_counters: std::array::from_fn(|_| Counters::default()),
+            poison: Mutex::new(None),
+        }
+    }
+
+    /// The root-cause error if this endpoint is poisoned.
+    fn poisoned(&self) -> Option<CommError> {
+        lock(&self.poison).clone()
+    }
+
+    /// Poison the endpoint (first error wins): record the root cause,
+    /// shut the transport down so peers — and, on sockets, local blocked
+    /// reads — unblock, and wake every demux waiter so blocked receives
+    /// on *other* planes return promptly instead of hanging.
+    fn poison_with(&self, e: &CommError) {
+        let first = {
+            let mut slot = lock(&self.poison);
+            if slot.is_none() {
+                *slot = Some(e.clone());
+                true
+            } else {
+                false
+            }
+        };
+        if first {
+            self.transport.shutdown();
+            for d in &self.demux {
+                d.cond.notify_all();
+            }
+        }
+    }
+
+    /// Next sequence number on `plane` (each plane counts its own
+    /// lockstep position — that independence is what lets two planes
+    /// have rounds in flight concurrently without drift errors).
+    fn next_seq(&self, plane: Plane) -> u32 {
+        self.seqs[plane.index()].fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Next frame from `src` belonging to `plane`.
+    ///
+    /// The help protocol: whichever plane's receiver arrives first with
+    /// an empty queue becomes the reader — it blocks in
+    /// `Transport::recv(src)`, routes whatever arrives into the stamped
+    /// plane's queue, and wakes the other plane's waiter. A frame for the
+    /// reader's own plane is returned directly (its queue is necessarily
+    /// empty — only the reader enqueues, and it checked before reading).
+    /// Errors are sticky per link; endpoint poison takes precedence so a
+    /// cancelled plane reports the root cause, not the socket teardown
+    /// it observed as a side effect.
+    fn recv_plane(&self, plane: Plane, src: usize) -> Result<Frame, CommError> {
+        let d = &self.demux[src];
+        let mut st = lock(&d.state);
+        loop {
+            if let Some(e) = self.poisoned() {
+                return Err(e);
+            }
+            if let Some(f) = st.queues[plane.index()].pop_front() {
+                return Ok(f);
+            }
+            if let Some(e) = &st.err {
+                return Err(e.clone());
+            }
+            if st.reading {
+                st = d.cond.wait(st).unwrap_or_else(|poisoned| poisoned.into_inner());
+                continue;
+            }
+            st.reading = true;
+            drop(st);
+            let got = self.transport.recv(src);
+            st = lock(&d.state);
+            st.reading = false;
+            match got {
+                Ok(f) => {
+                    let p = f.plane as usize;
+                    if p >= PLANE_COUNT {
+                        st.err = Some(CommError::Malformed {
+                            src,
+                            detail: format!("frame stamped unknown plane {}", f.plane),
+                        });
+                    } else if p == plane.index() {
+                        d.cond.notify_all();
+                        return Ok(f);
+                    } else {
+                        st.queues[p].push_back(f);
+                    }
+                }
+                Err(e) => {
+                    st.err = Some(e);
+                }
+            }
+            d.cond.notify_all();
+        }
+    }
+}
+
+impl Drop for Endpoint {
+    fn drop(&mut self) {
+        self.transport.shutdown();
     }
 }
 
@@ -630,40 +904,96 @@ const TAG_BARRIER: u8 = 200;
 const TAG_MIN_U64: u8 = 201;
 
 /// One worker's handle to the fabric: rank/world identity, the pluggable
-/// transport, the network cost model, and the shared counters.
+/// transport (behind the shared plane endpoint), the network cost model,
+/// and the shared counters.
 ///
-/// All collectives are *uniform*: every rank in the world must call the
-/// same method in the same order (the usual SPMD contract). A violation
-/// surfaces as [`CommError::SequenceMismatch`]; a peer dying
-/// mid-collective as [`CommError::PeerLost`] — in both cases an error
-/// return, not a hang or a panic.
+/// All collectives are *uniform per plane*: every rank in the world must
+/// issue the same sequence of collectives on a given plane (the usual
+/// SPMD contract, now per plane — the interleaving *across* planes is
+/// free to differ per rank, which is exactly what lets a sampler thread
+/// run ahead of the trainer). A violation surfaces as
+/// [`CommError::SequenceMismatch`]; a peer dying mid-collective as
+/// [`CommError::PeerLost`] — in both cases an error return, not a hang
+/// or a panic.
+///
+/// A freshly constructed `Comm` is the [`Plane::Gradient`] handle;
+/// [`Comm::plane`] mints a handle for another plane over the same
+/// endpoint. Any collective error **poisons the shared endpoint**: both
+/// planes' blocked receives unblock and every later collective on any
+/// handle returns the root cause (see [`Comm::cancel`]).
 pub struct Comm {
     rank: usize,
     world: usize,
     /// Shared accounting; public so trainers can snapshot per-epoch deltas.
     pub counters: Arc<Counters>,
     net: NetworkModel,
-    transport: Box<dyn Transport>,
-    /// This rank's collective counter; equal on every rank in lockstep,
-    /// stamped into each frame so drift is detected at the next round.
-    seq: u32,
+    /// The rank's fabric endpoint, shared by every plane handle.
+    endpoint: Arc<Endpoint>,
+    /// Which plane this handle's collectives run on.
+    plane: Plane,
 }
 
 impl Comm {
-    /// Wrap an already-connected transport endpoint.
+    /// Wrap an already-connected transport endpoint. The returned handle
+    /// is on [`Plane::Gradient`].
     pub fn from_transport(
         transport: Box<dyn Transport>,
         net: NetworkModel,
         counters: Arc<Counters>,
     ) -> Comm {
+        let rank = transport.rank();
+        let world = transport.world();
         Comm {
-            rank: transport.rank(),
-            world: transport.world(),
+            rank,
+            world,
             counters,
             net,
-            transport,
-            seq: 0,
+            endpoint: Arc::new(Endpoint::new(transport)),
+            plane: Plane::Gradient,
         }
+    }
+
+    /// A handle scoped to `plane`, over this rank's same endpoint (same
+    /// transport, network model, and shared counters). The handle has
+    /// its own lockstep position on `plane`'s sequence stream; at most
+    /// one thread should drive a given plane at a time. Typical use: the
+    /// pipelined trainer hands `comm.plane(Plane::Sampling)` to the
+    /// sampler thread and keeps the base (gradient) handle.
+    pub fn plane(&self, plane: Plane) -> Comm {
+        Comm {
+            rank: self.rank,
+            world: self.world,
+            counters: Arc::clone(&self.counters),
+            net: self.net.clone(),
+            endpoint: Arc::clone(&self.endpoint),
+            plane,
+        }
+    }
+
+    /// The plane this handle's collectives run on.
+    #[inline]
+    pub fn plane_of(&self) -> Plane {
+        self.plane
+    }
+
+    /// This rank's accounting for one plane: bytes are this rank's own
+    /// outgoing payloads on that plane; rounds live on rank 0 (as in the
+    /// fabric-global [`Counters`]). The global counters are always the
+    /// element-wise sum over planes — planes split the accounting, they
+    /// never double-charge it.
+    pub fn plane_stats(&self, plane: Plane) -> CommStats {
+        self.endpoint.plane_counters[plane.index()].snapshot()
+    }
+
+    /// Cancel the endpoint: poison every plane with `reason`, shut the
+    /// transport down (peers observe `PeerLost`; local blocked socket
+    /// reads unblock), and wake all demux waiters. Every later collective
+    /// on any plane handle of this rank returns `reason`. This is the
+    /// plane shutdown signal the pipelined trainer fires when one side
+    /// fails and the other may be blocked in a receive. Idempotent —
+    /// the first poison (from whatever source) wins.
+    pub fn cancel(&self, reason: &CommError) {
+        self.endpoint.poison_with(reason);
     }
 
     /// Build the in-process channel mesh for `world` ranks (the default
@@ -695,7 +1025,7 @@ impl Comm {
 
     /// The underlying transport's name (`"inproc"`, `"tcp"`).
     pub fn transport_name(&self) -> &'static str {
-        self.transport.name()
+        self.endpoint.transport.name()
     }
 
     /// One typed all-to-all round: `outboxes[dst]` goes to rank `dst`,
@@ -779,14 +1109,16 @@ impl Comm {
                 Some(v) => v,
             };
             if part.len() != data.len() {
-                return Err(CommError::SequenceMismatch {
+                let e = CommError::SequenceMismatch {
                     src,
                     detail: format!(
                         "all-reduce length mismatch: {} vs {} elements",
                         part.len(),
                         data.len()
                     ),
-                });
+                };
+                self.endpoint.poison_with(&e);
+                return Err(e);
             }
             for (acc, x) in data.iter_mut().zip(part) {
                 *acc += *x;
@@ -799,6 +1131,29 @@ impl Comm {
         Ok(())
     }
 
+    /// Poison the endpoint on any collective error, so the *other* plane
+    /// (possibly blocked in a receive on another thread) fails promptly
+    /// with the same root cause instead of hanging or diverging. If the
+    /// endpoint was already poisoned, the stored root cause is returned
+    /// instead of whatever teardown artifact this plane just observed.
+    fn seal<T>(&self, r: Result<T, CommError>) -> Result<T, CommError> {
+        match r {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.endpoint.poison_with(&e);
+                Err(self.endpoint.poisoned().unwrap_or(e))
+            }
+        }
+    }
+
+    /// Fail fast if the endpoint is already poisoned (by either plane).
+    fn check_open(&self) -> Result<(), CommError> {
+        match self.endpoint.poisoned() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
     /// All-to-all with per-destination payloads: hand each typed outbox
     /// to the transport (which may encode it on a writer thread —
     /// **overlapped encoding**), then collect one frame per peer (self
@@ -809,10 +1164,22 @@ impl Comm {
         track: Option<RoundKind>,
         outboxes: Vec<Vec<T>>,
     ) -> Result<Vec<Vec<T>>, CommError> {
+        self.check_open()?;
+        let r = self.exchange_inner(tag, track, outboxes);
+        self.seal(r)
+    }
+
+    fn exchange_inner<T: Wire>(
+        &mut self,
+        tag: u8,
+        track: Option<RoundKind>,
+        outboxes: Vec<Vec<T>>,
+    ) -> Result<Vec<Vec<T>>, CommError> {
         assert_eq!(outboxes.len(), self.world, "need one outbox per rank");
-        let seq = self.bump_seq();
+        let seq = self.endpoint.next_seq(self.plane);
         let my_src = self.rank as u16;
         let elem = T::SIZE as u8;
+        let plane = self.plane as u8;
         let mut self_data: Option<Vec<T>> = None;
         let mut sent_bytes = 0u64;
         for (dst, data) in outboxes.into_iter().enumerate() {
@@ -825,8 +1192,8 @@ impl Comm {
             // stay identical whether the transport encodes now (channel
             // mesh) or on its writer threads (TcpMesh).
             sent_bytes += (data.len() * T::SIZE) as u64;
-            let header = FrameHeader { kind: tag, elem, src: my_src, seq };
-            self.transport.send_typed(dst, header, Box::new(data))?;
+            let header = FrameHeader { kind: tag, elem, plane, src: my_src, seq };
+            self.endpoint.transport.send_typed(dst, header, Box::new(data))?;
         }
         self.finish_sends(track, sent_bytes)?;
         let mut inboxes = self.recv_round::<T>(tag, seq)?;
@@ -856,9 +1223,21 @@ impl Comm {
         track: Option<RoundKind>,
         data: &[T],
     ) -> Result<Vec<Option<Vec<T>>>, CommError> {
-        let seq = self.bump_seq();
+        self.check_open()?;
+        let r = self.broadcast_inner(tag, track, data);
+        self.seal(r)
+    }
+
+    fn broadcast_inner<T: Wire>(
+        &mut self,
+        tag: u8,
+        track: Option<RoundKind>,
+        data: &[T],
+    ) -> Result<Vec<Option<Vec<T>>>, CommError> {
+        let seq = self.endpoint.next_seq(self.plane);
         let my_src = self.rank as u16;
         let elem = T::SIZE as u8;
+        let plane = self.plane as u8;
         let payload = encode_payload(data);
         let mut sent_bytes = 0u64;
         for dst in 0..self.world {
@@ -866,40 +1245,39 @@ impl Comm {
                 continue;
             }
             sent_bytes += payload.len() as u64;
-            let frame = Frame { kind: tag, elem, src: my_src, seq, payload: payload.clone() };
-            self.transport.send(dst, frame)?;
+            let frame =
+                Frame { kind: tag, elem, plane, src: my_src, seq, payload: payload.clone() };
+            self.endpoint.transport.send(dst, frame)?;
         }
         self.finish_sends(track, sent_bytes)?;
         self.recv_round::<T>(tag, seq)
     }
 
-    #[inline]
-    fn bump_seq(&mut self) -> u32 {
-        let seq = self.seq;
-        self.seq = self.seq.wrapping_add(1);
-        seq
-    }
-
-    /// Shared send epilogue: round-boundary flush, accounting, modeled
-    /// fabric delay.
+    /// Shared send epilogue: round-boundary flush, accounting (global
+    /// counters + this handle's plane slice), modeled fabric delay.
     fn finish_sends(
         &mut self,
         track: Option<RoundKind>,
         sent_bytes: u64,
     ) -> Result<(), CommError> {
-        self.transport.flush()?;
+        self.endpoint.transport.flush()?;
         if let Some(kind) = track {
+            let plane_counters = &self.endpoint.plane_counters[self.plane.index()];
             self.counters.add_bytes(kind, sent_bytes);
+            plane_counters.add_bytes(kind, sent_bytes);
             if self.rank == 0 {
                 self.counters.add_round(kind);
+                plane_counters.add_round(kind);
             }
         }
         self.net.delay(sent_bytes);
         Ok(())
     }
 
-    /// Shared receive half: one frame per peer, validated against this
-    /// rank's (tag, elem, seq) lockstep position. Self slot stays `None`.
+    /// Shared receive half: one frame per peer — drawn from **this
+    /// plane's** inbox by the endpoint demultiplexer — validated against
+    /// this rank's (tag, elem, seq) lockstep position on the plane. Self
+    /// slot stays `None`.
     fn recv_round<T: Wire>(
         &mut self,
         tag: u8,
@@ -910,7 +1288,7 @@ impl Comm {
             if src == self.rank {
                 continue;
             }
-            let frame = self.transport.recv(src)?;
+            let frame = self.endpoint.recv_plane(self.plane, src)?;
             if frame.src as usize != src {
                 return Err(CommError::Malformed {
                     src,
@@ -922,12 +1300,13 @@ impl Comm {
                     src,
                     detail: format!(
                         "expected (kind {tag}, elem {}, seq {seq}), \
-                         got (kind {}, elem {}, seq {}) — \
+                         got (kind {}, elem {}, seq {}) on the {} plane — \
                          workers issued different collective sequences",
                         T::SIZE,
                         frame.kind,
                         frame.elem,
-                        frame.seq
+                        frame.seq,
+                        self.plane.name()
                     ),
                 });
             }
@@ -936,12 +1315,6 @@ impl Comm {
             *inbox = Some(data);
         }
         Ok(inboxes)
-    }
-}
-
-impl Drop for Comm {
-    fn drop(&mut self) {
-        self.transport.shutdown();
     }
 }
 
@@ -1094,9 +1467,25 @@ mod tests {
     #[test]
     fn frame_codec_round_trips_through_a_byte_stream() {
         let frames = [
-            Frame { kind: 0, elem: 4, src: 3, seq: 9, payload: encode_payload(&[1u32, 2, 3]) },
-            Frame { kind: TAG_BARRIER, elem: 1, src: 0, seq: 0, payload: Vec::new() },
-            Frame { kind: 4, elem: 4, src: 65535, seq: u32::MAX, payload: vec![0u8; 70_000] },
+            Frame {
+                kind: 0,
+                elem: 4,
+                plane: 1,
+                src: 3,
+                seq: 9,
+                payload: encode_payload(&[1u32, 2, 3]),
+            },
+            Frame { kind: TAG_BARRIER, elem: 1, plane: 0, src: 0, seq: 0, payload: Vec::new() },
+            // The codec round-trips any plane byte — range policy lives
+            // at the demultiplexer, not in the framing.
+            Frame {
+                kind: 4,
+                elem: 4,
+                plane: 255,
+                src: 65535,
+                seq: u32::MAX,
+                payload: vec![0u8; 70_000],
+            },
         ];
         let mut wire = Vec::new();
         for f in &frames {
@@ -1156,6 +1545,7 @@ mod tests {
         let frame = Frame {
             kind: 2,
             elem: 4,
+            plane: 1,
             src: 9,
             seq: 1234,
             payload: encode_payload(&data),
@@ -1180,14 +1570,149 @@ mod tests {
         // ChannelMesh uses the default (eager) send_typed; the receiver
         // must see a frame indistinguishable from a plain send.
         let mut meshes = ChannelMesh::mesh(2);
-        let mut b = meshes.pop().unwrap();
-        let mut a = meshes.pop().unwrap();
+        let b = meshes.pop().unwrap();
+        let a = meshes.pop().unwrap();
         let data: Vec<u64> = vec![1, 2, 1 << 40];
-        let header = FrameHeader { kind: 0, elem: 8, src: 0, seq: 3 };
+        let header = FrameHeader { kind: 0, elem: 8, plane: 1, src: 0, seq: 3 };
         a.send_typed(1, header, Box::new(data.clone())).unwrap();
         a.flush().unwrap();
         let got = b.recv(0).unwrap();
         assert_eq!(got.header(), header);
         assert_eq!(decode_payload::<u64>(&got.payload).unwrap(), data);
+    }
+
+    fn test_frame(plane: u8, seq: u32, byte: u8) -> Frame {
+        Frame { kind: 0, elem: 1, plane, src: 0, seq, payload: vec![byte] }
+    }
+
+    #[test]
+    fn endpoint_demux_routes_frames_by_plane() {
+        // Rank 0 sends sampling traffic first, then gradient traffic.
+        // Rank 1's endpoint must hand the gradient receive its own
+        // plane's frame even though the sampling frame arrived first —
+        // per-plane FIFO, cross-plane queuing.
+        let mut meshes = ChannelMesh::mesh(2);
+        let ep = Endpoint::new(Box::new(meshes.pop().unwrap()));
+        let a = meshes.pop().unwrap();
+        a.send(1, test_frame(Plane::Sampling as u8, 0, 11)).unwrap();
+        a.send(1, test_frame(Plane::Sampling as u8, 1, 12)).unwrap();
+        a.send(1, test_frame(Plane::Gradient as u8, 0, 21)).unwrap();
+        let g = ep.recv_plane(Plane::Gradient, 0).unwrap();
+        assert_eq!((g.plane, g.payload[0]), (0, 21));
+        let s0 = ep.recv_plane(Plane::Sampling, 0).unwrap();
+        let s1 = ep.recv_plane(Plane::Sampling, 0).unwrap();
+        assert_eq!((s0.seq, s0.payload[0]), (0, 11));
+        assert_eq!((s1.seq, s1.payload[0]), (1, 12));
+    }
+
+    #[test]
+    fn endpoint_rejects_unknown_plane_as_malformed() {
+        let mut meshes = ChannelMesh::mesh(2);
+        let ep = Endpoint::new(Box::new(meshes.pop().unwrap()));
+        let a = meshes.pop().unwrap();
+        a.send(1, test_frame(7, 0, 1)).unwrap();
+        match ep.recv_plane(Plane::Gradient, 0) {
+            Err(CommError::Malformed { src: 0, detail }) => {
+                assert!(detail.contains("unknown plane 7"), "{detail}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        // The link error is sticky: the other plane sees it too.
+        assert!(matches!(
+            ep.recv_plane(Plane::Sampling, 0),
+            Err(CommError::Malformed { src: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn plane_handles_run_concurrent_rounds_without_interleaving() {
+        // Per rank: a sampler thread drives SampleRequest exchanges on
+        // the Sampling plane while the main thread drives GradSync
+        // all-reduces on the Gradient plane — concurrently, different
+        // per-rank interleavings. Planes must keep both streams correct,
+        // and the per-plane stats must split the accounting cleanly.
+        const ROUNDS: usize = 5;
+        let results = run_workers(3, NetworkModel::free(), |rank, comm| {
+            let mut sampler = comm.plane(Plane::Sampling);
+            let world = comm.world();
+            std::thread::scope(|scope| {
+                let sampled = scope.spawn(move || {
+                    let mut got = Vec::new();
+                    for round in 0..ROUNDS {
+                        let outboxes: Vec<Vec<u32>> = (0..world)
+                            .map(|dst| vec![(rank * 100 + dst * 10 + round) as u32])
+                            .collect();
+                        let inboxes =
+                            sampler.exchange(RoundKind::SampleRequest, outboxes).unwrap();
+                        got.push(inboxes);
+                    }
+                    (sampler.plane_stats(Plane::Sampling), got)
+                });
+                let mut grads = Vec::new();
+                for round in 0..ROUNDS {
+                    let mut data = vec![rank as f32 + round as f32, 1.0];
+                    comm.all_reduce_mean_f32(RoundKind::GradSync, &mut data).unwrap();
+                    grads.push(data);
+                }
+                let (sampling_stats, sampled) = sampled.join().unwrap();
+                (sampling_stats, comm.plane_stats(Plane::Gradient), sampled, grads)
+            })
+        });
+        for (rank, (sampling, gradient, sampled, grads)) in results.iter().enumerate() {
+            // Sampling-plane payloads routed exactly as in serial mode.
+            for (round, inboxes) in sampled.iter().enumerate() {
+                for (src, inbox) in inboxes.iter().enumerate() {
+                    assert_eq!(inbox[..], [(src * 100 + rank * 10 + round) as u32]);
+                }
+            }
+            // Gradient results identical across ranks (and correct:
+            // mean over ranks of rank+round is 1.0+round at 3 ranks).
+            assert_eq!(grads, &results[0].3);
+            for (round, g) in grads.iter().enumerate() {
+                assert_eq!(g[..], [1.0 + round as f32, 1.0]);
+            }
+            // Per-plane stats never cross: sampling bytes live on the
+            // sampling slice, grad-sync bytes on the gradient slice.
+            assert_eq!(sampling.bytes_of(RoundKind::GradSync), 0);
+            assert_eq!(gradient.bytes_of(RoundKind::SampleRequest), 0);
+            assert_eq!(sampling.bytes_of(RoundKind::SampleRequest), (ROUNDS * 2 * 4) as u64);
+            assert_eq!(gradient.bytes_of(RoundKind::GradSync), (ROUNDS * 2 * 8) as u64);
+        }
+    }
+
+    #[test]
+    fn cancel_on_one_plane_unblocks_and_poisons_the_other() {
+        // Rank 0's trainer cancels the endpoint while its sampler thread
+        // is blocked in a Sampling-plane receive (rank 1 never sends on
+        // that plane). The sampler must unblock promptly and report the
+        // cancellation root cause; rank 1 observes PeerLost.
+        let reason = CommError::Io { peer: 0, detail: "trainer failed; plane cancelled".into() };
+        let results = run_workers(2, NetworkModel::free(), |rank, comm| {
+            if rank == 1 {
+                // Blocked on the gradient barrier that rank 0 never
+                // joins; unblocked by rank 0's cancel → shutdown.
+                return comm.barrier();
+            }
+            let mut sampler = comm.plane(Plane::Sampling);
+            std::thread::scope(|scope| {
+                let blocked = scope.spawn(move || {
+                    sampler.exchange(RoundKind::SampleRequest, vec![vec![1u32], vec![2]])
+                });
+                // Let the sampler reach its blocking receive, then fire
+                // the plane shutdown signal from the trainer side.
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                comm.cancel(&reason);
+                blocked.join().unwrap().map(|_| ())
+            })
+        });
+        assert_eq!(results[0], Err(reason.clone()));
+        assert_eq!(results[1], Err(CommError::PeerLost { rank: 0 }));
+        // And the poisoned endpoint keeps failing fast with the root
+        // cause — no half-open planes.
+        let again = run_workers(1, NetworkModel::free(), |_, comm| {
+            comm.cancel(&CommError::PeerLost { rank: 9 });
+            comm.barrier()
+        });
+        assert_eq!(again[0], Err(CommError::PeerLost { rank: 9 }));
     }
 }

@@ -9,8 +9,12 @@
 //! * [`comm`] — [`RoundKind`]-tagged collectives over a pluggable
 //!   [`Transport`] (length-prefixed byte [`Frame`]s), charged to shared
 //!   [`Counters`] (rounds per collective, bytes per worker — measured
-//!   from the framed wire payloads). Fabric failures surface as
-//!   [`CommError`] (a lost peer is named, never hung on).
+//!   from the framed wire payloads), split across independent
+//!   communication [`Plane`]s (own seq streams, inboxes, and stats —
+//!   [`Comm::plane`] hands out the per-plane handles the pipelined
+//!   trainer runs on). Fabric failures surface as [`CommError`] (a
+//!   lost peer is named, never hung on; [`Comm::cancel`] propagates a
+//!   failure across planes).
 //! * [`net`] — [`TcpMesh`]: the socket transport (per-peer loopback/real
 //!   TCP, versioned rank handshake, flush at round boundaries, writer
 //!   threads that encode typed outboxes off the collective thread);
@@ -63,8 +67,8 @@ pub mod worker;
 
 pub use cache::{CachePolicy, SlabCache};
 pub use comm::{
-    ChannelMesh, Comm, CommError, CommStats, Counters, Frame, FrameHeader, RoundKind,
-    Transport, Wire, WirePayload,
+    ChannelMesh, Comm, CommError, CommStats, Counters, Frame, FrameHeader, Plane, RoundKind,
+    Transport, Wire, WirePayload, PLANE_COUNT,
 };
 pub use feature_cache::{hottest_remote_nodes, FeatureCache};
 pub use feature_store::{fetch_features, prefill_cache, FetchStats};

@@ -38,7 +38,7 @@ use std::io::{BufReader, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -197,8 +197,10 @@ const HANDSHAKE_MAGIC: u32 = 0x4653_4D50;
 /// Wire version of the FSMP handshake + framing. Bump on any change to
 /// the handshake layout or the frame format; mismatched peers are
 /// rejected at rendezvous ([`CommError::Rendezvous`]) instead of
-/// mis-parsing each other's frames.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// mis-parsing each other's frames. Version 2 widened the frame header
+/// from 12 to 13 bytes with the communication-plane byte (see
+/// [`Frame`]); the 12-byte handshake layout itself is unchanged.
+pub const PROTOCOL_VERSION: u16 = 2;
 
 /// Handshake bytes on the wire:
 /// `magic u32 | version u16 | world u16 | src u16 | dst u16` (LE).
@@ -400,24 +402,33 @@ enum Job {
     Typed { header: FrameHeader, data: Box<dyn WirePayload> },
 }
 
+/// Lock a mutex, recovering the inner data if a holder panicked (e.g. a
+/// panicked writer thread poisoning its error slot): the protected
+/// state is still the truth, and panicking here would cascade one
+/// failure into many.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// One outgoing link: an unbounded job queue drained by a dedicated
 /// writer thread. Queueing means `Transport::send` never blocks on the
 /// peer's socket buffers — the collective loop always reaches its
 /// receive phase, so the symmetric all-to-all cannot deadlock no matter
 /// how large a round's payloads are. The first write error is parked in
 /// `err` and surfaced by the next `send`/`flush` touching the link.
+/// The queue and writer-handle slots sit behind mutexes so the
+/// `&self` transport contract holds: any thread may send while
+/// another shuts the mesh down.
 struct OutLink {
     /// `None` once shut down (closing the channel stops the writer).
-    queue: Option<Sender<Job>>,
+    queue: Mutex<Option<Sender<Job>>>,
     err: Arc<Mutex<Option<CommError>>>,
-    writer: Option<JoinHandle<()>>,
+    writer: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl OutLink {
     fn last_err(&self) -> Option<CommError> {
-        // A panicked writer poisons the slot; the parked error (if any) is
-        // still the truth, so recover the guard instead of panicking here.
-        self.err.lock().unwrap_or_else(|p| p.into_inner()).clone()
+        lock(&self.err).clone()
     }
 }
 
@@ -433,8 +444,17 @@ pub struct TcpMesh {
     world: usize,
     /// `out[dst]`: this rank's link toward `dst`; self slot `None`.
     out: Vec<Option<OutLink>>,
-    /// `inc[src]`: reader of `src`'s frames; self slot `None`.
-    inc: Vec<Option<BufReader<TcpStream>>>,
+    /// `inc[src]`: reader of `src`'s frames; self slot `None`. The
+    /// per-source mutex upholds the one-reader-per-src contract at the
+    /// transport level; readers of *different* sources never contend.
+    inc: Vec<Option<Mutex<BufReader<TcpStream>>>>,
+    /// `try_clone`d handles of the incoming sockets. `shutdown` *takes*
+    /// and `Shutdown::Both`s each one, which unblocks a concurrent
+    /// blocking read on the shared descriptor without touching the
+    /// reader's mutex (no deadlock) and makes a second shutdown a no-op;
+    /// `set_recv_timeout` uses them the same way (`setsockopt` is
+    /// per-descriptor-family, shared by the clone).
+    inc_shut: Mutex<Vec<Option<TcpStream>>>,
     /// Maximum bytes per write call, read by the writer threads (tests
     /// shrink this to force short writes + partial frames on the wire;
     /// `usize::MAX` normally).
@@ -486,6 +506,8 @@ impl TcpMesh {
             (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
         let mut inc: Vec<Vec<Option<BufReader<TcpStream>>>> =
             (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+        let mut shut: Vec<Vec<Option<TcpStream>>> =
+            (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
         for src in 0..world {
             for dst in 0..world {
                 if src == dst {
@@ -510,6 +532,7 @@ impl TcpMesh {
                 if inc[dst][hs_src].is_some() {
                     return Err(bad(format!("duplicate link {hs_src} -> {dst}")));
                 }
+                shut[dst][hs_src] = Some(s.try_clone()?);
                 inc[dst][hs_src] = Some(BufReader::new(s));
             }
         }
@@ -517,9 +540,17 @@ impl TcpMesh {
         Ok(out
             .into_iter()
             .zip(inc)
+            .zip(shut)
             .zip(chunks)
             .enumerate()
-            .map(|(rank, ((out, inc), max_chunk))| TcpMesh { rank, world, out, inc, max_chunk })
+            .map(|(rank, (((out, inc), shut), max_chunk))| TcpMesh {
+                rank,
+                world,
+                out,
+                inc: inc.into_iter().map(|r| r.map(Mutex::new)).collect(),
+                inc_shut: Mutex::new(shut),
+                max_chunk,
+            })
             .collect())
     }
 
@@ -592,6 +623,7 @@ impl TcpMesh {
         let max_chunk = Arc::new(AtomicUsize::new(usize::MAX));
         let mut out: Vec<Option<OutLink>> = (0..world).map(|_| None).collect();
         let mut inc: Vec<Option<BufReader<TcpStream>>> = (0..world).map(|_| None).collect();
+        let mut inc_shut: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
 
         // ---- Dial phase: originate the outgoing half of every directed
         // pair this rank is the source of. Connects complete into the
@@ -659,28 +691,39 @@ impl TcpMesh {
                     }
                     s.set_read_timeout(None).map_err(|e| io_ctx("clear handshake timeout", e))?;
                     s.set_nodelay(true).map_err(|e| io_ctx("set_nodelay", e))?;
+                    inc_shut[src] =
+                        Some(s.try_clone().map_err(|e| io_ctx("clone incoming socket", e))?);
                     inc[src] = Some(BufReader::new(s));
                     pending -= 1;
                 }
             }
         }
-        Ok(TcpMesh { rank, world, out, inc, max_chunk })
+        Ok(TcpMesh {
+            rank,
+            world,
+            out,
+            inc: inc.into_iter().map(|r| r.map(Mutex::new)).collect(),
+            inc_shut: Mutex::new(inc_shut),
+            max_chunk,
+        })
     }
 
     /// Cap the bytes per write call, flushing between chunks — frames
     /// then cross the wire as many short writes, which the receiving
     /// side must reassemble. Test/diagnostic knob; the fault-injection
     /// suite drives it.
-    pub fn set_max_chunk(&mut self, n: usize) {
+    pub fn set_max_chunk(&self, n: usize) {
         self.max_chunk.store(n.max(1), Ordering::Relaxed);
     }
 
     /// Bound blocking receives (default: none). A slow healthy peer is
     /// indistinguishable from a hung one, so production runs wait; tests
-    /// that want a hard bound use this (or an outer deadline).
-    pub fn set_recv_timeout(&mut self, t: Option<Duration>) -> std::io::Result<()> {
-        for r in self.inc.iter().flatten() {
-            r.get_ref().set_read_timeout(t)?;
+    /// that want a hard bound use this (or an outer deadline). Applied
+    /// through the `try_clone`d handles — the timeout lands on the
+    /// shared descriptors without taking any reader's mutex.
+    pub fn set_recv_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        for s in lock(&self.inc_shut).iter().flatten() {
+            s.set_read_timeout(t)?;
         }
         Ok(())
     }
@@ -702,7 +745,11 @@ impl TcpMesh {
         // Queue gone or writer exited: surface the parked error, or a
         // plain loss when the writer died without recording one.
         let lost = || link.last_err().unwrap_or(CommError::PeerLost { rank: dst });
-        let Some(q) = &link.queue else {
+        // Clone the sender out of the slot (an Arc bump) so no lock is
+        // held across the channel send, and so a concurrent shutdown can
+        // take the slot without waiting on senders.
+        let q = lock(&link.queue).clone();
+        let Some(q) = q else {
             return Err(lost());
         };
         if q.send(job).is_err() {
@@ -755,7 +802,7 @@ fn spawn_writer(mut stream: TcpStream, dst: usize, max_chunk: Arc<AtomicUsize>) 
         }
         let _ = stream.shutdown(Shutdown::Write);
     });
-    OutLink { queue: Some(tx), err, writer: Some(writer) }
+    OutLink { queue: Mutex::new(Some(tx)), err, writer: Mutex::new(Some(writer)) }
 }
 
 impl Transport for TcpMesh {
@@ -767,14 +814,14 @@ impl Transport for TcpMesh {
         self.world
     }
 
-    fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError> {
+    fn send(&self, dst: usize, frame: Frame) -> Result<(), CommError> {
         let mut buf = Vec::with_capacity(super::comm::FRAME_HEADER + frame.payload.len());
         frame.encode_to(&mut buf);
         self.enqueue(dst, Job::Bytes(buf))
     }
 
     fn send_typed(
-        &mut self,
+        &self,
         dst: usize,
         header: FrameHeader,
         data: Box<dyn WirePayload>,
@@ -784,7 +831,7 @@ impl Transport for TcpMesh {
         self.enqueue(dst, Job::Typed { header, data })
     }
 
-    fn flush(&mut self) -> Result<(), CommError> {
+    fn flush(&self) -> Result<(), CommError> {
         // Writer threads push continuously; the round boundary is an
         // error checkpoint so a poisoned link fails the collective here
         // rather than surfacing one round later.
@@ -796,35 +843,43 @@ impl Transport for TcpMesh {
         Ok(())
     }
 
-    fn recv(&mut self, src: usize) -> Result<Frame, CommError> {
-        let Some(r) = self.inc[src].as_mut() else {
+    fn recv(&self, src: usize) -> Result<Frame, CommError> {
+        let Some(r) = self.inc[src].as_ref() else {
             return Err(CommError::Malformed {
                 src,
                 detail: "transport-level recv from self (self slots bypass the transport)".into(),
             });
         };
-        Frame::decode_from(r).map_err(|e| io_to_comm(src, e))
+        let mut r = lock(r);
+        Frame::decode_from(&mut *r).map_err(|e| io_to_comm(src, e))
     }
 
     fn name(&self) -> &'static str {
         "tcp"
     }
 
-    fn shutdown(&mut self) {
+    fn shutdown(&self) {
         // Close the incoming sockets FIRST: this rank is done reading,
         // and the close is what unblocks any peer writer still pushing
         // toward it — with every rank closing its read side before
         // joining its own writers, teardown can never deadlock on a
-        // cycle of full socket buffers.
-        for r in self.inc.iter_mut().flatten() {
-            let _ = r.get_ref().shutdown(Shutdown::Both);
+        // cycle of full socket buffers. Shutting down through the
+        // *taken* `try_clone`d handles also unblocks a local thread
+        // parked in `recv` (the shared descriptor reads EOF) without
+        // waiting on the reader's mutex, and leaves the slots empty so
+        // a second shutdown is a no-op.
+        for s in lock(&self.inc_shut).iter_mut() {
+            if let Some(s) = s.take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
         }
         // Then close every queue (writers drain, then FIN) and join.
-        for link in self.out.iter_mut().flatten() {
-            link.queue = None;
+        for link in self.out.iter().flatten() {
+            let _ = lock(&link.queue).take();
         }
-        for link in self.out.iter_mut().flatten() {
-            if let Some(h) = link.writer.take() {
+        for link in self.out.iter().flatten() {
+            let handle = lock(&link.writer).take();
+            if let Some(h) = handle {
                 let _ = h.join();
             }
         }
@@ -905,7 +960,7 @@ mod tests {
         let meshes = TcpMesh::loopback(3, 0).unwrap();
         let handles: Vec<_> = meshes
             .into_iter()
-            .map(|mut t| {
+            .map(|t| {
                 std::thread::spawn(move || {
                     let rank = t.rank();
                     for dst in 0..3 {
@@ -915,6 +970,7 @@ mod tests {
                         let frame = Frame {
                             kind: 0,
                             elem: 1,
+                            plane: 0,
                             src: rank as u16,
                             seq: 5,
                             payload: vec![rank as u8; 3 + dst],
@@ -987,7 +1043,7 @@ mod tests {
                 std::thread::spawn(move || {
                     // Reverse start order: rank 0 first, rank 2 300ms late.
                     std::thread::sleep(Duration::from_millis(150 * rank as u64));
-                    let mut t = TcpMesh::connect(rank, &peers, &quick_rdv()).unwrap();
+                    let t = TcpMesh::connect(rank, &peers, &quick_rdv()).unwrap();
                     for dst in 0..3 {
                         if dst == rank {
                             continue;
@@ -995,6 +1051,7 @@ mod tests {
                         let frame = Frame {
                             kind: 0,
                             elem: 1,
+                            plane: 1,
                             src: rank as u16,
                             seq: 1,
                             payload: vec![rank as u8; dst + 1],
@@ -1111,11 +1168,12 @@ mod tests {
                 std::thread::spawn(move || {
                     // Rank 1 arrives after the stray has already landed.
                     std::thread::sleep(Duration::from_millis(200 * rank as u64));
-                    let mut t = TcpMesh::connect(rank, &peers, &quick_rdv()).unwrap();
+                    let t = TcpMesh::connect(rank, &peers, &quick_rdv()).unwrap();
                     let dst = 1 - rank;
                     let frame = Frame {
                         kind: 0,
                         elem: 1,
+                        plane: 0,
                         src: rank as u16,
                         seq: 0,
                         payload: vec![rank as u8; 2],

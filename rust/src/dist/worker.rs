@@ -125,7 +125,7 @@ pub fn run_worker_process<R>(
     counters: Arc<Counters>,
     f: impl FnOnce(usize, &mut Comm) -> R,
 ) -> Result<R, CommError> {
-    let mut mesh = TcpMesh::connect(rank, peers, rdv)?;
+    let mesh = TcpMesh::connect(rank, peers, rdv)?;
     if let Some(t) = recv_timeout {
         mesh.set_recv_timeout(Some(t))
             .map_err(|e| CommError::Io { peer: rank, detail: format!("set recv timeout: {e}") })?;

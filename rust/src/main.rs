@@ -40,7 +40,10 @@ COMMANDS:
                 [--replication-budget 0|64k|2m|inf]  (overrides the
                 mode's replication policy; modes also accept
                 budget:<bytes> and halo:<hops>, optionally +fused,
-                +cache:<bytes>, +tcp, and/or +wire:<scalar|bulk>)
+                +cache:<bytes>, +tcp, +wire:<scalar|bulk>, and/or +pipe)
+                [--pipeline on|off]  (off = serial phases, the default;
+                on = a sampler thread prefetches minibatch t+1 on the
+                Sampling plane while t trains — bit-identical results)
                 [--adj-cache 0|32k|2m|inf] [--adj-cache-policy clock|static]
                 (the dynamic remote-adjacency cache over the static halo)
                 [--sampling-wire scalar|bulk]  (miss-response encoding:
@@ -66,7 +69,7 @@ COMMANDS:
                 train iff artifacts exist)
                 plus the train flags (--dataset --variant --mode --epochs
                 --lr --optimizer --seed --net --max-batches --cache
-                --adj-cache --adj-cache-policy --sampling-wire
+                --adj-cache --adj-cache-policy --sampling-wire --pipeline
                 --replication-budget) and, for the sample task,
                 [--batch 32] [--fanouts 4,3]
   partition     --dataset <spec> --parts 8 [--seed S]
@@ -136,6 +139,9 @@ fn parse_train_flags(
     cfg.adj_cache_policy = config::cache_policy(&args.get_str("adj-cache-policy", "clock"))?;
     if let Some(spec) = args.get_opt_str("sampling-wire") {
         cfg.sampling_wire = config::sampling_wire(&spec)?;
+    }
+    if let Some(spec) = args.get_opt_str("pipeline") {
+        cfg.pipeline = config::pipeline(&spec)?;
     }
     if let Some(spec) = args.get_opt_str("transport") {
         cfg.transport = config::transport(&spec)?;

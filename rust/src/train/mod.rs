@@ -1,10 +1,12 @@
-//! Training stack: MFG padding, optimizers, metrics, and the distributed
+//! Training stack: MFG padding, optimizers, metrics, the distributed
 //! trainer that drives sampling → feature exchange → AOT compute → grad
-//! sync per minibatch.
+//! sync per minibatch, and the MFG prefetcher that overlaps the first
+//! two phases with the last two (`--pipeline on`).
 
 pub mod metrics;
 pub mod optimizer;
 pub mod padding;
+pub mod prefetch;
 pub mod trainer;
 
 pub use metrics::{accuracy, EpochStats, PhaseTimes, Stopwatch};

@@ -1,0 +1,137 @@
+//! The MFG prefetcher: the sampler half of pipelined training
+//! (`--pipeline on`, the `+pipe` mode suffix).
+//!
+//! Pipelining splits each rank into two threads. The **sampler thread**
+//! runs [`sampler_epochs`]: it owns the rank's Sampling-plane comm
+//! handle, the `TopologyView` overlay (remote-adjacency cache), the
+//! `SamplerWorkspace`, and the optional feature cache, and produces
+//! minibatch *t+1* — distributed sampling plus input-feature fetch —
+//! into a depth-1 bounded channel while the trainer thread consumes
+//! minibatch *t* (AOT compute + gradient all-reduce on its own plane).
+//! The planes have independent sequence streams and per-peer inboxes
+//! (see `dist::comm`), so the in-flight sampling round and the
+//! in-flight gradient round can never interleave on the wire.
+//!
+//! **Determinism.** The sampler performs *exactly* the derivations the
+//! serial loop performs, in the same order: the per-epoch
+//! `MinibatchSchedule` from `key.fold(epoch)`, the per-batch sampling
+//! key `key.fold(epoch).fold(b + 1)`, and every cache insert and RNG
+//! cursor lives on this one thread. The produced MFG stream, feature
+//! buffers, and multi-epoch cache decay are therefore bit-identical to
+//! `--pipeline off` (pinned by the pipeline grid in
+//! `rust/tests/dist_equivalence.rs`).
+//!
+//! **Epoch protocol.** The trainer sends this epoch's fanouts over the
+//! `go` channel only *after* taking its fenced epoch-start counter
+//! snapshot, and the sampler sends [`Produced::EpochEnd`] only after
+//! the epoch's last fetch has been charged — so the sampler is
+//! quiescent (blocked on `go.recv()`) across both of the trainer's
+//! fences, and per-epoch round/byte deltas are pipeline-invariant.
+//! Fanouts ride the `go` channel because schedules like `Plateau`
+//! depend on the trainer's smoothed loss, which only exists on the
+//! trainer thread.
+//!
+//! **Error paths.** A fabric error inside a collective here has already
+//! poisoned the shared endpoint (every plane handle of this rank now
+//! fails fast, and blocked receives are woken), so returning it is
+//! enough — the trainer side observes the closed item channel, joins
+//! this thread, and reports the root cause. A closed channel in either
+//! direction means the *trainer* stopped first; that is an orderly
+//! `Ok(())` exit, never an error of its own.
+
+use std::sync::mpsc::{Receiver, SyncSender};
+
+use crate::dist::{
+    fetch_features, sample_mfgs_distributed_wire, Comm, CommError, FeatureCache, SamplingWire,
+};
+use crate::graph::NodeId;
+use crate::partition::{TopologyView, WorkerShard};
+use crate::sampling::rng::RngKey;
+use crate::sampling::{KernelKind, Mfg, MinibatchSchedule, SamplerWorkspace};
+
+/// Everything the sampler thread needs to reproduce the serial loop's
+/// sampling decisions bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct ProducerPlan {
+    /// The consuming loop's base RNG key (already folded with the entry
+    /// point's tag); epoch and batch keys derive from it here exactly
+    /// as they do in serial mode.
+    pub key: RngKey,
+    pub epochs: usize,
+    /// Batches per epoch — already cross-rank agreed (`all_reduce_min`)
+    /// and capped by the trainer before the sampler spawns.
+    pub batches: usize,
+    /// Seeds per batch.
+    pub batch: usize,
+    pub kernel: KernelKind,
+    pub wire: SamplingWire,
+}
+
+/// One unit out of the sampler thread's bounded channel.
+#[derive(Debug)]
+pub enum Produced {
+    /// One fully prepared minibatch: sampled MFGs plus the fetched
+    /// input-feature rows of `mfgs[0].src_nodes` (row-major,
+    /// `feat_dim` wide).
+    Batch {
+        epoch: usize,
+        /// Batch index within `epoch` — the trainer reconstructs its
+        /// dropout seed (`epoch * batches + index`) from this.
+        index: usize,
+        seeds: Vec<NodeId>,
+        mfgs: Vec<Mfg>,
+        feats: Vec<f32>,
+    },
+    /// Epoch boundary marker: every batch of `epoch` has been produced
+    /// and charged. The trainer drains to this before taking its fenced
+    /// end-of-epoch counter snapshot.
+    EpochEnd { epoch: usize },
+}
+
+/// Produce every epoch's minibatches into `items`, gated per epoch on
+/// the trainer's `go` signal (which carries that epoch's fanouts).
+///
+/// Runs on the sampler thread with the rank's Sampling-plane handle —
+/// and only that handle: sampler-thread code must never touch another
+/// plane (spmd-lint rule R6 enforces this lexically for this module).
+/// Collective in the SPMD sense: every rank's sampler issues the same
+/// sequence of sampling/feature rounds.
+#[allow(clippy::too_many_arguments)]
+pub fn sampler_epochs(
+    comm: &mut Comm,
+    shard: &WorkerShard,
+    view: &mut TopologyView,
+    ws: &mut SamplerWorkspace,
+    mut cache: Option<&mut FeatureCache>,
+    plan: &ProducerPlan,
+    items: &SyncSender<Produced>,
+    go: &Receiver<Vec<usize>>,
+) -> Result<(), CommError> {
+    for epoch in 0..plan.epochs {
+        // Block until the trainer has fenced the epoch start. A closed
+        // channel means the trainer stopped (error or early shutdown):
+        // exit cleanly — the trainer side owns error reporting.
+        let Ok(fanouts) = go.recv() else {
+            return Ok(());
+        };
+        let schedule =
+            MinibatchSchedule::new(&shard.train_local, plan.batch, plan.key.fold(epoch as u64));
+        for b in 0..plan.batches {
+            let seeds = schedule.batch(b).to_vec();
+            let batch_key = plan.key.fold(epoch as u64).fold(b as u64 + 1);
+            let mfgs = sample_mfgs_distributed_wire(
+                comm, shard, view, &seeds, &fanouts, batch_key, ws, plan.kernel, plan.wire,
+            )?;
+            let mut feats = Vec::new();
+            fetch_features(comm, shard, &mfgs[0].src_nodes, cache.as_deref_mut(), &mut feats)?;
+            let item = Produced::Batch { epoch, index: b, seeds, mfgs, feats };
+            if items.send(item).is_err() {
+                return Ok(());
+            }
+        }
+        if items.send(Produced::EpochEnd { epoch }).is_err() {
+            return Ok(());
+        }
+    }
+    Ok(())
+}

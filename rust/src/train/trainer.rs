@@ -8,13 +8,15 @@
 //! phase times are measured per worker so Fig 5/6 can be regenerated.
 
 use std::path::Path;
+use std::sync::mpsc;
 use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::dist::{
     fetch_features, run_workers_on, sample_mfgs_distributed_wire, CachePolicy, Comm, CommError,
-    CommStats, Counters, FeatureCache, NetworkModel, RoundKind, SamplingWire, TransportConfig,
+    CommStats, Counters, FeatureCache, NetworkModel, Plane, RoundKind, SamplingWire,
+    TransportConfig,
 };
 use crate::graph::{Dataset, NodeId};
 use crate::partition::{
@@ -27,6 +29,7 @@ use crate::sampling::{KernelKind, Mfg, MinibatchSchedule, SamplerWorkspace};
 use super::metrics::{accuracy, EpochStats, PhaseTimes, Stopwatch};
 use super::optimizer;
 use super::padding::pad_batch;
+use super::prefetch::{sampler_epochs, Produced, ProducerPlan};
 
 /// Full configuration of one distributed training run.
 #[derive(Debug, Clone)]
@@ -63,6 +66,13 @@ pub struct TrainConfig {
     /// suffix / `--sampling-wire`). Uniform across ranks — the wire is
     /// part of the SPMD contract; content is bit-identical either way.
     pub sampling_wire: SamplingWire,
+    /// Overlap sampling + feature fetch of minibatch t+1 with compute +
+    /// grad sync of minibatch t: a sampler thread per rank produces
+    /// MFGs on the Sampling plane while the trainer consumes on the
+    /// Gradient plane (`+pipe` mode suffix / `--pipeline on`). Results
+    /// — MFG stream, loss curve, cache decay — are bit-identical to
+    /// serial mode; uniform across ranks like every SPMD knob.
+    pub pipeline: bool,
     /// Cap batches per epoch (benches); `None` = full epoch.
     pub max_batches: Option<usize>,
     /// Compute last-batch accuracy each epoch via the eval executable.
@@ -122,6 +132,7 @@ impl TrainConfig {
             adj_cache_bytes: 0,
             adj_cache_policy: CachePolicy::Clock,
             sampling_wire: SamplingWire::default(),
+            pipeline: false,
             max_batches: None,
             eval_last_batch: false,
             schedule: ScheduleKind::Fixed,
@@ -135,9 +146,10 @@ impl TrainConfig {
     /// Any base takes `+`-separated options: `+fused` (the fused
     /// kernel), `+cache:<bytes>` (the dynamic remote-adjacency cache),
     /// `+tcp` (run the collectives over loopback TCP sockets instead of
-    /// the in-process channel mesh), and `+wire:<scalar|bulk>` (the
-    /// sampler's miss-response encoding; default bulk), e.g.
-    /// `budget:64k+cache:32k+fused+tcp`.
+    /// the in-process channel mesh), `+wire:<scalar|bulk>` (the
+    /// sampler's miss-response encoding; default bulk), and `+pipe`
+    /// (the double-buffered MFG prefetcher; bit-identical results),
+    /// e.g. `budget:64k+cache:32k+fused+tcp+pipe`.
     pub fn mode(variant: &str, mode: &str, workers: usize) -> Result<Self> {
         let mut parts = mode.split('+');
         let base = parts.next().unwrap_or_default();
@@ -152,18 +164,22 @@ impl TrainConfig {
         } else {
             anyhow::bail!(
                 "unknown mode {mode:?} (vanilla | hybrid | budget:<bytes> | halo:<hops>, \
-                 each optionally +fused, +cache:<bytes>, +tcp, and/or +wire:<scalar|bulk>)"
+                 each optionally +fused, +cache:<bytes>, +tcp, +wire:<scalar|bulk>, \
+                 and/or +pipe)"
             )
         };
         let mut kernel = KernelKind::Baseline;
         let mut adj_cache_bytes = 0u64;
         let mut transport = TransportConfig::Inproc;
         let mut sampling_wire = SamplingWire::default();
+        let mut pipeline = false;
         for opt in parts {
             if opt == "fused" {
                 kernel = KernelKind::Fused;
             } else if opt == "tcp" {
                 transport = TransportConfig::Tcp { base_port: 0 };
+            } else if opt == "pipe" {
+                pipeline = true;
             } else if let Some(spec) = opt.strip_prefix("cache:") {
                 adj_cache_bytes = crate::config::parse_cache_bytes(spec)?;
             } else if let Some(spec) = opt.strip_prefix("wire:") {
@@ -171,7 +187,7 @@ impl TrainConfig {
             } else {
                 anyhow::bail!(
                     "unknown mode option {opt:?} in {mode:?} \
-                     (fused | cache:<bytes> | tcp | wire:<scalar|bulk>)"
+                     (fused | cache:<bytes> | tcp | wire:<scalar|bulk> | pipe)"
                 );
             }
         }
@@ -179,6 +195,7 @@ impl TrainConfig {
         cfg.adj_cache_bytes = adj_cache_bytes;
         cfg.transport = transport;
         cfg.sampling_wire = sampling_wire;
+        cfg.pipeline = pipeline;
         Ok(cfg)
     }
 }
@@ -319,6 +336,12 @@ pub struct SampleRankReport {
     /// This rank's seed pool (prefix of its labeled nodes, shuffled per
     /// epoch by the schedule).
     pub seeds: Vec<NodeId>,
+    /// Per-epoch fenced counter deltas (rounds + bytes charged between
+    /// the epoch's two fences). The fences themselves are uncharged
+    /// control rounds, so totals are unchanged by taking them; the
+    /// deltas pin that per-epoch traffic — including multi-epoch
+    /// adjacency-cache decay — is identical under `--pipeline on|off`.
+    pub epoch_deltas: Vec<CommStats>,
     /// This process's counter snapshot (per-process semantics, as in
     /// [`RankTrainReport::comm_total`]).
     pub comm_total: CommStats,
@@ -384,48 +407,143 @@ pub fn sample_rank(
 
     let mut curve = Vec::new();
     let mut all_mfgs = Vec::new();
-    let mut feat = Vec::new();
     let mut first_seeds = Vec::new();
+    let mut epoch_deltas = Vec::new();
     let mut steps = 0usize;
     let mut sampled_edges = 0u64;
-    for epoch in 0..cfg.epochs {
-        let schedule =
-            MinibatchSchedule::new(&shard.train_local, batch, key.fold(epoch as u64));
-        for b in 0..batches {
-            let seeds = schedule.batch(b);
-            if epoch == 0 && b == 0 {
-                first_seeds = seeds.to_vec();
+
+    // Sampling misses and feature rounds ride the Sampling plane in both
+    // modes, so wire traffic is mode-invariant; the digest all-reduce and
+    // the epoch fences stay on the base (gradient-plane) handle.
+    let mut scomm = comm.plane(Plane::Sampling);
+
+    if cfg.pipeline {
+        let plan = ProducerPlan {
+            key,
+            epochs: cfg.epochs,
+            batches,
+            batch,
+            kernel: cfg.kernel,
+            wire: cfg.sampling_wire,
+        };
+        let (items_tx, items_rx) = mpsc::sync_channel::<Produced>(1);
+        let (go_tx, go_rx) = mpsc::channel::<Vec<usize>>();
+        let shard = &shard;
+        std::thread::scope(|s| {
+            let sampler = {
+                let scomm = &mut scomm;
+                let view = &mut view;
+                let ws = &mut ws;
+                let plan = &plan;
+                s.spawn(move || -> Result<(), CommError> {
+                    sampler_epochs(scomm, shard, view, ws, None, plan, &items_tx, &go_rx)
+                })
+            };
+            let mut body = || -> Result<()> {
+                for epoch in 0..cfg.epochs {
+                    let mark = comm.fenced_snapshot()?;
+                    let _ = go_tx.send(fanouts.to_vec());
+                    for b in 0..batches {
+                        let item = items_rx
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("sampler thread stopped early"))?;
+                        let Produced::Batch { epoch: ie, index, seeds, mfgs, feats } = item
+                        else {
+                            anyhow::bail!("prefetcher sent an epoch marker mid-epoch");
+                        };
+                        ensure!(
+                            (ie, index) == (epoch, b),
+                            "prefetcher out of order: got ({ie},{index}), want ({epoch},{b})"
+                        );
+                        if epoch == 0 && b == 0 {
+                            first_seeds = seeds;
+                        }
+                        // Same digest as the serial arm below.
+                        let mut acc = 0.0f32;
+                        for &x in &feats {
+                            acc += x;
+                        }
+                        let edges: usize = mfgs.iter().map(|m| m.num_edges()).sum();
+                        let mut digest =
+                            [acc / (feats.len().max(1) as f32) + edges as f32 * 1e-3];
+                        comm.all_reduce_mean_f32(RoundKind::GradSync, &mut digest)?;
+                        curve.push(digest[0]);
+                        steps += 1;
+                        sampled_edges += edges as u64;
+                        if keep_mfgs {
+                            all_mfgs.push(mfgs);
+                        }
+                    }
+                    // Drain to the epoch marker before fencing: it means
+                    // the sampler has charged every byte of this epoch
+                    // and is quiescent again (blocked on `go`).
+                    match items_rx.recv() {
+                        Ok(Produced::EpochEnd { epoch: e }) if e == epoch => {}
+                        Ok(_) => anyhow::bail!("prefetcher desynchronized at epoch boundary"),
+                        Err(_) => anyhow::bail!("sampler thread stopped early"),
+                    }
+                    epoch_deltas.push(comm.fenced_snapshot()?.diff(&mark));
+                }
+                Ok(())
+            };
+            let trainer = body();
+            drop(go_tx);
+            drop(items_rx);
+            if trainer.is_err() {
+                comm.cancel(&CommError::Io {
+                    peer: rank,
+                    detail: "trainer thread failed; sampling plane cancelled".into(),
+                });
             }
-            let batch_key = key.fold(epoch as u64).fold(b as u64 + 1);
-            let mfgs = sample_mfgs_distributed_wire(
-                comm,
-                &shard,
-                &mut view,
-                seeds,
-                fanouts,
-                batch_key,
-                &mut ws,
-                cfg.kernel,
-                cfg.sampling_wire,
-            )?;
-            fetch_features(comm, &shard, &mfgs[0].src_nodes, None, &mut feat)?;
-            // Deterministic digest: sequential f32 sum (fixed order) of
-            // the fetched features, plus the sampled-edge count — then
-            // rank-order all-reduced, so every rank (and every
-            // transport/process layout) holds the identical value.
-            let mut acc = 0.0f32;
-            for &x in &feat {
-                acc += x;
+            let sampler = match sampler.join() {
+                Ok(r) => r,
+                Err(p) => std::panic::resume_unwind(p),
+            };
+            merge_pipeline_outcome(trainer, sampler)
+        })?;
+    } else {
+        let mut feat = Vec::new();
+        for epoch in 0..cfg.epochs {
+            let mark = comm.fenced_snapshot()?;
+            let schedule =
+                MinibatchSchedule::new(&shard.train_local, batch, key.fold(epoch as u64));
+            for b in 0..batches {
+                let seeds = schedule.batch(b);
+                if epoch == 0 && b == 0 {
+                    first_seeds = seeds.to_vec();
+                }
+                let batch_key = key.fold(epoch as u64).fold(b as u64 + 1);
+                let mfgs = sample_mfgs_distributed_wire(
+                    &mut scomm,
+                    &shard,
+                    &mut view,
+                    seeds,
+                    fanouts,
+                    batch_key,
+                    &mut ws,
+                    cfg.kernel,
+                    cfg.sampling_wire,
+                )?;
+                fetch_features(&mut scomm, &shard, &mfgs[0].src_nodes, None, &mut feat)?;
+                // Deterministic digest: sequential f32 sum (fixed order)
+                // of the fetched features, plus the sampled-edge count —
+                // then rank-order all-reduced, so every rank (and every
+                // transport/process layout) holds the identical value.
+                let mut acc = 0.0f32;
+                for &x in &feat {
+                    acc += x;
+                }
+                let edges: usize = mfgs.iter().map(|m| m.num_edges()).sum();
+                let mut digest = [acc / (feat.len().max(1) as f32) + edges as f32 * 1e-3];
+                comm.all_reduce_mean_f32(RoundKind::GradSync, &mut digest)?;
+                curve.push(digest[0]);
+                steps += 1;
+                sampled_edges += edges as u64;
+                if keep_mfgs {
+                    all_mfgs.push(mfgs);
+                }
             }
-            let edges: usize = mfgs.iter().map(|m| m.num_edges()).sum();
-            let mut digest = [acc / (feat.len().max(1) as f32) + edges as f32 * 1e-3];
-            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut digest)?;
-            curve.push(digest[0]);
-            steps += 1;
-            sampled_edges += edges as u64;
-            if keep_mfgs {
-                all_mfgs.push(mfgs);
-            }
+            epoch_deltas.push(comm.fenced_snapshot()?.diff(&mark));
         }
     }
     Ok(SampleRankReport {
@@ -434,6 +552,7 @@ pub fn sample_rank(
         sampled_edges,
         mfgs: all_mfgs,
         seeds: first_seeds,
+        epoch_deltas,
         comm_total: comm.counters.snapshot(),
     })
 }
@@ -544,6 +663,13 @@ fn worker_loop(
         view.enable_cache(cfg.adj_cache_bytes, cfg.adj_cache_policy);
     }
 
+    // Sampling-plane handle: sampling misses and feature rounds ride it
+    // in **both** modes (so wire traffic, seq streams, and per-plane
+    // stats are mode-invariant); grad sync and the control rounds stay
+    // on the base gradient-plane handle. In pipelined mode this handle
+    // moves to the sampler thread.
+    let mut scomm = comm.plane(Plane::Sampling);
+
     // Optional remote-feature cache (paper §5 extension).
     let mut cache = (cfg.cache_capacity > 0).then(|| {
         FeatureCache::new(cfg.cache_policy, cfg.cache_capacity, shard.feat_dim)
@@ -562,7 +688,7 @@ fn worker_loop(
                 |v| shard.owns(v),
                 cfg.cache_capacity,
             );
-            crate::dist::feature_store::prefill_cache(comm, shard, &hot, c)?;
+            crate::dist::feature_store::prefill_cache(&mut scomm, shard, &hot, c)?;
         }
     }
 
@@ -583,113 +709,299 @@ fn worker_loop(
     let mut epochs = Vec::with_capacity(cfg.epochs);
     let mut loss_curve = Vec::new();
     let mut grad_buf: Vec<f32> = Vec::new();
-    let mut feat_buf: Vec<f32> = Vec::new();
     let sched = cfg.schedule.build(variant.fanouts.clone());
     let mut smoothed_loss: Option<f32> = None;
 
-    for epoch in 0..cfg.epochs {
-        // Fenced epoch mark: the counters are fabric-global, so the
-        // per-epoch delta is only exact if no rank can charge this
-        // epoch's first bytes before every rank has taken the snapshot.
-        let epoch_mark = comm.fenced_snapshot()?;
-        let comm_before = (rank == 0).then_some(epoch_mark);
-        let epoch_sw = Stopwatch::start();
-        let mut times = PhaseTimes::default();
-        let mut loss_sum = 0f64;
-        let mut batch_acc = None;
-
-        let schedule =
-            MinibatchSchedule::new(&shard.train_local, variant.batch, key.fold(epoch as u64));
-        // Fanouts for this epoch (Fixed ⇒ the variant's compiled tuple).
-        let fanouts = sched.fanouts(epoch, smoothed_loss);
-        debug_assert!(fanouts.iter().zip(&variant.fanouts).all(|(a, b)| a <= b));
-
-        for b in 0..batches {
-            let seeds = schedule.batch(b);
-            let batch_key = key.fold(epoch as u64).fold(b as u64 + 1);
-            let mut sw = Stopwatch::start();
-
-            // ---- Phase 1: sampling (0..=2(L−1) measured rounds; the
-            // adjacency cache makes later batches/epochs cheaper).
-            let mfgs = sample_mfgs_distributed_wire(
-                comm,
-                shard,
-                &mut view,
-                seeds,
-                &fanouts,
-                batch_key,
-                &mut ws,
-                cfg.kernel,
-                cfg.sampling_wire,
-            )?;
-            times.sample_s += sw.lap();
-
-            // ---- Phase 2: input feature exchange (2 rounds).
-            let input_nodes = &mfgs[0].src_nodes;
-            fetch_features(comm, shard, input_nodes, cache.as_mut(), &mut feat_buf)?;
-            times.feature_s += sw.lap();
-
-            // ---- Phase 3: padded AOT train step.
-            let labels = &shard.labels;
-            let padded =
-                pad_batch(variant, &mfgs, &feat_buf, |v| labels[v as usize])?;
-            let dropout_seed = (epoch * batches + b) as i32;
-            let out = rt.train_step(&params, &padded, dropout_seed)?;
-            ensure!(out.loss.is_finite(), "loss diverged at epoch {epoch} batch {b}");
-            loss_sum += out.loss as f64;
-            if rank == 0 {
-                loss_curve.push(out.loss);
-            }
-            times.compute_s += sw.lap();
-
-            // ---- Phase 4: gradient all-reduce + local update.
-            flatten_into(&out.grads, &mut grad_buf);
-            comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad_buf)?;
-            let mut grads = out.grads;
-            unflatten_from(&grad_buf, &mut grads);
-            opt.step(&mut params, &grads)?;
-            times.sync_s += sw.lap();
-
-            // ---- Optional accuracy on the final batch of the epoch.
-            if cfg.eval_last_batch && b == batches - 1 {
-                let ev = rt.eval_step(&params, &padded)?;
-                batch_acc =
-                    Some(accuracy(&ev.logits, &padded.labels, &padded.label_mask));
-            }
-        }
-
-        // Fenced like the epoch start, so the delta stays exact even if
-        // a future step charges bytes right after the epoch loop.
-        let comm_end = comm.fenced_snapshot()?;
-        let mut sw_end = epoch_sw;
-        let wall_s = sw_end.lap();
-        smoothed_loss = Some((loss_sum / batches as f64) as f32);
-        let comm_delta = comm_before.map(|before| comm_end.diff(&before));
-        let stats = EpochStats {
-            epoch,
+    if cfg.pipeline {
+        // Pipelined: a sampler thread produces minibatch t+1 (phases 1+2
+        // on the Sampling plane, owning view/workspace/cache so every
+        // RNG cursor and cache insert happens in serial order) into a
+        // depth-1 channel while this thread runs phases 3+4 on batch t.
+        let plan = ProducerPlan {
+            key,
+            epochs: cfg.epochs,
             batches,
-            mean_loss: (loss_sum / batches as f64) as f32,
-            times,
-            wall_s,
-            comm: comm_delta,
-            batch_acc,
+            batch: variant.batch,
+            kernel: cfg.kernel,
+            wire: cfg.sampling_wire,
         };
-        if cfg.verbose && rank == 0 {
-            eprintln!(
-                "[epoch {epoch}] loss {:.4} wall {:.2}s sample {:.2}s feat {:.2}s compute {:.2}s sync {:.2}s acc {:?}",
-                stats.mean_loss,
-                stats.wall_s,
-                stats.times.sample_s,
-                stats.times.feature_s,
-                stats.times.compute_s,
-                stats.times.sync_s,
-                stats.batch_acc
+        let (items_tx, items_rx) = mpsc::sync_channel::<Produced>(1);
+        let (go_tx, go_rx) = mpsc::channel::<Vec<usize>>();
+        std::thread::scope(|s| {
+            let sampler = {
+                let scomm = &mut scomm;
+                let view = &mut view;
+                let ws = &mut ws;
+                let cache = cache.as_mut();
+                let plan = &plan;
+                s.spawn(move || -> Result<(), CommError> {
+                    sampler_epochs(scomm, shard, view, ws, cache, plan, &items_tx, &go_rx)
+                })
+            };
+            let mut body = || -> Result<()> {
+                for epoch in 0..cfg.epochs {
+                    // Fenced epoch mark, exactly as in the serial arm —
+                    // the sampler is quiescent (blocked on `go`) across
+                    // it, so the delta cuts at the same traffic point.
+                    let epoch_mark = comm.fenced_snapshot()?;
+                    let comm_before = (rank == 0).then_some(epoch_mark);
+                    let epoch_sw = Stopwatch::start();
+                    let mut times = PhaseTimes::default();
+                    let mut loss_sum = 0f64;
+                    let mut batch_acc = None;
+
+                    // Fanouts ride the go channel: Plateau needs this
+                    // thread's smoothed loss.
+                    let fanouts = sched.fanouts(epoch, smoothed_loss);
+                    debug_assert!(fanouts.iter().zip(&variant.fanouts).all(|(a, b)| a <= b));
+                    let _ = go_tx.send(fanouts);
+
+                    for b in 0..batches {
+                        let mut sw = Stopwatch::start();
+                        // ---- Phases 1+2 collapse into the wait for the
+                        // prefetched item: sample_s measures only the
+                        // *exposed* sampling + fetch latency (feature_s
+                        // stays 0 — the split happens off-thread).
+                        let item = items_rx
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("sampler thread stopped early"))?;
+                        let Produced::Batch { epoch: ie, index, mfgs, feats, .. } = item
+                        else {
+                            anyhow::bail!("prefetcher sent an epoch marker mid-epoch");
+                        };
+                        ensure!(
+                            (ie, index) == (epoch, b),
+                            "prefetcher out of order: got ({ie},{index}), want ({epoch},{b})"
+                        );
+                        times.sample_s += sw.lap();
+
+                        // ---- Phase 3: padded AOT train step (identical
+                        // to the serial arm).
+                        let labels = &shard.labels;
+                        let padded =
+                            pad_batch(variant, &mfgs, &feats, |v| labels[v as usize])?;
+                        let dropout_seed = (epoch * batches + b) as i32;
+                        let out = rt.train_step(&params, &padded, dropout_seed)?;
+                        ensure!(
+                            out.loss.is_finite(),
+                            "loss diverged at epoch {epoch} batch {b}"
+                        );
+                        loss_sum += out.loss as f64;
+                        if rank == 0 {
+                            loss_curve.push(out.loss);
+                        }
+                        times.compute_s += sw.lap();
+
+                        // ---- Phase 4: gradient all-reduce + update, on
+                        // the gradient plane, concurrent with the
+                        // sampler's in-flight rounds.
+                        flatten_into(&out.grads, &mut grad_buf);
+                        comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad_buf)?;
+                        let mut grads = out.grads;
+                        unflatten_from(&grad_buf, &mut grads);
+                        opt.step(&mut params, &grads)?;
+                        times.sync_s += sw.lap();
+
+                        // ---- Optional accuracy on the final batch.
+                        if cfg.eval_last_batch && b == batches - 1 {
+                            let ev = rt.eval_step(&params, &padded)?;
+                            batch_acc = Some(accuracy(
+                                &ev.logits,
+                                &padded.labels,
+                                &padded.label_mask,
+                            ));
+                        }
+                    }
+
+                    // Drain to the epoch marker before the end fence: it
+                    // means the sampler has charged every byte of this
+                    // epoch and is quiescent again, so the fenced delta
+                    // is pipeline-invariant.
+                    match items_rx.recv() {
+                        Ok(Produced::EpochEnd { epoch: e }) if e == epoch => {}
+                        Ok(_) => anyhow::bail!("prefetcher desynchronized at epoch boundary"),
+                        Err(_) => anyhow::bail!("sampler thread stopped early"),
+                    }
+                    let comm_end = comm.fenced_snapshot()?;
+                    let mut sw_end = epoch_sw;
+                    let wall_s = sw_end.lap();
+                    smoothed_loss = Some((loss_sum / batches as f64) as f32);
+                    let comm_delta = comm_before.map(|before| comm_end.diff(&before));
+                    let stats = EpochStats {
+                        epoch,
+                        batches,
+                        mean_loss: (loss_sum / batches as f64) as f32,
+                        times,
+                        wall_s,
+                        comm: comm_delta,
+                        batch_acc,
+                    };
+                    if cfg.verbose && rank == 0 {
+                        eprintln!(
+                            "[epoch {epoch}] loss {:.4} wall {:.2}s sample {:.2}s feat {:.2}s compute {:.2}s sync {:.2}s acc {:?}",
+                            stats.mean_loss,
+                            stats.wall_s,
+                            stats.times.sample_s,
+                            stats.times.feature_s,
+                            stats.times.compute_s,
+                            stats.times.sync_s,
+                            stats.batch_acc
+                        );
+                    }
+                    epochs.push(stats);
+                }
+                Ok(())
+            };
+            let trainer = body();
+            // Closing both channel ends tells a still-healthy sampler to
+            // exit at its next send/recv; cancelling the fabric wakes one
+            // that is blocked mid-collective.
+            drop(go_tx);
+            drop(items_rx);
+            if trainer.is_err() {
+                comm.cancel(&CommError::Io {
+                    peer: rank,
+                    detail: "trainer thread failed; sampling plane cancelled".into(),
+                });
+            }
+            let sampler = match sampler.join() {
+                Ok(r) => r,
+                Err(p) => std::panic::resume_unwind(p),
+            };
+            merge_pipeline_outcome(trainer, sampler)
+        })?;
+    } else {
+        let mut feat_buf: Vec<f32> = Vec::new();
+        for epoch in 0..cfg.epochs {
+            // Fenced epoch mark: the counters are fabric-global, so the
+            // per-epoch delta is only exact if no rank can charge this
+            // epoch's first bytes before every rank has taken the
+            // snapshot.
+            let epoch_mark = comm.fenced_snapshot()?;
+            let comm_before = (rank == 0).then_some(epoch_mark);
+            let epoch_sw = Stopwatch::start();
+            let mut times = PhaseTimes::default();
+            let mut loss_sum = 0f64;
+            let mut batch_acc = None;
+
+            let schedule = MinibatchSchedule::new(
+                &shard.train_local,
+                variant.batch,
+                key.fold(epoch as u64),
             );
+            // Fanouts for this epoch (Fixed ⇒ the compiled tuple).
+            let fanouts = sched.fanouts(epoch, smoothed_loss);
+            debug_assert!(fanouts.iter().zip(&variant.fanouts).all(|(a, b)| a <= b));
+
+            for b in 0..batches {
+                let seeds = schedule.batch(b);
+                let batch_key = key.fold(epoch as u64).fold(b as u64 + 1);
+                let mut sw = Stopwatch::start();
+
+                // ---- Phase 1: sampling (0..=2(L−1) measured rounds; the
+                // adjacency cache makes later batches/epochs cheaper).
+                let mfgs = sample_mfgs_distributed_wire(
+                    &mut scomm,
+                    shard,
+                    &mut view,
+                    seeds,
+                    &fanouts,
+                    batch_key,
+                    &mut ws,
+                    cfg.kernel,
+                    cfg.sampling_wire,
+                )?;
+                times.sample_s += sw.lap();
+
+                // ---- Phase 2: input feature exchange (2 rounds).
+                let input_nodes = &mfgs[0].src_nodes;
+                fetch_features(&mut scomm, shard, input_nodes, cache.as_mut(), &mut feat_buf)?;
+                times.feature_s += sw.lap();
+
+                // ---- Phase 3: padded AOT train step.
+                let labels = &shard.labels;
+                let padded =
+                    pad_batch(variant, &mfgs, &feat_buf, |v| labels[v as usize])?;
+                let dropout_seed = (epoch * batches + b) as i32;
+                let out = rt.train_step(&params, &padded, dropout_seed)?;
+                ensure!(out.loss.is_finite(), "loss diverged at epoch {epoch} batch {b}");
+                loss_sum += out.loss as f64;
+                if rank == 0 {
+                    loss_curve.push(out.loss);
+                }
+                times.compute_s += sw.lap();
+
+                // ---- Phase 4: gradient all-reduce + local update.
+                flatten_into(&out.grads, &mut grad_buf);
+                comm.all_reduce_mean_f32(RoundKind::GradSync, &mut grad_buf)?;
+                let mut grads = out.grads;
+                unflatten_from(&grad_buf, &mut grads);
+                opt.step(&mut params, &grads)?;
+                times.sync_s += sw.lap();
+
+                // ---- Optional accuracy on the final batch of the epoch.
+                if cfg.eval_last_batch && b == batches - 1 {
+                    let ev = rt.eval_step(&params, &padded)?;
+                    batch_acc =
+                        Some(accuracy(&ev.logits, &padded.labels, &padded.label_mask));
+                }
+            }
+
+            // Fenced like the epoch start, so the delta stays exact even
+            // if a future step charges bytes right after the epoch loop.
+            let comm_end = comm.fenced_snapshot()?;
+            let mut sw_end = epoch_sw;
+            let wall_s = sw_end.lap();
+            smoothed_loss = Some((loss_sum / batches as f64) as f32);
+            let comm_delta = comm_before.map(|before| comm_end.diff(&before));
+            let stats = EpochStats {
+                epoch,
+                batches,
+                mean_loss: (loss_sum / batches as f64) as f32,
+                times,
+                wall_s,
+                comm: comm_delta,
+                batch_acc,
+            };
+            if cfg.verbose && rank == 0 {
+                eprintln!(
+                    "[epoch {epoch}] loss {:.4} wall {:.2}s sample {:.2}s feat {:.2}s compute {:.2}s sync {:.2}s acc {:?}",
+                    stats.mean_loss,
+                    stats.wall_s,
+                    stats.times.sample_s,
+                    stats.times.feature_s,
+                    stats.times.compute_s,
+                    stats.times.sync_s,
+                    stats.batch_acc
+                );
+            }
+            epochs.push(stats);
         }
-        epochs.push(stats);
     }
 
     Ok(WorkerResult { epochs, loss_curve })
+}
+
+/// Combine the trainer-side and sampler-side results of a pipelined run,
+/// preferring the **root cause** over cascade fallout: a trainer error
+/// that is just "the sampler's channel closed" (or the PeerLost wake
+/// that a sampler-side failure triggers on the gradient plane via the
+/// shared endpoint) defers to the sampler's typed error.
+fn merge_pipeline_outcome(trainer: Result<()>, sampler: Result<(), CommError>) -> Result<()> {
+    match (trainer, sampler) {
+        (Ok(()), Ok(())) => Ok(()),
+        (Ok(()), Err(se)) => Err(anyhow::Error::new(se).context("sampler thread")),
+        (Err(te), Ok(())) => Err(te),
+        (Err(te), Err(se)) => {
+            let cascade = te.to_string().contains("sampler thread stopped early")
+                || matches!(te.downcast_ref::<CommError>(), Some(CommError::PeerLost { .. }));
+            if cascade {
+                Err(anyhow::Error::new(se).context("sampler thread"))
+            } else {
+                Err(te)
+            }
+        }
+    }
 }
 
 /// Concatenate grad tensors into one flat buffer (reused across steps).
@@ -806,5 +1118,21 @@ mod tests {
         assert_eq!(all.kernel, KernelKind::Fused);
         assert_eq!(all.adj_cache_bytes, 8 << 10);
         assert!(TrainConfig::mode("x", "vanilla+wire:columnar", 4).is_err());
+    }
+
+    #[test]
+    fn mode_pipe_suffix_enables_the_prefetcher() {
+        let plain = TrainConfig::mode("x", "vanilla", 4).unwrap();
+        assert!(!plain.pipeline);
+        let p = TrainConfig::mode("x", "vanilla+pipe", 4).unwrap();
+        assert!(p.pipeline);
+        // Composes with the other options in any order.
+        let all =
+            TrainConfig::mode("x", "budget:64k+pipe+cache:8k+fused+wire:scalar", 4).unwrap();
+        assert!(all.pipeline);
+        assert_eq!(all.kernel, KernelKind::Fused);
+        assert_eq!(all.adj_cache_bytes, 8 << 10);
+        assert_eq!(all.sampling_wire, SamplingWire::Scalar);
+        assert!(TrainConfig::mode("x", "vanilla+pipe:2", 4).is_err());
     }
 }

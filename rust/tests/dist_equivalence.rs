@@ -18,6 +18,10 @@
 //!   MFGs, rounds, and request bytes; bulk response bytes never exceed
 //!   scalar's — and malformed bulk frames fail the round as
 //!   `CommError::Malformed` instead of panicking or hanging.
+//! * The double-buffered MFG prefetcher (`--pipeline on`) is bit-exact
+//!   against the serial phases at every {policy × cache × wire} grid
+//!   point, including the multi-epoch adjacency-cache decay trajectory
+//!   (pinned per epoch by the fenced counter deltas).
 
 use std::sync::Arc;
 
@@ -33,6 +37,7 @@ use fastsample::partition::{
 };
 use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{sample_mfgs, KernelKind, Mfg, SamplerWorkspace};
+use fastsample::train::{sample_rank, SampleRankReport, TrainConfig};
 
 fn dataset() -> Dataset {
     make_dataset(&DatasetParams {
@@ -392,6 +397,81 @@ fn adjacency_cache_decays_request_traffic_across_epochs() {
         assert!(b2 < b1, "warm epoch must issue strictly fewer request bytes");
         assert_eq!(b2, 0, "cache larger than the miss set should absorb everything");
         assert_eq!(s2.sampling_rounds(), 0, "warm epoch should vote every exchange away");
+    }
+}
+
+/// One pipelined-vs-serial cell: the full per-rank `sample_rank` reports
+/// (digest curve, MFGs, seeds, per-epoch fenced deltas, counter totals)
+/// under `mode` over the in-process mesh.
+fn run_pipeline_cell(d: &Dataset, mode: &str, pipeline: bool) -> Vec<SampleRankReport> {
+    let mut cfg = TrainConfig::mode("quickstart", mode, 4).unwrap();
+    cfg.epochs = 2;
+    cfg.max_batches = Some(2);
+    cfg.net = NetworkModel::free();
+    cfg.seed = 5;
+    cfg.verbose = false;
+    cfg.pipeline = pipeline;
+    let cfg_ref = &cfg;
+    run_workers_with(4, NetworkModel::free(), Arc::new(Counters::default()), {
+        move |rank, comm| sample_rank(d, cfg_ref, 12, &[4, 3], true, rank, comm).unwrap()
+    })
+}
+
+/// The prefetcher acceptance grid: at every {replication policy ×
+/// adjacency cache × sampling wire} point, `--pipeline on` produces
+/// reports bit-identical to the serial phases — the digest curve plays
+/// the loss curve's role, the retained MFGs pin the sampled stream, and
+/// the fenced per-epoch deltas pin the wire traffic epoch by epoch.
+#[test]
+fn pipeline_on_off_is_bit_identical_across_the_grid() {
+    let d = dataset();
+    for policy in ["vanilla", "budget:4k", "hybrid"] {
+        for cache in ["", "+cache:16k"] {
+            for wire in ["+wire:scalar", "+wire:bulk"] {
+                let mode = format!("{policy}{cache}{wire}");
+                let serial = run_pipeline_cell(&d, &mode, false);
+                let piped = run_pipeline_cell(&d, &mode, true);
+                assert_eq!(serial, piped, "{mode}: --pipeline on diverged from serial");
+                assert!(!piped[0].curve.is_empty(), "{mode}: ran no steps — test too weak");
+            }
+        }
+    }
+}
+
+/// The decay-over-pipeline pin: with an adjacency cache larger than the
+/// miss set, the per-epoch fenced deltas show `SampleRequest` traffic
+/// decaying across epochs — and the whole trajectory is bit-identical
+/// under `--pipeline on|off`, because cache inserts and RNG cursors
+/// live on the sampler thread in both modes.
+#[test]
+fn cache_decay_trajectory_is_pipeline_invariant() {
+    let d = dataset();
+    let run = |pipeline: bool| -> Vec<SampleRankReport> {
+        let mut cfg = TrainConfig::mode("quickstart", "vanilla+cache:inf", 4).unwrap();
+        cfg.epochs = 3;
+        cfg.max_batches = Some(3);
+        cfg.net = NetworkModel::free();
+        cfg.seed = 17;
+        cfg.verbose = false;
+        cfg.pipeline = pipeline;
+        let d_ref = &d;
+        let cfg_ref = &cfg;
+        run_workers_with(4, NetworkModel::free(), Arc::new(Counters::default()), {
+            move |rank, comm| sample_rank(d_ref, cfg_ref, 12, &[4, 3], true, rank, comm).unwrap()
+        })
+    };
+    let serial = run(false);
+    let piped = run(true);
+    assert_eq!(serial, piped, "decay trajectory diverged under --pipeline on");
+    for r in &serial {
+        let req: Vec<u64> =
+            r.epoch_deltas.iter().map(|s| s.bytes_of(RoundKind::SampleRequest)).collect();
+        assert_eq!(req.len(), 3, "one fenced delta per epoch");
+        assert!(req[0] > 0, "cold epoch should pay request bytes on this graph");
+        assert!(
+            req[2] < req[0],
+            "unbounded cache must decay request traffic across epochs: {req:?}"
+        );
     }
 }
 

@@ -16,6 +16,8 @@
 //!   totals.
 //! * A rank that exits early must surface as `CommError::PeerLost` in
 //!   every survivor — no hang — bounded by a hard parent-side deadline.
+//! * Children running `--pipeline on` (the double-buffered MFG
+//!   prefetcher) stay bit-equal to the serial in-process run.
 //! * With AOT artifacts present, the same harness runs real training
 //!   (`train_rank`) and pins the loss curve (skips politely otherwise,
 //!   like `train_e2e`).
@@ -52,13 +54,14 @@ fn sample_dataset() -> Dataset {
 }
 
 /// The sample-task config every rank (thread or process) runs with.
-fn task_config(world: usize, epochs: usize, max_batches: usize) -> TrainConfig {
+fn task_config(world: usize, epochs: usize, max_batches: usize, pipeline: bool) -> TrainConfig {
     let mut cfg = TrainConfig::mode("quickstart", "vanilla", world).unwrap();
     cfg.epochs = epochs;
     cfg.max_batches = Some(max_batches);
     cfg.net = NetworkModel::free();
     cfg.seed = 7;
     cfg.verbose = false;
+    cfg.pipeline = pipeline;
     cfg
 }
 
@@ -150,6 +153,9 @@ fn spawned_worker_child_entry() {
     let epochs: usize = std::env::var("FASTSAMPLE_TEST_CHILD_EPOCHS").unwrap().parse().unwrap();
     let steps: usize = std::env::var("FASTSAMPLE_TEST_CHILD_STEPS").unwrap().parse().unwrap();
     let task = std::env::var("FASTSAMPLE_TEST_CHILD_TASK").unwrap_or_else(|_| "sample".into());
+    let pipeline = std::env::var("FASTSAMPLE_TEST_CHILD_PIPELINE")
+        .map(|v| v == "on")
+        .unwrap_or(false);
     let counters = Arc::new(Counters::default());
 
     let body = if task == "train" {
@@ -186,7 +192,7 @@ fn spawned_worker_child_entry() {
         }
     } else {
         let d = sample_dataset();
-        let cfg = task_config(peers.len(), epochs, steps);
+        let cfg = task_config(peers.len(), epochs, steps, pipeline);
         let result = run_worker_process(
             rank,
             &peers,
@@ -226,6 +232,7 @@ struct ChildSpec {
     steps: usize,
     epochs: usize,
     task: &'static str,
+    pipeline: bool,
 }
 
 /// Re-exec this test binary as one worker child, filtered down to the
@@ -239,6 +246,7 @@ fn spawn_child(spec: &ChildSpec, peers_csv: &str, out: &PathBuf) -> Child {
         .env("FASTSAMPLE_TEST_CHILD_EPOCHS", spec.epochs.to_string())
         .env("FASTSAMPLE_TEST_CHILD_STEPS", spec.steps.to_string())
         .env("FASTSAMPLE_TEST_CHILD_TASK", spec.task)
+        .env("FASTSAMPLE_TEST_CHILD_PIPELINE", if spec.pipeline { "on" } else { "off" })
         .stdout(Stdio::null())
         .spawn()
         .expect("spawn child worker process")
@@ -291,7 +299,7 @@ fn four_child_processes_match_the_in_process_channel_mesh() {
     for rank in 0..WORLD {
         let out = out_path("match", rank);
         let _ = std::fs::remove_file(&out);
-        let spec = ChildSpec { rank, steps: 2, epochs: 2, task: "sample" };
+        let spec = ChildSpec { rank, steps: 2, epochs: 2, task: "sample", pipeline: false };
         children.push((rank, spawn_child(&spec, &peers, &out)));
         outs.push(out);
     }
@@ -300,7 +308,7 @@ fn four_child_processes_match_the_in_process_channel_mesh() {
     // Ground truth: the same per-rank workload over the in-process
     // channel mesh (shared counters — snapshot after all threads join).
     let d = sample_dataset();
-    let cfg = task_config(WORLD, 2, 2);
+    let cfg = task_config(WORLD, 2, 2, false);
     let counters = Arc::new(Counters::default());
     let d_ref = &d;
     let cfg_ref = &cfg;
@@ -345,6 +353,48 @@ fn four_child_processes_match_the_in_process_channel_mesh() {
     assert!(global.total_bytes() > 0, "workload moved no data — test too weak");
 }
 
+/// The pipelined prefetcher across real OS processes: 4 children running
+/// `--pipeline on` must be bit-identical to the SERIAL in-process channel
+/// mesh — one comparison pinning the process layout and the pipeline
+/// mode at the same time.
+#[test]
+fn pipelined_child_processes_match_the_serial_in_process_mesh() {
+    let peers = free_peer_csv(WORLD);
+    let mut children = Vec::new();
+    let mut outs = Vec::new();
+    for rank in 0..WORLD {
+        let out = out_path("pipe", rank);
+        let _ = std::fs::remove_file(&out);
+        let spec = ChildSpec { rank, steps: 2, epochs: 2, task: "sample", pipeline: true };
+        children.push((rank, spawn_child(&spec, &peers, &out)));
+        outs.push(out);
+    }
+    join_children(children, 180);
+
+    let d = sample_dataset();
+    let cfg = task_config(WORLD, 2, 2, false); // serial phases: the ground truth
+    let d_ref = &d;
+    let cfg_ref = &cfg;
+    let expected = run_workers_with(
+        WORLD,
+        NetworkModel::free(),
+        Arc::new(Counters::default()),
+        move |rank, comm| sample_rank(d_ref, cfg_ref, BATCH, &FANOUTS, true, rank, comm).unwrap(),
+    );
+    for (rank, out) in outs.iter().enumerate() {
+        let text = std::fs::read_to_string(out)
+            .unwrap_or_else(|e| panic!("child rank {rank} wrote no report: {e}"));
+        // Skip the two counter lines; the body must be bit-identical.
+        let body: String = text.lines().skip(2).map(|l| format!("{l}\n")).collect();
+        assert_eq!(
+            body,
+            encode_body(&expected[rank]),
+            "rank {rank}: pipelined multi-process run diverged from the serial mesh"
+        );
+        let _ = std::fs::remove_file(out);
+    }
+}
+
 /// A rank that finishes early and exits (its process gone, sockets
 /// closed by the OS) must surface as a clean `CommError` in every
 /// survivor — no hang — well within the deadline.
@@ -358,7 +408,7 @@ fn early_exiting_rank_surfaces_comm_error_in_survivors_without_hanging() {
         let _ = std::fs::remove_file(&out);
         // Rank 1 caps itself at 1 step and exits; the others expect 3.
         let steps = if rank == 1 { 1 } else { 3 };
-        let spec = ChildSpec { rank, steps, epochs: 1, task: "sample" };
+        let spec = ChildSpec { rank, steps, epochs: 1, task: "sample", pipeline: false };
         children.push((rank, spawn_child(&spec, &peers, &out)));
         outs.push(out);
     }
@@ -397,7 +447,7 @@ fn multi_process_loss_curve_matches_in_process_training() {
     for rank in 0..WORLD {
         let out = out_path("train", rank);
         let _ = std::fs::remove_file(&out);
-        let spec = ChildSpec { rank, steps: 2, epochs: 2, task: "train" };
+        let spec = ChildSpec { rank, steps: 2, epochs: 2, task: "train", pipeline: false };
         children.push((rank, spawn_child(&spec, &peers, &out)));
         outs.push(out);
     }

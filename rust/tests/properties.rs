@@ -532,6 +532,9 @@ fn prop_frame_codec_round_trips_any_payload() {
                 Frame {
                     kind,
                     elem: [1u8, 4, 8][s.next_below(3)],
+                    // Any plane byte must round-trip: the codec does not
+                    // validate planes (only the endpoint demux does).
+                    plane: s.next_u64() as u8,
                     src: s.next_u64() as u16,
                     seq: s.next_u64() as u32,
                     payload: (0..len).map(|_| s.next_u64() as u8).collect(),
@@ -571,7 +574,7 @@ fn prop_interleaved_frames_demultiplex_by_source() {
         let meshes = TcpMesh::loopback(world, 0).unwrap();
         let handles: Vec<_> = meshes
             .into_iter()
-            .map(|mut t| {
+            .map(|t| {
                 let jitter = jitter.clone();
                 std::thread::spawn(move || {
                     let rank = t.rank();
@@ -586,6 +589,7 @@ fn prop_interleaved_frames_demultiplex_by_source() {
                                 Frame {
                                     kind: (round % 200) as u8,
                                     elem: 1,
+                                    plane: (round % 2) as u8,
                                     src: rank as u16,
                                     seq: round as u32,
                                     payload: payload(rank, dst, round),

@@ -1,8 +1,9 @@
 //! Tier-1 gate: the shipped tree honors the SPMD fabric contract.
 //!
-//! `spmd-lint` walks every source file and reports R1-R5 violations
+//! `spmd-lint` walks every source file and reports R1-R6 violations
 //! (rank-divergent collectives, panics in dist/, dropped fabric errors,
-//! RoundKind coverage holes, sends under a held lock). The tree ships at
+//! RoundKind coverage holes, sends under a held lock, plane switches in
+//! sampler-thread code). The tree ships at
 //! ZERO findings — if this test fails, fix the code or add a justified
 //! `// spmd-lint: allow(<rule>) — <why>` at the site, never here.
 

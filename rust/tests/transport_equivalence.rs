@@ -11,19 +11,24 @@
 //! * **Accounting** — `CommStats` byte counters equal the sum of framed
 //!   payload lengths actually handed to the transport (verified by a
 //!   counting wrapper under the real mesh).
+//! * **Pipelining** — `--pipeline on` (the double-buffered MFG
+//!   prefetcher on the Sampling plane) is bit-identical to the serial
+//!   phases on both transports: same digest curve, MFGs, seeds,
+//!   per-epoch fenced deltas, and counter totals.
 //! * **Fault injection** — a [`FlakyTransport`] wrapper (deterministic
 //!   seeded delays; short writes via `TcpMesh::set_max_chunk`) must not
 //!   change a single bit; a peer dropping mid-round must surface as a
 //!   clean `CommError::PeerLost` naming a peer on every survivor — no
-//!   deadlock, no panic (bounded by an explicit test deadline).
+//!   deadlock, no panic (bounded by an explicit test deadline) — and a
+//!   mid-epoch death must poison BOTH communication planes promptly.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use fastsample::dist::{
     fetch_features, run_workers_on, run_workers_over, sample_mfgs_distributed,
     sample_mfgs_distributed_wire, CachePolicy, CommError, CommStats, Counters, Frame,
-    NetworkModel, RoundKind, SamplingWire, TcpMesh, Transport, TransportConfig,
+    NetworkModel, Plane, RoundKind, SamplingWire, TcpMesh, Transport, TransportConfig,
 };
 use fastsample::graph::generator::{make_dataset, DatasetParams};
 use fastsample::graph::{Dataset, NodeId};
@@ -32,7 +37,7 @@ use fastsample::partition::{
 };
 use fastsample::sampling::rng::{RngKey, RngStream};
 use fastsample::sampling::{sample_mfgs, KernelKind, Mfg, SamplerWorkspace};
-use fastsample::train::{train_distributed, TrainConfig};
+use fastsample::train::{sample_rank, train_distributed, SampleRankReport, TrainConfig};
 
 const WORKERS: usize = 3;
 const BATCHES: u64 = 3;
@@ -259,6 +264,48 @@ fn loss_curves_are_bit_identical_across_transports() {
     }
 }
 
+/// The prefetcher arm: `--pipeline on` (a sampler thread producing
+/// minibatch t+1 into a depth-1 channel on the Sampling plane while the
+/// trainer consumes t) is bit-identical to the serial phases — same
+/// digest curve, MFGs, seeds, per-epoch fenced deltas, and counter
+/// totals — on the channel mesh AND over loopback TCP, and all four
+/// (transport, pipeline) cells agree with each other.
+#[test]
+fn pipelined_sampling_is_bit_identical_on_both_transports() {
+    let d = dataset();
+    let run = |config: &TransportConfig, pipeline: bool| -> Vec<SampleRankReport> {
+        let mut cfg = TrainConfig::mode("quickstart", "vanilla+cache:16k", WORKERS).unwrap();
+        cfg.epochs = 2;
+        cfg.max_batches = Some(3);
+        cfg.net = NetworkModel::free();
+        cfg.seed = 11;
+        cfg.verbose = false;
+        cfg.pipeline = pipeline;
+        let d_ref = &d;
+        let cfg_ref = &cfg;
+        run_workers_on(
+            config,
+            WORKERS,
+            NetworkModel::free(),
+            Arc::new(Counters::default()),
+            move |rank, comm| sample_rank(d_ref, cfg_ref, 8, &FANOUTS, true, rank, comm).unwrap(),
+        )
+        .expect("transport setup")
+    };
+    let mut baseline: Option<Vec<SampleRankReport>> = None;
+    for config in [TransportConfig::Inproc, TransportConfig::Tcp { base_port: 0 }] {
+        let serial = run(&config, false);
+        let piped = run(&config, true);
+        assert_eq!(serial, piped, "{config}: --pipeline on diverged from the serial phases");
+        assert_eq!(piped[0].epoch_deltas.len(), 2, "{config}: one fenced delta per epoch");
+        assert!(!piped[0].curve.is_empty(), "{config}: workload ran no steps — test too weak");
+        match &baseline {
+            None => baseline = Some(serial),
+            Some(b) => assert_eq!(b, &serial, "{config}: diverged from the inproc baseline"),
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Fault injection
 // ---------------------------------------------------------------------------
@@ -266,10 +313,12 @@ fn loss_curves_are_bit_identical_across_transports() {
 /// Test wrapper around any transport: deterministic seeded delays before
 /// every send/recv (so frame arrivals interleave differently from the
 /// lockstep schedule) and an exact count of data-round payload bytes
-/// handed to the wire (for the accounting assertion).
+/// handed to the wire (for the accounting assertion). The jitter stream
+/// sits behind a mutex because the `&self` transport contract lets both
+/// plane owners call in concurrently.
 struct FlakyTransport {
     inner: Box<dyn Transport>,
-    rng: RngStream,
+    rng: Mutex<RngStream>,
     delay_max_us: usize,
     data_bytes: Arc<AtomicU64>,
 }
@@ -279,15 +328,15 @@ impl FlakyTransport {
         let rank = inner.rank() as u64;
         FlakyTransport {
             inner,
-            rng: RngKey::new(seed).fold(rank).stream(0),
+            rng: Mutex::new(RngKey::new(seed).fold(rank).stream(0)),
             delay_max_us,
             data_bytes: Arc::new(AtomicU64::new(0)),
         }
     }
 
-    fn jitter(&mut self) {
+    fn jitter(&self) {
         if self.delay_max_us > 0 {
-            let us = self.rng.next_below(self.delay_max_us) as u64;
+            let us = self.rng.lock().unwrap().next_below(self.delay_max_us) as u64;
             if us > 0 {
                 std::thread::sleep(std::time::Duration::from_micros(us));
             }
@@ -304,7 +353,7 @@ impl Transport for FlakyTransport {
         self.inner.world()
     }
 
-    fn send(&mut self, dst: usize, frame: Frame) -> Result<(), CommError> {
+    fn send(&self, dst: usize, frame: Frame) -> Result<(), CommError> {
         if (frame.kind as usize) < RoundKind::COUNT {
             self.data_bytes.fetch_add(frame.payload.len() as u64, Ordering::Relaxed);
         }
@@ -312,11 +361,11 @@ impl Transport for FlakyTransport {
         self.inner.send(dst, frame)
     }
 
-    fn flush(&mut self) -> Result<(), CommError> {
+    fn flush(&self) -> Result<(), CommError> {
         self.inner.flush()
     }
 
-    fn recv(&mut self, src: usize) -> Result<Frame, CommError> {
+    fn recv(&self, src: usize) -> Result<Frame, CommError> {
         self.jitter();
         self.inner.recv(src)
     }
@@ -325,7 +374,7 @@ impl Transport for FlakyTransport {
         "flaky"
     }
 
-    fn shutdown(&mut self) {
+    fn shutdown(&self) {
         self.inner.shutdown()
     }
 }
@@ -356,8 +405,8 @@ fn flaky_tcp_with_short_writes_is_still_bit_exact_and_counted() {
         let counters = Arc::new(Counters::default());
         let key = RngKey::new(2024);
 
-        let mut meshes = TcpMesh::loopback(WORKERS, 0).unwrap();
-        for m in &mut meshes {
+        let meshes = TcpMesh::loopback(WORKERS, 0).unwrap();
+        for m in &meshes {
             m.set_max_chunk(7); // short writes: frames fragment on the wire
         }
         let mut wire_counts = Vec::new();
@@ -522,5 +571,56 @@ fn mid_round_peer_drop_fails_cleanly_on_both_transports() {
             Some(Err(CommError::PeerLost { rank: 1 })),
             "{config}: rank 0 did not name the dead peer"
         );
+    }
+}
+
+/// A peer dying mid-epoch must poison BOTH communication planes of every
+/// survivor: the sampler thread's Sampling-plane round and the trainer's
+/// Gradient-plane round each surface a typed `CommError::PeerLost` — no
+/// deadlock, no panic — on both transports, under a hard deadline.
+#[test]
+fn peer_death_surfaces_on_both_planes_of_every_survivor() {
+    for config in [TransportConfig::Inproc, TransportConfig::Tcp { base_port: 0 }] {
+        let results = with_deadline(60, move || {
+            let counters = Arc::new(Counters::default());
+            run_workers_on(&config, 3, NetworkModel::free(), counters, |rank, comm| {
+                let mut scomm = comm.plane(Plane::Sampling);
+                let boxes = |v: u32| (0..3).map(|_| vec![v]).collect::<Vec<Vec<u32>>>();
+                // Round 1 on each plane: everyone healthy.
+                scomm.exchange(RoundKind::SampleRequest, boxes(1)).unwrap();
+                comm.exchange(RoundKind::GradSync, boxes(2)).unwrap();
+                if rank == 1 {
+                    return None; // rank 1 dies mid-epoch; its links close on drop
+                }
+                // Round 2: both planes must fail cleanly, not hang.
+                let sampling = scomm.exchange(RoundKind::SampleRequest, boxes(3));
+                let gradient = comm.exchange(RoundKind::GradSync, boxes(4));
+                Some((sampling, gradient))
+            })
+            .unwrap()
+        });
+        assert!(results[1].is_none(), "{config}: the dropped rank should have exited");
+        for rank in [0usize, 2] {
+            let Some((sampling, gradient)) = &results[rank] else {
+                panic!("{config}: rank {rank} returned no results");
+            };
+            for (plane, r) in [("sampling", sampling), ("gradient", gradient)] {
+                match r {
+                    Err(CommError::PeerLost { rank: lost }) => {
+                        assert_ne!(*lost, rank, "{config}: rank {rank} lost itself?");
+                    }
+                    other => panic!(
+                        "{config}: rank {rank} {plane} plane expected Err(PeerLost), \
+                         got {other:?}"
+                    ),
+                }
+            }
+        }
+        // Rank 0's receive order reaches the dead peer first on the
+        // Sampling plane; the Gradient plane then reports the fabric's
+        // sealed root cause — the same lost peer.
+        let (s0, g0) = results[0].as_ref().unwrap();
+        assert_eq!(s0, &Err(CommError::PeerLost { rank: 1 }), "{config}: sampling plane");
+        assert_eq!(g0, &Err(CommError::PeerLost { rank: 1 }), "{config}: gradient plane");
     }
 }
