@@ -28,7 +28,7 @@ use std::collections::{BTreeMap, BTreeSet};
 pub const RULES: [&str; 6] = ["R1", "R2", "R3", "R4", "R5", "R6"];
 pub const ALLOW_RULE: &str = "allow";
 
-const COLLECTIVE_EXACT: [&str; 8] = [
+const COLLECTIVE_EXACT: [&str; 9] = [
     "barrier",
     "fenced_snapshot",
     "all_zero_u64",
@@ -37,6 +37,7 @@ const COLLECTIVE_EXACT: [&str; 8] = [
     "fetch_features",
     "prefill_cache",
     "sampler_epochs",
+    "resume_latest",
 ];
 const COLLECTIVE_PREFIX: [&str; 2] = ["all_reduce_", "exchange"];
 const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];

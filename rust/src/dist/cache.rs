@@ -119,6 +119,17 @@ impl<V: Copy> SlabCache<V> {
         self.index.is_empty()
     }
 
+    /// Resident rows in slot order — deterministic for a given
+    /// insert/evict history, which is what lets the checkpoint subsystem
+    /// persist the resident set reproducibly. Read-only: reference bits
+    /// are not touched, so snapshotting does not perturb CLOCK.
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, &[V])> {
+        self.slots
+            .iter()
+            .filter(|s| s.live)
+            .map(|s| (s.node, &self.data[s.off..s.off + s.len]))
+    }
+
     /// Is `v` resident? (Does not touch the reference bit.)
     pub fn contains(&self, v: NodeId) -> bool {
         self.index.contains_key(&v)
@@ -346,6 +357,20 @@ mod tests {
         assert_eq!(c.get(3).unwrap(), &[7; 40][..]);
         assert_eq!(c.len(), 3);
         assert_eq!(c.used_bytes(), 3 * 8 + (3 + 40) * 4);
+    }
+
+    #[test]
+    fn iter_lists_live_rows_in_slot_order() {
+        let mut c = adj_cache(CachePolicy::StaticDegree, 1 << 16);
+        c.insert(5, &[50, 51]);
+        c.insert(2, &[20]);
+        c.insert(9, &[]);
+        let rows: Vec<(NodeId, Vec<NodeId>)> =
+            c.iter().map(|(n, r)| (n, r.to_vec())).collect();
+        assert_eq!(rows, vec![(5, vec![50, 51]), (2, vec![20]), (9, vec![])]);
+        // Snapshotting must not perturb the cache.
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.get(2).unwrap(), &[20][..]);
     }
 
     #[test]

@@ -185,6 +185,18 @@ impl Counters {
         }
         s
     }
+
+    /// Overwrite every counter with a previously captured snapshot — the
+    /// checkpoint/resume path, called at a fenced point before any new
+    /// traffic. With shared in-process counters every rank restores the
+    /// identical fenced snapshot (the concurrent stores are idempotent);
+    /// with per-process counters each rank restores its own.
+    pub fn restore(&self, s: &CommStats) {
+        for k in RoundKind::ALL {
+            self.rounds[k.index()].store(s.rounds[k.index()], Ordering::Relaxed);
+            self.bytes[k.index()].store(s.bytes[k.index()], Ordering::Relaxed);
+        }
+    }
 }
 
 /// Plain-data snapshot of [`Counters`], indexable by `RoundKind as usize`.

@@ -127,8 +127,12 @@ pub fn run_worker_process<R>(
 ) -> Result<R, CommError> {
     let mesh = TcpMesh::connect(rank, peers, rdv)?;
     if let Some(t) = recv_timeout {
-        mesh.set_recv_timeout(Some(t))
-            .map_err(|e| CommError::Io { peer: rank, detail: format!("set recv timeout: {e}") })?;
+        // A failure here is *this* process misconfiguring its own sockets
+        // at setup time — a local fault, not a peer's. Reporting it as
+        // `Io { peer }` would send the operator chasing a healthy rank.
+        mesh.set_recv_timeout(Some(t)).map_err(|e| CommError::Rendezvous {
+            detail: format!("local transport setup on rank {rank}: set recv timeout: {e}"),
+        })?;
     }
     let mut comm = Comm::from_transport(Box::new(mesh), net, counters);
     Ok(f(rank, &mut comm))

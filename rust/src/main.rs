@@ -52,6 +52,12 @@ COMMANDS:
                 [--transport inproc|tcp|tcp:<base_port>]  (how collective
                 frames move between workers; tcp uses per-peer loopback
                 sockets, base port 0 = ephemeral)
+                [--checkpoint-dir DIR]  (atomic per-rank snapshots at each
+                epoch fence: params, optimizer state, RNG cursor, fenced
+                counters) [--checkpoint-every N]  (cadence in epochs,
+                default 1) [--resume]  (continue bit-identically from the
+                newest checkpoint every rank holds; config mismatches are
+                typed errors)
   worker        ONE rank of a multi-process training run: launch N of
                 these (one per rank, any machines) and they rendezvous
                 over real TCP. See OPERATIONS.md for the full guide.
@@ -70,7 +76,8 @@ COMMANDS:
                 plus the train flags (--dataset --variant --mode --epochs
                 --lr --optimizer --seed --net --max-batches --cache
                 --adj-cache --adj-cache-policy --sampling-wire --pipeline
-                --replication-budget) and, for the sample task,
+                --replication-budget --checkpoint-dir --checkpoint-every
+                --resume) and, for the sample task,
                 [--batch 32] [--fanouts 4,3]
   partition     --dataset <spec> --parts 8 [--seed S]
   sample-bench  --dataset <spec> --batch 1024 --fanouts 15,10,5 [--iters 10]
@@ -150,6 +157,16 @@ fn parse_train_flags(
         0 => None,
         n => Some(n),
     };
+    if let Some(dir) = args.get_opt_str("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(std::path::PathBuf::from(dir));
+    }
+    cfg.checkpoint_every = args.get("checkpoint-every", 1usize)?;
+    ensure!(cfg.checkpoint_every >= 1, "--checkpoint-every must be >= 1");
+    cfg.resume = args.has("resume");
+    ensure!(
+        !cfg.resume || cfg.checkpoint_dir.is_some(),
+        "--resume needs --checkpoint-dir (where should the checkpoints come from?)"
+    );
     cfg.eval_last_batch = args.has("eval");
     cfg.verbose = true;
     Ok((spec, cfg))

@@ -222,6 +222,18 @@ impl TopologyView {
         self.overlay.as_ref().map_or(0, |c| c.len())
     }
 
+    /// Owned snapshot of the overlay's resident rows in slot order
+    /// (empty without a cache). This is what the checkpoint subsystem
+    /// persists so a resumed run can rewarm the cache instead of paying
+    /// the cold epoch again; cache contents shape *traffic* only, never
+    /// sampled MFGs, so replaying them is always curve-safe.
+    pub fn cached_entries(&self) -> Vec<(NodeId, Vec<NodeId>)> {
+        match &self.overlay {
+            None => Vec::new(),
+            Some(c) => c.iter().map(|(v, row)| (v, row.to_vec())).collect(),
+        }
+    }
+
     /// Bytes currently charged to the overlay (same 8 + 4·deg accounting
     /// as [`Self::replicated_bytes`]).
     pub fn cache_used_bytes(&self) -> u64 {

@@ -1,0 +1,981 @@
+//! Deterministic checkpoint/resume: fenced epoch snapshots that make a
+//! kill recoverable.
+//!
+//! At each epoch fence (`Comm::fenced_snapshot`, both planes quiescent)
+//! every rank **atomically** writes a per-rank checkpoint: flattened
+//! model parameters, the full optimizer state
+//! ([`super::optimizer::OptimizerState`]), the positional RNG cursor
+//! (just the epoch index — sampling/dropout keys are derived as
+//! `key.fold(epoch).fold(b+1)`, so nothing else needs saving), the
+//! cumulative fenced [`CommStats`], and optionally the adjacency-cache
+//! resident set (rewarming erases the cold epoch; cache contents shape
+//! *traffic* only, never sampled MFGs, so replaying them is curve-safe).
+//!
+//! Two files per rank per checkpointed epoch, both written tmp + rename:
+//!
+//! ```text
+//! <dir>/ckpt-000002/rank0.bin    # binary state (magic "FSCK", LE)
+//! <dir>/ckpt-000002/rank0.json   # manifest: fingerprint, checksum, digest
+//! ```
+//!
+//! The manifest is renamed into place **after** the binary, so a
+//! `rank<r>.json` that exists implies a complete `rank<r>.bin`; a kill
+//! mid-write leaves at worst an ignored `.tmp` and an epoch directory
+//! without this rank's manifest, which resume skips. The manifest
+//! carries a config **fingerprint** (task/dataset/policy/cache/wire/
+//! pipeline/world/seed/…), an FNV-1a checksum of the binary, and a
+//! state **digest** that is identical on every rank (parameters for the
+//! train task, the all-reduced digest curve for the sample task).
+//!
+//! [`resume_latest`] is the SPMD-collective entry point: each rank scans
+//! locally for its newest complete checkpoint, the world agrees on the
+//! newest epoch **every** rank has (`all_reduce_min`), each rank loads
+//! and validates it (checksum, fingerprint, digest — every mismatch a
+//! typed [`CheckpointError`], never a silent divergence or a panic), and
+//! a final min/max reduce proves all ranks hold the same digest. Resume
+//! then restarts the epoch loop at `epochs_done` and the run continues
+//! bit-identically to one that was never killed (pinned by
+//! `rust/tests/checkpoint_resume.rs`).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::dist::{Comm, CommStats, RoundKind};
+use crate::graph::NodeId;
+use crate::runtime::HostTensor;
+
+use super::optimizer::OptimizerState;
+use super::trainer::TrainConfig;
+use crate::util::json::Json;
+
+/// Format magic + version of the binary file. Bump the version on any
+/// layout change; old files then fail loudly instead of misparsing.
+const MAGIC: &[u8; 4] = b"FSCK";
+const VERSION: u32 = 1;
+
+/// Everything that can go wrong writing, finding, or validating a
+/// checkpoint. Typed so tests (and the elastic-world follow-up) can
+/// distinguish "file rotted" from "operator changed the config".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// Unreadable, truncated, checksum-failed, or misparsed file.
+    Corrupt { path: String, detail: String },
+    /// The on-disk fingerprint disagrees with this run's config —
+    /// resuming would diverge silently, so it is refused. `expected` is
+    /// what the checkpoint was written under, `found` this run's value.
+    FingerprintMismatch { field: String, expected: String, found: String },
+    /// `--resume` found checkpoints on some ranks but not others (or no
+    /// epoch common to all) — a partial restore would desynchronize.
+    RankDisagreement { detail: String },
+    /// Ranks loaded checkpoints whose state digests differ — the files
+    /// are individually valid but not from the same consistent cut.
+    DigestMismatch { detail: String },
+    /// Filesystem failure writing the checkpoint (tmp create / rename).
+    Write { path: String, detail: String },
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Corrupt { path, detail } => {
+                write!(f, "corrupt checkpoint {path}: {detail}")
+            }
+            CheckpointError::FingerprintMismatch { field, expected, found } => write!(
+                f,
+                "checkpoint fingerprint mismatch on {field:?}: checkpoint was written \
+                 under {expected}, this run has {found} — resuming would diverge"
+            ),
+            CheckpointError::RankDisagreement { detail } => {
+                write!(f, "ranks disagree on resumable checkpoints: {detail}")
+            }
+            CheckpointError::DigestMismatch { detail } => {
+                write!(f, "checkpoint digests differ across ranks: {detail}")
+            }
+            CheckpointError::Write { path, detail } => {
+                write!(f, "cannot write checkpoint {path}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+// ---------------------------------------------------------------------------
+// Config fingerprint
+// ---------------------------------------------------------------------------
+
+/// Ordered `(field, value)` rendering of every config knob a resumed run
+/// must share with the checkpointing run for bit-identical continuation.
+///
+/// Deliberately **excluded**: `epochs` (extending a run is the point of
+/// resuming; epoch *content* is positional and independent of the
+/// total), the transport (inproc vs TCP is bit-identical by the
+/// equivalence suites), and `verbose`/`eval_last_batch` (observation
+/// only). `lr` is fingerprinted by f32 **bit pattern** — exact, no
+/// formatting round-trip.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fingerprint(Vec<(String, String)>);
+
+impl Fingerprint {
+    /// Build this run's fingerprint. `task` is `"train"` or `"sample"`;
+    /// `sample_shape` carries the sample task's CLI batch/fanouts (the
+    /// train task gets both from the AOT variant, covered by its name).
+    pub fn new(
+        task: &str,
+        dataset: &str,
+        cfg: &TrainConfig,
+        sample_shape: Option<(usize, &[usize])>,
+    ) -> Self {
+        let mut f = vec![
+            ("task".to_string(), task.to_string()),
+            ("dataset".to_string(), dataset.to_string()),
+            ("world".to_string(), cfg.workers.to_string()),
+            ("seed".to_string(), cfg.seed.to_string()),
+            ("policy".to_string(), format!("{:?}", cfg.policy)),
+            ("kernel".to_string(), format!("{:?}", cfg.kernel)),
+            ("variant".to_string(), cfg.variant.clone()),
+            ("optimizer".to_string(), cfg.optimizer.clone()),
+            ("lr_bits".to_string(), format!("{:08x}", cfg.lr.to_bits())),
+            (
+                "feature_cache".to_string(),
+                format!("{}:{:?}", cfg.cache_capacity, cfg.cache_policy),
+            ),
+            (
+                "adj_cache".to_string(),
+                format!("{}:{:?}", cfg.adj_cache_bytes, cfg.adj_cache_policy),
+            ),
+            ("wire".to_string(), format!("{:?}", cfg.sampling_wire)),
+            ("pipeline".to_string(), cfg.pipeline.to_string()),
+            (
+                "max_batches".to_string(),
+                cfg.max_batches.map_or_else(|| "none".to_string(), |c| c.to_string()),
+            ),
+            ("schedule".to_string(), format!("{:?}", cfg.schedule)),
+        ];
+        if let Some((batch, fanouts)) = sample_shape {
+            f.push(("batch".to_string(), batch.to_string()));
+            f.push(("fanouts".to_string(), format!("{fanouts:?}")));
+        }
+        Fingerprint(f)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        for (k, v) in &self.0 {
+            m.insert(k.clone(), Json::Str(v.clone()));
+        }
+        Json::Obj(m)
+    }
+
+    /// Field-wise comparison against a manifest's fingerprint object.
+    /// Any difference — value, missing field, extra field — is a typed
+    /// [`CheckpointError::FingerprintMismatch`].
+    fn check(&self, disk: &Json) -> Result<(), CheckpointError> {
+        let disk = disk.as_obj().map_err(|e| CheckpointError::FingerprintMismatch {
+            field: "fingerprint".into(),
+            expected: format!("<not an object: {e}>"),
+            found: "<object>".into(),
+        })?;
+        for (k, v) in &self.0 {
+            let on_disk = match disk.get(k).map(Json::as_str) {
+                Some(Ok(s)) => s,
+                _ => {
+                    return Err(CheckpointError::FingerprintMismatch {
+                        field: k.clone(),
+                        expected: "<absent>".into(),
+                        found: v.clone(),
+                    })
+                }
+            };
+            if on_disk != v {
+                return Err(CheckpointError::FingerprintMismatch {
+                    field: k.clone(),
+                    expected: on_disk.to_string(),
+                    found: v.clone(),
+                });
+            }
+        }
+        for k in disk.keys() {
+            if !self.0.iter().any(|(f, _)| f == k) {
+                return Err(CheckpointError::FingerprintMismatch {
+                    field: k.clone(),
+                    expected: "<present>".into(),
+                    found: "<absent in this build>".into(),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// State
+// ---------------------------------------------------------------------------
+
+/// One rank's full resumable state at an epoch fence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointState {
+    /// Epochs fully completed — the positional RNG cursor. A resumed run
+    /// restarts its epoch loop at this index; every sampling, shuffle,
+    /// and dropout key is derived from it.
+    pub epochs_done: u64,
+    /// Trainer's smoothed loss (feeds adaptive fanout schedules).
+    pub smoothed_loss: Option<f32>,
+    /// The curve so far: rank 0's per-step losses for the train task
+    /// (empty on other ranks), the all-reduced digest curve (identical
+    /// on every rank) for the sample task.
+    pub curve: Vec<f32>,
+    /// Cumulative fenced counter snapshot at the checkpoint's fence.
+    pub comm: CommStats,
+    /// Per-epoch fenced counter deltas so far (sample task reporting).
+    pub epoch_deltas: Vec<CommStats>,
+    /// Flattened model parameters (train task; empty for sample).
+    pub params: Vec<HostTensor>,
+    /// Full optimizer state (train task).
+    pub opt: Option<OptimizerState>,
+    /// Adjacency-cache resident rows in slot order. Written in serial
+    /// mode; pipelined checkpoints leave it empty (the sampler thread
+    /// owns the cache across the whole run) — correctness is unaffected
+    /// either way, only warm-up traffic.
+    pub cache_rows: Vec<(NodeId, Vec<NodeId>)>,
+    /// Steps executed so far (sample task reporting).
+    pub steps: u64,
+    /// Edges sampled so far (sample task reporting).
+    pub sampled_edges: u64,
+}
+
+impl CheckpointState {
+    /// Rank-invariant digest of the resumable state: FNV-1a over the
+    /// parameter encoding when parameters are present (the train task —
+    /// every rank holds the identical copy), else over the curve's f32
+    /// bit patterns (the sample task — all-reduced, identical on every
+    /// rank). Resume cross-checks it across the world.
+    pub fn digest(&self) -> u64 {
+        let mut w = Wr(Vec::new());
+        if self.params.is_empty() {
+            for v in &self.curve {
+                w.f32(*v);
+            }
+        } else {
+            encode_params(&mut w, &self.params);
+        }
+        fnv1a64(&w.0)
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut w = Wr(Vec::new());
+        w.0.extend_from_slice(MAGIC);
+        w.u32(VERSION);
+        w.u64(self.epochs_done);
+        match self.smoothed_loss {
+            None => w.u8(0),
+            Some(v) => {
+                w.u8(1);
+                w.f32(v);
+            }
+        }
+        w.u64(self.curve.len() as u64);
+        for v in &self.curve {
+            w.f32(*v);
+        }
+        encode_stats(&mut w, &self.comm);
+        w.u64(self.epoch_deltas.len() as u64);
+        for d in &self.epoch_deltas {
+            encode_stats(&mut w, d);
+        }
+        encode_params(&mut w, &self.params);
+        match &self.opt {
+            None => w.u8(0),
+            Some(OptimizerState::Sgd { velocity }) => {
+                w.u8(1);
+                encode_f32_mat(&mut w, velocity);
+            }
+            Some(OptimizerState::Adam { t, m, v }) => {
+                w.u8(2);
+                w.u64(*t as u64);
+                encode_f32_mat(&mut w, m);
+                encode_f32_mat(&mut w, v);
+            }
+        }
+        w.u64(self.cache_rows.len() as u64);
+        for (node, row) in &self.cache_rows {
+            w.u32(*node);
+            w.u32(row.len() as u32);
+            for id in row {
+                w.u32(*id);
+            }
+        }
+        w.u64(self.steps);
+        w.u64(self.sampled_edges);
+        w.0
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self, String> {
+        let mut r = Rd { b: bytes, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            return Err(format!("bad magic {magic:?} (want {MAGIC:?})"));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(format!("unsupported checkpoint format {version} (want {VERSION})"));
+        }
+        let epochs_done = r.u64()?;
+        let smoothed_loss = match r.u8()? {
+            0 => None,
+            1 => Some(r.f32()?),
+            t => return Err(format!("bad smoothed-loss tag {t}")),
+        };
+        let curve = r.f32_vec()?;
+        let comm = decode_stats(&mut r)?;
+        let n = r.len_checked(size_of_stats())?;
+        let mut epoch_deltas = Vec::with_capacity(n);
+        for _ in 0..n {
+            epoch_deltas.push(decode_stats(&mut r)?);
+        }
+        let params = decode_params(&mut r)?;
+        let opt = match r.u8()? {
+            0 => None,
+            1 => Some(OptimizerState::Sgd { velocity: decode_f32_mat(&mut r)? }),
+            2 => {
+                let t = r.u64()?;
+                if t > i32::MAX as u64 {
+                    return Err(format!("adam step count {t} out of range"));
+                }
+                Some(OptimizerState::Adam {
+                    t: t as i32,
+                    m: decode_f32_mat(&mut r)?,
+                    v: decode_f32_mat(&mut r)?,
+                })
+            }
+            t => return Err(format!("bad optimizer tag {t}")),
+        };
+        let n = r.len_checked(8)?;
+        let mut cache_rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let node = r.u32()?;
+            let len = r.u32()? as usize;
+            let mut row = Vec::with_capacity(r.cap(len, 4)?);
+            for _ in 0..len {
+                row.push(r.u32()?);
+            }
+            cache_rows.push((node, row));
+        }
+        let steps = r.u64()?;
+        let sampled_edges = r.u64()?;
+        r.done()?;
+        Ok(CheckpointState {
+            epochs_done,
+            smoothed_loss,
+            curve,
+            comm,
+            epoch_deltas,
+            params,
+            opt,
+            cache_rows,
+            steps,
+            sampled_edges,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian codec helpers
+// ---------------------------------------------------------------------------
+
+struct Wr(Vec<u8>);
+
+impl Wr {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+}
+
+/// Bounds-checked reader: every take can fail (truncated file), never
+/// panic; length prefixes are validated against the remaining bytes
+/// before any allocation, so a corrupt prefix cannot OOM the process.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.b.len() - self.pos < n {
+            return Err(format!(
+                "truncated: wanted {n} bytes at offset {}, file has {}",
+                self.pos,
+                self.b.len()
+            ));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    /// A u64 element count, validated so `count * elem_bytes` fits in
+    /// the remaining input.
+    fn len_checked(&mut self, elem_bytes: usize) -> Result<usize, String> {
+        let n = self.u64()?;
+        self.cap(n as usize, elem_bytes)
+    }
+    fn cap(&self, n: usize, elem_bytes: usize) -> Result<usize, String> {
+        let remaining = self.b.len() - self.pos;
+        if n.checked_mul(elem_bytes).map_or(true, |bytes| bytes > remaining) {
+            return Err(format!(
+                "length prefix {n} (x{elem_bytes}B) exceeds the {remaining} remaining bytes"
+            ));
+        }
+        Ok(n)
+    }
+    fn f32_vec(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.len_checked(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+    fn done(&self) -> Result<(), String> {
+        if self.pos != self.b.len() {
+            return Err(format!("{} trailing bytes after the state", self.b.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+fn size_of_stats() -> usize {
+    8 + 2 * 8 * RoundKind::COUNT
+}
+
+fn encode_stats(w: &mut Wr, s: &CommStats) {
+    w.u64(RoundKind::COUNT as u64);
+    for k in RoundKind::ALL {
+        w.u64(s.rounds[k.index()]);
+    }
+    for k in RoundKind::ALL {
+        w.u64(s.bytes[k.index()]);
+    }
+}
+
+fn decode_stats(r: &mut Rd) -> Result<CommStats, String> {
+    let n = r.u64()?;
+    if n != RoundKind::COUNT as u64 {
+        return Err(format!(
+            "counter block has {n} kinds, this build has {} — mixed builds?",
+            RoundKind::COUNT
+        ));
+    }
+    let mut s = CommStats::default();
+    for k in RoundKind::ALL {
+        s.rounds[k.index()] = r.u64()?;
+    }
+    for k in RoundKind::ALL {
+        s.bytes[k.index()] = r.u64()?;
+    }
+    Ok(s)
+}
+
+fn encode_params(w: &mut Wr, params: &[HostTensor]) {
+    w.u64(params.len() as u64);
+    for p in params {
+        let shape = p.shape();
+        w.u32(shape.len() as u32);
+        for d in shape {
+            w.u64(*d as u64);
+        }
+        match p.as_f32() {
+            Ok(data) => {
+                w.u64(data.len() as u64);
+                for v in data {
+                    w.f32(*v);
+                }
+            }
+            // Parameters are f32 by construction (init_params); an i32
+            // tensor here would be a bug upstream — encode it empty so
+            // the digest/decode mismatch surfaces as a typed error.
+            Err(_) => w.u64(0),
+        }
+    }
+}
+
+fn decode_params(r: &mut Rd) -> Result<Vec<HostTensor>, String> {
+    let n = r.len_checked(12)?;
+    let mut params = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ndim = r.u32()? as usize;
+        let mut shape = Vec::with_capacity(r.cap(ndim, 8)?);
+        for _ in 0..ndim {
+            shape.push(r.u64()? as usize);
+        }
+        let data = r.f32_vec()?;
+        let elems: usize = shape.iter().product();
+        if elems != data.len() {
+            return Err(format!(
+                "param shape {shape:?} implies {elems} values, file carries {}",
+                data.len()
+            ));
+        }
+        params.push(HostTensor::f32(data, &shape));
+    }
+    Ok(params)
+}
+
+fn encode_f32_mat(w: &mut Wr, m: &[Vec<f32>]) {
+    w.u64(m.len() as u64);
+    for row in m {
+        w.u64(row.len() as u64);
+        for v in row {
+            w.f32(*v);
+        }
+    }
+}
+
+fn decode_f32_mat(r: &mut Rd) -> Result<Vec<Vec<f32>>, String> {
+    let n = r.len_checked(8)?;
+    let mut m = Vec::with_capacity(n);
+    for _ in 0..n {
+        m.push(r.f32_vec()?);
+    }
+    Ok(m)
+}
+
+/// FNV-1a 64-bit — the checksum and digest hash. Not cryptographic;
+/// guards against bit rot and truncation, not an adversary.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// File layout
+// ---------------------------------------------------------------------------
+
+fn epoch_dir(dir: &Path, epochs_done: u64) -> PathBuf {
+    dir.join(format!("ckpt-{epochs_done:06}"))
+}
+
+fn bin_path(dir: &Path, epochs_done: u64, rank: usize) -> PathBuf {
+    epoch_dir(dir, epochs_done).join(format!("rank{rank}.bin"))
+}
+
+fn json_path(dir: &Path, epochs_done: u64, rank: usize) -> PathBuf {
+    epoch_dir(dir, epochs_done).join(format!("rank{rank}.json"))
+}
+
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<(), CheckpointError> {
+    let shown = path.display().to_string();
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes)
+        .map_err(|e| CheckpointError::Write { path: shown.clone(), detail: e.to_string() })?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| CheckpointError::Write { path: shown, detail: format!("rename: {e}") })
+}
+
+// ---------------------------------------------------------------------------
+// Write / load / resume
+// ---------------------------------------------------------------------------
+
+/// Atomically write one rank's checkpoint for `state.epochs_done`
+/// completed epochs. Purely local I/O (no collectives): the caller
+/// invokes it right after the epoch's end fence, where every plane is
+/// quiescent and the fenced `CommStats` are exact. The binary lands
+/// before the manifest, so a manifest's existence implies a complete
+/// checkpoint. Old epochs' checkpoints are retained (the operator
+/// prunes; keeping them makes "resume from an earlier epoch" a matter
+/// of deleting directories).
+pub fn write_checkpoint(
+    dir: &Path,
+    fp: &Fingerprint,
+    rank: usize,
+    state: &CheckpointState,
+) -> Result<(), CheckpointError> {
+    let edir = epoch_dir(dir, state.epochs_done);
+    std::fs::create_dir_all(&edir).map_err(|e| CheckpointError::Write {
+        path: edir.display().to_string(),
+        detail: e.to_string(),
+    })?;
+    let bin = state.encode();
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("format".to_string(), Json::Num(VERSION as f64));
+    m.insert("epoch".to_string(), Json::Num(state.epochs_done as f64));
+    m.insert("rank".to_string(), Json::Num(rank as f64));
+    m.insert("bin_bytes".to_string(), Json::Num(bin.len() as f64));
+    m.insert("checksum".to_string(), Json::Str(format!("{:016x}", fnv1a64(&bin))));
+    m.insert("digest".to_string(), Json::Str(format!("{:016x}", state.digest())));
+    m.insert("fingerprint".to_string(), fp.to_json());
+    let manifest = Json::Obj(m).dump();
+    atomic_write(&bin_path(dir, state.epochs_done, rank), &bin)?;
+    atomic_write(&json_path(dir, state.epochs_done, rank), manifest.as_bytes())
+}
+
+/// Load and fully validate one rank's checkpoint for `epochs_done`:
+/// manifest parse, format/rank/epoch fields, fingerprint match,
+/// checksum over the binary, state decode, and digest recomputation.
+/// Every failure is a typed [`CheckpointError`].
+pub fn load_checkpoint(
+    dir: &Path,
+    fp: &Fingerprint,
+    rank: usize,
+    epochs_done: u64,
+) -> Result<CheckpointState, CheckpointError> {
+    let jpath = json_path(dir, epochs_done, rank);
+    let jshown = jpath.display().to_string();
+    let corrupt = |detail: String| CheckpointError::Corrupt { path: jshown.clone(), detail };
+    let text = std::fs::read_to_string(&jpath).map_err(|e| corrupt(e.to_string()))?;
+    let manifest = Json::parse(&text).map_err(|e| corrupt(format!("manifest: {e}")))?;
+    let field_usize = |key: &str| -> Result<usize, CheckpointError> {
+        manifest
+            .get(key)
+            .and_then(Json::as_usize)
+            .map_err(|e| corrupt(format!("manifest field {key:?}: {e}")))
+    };
+    let format = field_usize("format")?;
+    if format != VERSION as usize {
+        return Err(corrupt(format!("unsupported checkpoint format {format} (want {VERSION})")));
+    }
+    let mrank = field_usize("rank")?;
+    if mrank != rank {
+        return Err(corrupt(format!("manifest is for rank {mrank}, this is rank {rank}")));
+    }
+    let mepoch = field_usize("epoch")?;
+    if mepoch as u64 != epochs_done {
+        return Err(corrupt(format!("manifest is for epoch {mepoch}, wanted {epochs_done}")));
+    }
+    let fp_disk = manifest
+        .get("fingerprint")
+        .map_err(|e| corrupt(format!("manifest: {e}")))?;
+    fp.check(fp_disk)?;
+    let checksum = manifest
+        .get("checksum")
+        .and_then(Json::as_str)
+        .ok()
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| corrupt("manifest checksum missing or non-hex".into()))?;
+    let digest = manifest
+        .get("digest")
+        .and_then(Json::as_str)
+        .ok()
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| corrupt("manifest digest missing or non-hex".into()))?;
+    let bin_bytes = field_usize("bin_bytes")?;
+
+    let bpath = bin_path(dir, epochs_done, rank);
+    let bshown = bpath.display().to_string();
+    let bcorrupt = |detail: String| CheckpointError::Corrupt { path: bshown.clone(), detail };
+    let bin = std::fs::read(&bpath).map_err(|e| bcorrupt(e.to_string()))?;
+    if bin.len() != bin_bytes {
+        return Err(bcorrupt(format!(
+            "file is {} bytes, manifest says {bin_bytes}",
+            bin.len()
+        )));
+    }
+    let actual = fnv1a64(&bin);
+    if actual != checksum {
+        return Err(bcorrupt(format!(
+            "checksum {actual:016x} != manifest {checksum:016x} — the file rotted or was \
+             partially overwritten"
+        )));
+    }
+    let state = CheckpointState::decode(&bin).map_err(bcorrupt)?;
+    if state.epochs_done != epochs_done {
+        return Err(CheckpointError::Corrupt {
+            path: bshown,
+            detail: format!(
+                "state says {} epochs done, manifest says {epochs_done}",
+                state.epochs_done
+            ),
+        });
+    }
+    let sdigest = state.digest();
+    if sdigest != digest {
+        return Err(CheckpointError::Corrupt {
+            path: bshown,
+            detail: format!("state digest {sdigest:016x} != manifest {digest:016x}"),
+        });
+    }
+    Ok(state)
+}
+
+/// This rank's newest epoch directory containing its **complete**
+/// checkpoint (manifest present — the manifest is renamed last, so its
+/// presence implies the binary landed). Content validation happens at
+/// load; a newest-but-corrupt file must surface as a typed error, not
+/// be silently skipped for an older one (the operator should know).
+fn my_latest_epoch(dir: &Path, rank: usize) -> Option<u64> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    let mut best: Option<u64> = None;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(epoch) = name.to_str().and_then(|n| n.strip_prefix("ckpt-")) else {
+            continue;
+        };
+        let Ok(epoch) = epoch.parse::<u64>() else {
+            continue;
+        };
+        if json_path(dir, epoch, rank).exists() {
+            best = Some(best.map_or(epoch, |b| b.max(epoch)));
+        }
+    }
+    best
+}
+
+/// SPMD-collective resume: agree on the newest checkpoint epoch **every**
+/// rank holds, load + validate it on each rank, and cross-check the
+/// state digests across the world. Returns `Ok(None)` when no rank has
+/// any checkpoint (a fresh start); `Ok(Some(state))` with
+/// `state.epochs_done` as the restart cursor otherwise. Every rank must
+/// call this at the same point (it issues `all_reduce_min_u64` rounds);
+/// mismatched availability, fingerprints, corruption, and digest
+/// disagreement all surface as typed errors on every rank — never a
+/// silent partial restore.
+pub fn resume_latest(
+    comm: &mut Comm,
+    dir: &Path,
+    fp: &Fingerprint,
+) -> anyhow::Result<Option<CheckpointState>> {
+    let me = comm.rank();
+    // Code each rank's newest complete epoch as epoch+1 (0 = none), then
+    // min/max-reduce: min == 0 with max > 0 means some ranks have
+    // checkpoints and some do not — refuse rather than desynchronize.
+    let code = my_latest_epoch(dir, me).map_or(0, |e| e + 1);
+    let min_code = comm.all_reduce_min_u64(code)?;
+    let max_code = !comm.all_reduce_min_u64(!code)?;
+    if min_code == 0 {
+        if max_code != 0 {
+            return Err(CheckpointError::RankDisagreement {
+                detail: format!(
+                    "some ranks have checkpoints up to epoch {} but at least one rank has \
+                     none (this rank's newest: {}) — same --checkpoint-dir on every rank?",
+                    max_code - 1,
+                    if code == 0 { "none".to_string() } else { (code - 1).to_string() }
+                ),
+            }
+            .into());
+        }
+        return Ok(None);
+    }
+    // The newest epoch present on all ranks. Ranks checkpoint the same
+    // epoch set (same config ⇒ same cadence), so min is safe even when
+    // a kill left some ranks one epoch ahead.
+    let epochs_done = min_code - 1;
+    let state = load_checkpoint(dir, fp, me, epochs_done)?;
+    let d = state.digest();
+    let dmin = comm.all_reduce_min_u64(d)?;
+    let dmax = !comm.all_reduce_min_u64(!d)?;
+    if dmin != dmax {
+        return Err(CheckpointError::DigestMismatch {
+            detail: format!(
+                "epoch {epochs_done}: digests range over [{dmin:016x}, {dmax:016x}] \
+                 (this rank: {d:016x}) — checkpoints are not from one consistent run"
+            ),
+        }
+        .into());
+    }
+    Ok(Some(state))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::ReplicationPolicy;
+    use crate::sampling::KernelKind;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fastsample-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn cfg() -> TrainConfig {
+        TrainConfig::new("q", ReplicationPolicy::vanilla(), KernelKind::Baseline, 4)
+    }
+
+    fn sample_state() -> CheckpointState {
+        let mut comm = CommStats::default();
+        comm.rounds[0] = 7;
+        comm.bytes[0] = 1234;
+        CheckpointState {
+            epochs_done: 2,
+            smoothed_loss: Some(0.25),
+            curve: vec![1.5, -0.25, f32::MIN_POSITIVE],
+            comm: comm.clone(),
+            epoch_deltas: vec![comm],
+            params: vec![
+                HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]),
+                HostTensor::f32(vec![-1.0], &[1]),
+            ],
+            opt: Some(OptimizerState::Adam {
+                t: 6,
+                m: vec![vec![0.1; 4], vec![0.2]],
+                v: vec![vec![0.3; 4], vec![0.4]],
+            }),
+            cache_rows: vec![(9, vec![1, 2, 3]), (4, vec![])],
+            steps: 12,
+            sampled_edges: 3456,
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let s = sample_state();
+        let back = CheckpointState::decode(&s.encode()).unwrap();
+        assert_eq!(s, back);
+        assert_eq!(s.digest(), back.digest());
+    }
+
+    #[test]
+    fn write_then_load_round_trips() {
+        let dir = tmp_dir("roundtrip");
+        let fp = Fingerprint::new("train", "quickstart", &cfg(), None);
+        let s = sample_state();
+        write_checkpoint(&dir, &fp, 1, &s).unwrap();
+        let back = load_checkpoint(&dir, &fp, 1, 2).unwrap();
+        assert_eq!(s, back);
+        // No stray tmp files survive the atomic writes.
+        let leftovers: Vec<_> = std::fs::read_dir(dir.join("ckpt-000002"))
+            .unwrap()
+            .flatten()
+            .filter(|e| e.path().extension().is_some_and(|x| x == "tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_binary_is_a_typed_corrupt_error() {
+        let dir = tmp_dir("truncated");
+        let fp = Fingerprint::new("train", "quickstart", &cfg(), None);
+        let s = sample_state();
+        write_checkpoint(&dir, &fp, 0, &s).unwrap();
+        let bpath = dir.join("ckpt-000002").join("rank0.bin");
+        let bytes = std::fs::read(&bpath).unwrap();
+        std::fs::write(&bpath, &bytes[..bytes.len() / 2]).unwrap();
+        match load_checkpoint(&dir, &fp, 0, 2) {
+            Err(CheckpointError::Corrupt { .. }) => {}
+            other => panic!("wanted Corrupt, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flipped_byte_fails_the_checksum() {
+        let dir = tmp_dir("bitrot");
+        let fp = Fingerprint::new("sample", "quickstart", &cfg(), Some((8, &[3, 2])));
+        let mut s = sample_state();
+        s.params.clear();
+        s.opt = None;
+        write_checkpoint(&dir, &fp, 2, &s).unwrap();
+        let bpath = dir.join("ckpt-000002").join("rank2.bin");
+        let mut bytes = std::fs::read(&bpath).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&bpath, &bytes).unwrap();
+        match load_checkpoint(&dir, &fp, 2, 2) {
+            Err(CheckpointError::Corrupt { detail, .. }) => {
+                assert!(detail.contains("checksum"), "{detail}");
+            }
+            other => panic!("wanted a checksum Corrupt, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_typed_and_names_the_field() {
+        let dir = tmp_dir("fingerprint");
+        let fp = Fingerprint::new("train", "quickstart", &cfg(), None);
+        write_checkpoint(&dir, &fp, 0, &sample_state()).unwrap();
+        // Same layout, different seed: refuse with the field named.
+        let mut other = cfg();
+        other.seed = 99;
+        let fp2 = Fingerprint::new("train", "quickstart", &other, None);
+        match load_checkpoint(&dir, &fp2, 0, 2) {
+            Err(CheckpointError::FingerprintMismatch { field, expected, found }) => {
+                assert_eq!(field, "seed");
+                assert_eq!(expected, "0");
+                assert_eq!(found, "99");
+            }
+            other => panic!("wanted FingerprintMismatch, got {other:?}"),
+        }
+        // Different world size: also refused.
+        let mut w = cfg();
+        w.workers = 8;
+        let fpw = Fingerprint::new("train", "quickstart", &w, None);
+        assert!(matches!(
+            load_checkpoint(&dir, &fpw, 0, 2),
+            Err(CheckpointError::FingerprintMismatch { .. })
+        ));
+        // Wrong task: refused too.
+        let fps = Fingerprint::new("sample", "quickstart", &cfg(), Some((8, &[3])));
+        assert!(matches!(
+            load_checkpoint(&dir, &fps, 0, 2),
+            Err(CheckpointError::FingerprintMismatch { .. })
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_means_incomplete_and_is_skipped_by_the_scan() {
+        let dir = tmp_dir("scan");
+        let fp = Fingerprint::new("train", "quickstart", &cfg(), None);
+        let mut s = sample_state();
+        s.epochs_done = 1;
+        write_checkpoint(&dir, &fp, 0, &s).unwrap();
+        s.epochs_done = 2;
+        write_checkpoint(&dir, &fp, 0, &s).unwrap();
+        assert_eq!(my_latest_epoch(&dir, 0), Some(2));
+        // A kill between the bin and json renames leaves the newest epoch
+        // manifest-less: the scan must fall back to the previous one.
+        std::fs::remove_file(dir.join("ckpt-000002").join("rank0.json")).unwrap();
+        assert_eq!(my_latest_epoch(&dir, 0), Some(1));
+        // Another rank's files don't count for this rank.
+        assert_eq!(my_latest_epoch(&dir, 1), None);
+        // No directory, no checkpoint — not an error.
+        assert_eq!(my_latest_epoch(Path::new("/nonexistent-ckpt-dir"), 0), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbage_length_prefix_cannot_allocate_unboundedly() {
+        // A "curve length = u64::MAX" prefix must fail the bounds check,
+        // not attempt the allocation.
+        let mut w = Wr(Vec::new());
+        w.0.extend_from_slice(MAGIC);
+        w.u32(VERSION);
+        w.u64(0); // epochs_done
+        w.u8(0); // no smoothed loss
+        w.u64(u64::MAX); // curve length: absurd
+        let err = CheckpointState::decode(&w.0).unwrap_err();
+        assert!(err.contains("length prefix"), "{err}");
+    }
+}

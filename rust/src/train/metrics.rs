@@ -3,6 +3,8 @@
 
 use std::time::Instant;
 
+use anyhow::{ensure, Result};
+
 use crate::dist::CommStats;
 use crate::runtime::HostTensor;
 
@@ -37,8 +39,10 @@ impl PhaseTimes {
     }
 }
 
-/// Scoped phase timer: `let _t = Phase::new(&mut times.sample_s);`…
-/// explicit `stop` keeps borrowck simple instead.
+/// Manual lap timer: `let mut sw = Stopwatch::start();` then
+/// `times.sample_s += sw.lap();` after each phase. Explicit laps (rather
+/// than a scoped guard holding `&mut` into the accumulator) keep the
+/// borrow story trivial inside the epoch loop.
 pub struct Stopwatch(Instant);
 
 impl Stopwatch {
@@ -69,10 +73,28 @@ pub struct EpochStats {
 }
 
 /// Masked argmax accuracy of `[batch, classes]` logits.
-pub fn accuracy(logits: &HostTensor, labels: &[i32], mask: &[f32]) -> f32 {
+///
+/// Comparison is `f32::total_cmp` (IEEE total order), so a NaN logit —
+/// the signature of a diverged model — yields a deterministic (wrong)
+/// prediction and a bad accuracy number instead of a panic mid-epoch.
+pub fn accuracy(logits: &HostTensor, labels: &[i32], mask: &[f32]) -> Result<f32> {
     let shape = logits.shape();
+    ensure!(shape.len() == 2, "logits must be [batch, classes], got shape {shape:?}");
     let (b, c) = (shape[0], shape[1]);
-    let data = logits.as_f32().expect("logits are f32");
+    ensure!(c > 0, "logits need at least one class column, got shape {shape:?}");
+    let data = logits.as_f32()?;
+    ensure!(
+        data.len() == b * c,
+        "logits hold {} values but shape {shape:?} implies {}",
+        data.len(),
+        b * c
+    );
+    ensure!(
+        labels.len() >= b && mask.len() >= b,
+        "labels/mask cover {}/{} rows but the batch has {b}",
+        labels.len(),
+        mask.len()
+    );
     let mut correct = 0usize;
     let mut total = 0usize;
     for i in 0..b {
@@ -83,19 +105,15 @@ pub fn accuracy(logits: &HostTensor, labels: &[i32], mask: &[f32]) -> f32 {
         let pred = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(j, _)| j)
-            .unwrap();
+            .unwrap_or(0);
         if pred as i32 == labels[i] {
             correct += 1;
         }
         total += 1;
     }
-    if total == 0 {
-        0.0
-    } else {
-        correct as f32 / total as f32
-    }
+    Ok(if total == 0 { 0.0 } else { correct as f32 / total as f32 })
 }
 
 #[cfg(test)]
@@ -107,9 +125,38 @@ mod tests {
         let logits = HostTensor::f32(vec![1.0, 0.0, 0.0, 9.0, 0.5, 0.4], &[3, 2]);
         let labels = [0, 1, 1];
         // Row 2 predicts 0 but is masked out.
-        assert_eq!(accuracy(&logits, &labels, &[1.0, 1.0, 0.0]), 1.0);
-        assert!((accuracy(&logits, &labels, &[1.0, 1.0, 1.0]) - 2.0 / 3.0).abs() < 1e-6);
-        assert_eq!(accuracy(&logits, &labels, &[0.0, 0.0, 0.0]), 0.0);
+        assert_eq!(accuracy(&logits, &labels, &[1.0, 1.0, 0.0]).unwrap(), 1.0);
+        assert!((accuracy(&logits, &labels, &[1.0, 1.0, 1.0]).unwrap() - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(accuracy(&logits, &labels, &[0.0, 0.0, 0.0]).unwrap(), 0.0);
+    }
+
+    /// A diverged model emits NaN logits; accuracy must report a (bad)
+    /// number deterministically, not panic the trainer.
+    #[test]
+    fn nan_logits_report_instead_of_panicking() {
+        let nan = f32::NAN;
+        // Row 0 is all-NaN, row 1 has a NaN beaten by nothing finite in
+        // total order (NaN sorts above +inf), row 2 is healthy.
+        let logits = HostTensor::f32(vec![nan, nan, 0.1, nan, 0.9, 0.2], &[3, 2]);
+        let labels = [0, 1, 0];
+        let acc = accuracy(&logits, &labels, &[1.0, 1.0, 1.0]).unwrap();
+        // Row 1's NaN column (index 1) wins in total order → "correct";
+        // row 2 predicts 0 → correct; row 0's argmax is deterministic
+        // regardless of which NaN wins. acc is therefore ≥ 2/3 and finite.
+        assert!(acc.is_finite());
+        assert!(acc >= 2.0 / 3.0 - 1e-6);
+        // And crucially: calling it twice gives the identical answer.
+        assert_eq!(acc, accuracy(&logits, &labels, &[1.0, 1.0, 1.0]).unwrap());
+    }
+
+    /// Short label/mask slices are an error, not an out-of-bounds panic.
+    #[test]
+    fn short_labels_or_mask_are_typed_errors() {
+        let logits = HostTensor::f32(vec![1.0, 0.0, 0.0, 9.0], &[2, 2]);
+        assert!(accuracy(&logits, &[0], &[1.0, 1.0]).is_err());
+        assert!(accuracy(&logits, &[0, 1], &[1.0]).is_err());
+        let bad_shape = HostTensor::f32(vec![1.0, 2.0], &[2]);
+        assert!(accuracy(&bad_shape, &[0, 1], &[1.0, 1.0]).is_err());
     }
 
     #[test]

@@ -1,16 +1,22 @@
 //! Training stack: MFG padding, optimizers, metrics, the distributed
 //! trainer that drives sampling → feature exchange → AOT compute → grad
-//! sync per minibatch, and the MFG prefetcher that overlaps the first
-//! two phases with the last two (`--pipeline on`).
+//! sync per minibatch, the MFG prefetcher that overlaps the first two
+//! phases with the last two (`--pipeline on`), and the fenced
+//! checkpoint/resume subsystem (`--checkpoint-dir` / `--resume`).
 
+pub mod checkpoint;
 pub mod metrics;
 pub mod optimizer;
 pub mod padding;
 pub mod prefetch;
 pub mod trainer;
 
+pub use checkpoint::{
+    load_checkpoint, resume_latest, write_checkpoint, CheckpointError, CheckpointState,
+    Fingerprint,
+};
 pub use metrics::{accuracy, EpochStats, PhaseTimes, Stopwatch};
-pub use optimizer::{Adam, Optimizer, Sgd};
+pub use optimizer::{Adam, Optimizer, OptimizerState, Sgd};
 pub use padding::pad_batch;
 pub use trainer::{
     sample_rank, train_distributed, train_rank, AggEpoch, RankTrainReport, SampleRankReport,

@@ -9,10 +9,31 @@ use anyhow::{ensure, Result};
 
 use crate::runtime::HostTensor;
 
+/// The full serializable state of an optimizer's update rule — everything
+/// beyond the hyperparameters that the next `step` depends on. Capturing
+/// and restoring this is what makes a checkpointed run resume
+/// bit-identically: SGD's velocity and Adam's `t`/`m`/`v` moments all
+/// feed directly into the parameter update.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OptimizerState {
+    /// Momentum buffers, one per parameter tensor (empty until the first
+    /// step with nonzero momentum — restoring an empty state is valid).
+    Sgd { velocity: Vec<Vec<f32>> },
+    /// Step count plus first/second moment estimates per parameter tensor.
+    Adam { t: i32, m: Vec<Vec<f32>>, v: Vec<Vec<f32>> },
+}
+
 /// A parameter-update rule over flat f32 tensors.
 pub trait Optimizer: Send {
     fn step(&mut self, params: &mut [HostTensor], grads: &[HostTensor]) -> Result<()>;
     fn lr(&self) -> f32;
+    /// Capture the update rule's full state for checkpointing.
+    fn state(&self) -> OptimizerState;
+    /// Restore a state captured by [`Optimizer::state`]. The state's kind
+    /// must match this optimizer (a checkpoint written under `adam` cannot
+    /// feed an `sgd` run); per-tensor lengths are validated lazily at the
+    /// next `step` against the actual parameters.
+    fn load_state(&mut self, state: OptimizerState) -> Result<()>;
 }
 
 /// SGD with optional momentum.
@@ -34,6 +55,15 @@ impl Optimizer for Sgd {
         if self.velocity.is_empty() && self.momentum != 0.0 {
             self.velocity = params.iter().map(|p| vec![0.0; p.len()]).collect();
         }
+        if !self.velocity.is_empty() {
+            ensure!(
+                self.velocity.len() == params.len(),
+                "sgd velocity holds {} tensors but the model has {} — \
+                 a restored state from a different model?",
+                self.velocity.len(),
+                params.len()
+            );
+        }
         for (pi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
             let (HostTensor::F32 { data: pd, .. }, HostTensor::F32 { data: gd, .. }) = (p, g)
             else {
@@ -46,6 +76,7 @@ impl Optimizer for Sgd {
                 }
             } else {
                 let v = &mut self.velocity[pi];
+                ensure!(v.len() == pd.len(), "sgd velocity length mismatch at {pi}");
                 for ((x, dx), vi) in pd.iter_mut().zip(gd).zip(v.iter_mut()) {
                     *vi = self.momentum * *vi + dx;
                     *x -= self.lr * *vi;
@@ -57,6 +88,22 @@ impl Optimizer for Sgd {
 
     fn lr(&self) -> f32 {
         self.lr
+    }
+
+    fn state(&self) -> OptimizerState {
+        OptimizerState::Sgd { velocity: self.velocity.clone() }
+    }
+
+    fn load_state(&mut self, state: OptimizerState) -> Result<()> {
+        match state {
+            OptimizerState::Sgd { velocity } => {
+                self.velocity = velocity;
+                Ok(())
+            }
+            OptimizerState::Adam { .. } => {
+                anyhow::bail!("checkpointed optimizer state is adam, this run uses sgd")
+            }
+        }
     }
 }
 
@@ -85,6 +132,14 @@ impl Optimizer for Adam {
             self.m = params.iter().map(|p| vec![0.0; p.len()]).collect();
             self.v = params.iter().map(|p| vec![0.0; p.len()]).collect();
         }
+        ensure!(
+            self.m.len() == params.len() && self.v.len() == params.len(),
+            "adam moments hold {}/{} tensors but the model has {} — \
+             a restored state from a different model?",
+            self.m.len(),
+            self.v.len(),
+            params.len()
+        );
         self.t += 1;
         let bc1 = 1.0 - self.beta1.powi(self.t);
         let bc2 = 1.0 - self.beta2.powi(self.t);
@@ -95,6 +150,10 @@ impl Optimizer for Adam {
             };
             ensure!(pd.len() == gd.len(), "param/grad length mismatch at {pi}");
             let (m, v) = (&mut self.m[pi], &mut self.v[pi]);
+            ensure!(
+                m.len() == pd.len() && v.len() == pd.len(),
+                "adam moment length mismatch at {pi}"
+            );
             for i in 0..pd.len() {
                 m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gd[i];
                 v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gd[i] * gd[i];
@@ -109,6 +168,31 @@ impl Optimizer for Adam {
     fn lr(&self) -> f32 {
         self.lr
     }
+
+    fn state(&self) -> OptimizerState {
+        OptimizerState::Adam { t: self.t, m: self.m.clone(), v: self.v.clone() }
+    }
+
+    fn load_state(&mut self, state: OptimizerState) -> Result<()> {
+        match state {
+            OptimizerState::Adam { t, m, v } => {
+                ensure!(
+                    m.len() == v.len(),
+                    "adam state has {} first-moment but {} second-moment tensors",
+                    m.len(),
+                    v.len()
+                );
+                ensure!(t >= 0, "adam state has negative step count {t}");
+                self.t = t;
+                self.m = m;
+                self.v = v;
+                Ok(())
+            }
+            OptimizerState::Sgd { .. } => {
+                anyhow::bail!("checkpointed optimizer state is sgd, this run uses adam")
+            }
+        }
+    }
 }
 
 /// Parse `sgd`, `sgd:0.9` (momentum) or `adam` into an optimizer.
@@ -116,7 +200,18 @@ pub fn by_name(name: &str, lr: f32) -> Result<Box<dyn Optimizer>> {
     match name.split_once(':') {
         None if name == "adam" => Ok(Box::new(Adam::new(lr))),
         None if name == "sgd" => Ok(Box::new(Sgd::new(lr, 0.0))),
-        Some(("sgd", m)) => Ok(Box::new(Sgd::new(lr, m.parse()?))),
+        Some(("sgd", m)) => {
+            let m: f32 = m
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad sgd momentum {m:?}: {e}"))?;
+            // A silent NaN/negative/≥1 momentum diverges (or freezes) the
+            // run with no hint at the cause — reject it at parse time.
+            ensure!(
+                m.is_finite() && (0.0..1.0).contains(&m),
+                "sgd momentum must be in [0, 1), got {m}"
+            );
+            Ok(Box::new(Sgd::new(lr, m)))
+        }
         _ => anyhow::bail!("unknown optimizer {name:?} (want adam | sgd | sgd:<momentum>)"),
     }
 }
@@ -166,5 +261,87 @@ mod tests {
         assert!(by_name("sgd", 0.1).is_ok());
         assert_eq!(by_name("sgd:0.9", 0.1).unwrap().lr(), 0.1);
         assert!(by_name("lbfgs", 0.1).is_err());
+        // Momentum outside [0, 1) silently diverges or freezes the run —
+        // every such value must be rejected with a clear error.
+        assert!(by_name("sgd:0.0", 0.1).is_ok());
+        assert!(by_name("sgd:0.999", 0.1).is_ok());
+        for bad in ["sgd:NaN", "sgd:nan", "sgd:-0.5", "sgd:1.0", "sgd:1.5", "sgd:inf", "sgd:x"] {
+            let err = by_name(bad, 0.1).unwrap_err().to_string();
+            assert!(
+                err.contains("momentum"),
+                "{bad}: error should name the momentum, got {err:?}"
+            );
+        }
+    }
+
+    /// Snapshot mid-run, keep stepping on the original, and separately
+    /// restore the snapshot into a fresh optimizer and replay the same
+    /// gradients: the parameters must be bit-identical — the state
+    /// captures *everything* the update rule depends on.
+    fn state_round_trip(mut make: impl FnMut() -> Box<dyn Optimizer>) {
+        let mut params = vec![HostTensor::f32(vec![1.0, -2.0, 3.0], &[3])];
+        let mut opt = make();
+        for _ in 0..5 {
+            let g = vec![quad_grad(&params[0])];
+            opt.step(&mut params, &g).unwrap();
+        }
+        let snap_params = params.clone();
+        let snap_state = opt.state();
+        // Continue the original for 5 more steps.
+        for _ in 0..5 {
+            let g = vec![quad_grad(&params[0])];
+            opt.step(&mut params, &g).unwrap();
+        }
+        // Restore into a fresh optimizer and replay.
+        let mut resumed = make();
+        resumed.load_state(snap_state).unwrap();
+        let mut rp = snap_params;
+        for _ in 0..5 {
+            let g = vec![quad_grad(&rp[0])];
+            resumed.step(&mut rp, &g).unwrap();
+        }
+        let a = params[0].as_f32().unwrap();
+        let b = rp[0].as_f32().unwrap();
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "resumed run diverged");
+        }
+    }
+
+    #[test]
+    fn sgd_state_round_trips_bit_identically() {
+        state_round_trip(|| Box::new(Sgd::new(0.05, 0.9)));
+    }
+
+    #[test]
+    fn adam_state_round_trips_bit_identically() {
+        state_round_trip(|| Box::new(Adam::new(0.1)));
+    }
+
+    #[test]
+    fn load_state_rejects_wrong_kind() {
+        let mut sgd = Sgd::new(0.1, 0.9);
+        let adam_state = Adam::new(0.1).state();
+        assert!(sgd.load_state(adam_state).is_err());
+        let mut adam = Adam::new(0.1);
+        assert!(adam.load_state(OptimizerState::Sgd { velocity: vec![] }).is_err());
+    }
+
+    #[test]
+    fn restored_state_from_wrong_model_is_an_error_not_a_panic() {
+        // Velocity/moments sized for a 2-tensor model fed a 1-tensor model.
+        let mut sgd = Sgd::new(0.1, 0.9);
+        sgd.load_state(OptimizerState::Sgd { velocity: vec![vec![0.0], vec![0.0]] }).unwrap();
+        let mut params = vec![HostTensor::f32(vec![1.0], &[1])];
+        let grads = vec![quad_grad(&params[0])];
+        assert!(sgd.step(&mut params, &grads).is_err());
+
+        let mut adam = Adam::new(0.1);
+        adam.load_state(OptimizerState::Adam {
+            t: 3,
+            m: vec![vec![0.0, 0.0]],
+            v: vec![vec![0.0, 0.0]],
+        })
+        .unwrap();
+        assert!(adam.step(&mut params, &grads).is_err());
     }
 }

@@ -57,6 +57,10 @@ pub struct ProducerPlan {
     /// point's tag); epoch and batch keys derive from it here exactly
     /// as they do in serial mode.
     pub key: RngKey,
+    /// First epoch to produce (0 for a fresh run; the restored cursor
+    /// for `--resume`). Epoch keys are positional, so starting here
+    /// reproduces exactly the tail of an uninterrupted run.
+    pub start_epoch: usize,
     pub epochs: usize,
     /// Batches per epoch — already cross-rank agreed (`all_reduce_min`)
     /// and capped by the trainer before the sampler spawns.
@@ -107,7 +111,7 @@ pub fn sampler_epochs(
     items: &SyncSender<Produced>,
     go: &Receiver<Vec<usize>>,
 ) -> Result<(), CommError> {
-    for epoch in 0..plan.epochs {
+    for epoch in plan.start_epoch..plan.epochs {
         // Block until the trainer has fenced the epoch start. A closed
         // channel means the trainer stopped (error or early shutdown):
         // exit cleanly — the trainer side owns error reporting.

@@ -7,7 +7,7 @@
 //! partition's labeled nodes — the paper's data-parallel recipe. All
 //! phase times are measured per worker so Fig 5/6 can be regenerated.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -26,6 +26,7 @@ use crate::runtime::{Engine, HostTensor, Manifest, ModelRuntime};
 use crate::sampling::rng::RngKey;
 use crate::sampling::{KernelKind, Mfg, MinibatchSchedule, SamplerWorkspace};
 
+use super::checkpoint::{self, CheckpointState, Fingerprint};
 use super::metrics::{accuracy, EpochStats, PhaseTimes, Stopwatch};
 use super::optimizer;
 use super::padding::pad_batch;
@@ -80,6 +81,18 @@ pub struct TrainConfig {
     /// Fanout schedule (paper §5 future work). Fanouts may only shrink
     /// below the variant's compiled fanouts; padding absorbs the rest.
     pub schedule: ScheduleKind,
+    /// Write per-rank checkpoints under this directory at epoch fences
+    /// (`--checkpoint-dir`; `None` = no checkpointing). Uniform across
+    /// ranks like every SPMD knob — each rank writes its own files.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint cadence: write after every n-th completed epoch
+    /// (`--checkpoint-every`, default 1).
+    pub checkpoint_every: usize,
+    /// Resume from the newest checkpoint every rank holds in
+    /// `checkpoint_dir` (`--resume`). Validated against this config's
+    /// fingerprint — any mismatch is a typed error, never silent
+    /// divergence; with no checkpoints present the run starts fresh.
+    pub resume: bool,
     pub verbose: bool,
 }
 
@@ -136,6 +149,9 @@ impl TrainConfig {
             max_batches: None,
             eval_last_batch: false,
             schedule: ScheduleKind::Fixed,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            resume: false,
             verbose: false,
         }
     }
@@ -310,7 +326,7 @@ pub fn train_rank(
         &PartitionConfig::new(cfg.workers),
     ));
     let shard = build_shard(dataset, &book, &cfg.policy, rank);
-    let w = worker_loop(rank, comm, &shard, &manifest, cfg)?;
+    let w = worker_loop(rank, comm, &shard, &manifest, cfg, &dataset.name)?;
     Ok(RankTrainReport {
         epochs: w.epochs,
         loss_curve: w.loss_curve,
@@ -412,6 +428,30 @@ pub fn sample_rank(
     let mut steps = 0usize;
     let mut sampled_edges = 0u64;
 
+    // Checkpoint/resume, exactly as in the trainer's worker loop:
+    // `resume_latest` is a collective guarded only by uniform config,
+    // placed after the batches vote and before any epoch traffic. The
+    // digest curve is all-reduced (identical on every rank), so the
+    // restored prefix stitches seamlessly onto the continued run.
+    // `first_seeds`/`mfgs` cover only the epochs this process runs.
+    let fp = Fingerprint::new("sample", &dataset.name, cfg, Some((batch, fanouts)));
+    let mut start_epoch = 0usize;
+    if cfg.resume {
+        if let Some(dir) = &cfg.checkpoint_dir {
+            if let Some(state) = checkpoint::resume_latest(comm, dir, &fp)? {
+                start_epoch = state.epochs_done as usize;
+                curve = state.curve;
+                steps = state.steps as usize;
+                sampled_edges = state.sampled_edges;
+                epoch_deltas = state.epoch_deltas;
+                for (v, row) in &state.cache_rows {
+                    view.cache_insert(*v, row);
+                }
+                comm.counters.restore(&state.comm);
+            }
+        }
+    }
+
     // Sampling misses and feature rounds ride the Sampling plane in both
     // modes, so wire traffic is mode-invariant; the digest all-reduce and
     // the epoch fences stay on the base (gradient-plane) handle.
@@ -420,6 +460,7 @@ pub fn sample_rank(
     if cfg.pipeline {
         let plan = ProducerPlan {
             key,
+            start_epoch,
             epochs: cfg.epochs,
             batches,
             batch,
@@ -440,7 +481,7 @@ pub fn sample_rank(
                 })
             };
             let mut body = || -> Result<()> {
-                for epoch in 0..cfg.epochs {
+                for epoch in start_epoch..cfg.epochs {
                     let mark = comm.fenced_snapshot()?;
                     let _ = go_tx.send(fanouts.to_vec());
                     for b in 0..batches {
@@ -482,7 +523,29 @@ pub fn sample_rank(
                         Ok(_) => anyhow::bail!("prefetcher desynchronized at epoch boundary"),
                         Err(_) => anyhow::bail!("sampler thread stopped early"),
                     }
-                    epoch_deltas.push(comm.fenced_snapshot()?.diff(&mark));
+                    let end = comm.fenced_snapshot()?;
+                    epoch_deltas.push(end.diff(&mark));
+                    // Checkpoint at the fence (sampler quiescent on `go`);
+                    // the cache section stays empty — the sampler thread
+                    // owns the view for the whole scope, and cache rows
+                    // shape traffic only, never the digest curve.
+                    if let Some(dir) = &cfg.checkpoint_dir {
+                        if (epoch + 1) % cfg.checkpoint_every.max(1) == 0 {
+                            let state = CheckpointState {
+                                epochs_done: (epoch + 1) as u64,
+                                smoothed_loss: None,
+                                curve: curve.clone(),
+                                comm: end,
+                                epoch_deltas: epoch_deltas.clone(),
+                                params: Vec::new(),
+                                opt: None,
+                                cache_rows: Vec::new(),
+                                steps: steps as u64,
+                                sampled_edges,
+                            };
+                            checkpoint::write_checkpoint(dir, &fp, rank, &state)?;
+                        }
+                    }
                 }
                 Ok(())
             };
@@ -503,7 +566,7 @@ pub fn sample_rank(
         })?;
     } else {
         let mut feat = Vec::new();
-        for epoch in 0..cfg.epochs {
+        for epoch in start_epoch..cfg.epochs {
             let mark = comm.fenced_snapshot()?;
             let schedule =
                 MinibatchSchedule::new(&shard.train_local, batch, key.fold(epoch as u64));
@@ -543,7 +606,28 @@ pub fn sample_rank(
                     all_mfgs.push(mfgs);
                 }
             }
-            epoch_deltas.push(comm.fenced_snapshot()?.diff(&mark));
+            let end = comm.fenced_snapshot()?;
+            epoch_deltas.push(end.diff(&mark));
+            // Checkpoint at the fence — purely local I/O, uniform-config
+            // cadence. Serial mode owns the view, so the adjacency
+            // cache's resident rows ride along for a warm resume.
+            if let Some(dir) = &cfg.checkpoint_dir {
+                if (epoch + 1) % cfg.checkpoint_every.max(1) == 0 {
+                    let state = CheckpointState {
+                        epochs_done: (epoch + 1) as u64,
+                        smoothed_loss: None,
+                        curve: curve.clone(),
+                        comm: end,
+                        epoch_deltas: epoch_deltas.clone(),
+                        params: Vec::new(),
+                        opt: None,
+                        cache_rows: view.cached_entries(),
+                        steps: steps as u64,
+                        sampled_edges,
+                    };
+                    checkpoint::write_checkpoint(dir, &fp, rank, &state)?;
+                }
+            }
         }
     }
     Ok(SampleRankReport {
@@ -581,7 +665,7 @@ pub fn train_distributed(
         cfg.workers,
         cfg.net.clone(),
         Arc::clone(&counters),
-        move |rank, comm| worker_loop(rank, comm, &shards_ref[rank], &manifest, cfg),
+        move |rank, comm| worker_loop(rank, comm, &shards_ref[rank], &manifest, cfg, &dataset.name),
     )
     .context("transport setup failed")?;
 
@@ -643,6 +727,7 @@ fn worker_loop(
     shard: &WorkerShard,
     manifest: &Manifest,
     cfg: &TrainConfig,
+    dataset_name: &str,
 ) -> Result<WorkerResult> {
     // Each worker owns a PJRT client + executables (PjRtClient is Rc-based
     // and not Send; one client per worker also mirrors one per machine).
@@ -712,6 +797,46 @@ fn worker_loop(
     let sched = cfg.schedule.build(variant.fanouts.clone());
     let mut smoothed_loss: Option<f32> = None;
 
+    // Checkpoint/resume. `resume_latest` is a collective (the world
+    // agrees on the epoch and cross-checks state digests), guarded only
+    // by uniform config — every rank takes this branch together. All
+    // restores land here, after the setup collectives (prefill, batches
+    // vote) and before any epoch traffic, so the counter stream and the
+    // positional RNG cursor continue exactly where the checkpointing
+    // run fenced. Per-epoch stats of already-completed epochs are not
+    // replayed: `epochs` reports only the epochs this process ran.
+    let fp = Fingerprint::new("train", dataset_name, cfg, None);
+    let mut start_epoch = 0usize;
+    if cfg.resume {
+        if let Some(dir) = &cfg.checkpoint_dir {
+            if let Some(state) = checkpoint::resume_latest(comm, dir, &fp)? {
+                ensure!(
+                    state.params.len() == params.len()
+                        && state.params.iter().zip(&params).all(|(a, b)| a.shape() == b.shape()),
+                    "checkpoint parameter shapes do not match variant {}",
+                    cfg.variant
+                );
+                start_epoch = state.epochs_done as usize;
+                params = state.params;
+                if let Some(os) = state.opt {
+                    opt.load_state(os)?;
+                }
+                smoothed_loss = state.smoothed_loss;
+                loss_curve = state.curve;
+                for (v, row) in &state.cache_rows {
+                    view.cache_insert(*v, row);
+                }
+                comm.counters.restore(&state.comm);
+                if cfg.verbose && rank == 0 {
+                    eprintln!(
+                        "[resume] restored {start_epoch} completed epoch(s) from {}",
+                        dir.display()
+                    );
+                }
+            }
+        }
+    }
+
     if cfg.pipeline {
         // Pipelined: a sampler thread produces minibatch t+1 (phases 1+2
         // on the Sampling plane, owning view/workspace/cache so every
@@ -719,6 +844,7 @@ fn worker_loop(
         // depth-1 channel while this thread runs phases 3+4 on batch t.
         let plan = ProducerPlan {
             key,
+            start_epoch,
             epochs: cfg.epochs,
             batches,
             batch: variant.batch,
@@ -739,7 +865,7 @@ fn worker_loop(
                 })
             };
             let mut body = || -> Result<()> {
-                for epoch in 0..cfg.epochs {
+                for epoch in start_epoch..cfg.epochs {
                     // Fenced epoch mark, exactly as in the serial arm —
                     // the sampler is quiescent (blocked on `go`) across
                     // it, so the delta cuts at the same traffic point.
@@ -809,7 +935,7 @@ fn worker_loop(
                                 &ev.logits,
                                 &padded.labels,
                                 &padded.label_mask,
-                            ));
+                            )?);
                         }
                     }
 
@@ -849,6 +975,31 @@ fn worker_loop(
                         );
                     }
                     epochs.push(stats);
+
+                    // Checkpoint at the fence just taken: both planes are
+                    // quiescent (the sampler is blocked on `go`), so the
+                    // cumulative `comm_end` is exact. Purely local I/O.
+                    // The sampler thread owns view/cache for the whole
+                    // scope, so pipelined checkpoints skip the cache
+                    // section — a resumed run re-warms on demand, which
+                    // shapes traffic only, never curves.
+                    if let Some(dir) = &cfg.checkpoint_dir {
+                        if (epoch + 1) % cfg.checkpoint_every.max(1) == 0 {
+                            let state = CheckpointState {
+                                epochs_done: (epoch + 1) as u64,
+                                smoothed_loss,
+                                curve: loss_curve.clone(),
+                                comm: comm_end,
+                                epoch_deltas: Vec::new(),
+                                params: params.clone(),
+                                opt: Some(opt.state()),
+                                cache_rows: Vec::new(),
+                                steps: 0,
+                                sampled_edges: 0,
+                            };
+                            checkpoint::write_checkpoint(dir, &fp, rank, &state)?;
+                        }
+                    }
                 }
                 Ok(())
             };
@@ -872,7 +1023,7 @@ fn worker_loop(
         })?;
     } else {
         let mut feat_buf: Vec<f32> = Vec::new();
-        for epoch in 0..cfg.epochs {
+        for epoch in start_epoch..cfg.epochs {
             // Fenced epoch mark: the counters are fabric-global, so the
             // per-epoch delta is only exact if no rank can charge this
             // epoch's first bytes before every rank has taken the
@@ -943,7 +1094,7 @@ fn worker_loop(
                 if cfg.eval_last_batch && b == batches - 1 {
                     let ev = rt.eval_step(&params, &padded)?;
                     batch_acc =
-                        Some(accuracy(&ev.logits, &padded.labels, &padded.label_mask));
+                        Some(accuracy(&ev.logits, &padded.labels, &padded.label_mask)?);
                 }
             }
 
@@ -976,6 +1127,28 @@ fn worker_loop(
                 );
             }
             epochs.push(stats);
+
+            // Checkpoint at the fence just taken (both planes quiescent;
+            // `comm_end` is the exact cumulative snapshot). Purely local
+            // I/O — no collectives, so cadence conditions stay uniform
+            // by construction (they read only uniform config).
+            if let Some(dir) = &cfg.checkpoint_dir {
+                if (epoch + 1) % cfg.checkpoint_every.max(1) == 0 {
+                    let state = CheckpointState {
+                        epochs_done: (epoch + 1) as u64,
+                        smoothed_loss,
+                        curve: loss_curve.clone(),
+                        comm: comm_end,
+                        epoch_deltas: Vec::new(),
+                        params: params.clone(),
+                        opt: Some(opt.state()),
+                        cache_rows: view.cached_entries(),
+                        steps: 0,
+                        sampled_edges: 0,
+                    };
+                    checkpoint::write_checkpoint(dir, &fp, rank, &state)?;
+                }
+            }
         }
     }
 

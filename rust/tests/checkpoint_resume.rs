@@ -1,0 +1,560 @@
+//! Checkpoint/resume: a killed run must be recoverable **bit-identically**.
+//!
+//! * In-process grid over `{serial, +pipe} × {scalar, bulk}` (plus a
+//!   budgeted + adjacency-cache arm): run 2 of 3 epochs with
+//!   `--checkpoint-dir`, start a fresh world with `--resume`, and the
+//!   stitched digest curve / step / edge counts must equal an
+//!   uninterrupted 3-epoch run bit for bit.
+//! * Typed-error paths: mismatched fingerprint, ranks with no
+//!   checkpoints, and a corrupted binary all surface as
+//!   [`CheckpointError`] variants — never a silent divergence or a hang.
+//! * The re-exec harness (pattern of `process_rendezvous.rs`): 4 real OS
+//!   processes checkpoint every epoch; rank 3 is configured to exit
+//!   after epoch 1 (a "kill" — its sockets close and the survivors die
+//!   mid-epoch-2 with `PeerLost`); a full relaunch with `--resume`
+//!   continues from the epoch every rank holds and the final curve is
+//!   bit-identical to a run that was never killed. Same grid of modes.
+//! * With AOT artifacts present, the same interrupt/resume cycle runs
+//!   real training (Adam state, params, loss curve) — skips politely
+//!   otherwise, like `train_e2e`.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastsample::dist::{
+    run_worker_process, run_workers_with, Counters, NetworkModel, RendezvousConfig,
+};
+use fastsample::graph::generator::{make_dataset, DatasetParams};
+use fastsample::graph::Dataset;
+use fastsample::train::{sample_rank, CheckpointError, SampleRankReport, TrainConfig};
+
+const WORLD: usize = 4;
+const BATCH: usize = 8;
+const FANOUTS: [usize; 2] = [3, 2];
+const STEPS: usize = 2;
+const EPOCHS: usize = 3;
+
+/// The mode grid the resume guarantee is pinned over. The cache arm uses
+/// a byte budget small enough to leave remote misses (so the adjacency
+/// cache actually fills and rides the checkpoint) and a cache large
+/// enough to never evict (restored resident rows then reproduce traffic
+/// exactly; CLOCK reference bits are not checkpointed).
+const GRID: [(&str, &str, bool); 5] = [
+    ("serial-bulk", "vanilla+wire:bulk", false),
+    ("serial-scalar", "vanilla+wire:scalar", false),
+    ("pipe-bulk", "vanilla+wire:bulk", true),
+    ("pipe-scalar", "vanilla+wire:scalar", true),
+    ("serial-cache", "budget:4k+cache:64k", false),
+];
+
+fn sample_dataset() -> Dataset {
+    make_dataset(&DatasetParams {
+        name: "checkpoint-resume".into(),
+        num_nodes: 500,
+        avg_degree: 8,
+        feat_dim: 5,
+        num_classes: 4,
+        labeled_frac: 0.3,
+        p_intra: 0.8,
+        noise: 0.2,
+        seed: 41,
+    })
+}
+
+fn task_config(mode: &str, pipeline: bool, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::mode("quickstart", mode, WORLD).unwrap();
+    cfg.epochs = epochs;
+    cfg.max_batches = Some(STEPS);
+    cfg.net = NetworkModel::free();
+    cfg.seed = 7;
+    cfg.verbose = false;
+    cfg.pipeline = pipeline;
+    cfg.checkpoint_every = 1;
+    cfg
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fastsample-ckpt-resume-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run the sample task on every rank of an in-process world, panicking
+/// on any rank error (the happy-path helper).
+fn run_sample(d: &Dataset, cfg: &TrainConfig) -> Vec<SampleRankReport> {
+    run_workers_with(
+        WORLD,
+        NetworkModel::free(),
+        Arc::new(Counters::default()),
+        move |rank, comm| sample_rank(d, cfg, BATCH, &FANOUTS, false, rank, comm).unwrap(),
+    )
+}
+
+/// Same, but returning each rank's `Result` (the error-path helper).
+fn try_sample(d: &Dataset, cfg: &TrainConfig) -> Vec<anyhow::Result<SampleRankReport>> {
+    run_workers_with(WORLD, NetworkModel::free(), Arc::new(Counters::default()), {
+        move |rank, comm| sample_rank(d, cfg, BATCH, &FANOUTS, false, rank, comm)
+    })
+}
+
+fn curve_bits(curve: &[f32]) -> Vec<u32> {
+    curve.iter().map(|v| v.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// In-process: resume equality over the whole mode grid
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resume_continues_bit_identically_across_modes_and_wires() {
+    let d = sample_dataset();
+    for (tag, mode, pipeline) in GRID {
+        // Ground truth: the same world, never interrupted.
+        let full = run_sample(&d, &task_config(mode, pipeline, EPOCHS));
+
+        // Interrupted: 2 epochs with checkpointing, then a fresh world
+        // resumes to the full epoch count from the same directory.
+        let dir = fresh_dir(tag);
+        let mut cfg = task_config(mode, pipeline, 2);
+        cfg.checkpoint_dir = Some(dir.clone());
+        let partial = run_sample(&d, &cfg);
+        let mut cfg = task_config(mode, pipeline, EPOCHS);
+        cfg.checkpoint_dir = Some(dir.clone());
+        cfg.resume = true;
+        let resumed = run_sample(&d, &cfg);
+
+        for rank in 0..WORLD {
+            assert_eq!(
+                curve_bits(&resumed[rank].curve),
+                curve_bits(&full[rank].curve),
+                "{tag} rank {rank}: stitched digest curve diverged"
+            );
+            assert_eq!(resumed[rank].steps, full[rank].steps, "{tag} rank {rank} steps");
+            assert_eq!(
+                resumed[rank].sampled_edges, full[rank].sampled_edges,
+                "{tag} rank {rank} sampled edges"
+            );
+            // The restored prefix really is the partial run's curve.
+            assert_eq!(
+                curve_bits(&partial[rank].curve),
+                curve_bits(&full[rank].curve[..partial[rank].curve.len()]),
+                "{tag} rank {rank}: partial run is not a prefix of the full run"
+            );
+        }
+        // Serial vanilla arms: the per-epoch fenced counter deltas and
+        // the restored cumulative counters must also stitch exactly
+        // (pipelined/cache checkpoints are covered by the curve — the
+        // cache section is empty in pipelined mode by design).
+        if !pipeline && !mode.contains("cache") {
+            for rank in 0..WORLD {
+                assert_eq!(
+                    resumed[rank].epoch_deltas, full[rank].epoch_deltas,
+                    "{tag} rank {rank}: per-epoch comm deltas diverged across resume"
+                );
+                assert_eq!(
+                    resumed[rank].comm_total, full[rank].comm_total,
+                    "{tag} rank {rank}: cumulative counters diverged across resume"
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn resume_with_no_checkpoints_is_a_fresh_start() {
+    let d = sample_dataset();
+    let full = run_sample(&d, &task_config("vanilla", false, EPOCHS));
+    let dir = fresh_dir("fresh-start");
+    let mut cfg = task_config("vanilla", false, EPOCHS);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.resume = true; // nothing to resume from — must run from epoch 0
+    let resumed = run_sample(&d, &cfg);
+    for rank in 0..WORLD {
+        assert_eq!(curve_bits(&resumed[rank].curve), curve_bits(&full[rank].curve));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_falls_back_to_the_newest_epoch_every_rank_holds() {
+    let d = sample_dataset();
+    let full = run_sample(&d, &task_config("vanilla", false, EPOCHS));
+    let dir = fresh_dir("fallback");
+    let mut cfg = task_config("vanilla", false, 2);
+    cfg.checkpoint_dir = Some(dir.clone());
+    run_sample(&d, &cfg);
+    // Rank 2 "lost" its epoch-2 checkpoint (kill between the bin and
+    // manifest renames): the world must agree on epoch 1 and still
+    // finish bit-identically.
+    std::fs::remove_file(dir.join("ckpt-000002").join("rank2.json")).unwrap();
+    let mut cfg = task_config("vanilla", false, EPOCHS);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.resume = true;
+    let resumed = run_sample(&d, &cfg);
+    for rank in 0..WORLD {
+        assert_eq!(
+            curve_bits(&resumed[rank].curve),
+            curve_bits(&full[rank].curve),
+            "rank {rank}: fallback-to-epoch-1 resume diverged"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// In-process: typed error paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resume_refuses_a_mismatched_config_with_a_typed_error() {
+    let d = sample_dataset();
+    let dir = fresh_dir("mismatch");
+    let mut cfg = task_config("vanilla", false, 2);
+    cfg.checkpoint_dir = Some(dir.clone());
+    run_sample(&d, &cfg);
+    // Same directory, different seed: every rank must refuse, naming
+    // the field — never silently diverge.
+    let mut cfg = task_config("vanilla", false, EPOCHS);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.resume = true;
+    cfg.seed = 8;
+    for (rank, r) in try_sample(&d, &cfg).into_iter().enumerate() {
+        let e = r.expect_err("resume under a different seed must fail");
+        match e.downcast_ref::<CheckpointError>() {
+            Some(CheckpointError::FingerprintMismatch { field, .. }) => {
+                assert_eq!(field, "seed", "rank {rank}")
+            }
+            other => panic!("rank {rank}: wanted FingerprintMismatch, got {other:?} ({e:#})"),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ranks_without_checkpoints_surface_rank_disagreement() {
+    let d = sample_dataset();
+    let dir = fresh_dir("disagreement");
+    let mut cfg = task_config("vanilla", false, 2);
+    cfg.checkpoint_dir = Some(dir.clone());
+    run_sample(&d, &cfg);
+    // Rank 2 has no checkpoints at all (e.g. a wrong --checkpoint-dir on
+    // one machine): a partial restore would desynchronize, so every rank
+    // gets the typed refusal.
+    for epoch in ["ckpt-000001", "ckpt-000002"] {
+        std::fs::remove_file(dir.join(epoch).join("rank2.json")).unwrap();
+    }
+    let mut cfg = task_config("vanilla", false, EPOCHS);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.resume = true;
+    for (rank, r) in try_sample(&d, &cfg).into_iter().enumerate() {
+        let e = r.expect_err("resume with a checkpoint-less rank must fail");
+        match e.downcast_ref::<CheckpointError>() {
+            Some(CheckpointError::RankDisagreement { .. }) => {}
+            other => panic!("rank {rank}: wanted RankDisagreement, got {other:?} ({e:#})"),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_corrupted_checkpoint_is_a_typed_error_not_a_silent_restore() {
+    let d = sample_dataset();
+    let dir = fresh_dir("corrupt");
+    let mut cfg = task_config("vanilla", false, 2);
+    cfg.checkpoint_dir = Some(dir.clone());
+    run_sample(&d, &cfg);
+    // Flip one byte in rank 1's newest binary. Rank 1 must fail with
+    // Corrupt; the other ranks see its departure as a fabric error (the
+    // documented never-hang contract), not a partial restore.
+    let bpath = dir.join("ckpt-000002").join("rank1.bin");
+    let mut bytes = std::fs::read(&bpath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&bpath, &bytes).unwrap();
+    let mut cfg = task_config("vanilla", false, EPOCHS);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.resume = true;
+    let results = try_sample(&d, &cfg);
+    let e = results[1].as_ref().expect_err("rank 1 read a corrupted checkpoint");
+    match e.downcast_ref::<CheckpointError>() {
+        Some(CheckpointError::Corrupt { detail, .. }) => {
+            assert!(detail.contains("checksum"), "{detail}")
+        }
+        other => panic!("wanted Corrupt, got {other:?} ({e:#})"),
+    }
+    for (rank, r) in results.iter().enumerate() {
+        assert!(r.is_err(), "rank {rank} should not have proceeded");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// The child role of the re-exec kill/resume harness (inert unless the
+// parent set the environment; see process_rendezvous.rs for the pattern)
+// ---------------------------------------------------------------------------
+
+fn quick_rdv() -> RendezvousConfig {
+    RendezvousConfig {
+        timeout: Duration::from_secs(60),
+        retry_initial: Duration::from_millis(5),
+        retry_max: Duration::from_millis(100),
+        bind: None,
+    }
+}
+
+/// Exact textual encoding of what the resume guarantee pins per rank.
+fn encode_outcome(r: &SampleRankReport) -> String {
+    let mut s = String::new();
+    write!(s, "curve").unwrap();
+    for v in &r.curve {
+        write!(s, " {:08x}", v.to_bits()).unwrap();
+    }
+    writeln!(s).unwrap();
+    writeln!(s, "steps {}", r.steps).unwrap();
+    writeln!(s, "edges {}", r.sampled_edges).unwrap();
+    s
+}
+
+#[test]
+fn checkpoint_child_entry() {
+    let Ok(rank) = std::env::var("FASTSAMPLE_CKPT_CHILD_RANK") else {
+        return; // normal test run: nothing to do
+    };
+    let rank: usize = rank.parse().unwrap();
+    let peers: Vec<String> = std::env::var("FASTSAMPLE_CKPT_CHILD_PEERS")
+        .unwrap()
+        .split(',')
+        .map(String::from)
+        .collect();
+    let out_path = std::env::var("FASTSAMPLE_CKPT_CHILD_OUT").unwrap();
+    let epochs: usize = std::env::var("FASTSAMPLE_CKPT_CHILD_EPOCHS").unwrap().parse().unwrap();
+    let mode = std::env::var("FASTSAMPLE_CKPT_CHILD_MODE").unwrap();
+    let pipeline = std::env::var("FASTSAMPLE_CKPT_CHILD_PIPELINE")
+        .map(|v| v == "on")
+        .unwrap_or(false);
+    let ckpt_dir = PathBuf::from(std::env::var("FASTSAMPLE_CKPT_CHILD_DIR").unwrap());
+    let resume = std::env::var("FASTSAMPLE_CKPT_CHILD_RESUME").map(|v| v == "1").unwrap_or(false);
+
+    let d = sample_dataset();
+    let mut cfg = task_config(&mode, pipeline, epochs);
+    cfg.workers = peers.len();
+    cfg.checkpoint_dir = Some(ckpt_dir);
+    cfg.resume = resume;
+    let result = run_worker_process(
+        rank,
+        &peers,
+        &quick_rdv(),
+        None,
+        NetworkModel::free(),
+        Arc::new(Counters::default()),
+        |rank, comm| sample_rank(&d, &cfg, BATCH, &FANOUTS, false, rank, comm),
+    )
+    .expect("rendezvous failed");
+    let body = match result {
+        Ok(r) => encode_outcome(&r),
+        Err(e) => format!("ERROR {e:#}\n"),
+    };
+    std::fs::write(&out_path, body).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// The parent side of the kill/resume harness
+// ---------------------------------------------------------------------------
+
+fn free_peer_csv(n: usize) -> String {
+    let listeners: Vec<std::net::TcpListener> =
+        (0..n).map(|_| std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap()).collect();
+    listeners
+        .iter()
+        .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+struct ChildSpec<'a> {
+    rank: usize,
+    epochs: usize,
+    mode: &'a str,
+    pipeline: bool,
+    dir: &'a Path,
+    resume: bool,
+}
+
+fn spawn_child(spec: &ChildSpec, peers_csv: &str, out: &PathBuf) -> Child {
+    Command::new(std::env::current_exe().unwrap())
+        .args(["checkpoint_child_entry", "--exact", "--nocapture", "--test-threads=1"])
+        .env("FASTSAMPLE_CKPT_CHILD_RANK", spec.rank.to_string())
+        .env("FASTSAMPLE_CKPT_CHILD_PEERS", peers_csv)
+        .env("FASTSAMPLE_CKPT_CHILD_OUT", out)
+        .env("FASTSAMPLE_CKPT_CHILD_EPOCHS", spec.epochs.to_string())
+        .env("FASTSAMPLE_CKPT_CHILD_MODE", spec.mode)
+        .env("FASTSAMPLE_CKPT_CHILD_PIPELINE", if spec.pipeline { "on" } else { "off" })
+        .env("FASTSAMPLE_CKPT_CHILD_DIR", spec.dir)
+        .env("FASTSAMPLE_CKPT_CHILD_RESUME", if spec.resume { "1" } else { "0" })
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn child worker process")
+}
+
+/// Wait for every child under one hard deadline. Children report fabric
+/// errors in their out files and still exit 0, so success is asserted
+/// here exactly as in `process_rendezvous.rs`.
+fn join_children(mut children: Vec<(usize, Child)>, secs: u64) {
+    let t0 = Instant::now();
+    while !children.is_empty() {
+        let mut still = Vec::new();
+        for (rank, mut c) in children {
+            match c.try_wait().unwrap() {
+                Some(status) => {
+                    assert!(status.success(), "child rank {rank} exited with {status}")
+                }
+                None => still.push((rank, c)),
+            }
+        }
+        children = still;
+        if children.is_empty() {
+            break;
+        }
+        if t0.elapsed() > Duration::from_secs(secs) {
+            let hung: Vec<usize> = children.iter().map(|(r, _)| *r).collect();
+            for (_, c) in &mut children {
+                let _ = c.kill();
+            }
+            panic!("child ranks {hung:?} did not exit within {secs}s — multi-process hang");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn out_path(test: &str, phase: &str, rank: usize) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "fastsample-ckptkill-{test}-{phase}-{}-rank{rank}.txt",
+        std::process::id()
+    ))
+}
+
+/// The tentpole acceptance test. For every grid mode: 4 real OS
+/// processes train with per-epoch checkpoints; rank 3 "dies" after
+/// epoch 1 (clean process exit — the survivors fail mid-epoch-2 with a
+/// fabric error, exactly a kill's signature); a full relaunch with
+/// `--resume` agrees on epoch 1 and the stitched digest curve is
+/// bit-identical to an uninterrupted in-process reference.
+#[test]
+fn killed_multi_process_run_resumes_bit_identically() {
+    let d = sample_dataset();
+    for (tag, mode, pipeline) in GRID {
+        let full = run_sample(&d, &task_config(mode, pipeline, EPOCHS));
+        let dir = fresh_dir(&format!("kill-{tag}"));
+
+        // Phase 1: the interrupted run. Rank 3 stops after epoch 1.
+        let peers = free_peer_csv(WORLD);
+        let mut children = Vec::new();
+        let mut outs = Vec::new();
+        for rank in 0..WORLD {
+            let out = out_path(tag, "kill", rank);
+            let _ = std::fs::remove_file(&out);
+            let epochs = if rank == 3 { 1 } else { EPOCHS };
+            let spec = ChildSpec { rank, epochs, mode, pipeline, dir: &dir, resume: false };
+            children.push((rank, spawn_child(&spec, &peers, &out)));
+            outs.push(out);
+        }
+        join_children(children, 300);
+        for (rank, out) in outs.iter().enumerate() {
+            let text = std::fs::read_to_string(out)
+                .unwrap_or_else(|e| panic!("{tag}: child rank {rank} wrote no report: {e}"));
+            if rank == 3 {
+                assert!(text.starts_with("curve"), "{tag}: rank 3 should exit cleanly: {text:?}");
+            } else {
+                assert!(
+                    text.starts_with("ERROR"),
+                    "{tag}: rank {rank} should have died mid-epoch-2: {text:?}"
+                );
+            }
+            let _ = std::fs::remove_file(out);
+        }
+        // Every rank fenced epoch 1 before the kill, so every rank's
+        // epoch-1 checkpoint must be complete on disk.
+        for rank in 0..WORLD {
+            assert!(
+                dir.join("ckpt-000001").join(format!("rank{rank}.json")).exists(),
+                "{tag}: rank {rank} has no complete epoch-1 checkpoint"
+            );
+        }
+
+        // Phase 2: full relaunch with --resume (fresh ports, fresh
+        // processes — exactly an operator's relaunch after a crash).
+        let peers = free_peer_csv(WORLD);
+        let mut children = Vec::new();
+        let mut outs = Vec::new();
+        for rank in 0..WORLD {
+            let out = out_path(tag, "resume", rank);
+            let _ = std::fs::remove_file(&out);
+            let spec =
+                ChildSpec { rank, epochs: EPOCHS, mode, pipeline, dir: &dir, resume: true };
+            children.push((rank, spawn_child(&spec, &peers, &out)));
+            outs.push(out);
+        }
+        join_children(children, 300);
+        for (rank, out) in outs.iter().enumerate() {
+            let text = std::fs::read_to_string(out)
+                .unwrap_or_else(|e| panic!("{tag}: resumed rank {rank} wrote no report: {e}"));
+            assert_eq!(
+                text,
+                encode_outcome(&full[rank]),
+                "{tag} rank {rank}: resumed multi-process run diverged from the \
+                 uninterrupted reference"
+            );
+            let _ = std::fs::remove_file(out);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real training (artifacts-gated, like train_e2e)
+// ---------------------------------------------------------------------------
+
+/// Interrupt/resume through real training: parameters, Adam moments, and
+/// the loss curve all ride the checkpoint, and the stitched loss curve
+/// is bit-identical — serial and pipelined.
+#[test]
+fn training_resume_is_bit_identical_when_artifacts_exist() {
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let d = fastsample::graph::datasets::quickstart(1);
+    for pipeline in [false, true] {
+        let mut cfg = TrainConfig::mode("quickstart", "vanilla", WORLD).unwrap();
+        cfg.epochs = EPOCHS;
+        cfg.max_batches = Some(STEPS);
+        cfg.net = NetworkModel::free();
+        cfg.seed = 3;
+        cfg.pipeline = pipeline;
+        let full = fastsample::train::train_distributed(&d, &artifacts, &cfg).unwrap();
+
+        let dir = fresh_dir(if pipeline { "train-pipe" } else { "train-serial" });
+        let mut interrupted = cfg.clone();
+        interrupted.epochs = 2;
+        interrupted.checkpoint_dir = Some(dir.clone());
+        fastsample::train::train_distributed(&d, &artifacts, &interrupted).unwrap();
+
+        let mut resumed_cfg = cfg.clone();
+        resumed_cfg.checkpoint_dir = Some(dir.clone());
+        resumed_cfg.resume = true;
+        let resumed = fastsample::train::train_distributed(&d, &artifacts, &resumed_cfg).unwrap();
+
+        assert_eq!(
+            curve_bits(&resumed.loss_curve),
+            curve_bits(&full.loss_curve),
+            "pipeline={pipeline}: stitched loss curve diverged across resume"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
