@@ -28,7 +28,7 @@ use std::collections::{BTreeMap, BTreeSet};
 pub const RULES: [&str; 6] = ["R1", "R2", "R3", "R4", "R5", "R6"];
 pub const ALLOW_RULE: &str = "allow";
 
-const COLLECTIVE_EXACT: [&str; 9] = [
+const COLLECTIVE_EXACT: [&str; 11] = [
     "barrier",
     "fenced_snapshot",
     "all_zero_u64",
@@ -38,6 +38,8 @@ const COLLECTIVE_EXACT: [&str; 9] = [
     "prefill_cache",
     "sampler_epochs",
     "resume_latest",
+    "serve_rank",
+    "serve_query_batch",
 ];
 const COLLECTIVE_PREFIX: [&str; 2] = ["all_reduce_", "exchange"];
 const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];

@@ -50,6 +50,11 @@
 //!   fixed feature rounds over the partitioned store.
 //! * [`feature_cache`] — [`FeatureCache`], the fixed-width typed wrapper
 //!   over the slab, plus the [`hottest_remote_nodes`] warm-up heuristic.
+//! * [`serve`] — the serve-mode client plane: the `FSRQ`/`FSRP`
+//!   request/reply wire, the admission-controlled rank-0 [`Frontend`]
+//!   with request coalescing, exact per-request [`LatencyHistogram`]s,
+//!   and the [`query_once`]/[`request_shutdown`] client helpers (the
+//!   collective side lives in `crate::train::serve`).
 
 // Panic-freedom is part of the fabric contract (spmd-lint rule R2): a rank
 // that panics mid-collective hangs every peer waiting on its frames. The
@@ -63,6 +68,7 @@ pub mod feature_cache;
 pub mod feature_store;
 pub mod net;
 pub mod sampling;
+pub mod serve;
 pub mod worker;
 
 pub use cache::{CachePolicy, SlabCache};
@@ -74,6 +80,10 @@ pub use feature_cache::{hottest_remote_nodes, FeatureCache};
 pub use feature_store::{fetch_features, prefill_cache, FetchStats};
 pub use net::{NetworkModel, PROTOCOL_VERSION, RendezvousConfig, TcpMesh, TransportConfig};
 pub use sampling::{sample_mfgs_distributed, sample_mfgs_distributed_wire, SamplingWire};
+pub use serve::{
+    query_once, request_shutdown, AddrSlot, Frontend, LatencyHistogram, ServeEmbeddings,
+    ServeError, ServeErrorKind, ServeOp, ServeReply, ServeRequest,
+};
 pub use worker::{
     run_worker_process, run_workers, run_workers_on, run_workers_over, run_workers_with,
 };

@@ -1,0 +1,1035 @@
+//! Serve-mode client plane: the request/reply wire between external
+//! clients and the resident rank-0 frontend.
+//!
+//! This module owns everything on the *client* side of serve mode and
+//! nothing on the collective side (that lives in [`crate::train::serve`]):
+//!
+//! * **Wire codec** — [`ServeRequest`] (`FSRQ` magic) and [`ServeReply`]
+//!   (`FSRP` magic), little-endian, with explicit length fields and hard
+//!   caps so a malformed client cannot make the frontend allocate
+//!   unboundedly. Errors travel *typed* on the wire as a
+//!   [`ServeErrorKind`] status byte plus a human-readable detail string —
+//!   a rejected or failed request always gets a reply, never a silent
+//!   drop or a closed socket.
+//! * **[`Frontend`]** — rank 0's listener: a polling accept thread plus
+//!   one blocking handler thread per connection. Handlers push decoded
+//!   requests into a *bounded* queue (`--serve-max-inflight`); a full
+//!   queue is answered immediately with [`ServeErrorKind::Overloaded`]
+//!   (admission control). The serve loop drains the queue through
+//!   [`Frontend::next_batch`], which coalesces concurrent requests into
+//!   one batch under a node-count cap and a max-wait window.
+//! * **[`LatencyHistogram`]** — exact nearest-rank percentiles over
+//!   recorded per-request latencies (p50/p99/max in the serve report).
+//! * **Client helpers** — [`query_once`] / [`request_shutdown`], shared
+//!   by `fastsample query` and the test suites.
+//!
+//! Threading contract: handler threads block on a per-request reply
+//! channel, so every pending request holds exactly one `Sender`. The
+//! serve loop answers by sending on it; if the loop dies first the
+//! `Sender` is dropped and the handler synthesizes a typed
+//! `ShuttingDown` reply — a client is *never* left hanging on a socket
+//! with no reply on the way.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::graph::NodeId;
+
+/// Magic prefix of every client request frame.
+pub const REQUEST_MAGIC: [u8; 4] = *b"FSRQ";
+/// Magic prefix of every reply frame.
+pub const REPLY_MAGIC: [u8; 4] = *b"FSRP";
+
+/// Hard cap on node ids per request frame (16 MiB of ids). Requests
+/// above this are malformed by definition; the decode fails before any
+/// allocation of that size happens.
+pub const MAX_QUERY_NODES: usize = 1 << 22;
+/// Hard cap on f32 values per reply frame (256 MiB of embeddings).
+pub const MAX_REPLY_VALUES: usize = 1 << 26;
+/// Hard cap on the error-detail string carried in a reply.
+pub const MAX_ERROR_DETAIL: usize = 1 << 16;
+
+/// Accept-thread poll interval while waiting for connections.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+const OP_QUERY: u8 = 0;
+const OP_SHUTDOWN: u8 = 1;
+const STATUS_OK: u8 = 0;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn malformed(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("serve wire: {what}"))
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn read_u8<R: Read>(r: &mut R) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// What a client asks the resident mesh to do.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeOp {
+    /// Compute embeddings (or logits, depending on the server's answer
+    /// mode) for these node ids, in order, duplicates allowed.
+    Query(Vec<NodeId>),
+    /// Ask the whole mesh to stop serving and exit cleanly.
+    Shutdown,
+}
+
+/// One client request frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeRequest {
+    /// Client-chosen correlation id, echoed verbatim in the reply.
+    pub id: u64,
+    pub op: ServeOp,
+}
+
+impl ServeRequest {
+    /// Append the wire encoding of this request to `out`.
+    pub fn encode_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&REQUEST_MAGIC);
+        match &self.op {
+            ServeOp::Query(nodes) => {
+                out.push(OP_QUERY);
+                put_u64(out, self.id);
+                put_u32(out, nodes.len() as u32);
+                for &v in nodes {
+                    put_u32(out, v);
+                }
+            }
+            ServeOp::Shutdown => {
+                out.push(OP_SHUTDOWN);
+                put_u64(out, self.id);
+                put_u32(out, 0);
+            }
+        }
+    }
+
+    /// Decode one request frame from `r`, consuming exactly the frame.
+    pub fn decode_from<R: Read>(r: &mut R) -> io::Result<ServeRequest> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if magic != REQUEST_MAGIC {
+            return Err(malformed("bad request magic"));
+        }
+        let op = read_u8(r)?;
+        let id = read_u64(r)?;
+        let n = read_u32(r)? as usize;
+        if n > MAX_QUERY_NODES {
+            return Err(malformed("query node count exceeds cap"));
+        }
+        match op {
+            OP_QUERY => {
+                let mut raw = vec![0u8; n * 4];
+                r.read_exact(&mut raw)?;
+                let nodes = raw
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(ServeRequest { id, op: ServeOp::Query(nodes) })
+            }
+            OP_SHUTDOWN => {
+                if n != 0 {
+                    return Err(malformed("shutdown request carries node ids"));
+                }
+                Ok(ServeRequest { id, op: ServeOp::Shutdown })
+            }
+            _ => Err(malformed("unknown request op")),
+        }
+    }
+}
+
+/// Typed failure classes a reply can carry. The discriminant is the
+/// wire status byte (0 is reserved for Ok).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeErrorKind {
+    /// Admission control: the bounded in-flight queue was full. The
+    /// request was *not* enqueued; retrying later is safe.
+    Overloaded,
+    /// A rank died mid-query; the mesh is poisoned and the server is
+    /// going down. The query was not answered.
+    PeerLost,
+    /// The request itself is invalid (out-of-range node id, batch over
+    /// the model's seed cap, ...). Retrying the same request will fail
+    /// the same way.
+    BadRequest,
+    /// The server is stopping and will not answer new queries.
+    ShuttingDown,
+    /// Any other server-side failure.
+    Internal,
+}
+
+impl ServeErrorKind {
+    fn code(self) -> u8 {
+        match self {
+            ServeErrorKind::Overloaded => 1,
+            ServeErrorKind::PeerLost => 2,
+            ServeErrorKind::BadRequest => 3,
+            ServeErrorKind::ShuttingDown => 4,
+            ServeErrorKind::Internal => 5,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<ServeErrorKind> {
+        match code {
+            1 => Some(ServeErrorKind::Overloaded),
+            2 => Some(ServeErrorKind::PeerLost),
+            3 => Some(ServeErrorKind::BadRequest),
+            4 => Some(ServeErrorKind::ShuttingDown),
+            5 => Some(ServeErrorKind::Internal),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeErrorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ServeErrorKind::Overloaded => "overloaded",
+            ServeErrorKind::PeerLost => "peer-lost",
+            ServeErrorKind::BadRequest => "bad-request",
+            ServeErrorKind::ShuttingDown => "shutting-down",
+            ServeErrorKind::Internal => "internal",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A typed error reply: kind plus a human-readable detail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeError {
+    pub kind: ServeErrorKind,
+    pub detail: String,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind, self.detail)
+    }
+}
+
+/// A successful reply: `rows` holds one `dim`-length row per requested
+/// node, in request order (duplicates answered per occurrence).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeEmbeddings {
+    pub dim: usize,
+    pub rows: Vec<f32>,
+}
+
+impl ServeEmbeddings {
+    /// Number of rows carried (0 when `dim` is 0).
+    pub fn num_rows(&self) -> usize {
+        if self.dim == 0 { 0 } else { self.rows.len() / self.dim }
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.rows[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// One reply frame, correlated to its request by `id`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReply {
+    pub id: u64,
+    pub body: Result<ServeEmbeddings, ServeError>,
+}
+
+impl ServeReply {
+    /// A successful reply.
+    pub fn ok(id: u64, dim: usize, rows: Vec<f32>) -> ServeReply {
+        ServeReply { id, body: Ok(ServeEmbeddings { dim, rows }) }
+    }
+
+    /// A typed error reply.
+    pub fn error(id: u64, kind: ServeErrorKind, detail: impl Into<String>) -> ServeReply {
+        ServeReply { id, body: Err(ServeError { kind, detail: detail.into() }) }
+    }
+
+    /// Append the wire encoding of this reply to `out`.
+    pub fn encode_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&REPLY_MAGIC);
+        put_u64(out, self.id);
+        match &self.body {
+            Ok(emb) => {
+                out.push(STATUS_OK);
+                put_u32(out, emb.dim as u32);
+                put_u32(out, emb.num_rows() as u32);
+                for &x in &emb.rows {
+                    put_u32(out, x.to_bits());
+                }
+            }
+            Err(e) => {
+                out.push(e.kind.code());
+                let detail = e.detail.as_bytes();
+                let take = detail.len().min(MAX_ERROR_DETAIL);
+                put_u32(out, take as u32);
+                out.extend_from_slice(&detail[..take]);
+            }
+        }
+    }
+
+    /// Decode one reply frame from `r`, consuming exactly the frame.
+    pub fn decode_from<R: Read>(r: &mut R) -> io::Result<ServeReply> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if magic != REPLY_MAGIC {
+            return Err(malformed("bad reply magic"));
+        }
+        let id = read_u64(r)?;
+        let status = read_u8(r)?;
+        if status == STATUS_OK {
+            let dim = read_u32(r)? as usize;
+            let nrows = read_u32(r)? as usize;
+            let values = dim.checked_mul(nrows).ok_or_else(|| malformed("reply size overflow"))?;
+            if values > MAX_REPLY_VALUES {
+                return Err(malformed("reply value count exceeds cap"));
+            }
+            let mut rows = Vec::with_capacity(values);
+            for _ in 0..values {
+                rows.push(f32::from_bits(read_u32(r)?));
+            }
+            Ok(ServeReply { id, body: Ok(ServeEmbeddings { dim, rows }) })
+        } else {
+            let kind = ServeErrorKind::from_code(status)
+                .ok_or_else(|| malformed("unknown reply status"))?;
+            let len = read_u32(r)? as usize;
+            if len > MAX_ERROR_DETAIL {
+                return Err(malformed("error detail exceeds cap"));
+            }
+            let mut raw = vec![0u8; len];
+            r.read_exact(&mut raw)?;
+            let detail = String::from_utf8(raw).map_err(|_| malformed("error detail not utf-8"))?;
+            Ok(ServeReply { id, body: Err(ServeError { kind, detail }) })
+        }
+    }
+}
+
+/// Exact per-request latency histogram: every sample is kept (serve
+/// batches are small relative to memory), so percentiles are the true
+/// nearest-rank order statistics, not bucket approximations — merged
+/// histograms stay exact too.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    samples: Vec<u64>,
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample in microseconds.
+    pub fn record(&mut self, micros: u64) {
+        self.samples.push(micros);
+    }
+
+    /// Record a [`Duration`] (saturating at `u64::MAX` microseconds).
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Number of recorded samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Fold another histogram into this one; the merge is exact (the
+    /// union of the sample sets), so any percentile of the merge lies
+    /// between the same percentile of the two parts.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    /// Nearest-rank percentile: the smallest sample such that at least
+    /// `p`% of samples are ≤ it. `None` on an empty histogram.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        Some(sorted[rank.clamp(1, n) - 1])
+    }
+
+    /// Median latency in microseconds.
+    pub fn p50(&self) -> Option<u64> {
+        self.percentile(50.0)
+    }
+
+    /// 99th-percentile latency in microseconds.
+    pub fn p99(&self) -> Option<u64> {
+        self.percentile(99.0)
+    }
+
+    /// Worst recorded latency in microseconds.
+    pub fn max(&self) -> Option<u64> {
+        self.samples.iter().copied().max()
+    }
+
+    /// One-line report fragment: `p50=..µs p99=..µs max=..µs n=..`.
+    pub fn summary(&self) -> String {
+        match (self.p50(), self.p99(), self.max()) {
+            (Some(p50), Some(p99), Some(max)) => {
+                format!("p50={p50}µs p99={p99}µs max={max}µs n={}", self.samples.len())
+            }
+            _ => "n=0".to_string(),
+        }
+    }
+}
+
+/// A one-shot rendezvous slot: the serving rank publishes its bound
+/// listener address (useful with port 0), a client-side thread waits on
+/// it. `Condvar`-based so it is `Sync` and usable under the worker
+/// harness's `Fn + Sync` closures.
+#[derive(Debug, Default)]
+pub struct AddrSlot {
+    addr: Mutex<Option<SocketAddr>>,
+    ready: Condvar,
+}
+
+impl AddrSlot {
+    /// Publish the bound address and wake all waiters.
+    pub fn publish(&self, addr: SocketAddr) {
+        *lock(&self.addr) = Some(addr);
+        self.ready.notify_all();
+    }
+
+    /// Wait up to `timeout` for the address; `None` on timeout.
+    pub fn wait(&self, timeout: Duration) -> Option<SocketAddr> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = lock(&self.addr);
+        while slot.is_none() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return None;
+            }
+            slot = match self.ready.wait_timeout(slot, left) {
+                Ok((guard, _)) => guard,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+        *slot
+    }
+}
+
+/// One admitted, not-yet-answered client request. Dropping a `Pending`
+/// without sending on `reply` is safe: the handler thread synthesizes a
+/// typed `ShuttingDown` reply when the channel closes.
+#[derive(Debug)]
+pub struct Pending {
+    pub id: u64,
+    pub nodes: Vec<NodeId>,
+    pub shutdown: bool,
+    pub reply: mpsc::Sender<ServeReply>,
+    pub arrived: Instant,
+}
+
+/// One coalesced batch handed to the serve loop.
+#[derive(Debug, Default)]
+pub struct Gathered {
+    /// Query requests admitted into this batch, arrival order.
+    pub pending: Vec<Pending>,
+    /// True when a shutdown request arrived (already acked) or the
+    /// frontend is closing; the serve loop should finish `pending` and
+    /// then stop.
+    pub shutdown: bool,
+}
+
+/// Rank 0's client listener: accepts connections, admission-controls
+/// decoded requests into a bounded queue, and coalesces them into
+/// batches for the serve loop.
+#[derive(Debug)]
+pub struct Frontend {
+    addr: SocketAddr,
+    queue: Receiver<Pending>,
+    stash: Option<Pending>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    rejected: Arc<AtomicU64>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Frontend {
+    /// Bind the client listener on `127.0.0.1:port` (0 ⇒ ephemeral; read
+    /// the real port back via [`Frontend::local_addr`]) with at most
+    /// `max_inflight` admitted-but-unanswered requests.
+    pub fn bind(port: u16, max_inflight: usize) -> io::Result<Frontend> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = mpsc::sync_channel(max_inflight.max(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let rejected = Arc::new(AtomicU64::new(0));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let rejected = Arc::clone(&rejected);
+            thread::spawn(move || accept_loop(listener, tx, stop, conns, rejected))
+        };
+        Ok(Frontend {
+            addr,
+            queue: rx,
+            stash: None,
+            stop,
+            conns,
+            rejected,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound listener address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Requests rejected by admission control so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Block for the next request, then coalesce: keep draining the
+    /// queue until the batch holds at least `max_nodes` node ids or
+    /// `max_wait` has elapsed since the first request was taken. A
+    /// request that would push a non-empty batch past `max_nodes` is
+    /// stashed for the next call (the *first* request of a batch is
+    /// always taken whole, so a single oversized request still forms a
+    /// batch — per-request caps are the serve loop's job). A shutdown
+    /// request is acked immediately and flips [`Gathered::shutdown`].
+    pub fn next_batch(&mut self, max_nodes: usize, max_wait: Duration) -> Gathered {
+        let mut out = Gathered::default();
+        let mut total = 0usize;
+        let first = match self.stash.take() {
+            Some(p) => p,
+            None => match self.queue.recv() {
+                Ok(p) => p,
+                Err(_) => {
+                    out.shutdown = true;
+                    return out;
+                }
+            },
+        };
+        admit(first, &mut out, &mut total);
+        let deadline = Instant::now() + max_wait;
+        while !out.shutdown && total < max_nodes {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match self.queue.recv_timeout(left) {
+                Ok(p) if !p.shutdown && total + p.nodes.len() > max_nodes => {
+                    self.stash = Some(p);
+                    break;
+                }
+                Ok(p) => admit(p, &mut out, &mut total),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    out.shutdown = true;
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Answer `pending` plus everything still queued or stashed with a
+    /// typed error (queued shutdown requests are acked Ok). Used on the
+    /// fabric-error path (`PeerLost`) and at clean stop (`ShuttingDown`)
+    /// so no client is ever left without a reply.
+    pub fn fail_all(&mut self, pending: Vec<Pending>, kind: ServeErrorKind, detail: &str) {
+        let mut drained = pending;
+        if let Some(p) = self.stash.take() {
+            drained.push(p);
+        }
+        while let Ok(p) = self.queue.try_recv() {
+            drained.push(p);
+        }
+        for p in drained {
+            let reply = if p.shutdown {
+                ServeReply::ok(p.id, 0, Vec::new())
+            } else {
+                ServeReply::error(p.id, kind, detail)
+            };
+            let _ = p.reply.send(reply);
+        }
+    }
+
+    /// Stop accepting: shut every open client socket (unblocking handler
+    /// reads) and join the accept thread. Idempotent; also runs on drop.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        for conn in lock(&self.conns).iter() {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Frontend {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn admit(p: Pending, out: &mut Gathered, total: &mut usize) {
+    if p.shutdown {
+        let _ = p.reply.send(ServeReply::ok(p.id, 0, Vec::new()));
+        out.shutdown = true;
+    } else {
+        *total += p.nodes.len();
+        out.pending.push(p);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    queue: SyncSender<Pending>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    rejected: Arc<AtomicU64>,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nodelay(true);
+                if let Ok(clone) = stream.try_clone() {
+                    lock(&conns).push(clone);
+                }
+                let queue = queue.clone();
+                let rejected = Arc::clone(&rejected);
+                thread::spawn(move || handle_conn(stream, queue, rejected));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(ACCEPT_POLL),
+            Err(_) => break,
+        }
+    }
+}
+
+fn write_reply(stream: &mut TcpStream, reply: &ServeReply) -> io::Result<()> {
+    let mut buf = Vec::new();
+    reply.encode_to(&mut buf);
+    stream.write_all(&buf)
+}
+
+/// Per-connection handler: decode requests in a loop, admission-control
+/// each into the bounded queue, block for the serve loop's answer, and
+/// write it back. A client disconnect (EOF, reset, garbage) just ends
+/// this thread — the serve loop is untouched, and if the request was
+/// already admitted its reply is simply absorbed by the dead socket.
+fn handle_conn(mut stream: TcpStream, queue: SyncSender<Pending>, rejected: Arc<AtomicU64>) {
+    loop {
+        let req = match ServeRequest::decode_from(&mut stream) {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        match req.op {
+            ServeOp::Query(nodes) if nodes.is_empty() => {
+                // Answered locally: an empty query has an empty answer
+                // and must not cost the mesh a collective round.
+                if write_reply(&mut stream, &ServeReply::ok(req.id, 0, Vec::new())).is_err() {
+                    return;
+                }
+            }
+            ServeOp::Query(nodes) => {
+                let (tx, rx) = mpsc::channel();
+                let pending =
+                    Pending { id: req.id, nodes, shutdown: false, reply: tx, arrived: Instant::now() };
+                let reply = match queue.try_send(pending) {
+                    Ok(()) => match rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => ServeReply::error(
+                            req.id,
+                            ServeErrorKind::ShuttingDown,
+                            "serve loop stopped before answering",
+                        ),
+                    },
+                    Err(TrySendError::Full(_)) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                        ServeReply::error(
+                            req.id,
+                            ServeErrorKind::Overloaded,
+                            "admission queue full; retry later",
+                        )
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        ServeReply::error(req.id, ServeErrorKind::ShuttingDown, "serve loop stopped")
+                    }
+                };
+                if write_reply(&mut stream, &reply).is_err() {
+                    return;
+                }
+            }
+            ServeOp::Shutdown => {
+                let (tx, rx) = mpsc::channel();
+                let pending =
+                    Pending { id: req.id, nodes: Vec::new(), shutdown: true, reply: tx, arrived: Instant::now() };
+                // Blocking send: shutdown must never be load-shed.
+                let reply = match queue.send(pending) {
+                    Ok(()) => match rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => ServeReply::ok(req.id, 0, Vec::new()),
+                    },
+                    Err(_) => ServeReply::ok(req.id, 0, Vec::new()),
+                };
+                let _ = write_reply(&mut stream, &reply);
+                return;
+            }
+        }
+    }
+}
+
+/// Send one query to a serving frontend and block for the reply.
+pub fn query_once(addr: &str, id: u64, nodes: &[NodeId]) -> io::Result<ServeReply> {
+    send_request(addr, &ServeRequest { id, op: ServeOp::Query(nodes.to_vec()) })
+}
+
+/// Ask a serving frontend to shut the whole mesh down cleanly.
+pub fn request_shutdown(addr: &str) -> io::Result<ServeReply> {
+    send_request(addr, &ServeRequest { id: 0, op: ServeOp::Shutdown })
+}
+
+fn send_request(addr: &str, req: &ServeRequest) -> io::Result<ServeReply> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut buf = Vec::new();
+    req.encode_to(&mut buf);
+    stream.write_all(&buf)?;
+    ServeReply::decode_from(&mut stream)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn round_trip_request(req: &ServeRequest) -> ServeRequest {
+        let mut buf = Vec::new();
+        req.encode_to(&mut buf);
+        let mut cur = Cursor::new(buf.as_slice());
+        let got = ServeRequest::decode_from(&mut cur).unwrap();
+        assert_eq!(cur.position() as usize, buf.len(), "decode must consume the exact frame");
+        got
+    }
+
+    fn round_trip_reply(reply: &ServeReply) -> ServeReply {
+        let mut buf = Vec::new();
+        reply.encode_to(&mut buf);
+        let mut cur = Cursor::new(buf.as_slice());
+        let got = ServeReply::decode_from(&mut cur).unwrap();
+        assert_eq!(cur.position() as usize, buf.len(), "decode must consume the exact frame");
+        got
+    }
+
+    #[test]
+    fn request_codec_round_trips() {
+        for req in [
+            ServeRequest { id: 0, op: ServeOp::Query(Vec::new()) },
+            ServeRequest { id: 7, op: ServeOp::Query(vec![0, 1, u32::MAX]) },
+            ServeRequest { id: u64::MAX, op: ServeOp::Shutdown },
+        ] {
+            assert_eq!(round_trip_request(&req), req);
+        }
+    }
+
+    #[test]
+    fn reply_codec_round_trips() {
+        for reply in [
+            ServeReply::ok(3, 2, vec![1.0, -0.5, f32::MIN_POSITIVE, 0.0]),
+            ServeReply::ok(4, 0, Vec::new()),
+            ServeReply::error(5, ServeErrorKind::Overloaded, "queue full"),
+            ServeReply::error(6, ServeErrorKind::PeerLost, ""),
+        ] {
+            assert_eq!(round_trip_reply(&reply), reply);
+        }
+        // NaN payloads round-trip by bit pattern (PartialEq would lie).
+        let nan = ServeReply::ok(9, 1, vec![f32::from_bits(0x7fc0_1234)]);
+        let got = round_trip_reply(&nan);
+        match (got.body, nan.body) {
+            (Ok(a), Ok(b)) => assert_eq!(
+                a.rows.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.rows.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            ),
+            _ => panic!("expected Ok bodies"),
+        }
+    }
+
+    #[test]
+    fn codec_rejects_malformed_frames() {
+        // Wrong magic.
+        let mut cur = Cursor::new(&b"XXXX\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00"[..]);
+        assert!(ServeRequest::decode_from(&mut cur).is_err());
+        // Truncated query payload.
+        let mut buf = Vec::new();
+        ServeRequest { id: 1, op: ServeOp::Query(vec![1, 2, 3]) }.encode_to(&mut buf);
+        buf.truncate(buf.len() - 2);
+        assert!(ServeRequest::decode_from(&mut Cursor::new(buf.as_slice())).is_err());
+        // Node count above the cap fails before allocating.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&REQUEST_MAGIC);
+        huge.push(OP_QUERY);
+        put_u64(&mut huge, 1);
+        put_u32(&mut huge, u32::MAX);
+        assert!(ServeRequest::decode_from(&mut Cursor::new(huge.as_slice())).is_err());
+        // Unknown reply status byte.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&REPLY_MAGIC);
+        put_u64(&mut bad, 1);
+        bad.push(250);
+        put_u32(&mut bad, 0);
+        assert!(ServeReply::decode_from(&mut Cursor::new(bad.as_slice())).is_err());
+    }
+
+    #[test]
+    fn histogram_exact_percentiles_on_known_distribution() {
+        let mut h = LatencyHistogram::default();
+        for v in (1..=100u64).rev() {
+            h.record(v);
+        }
+        assert_eq!(h.p50(), Some(50));
+        assert_eq!(h.p99(), Some(99));
+        assert_eq!(h.max(), Some(100));
+        assert_eq!(h.percentile(100.0), Some(100));
+        assert_eq!(h.percentile(1.0), Some(1));
+        assert_eq!(h.len(), 100);
+        // Skewed distribution: 99 fast samples and one slow outlier.
+        let mut h = LatencyHistogram::default();
+        for _ in 0..99 {
+            h.record(10);
+        }
+        h.record(5000);
+        assert_eq!(h.p50(), Some(10));
+        assert_eq!(h.p99(), Some(10));
+        assert_eq!(h.max(), Some(5000));
+    }
+
+    #[test]
+    fn histogram_empty_and_single_sample_edges() {
+        let h = LatencyHistogram::default();
+        assert!(h.is_empty());
+        assert_eq!(h.p50(), None);
+        assert_eq!(h.p99(), None);
+        assert_eq!(h.max(), None);
+        assert_eq!(h.summary(), "n=0");
+
+        let mut h = LatencyHistogram::default();
+        h.record(42);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), Some(42), "p={p}");
+        }
+        assert_eq!(h.max(), Some(42));
+        assert_eq!(h.summary(), "p50=42µs p99=42µs max=42µs n=1");
+    }
+
+    #[test]
+    fn merged_histogram_percentiles_are_bounded_by_the_parts() {
+        let mut a = LatencyHistogram::default();
+        for v in [3u64, 9, 27, 81, 243] {
+            a.record(v);
+        }
+        let mut b = LatencyHistogram::default();
+        for v in [5u64, 10, 20, 40, 80, 160, 320] {
+            b.record(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.len(), a.len() + b.len());
+        for p in [1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let (pa, pb) = (a.percentile(p).unwrap(), b.percentile(p).unwrap());
+            let pm = merged.percentile(p).unwrap();
+            assert!(pa.min(pb) <= pm && pm <= pa.max(pb), "p={p}: {pa} {pb} merged {pm}");
+        }
+        // Merging an empty histogram is the identity.
+        let mut same = a.clone();
+        same.merge(&LatencyHistogram::default());
+        assert_eq!(same, a);
+    }
+
+    #[test]
+    fn admission_overflow_returns_typed_overloaded() {
+        let mut front = Frontend::bind(0, 1).unwrap();
+        let addr = front.local_addr();
+        // Occupy the single admission slot: write a query and leave the
+        // socket open without reading the reply.
+        let mut occupant = TcpStream::connect(addr).unwrap();
+        let mut buf = Vec::new();
+        ServeRequest { id: 100, op: ServeOp::Query(vec![1, 2]) }.encode_to(&mut buf);
+        occupant.write_all(&buf).unwrap();
+        // Probe until a request is turned away: once the slot is held
+        // (by the occupant, or by a probe that raced it in), every
+        // further request must get a typed Overloaded reply — never a
+        // silent drop. Probes that time out were admitted: keep their
+        // sockets alive and keep probing.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut held = Vec::new();
+        loop {
+            assert!(Instant::now() < deadline, "no Overloaded reply before deadline");
+            let mut probe = TcpStream::connect(addr).unwrap();
+            let mut pbuf = Vec::new();
+            ServeRequest { id: 200, op: ServeOp::Query(vec![3]) }.encode_to(&mut pbuf);
+            probe.write_all(&pbuf).unwrap();
+            probe.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+            match ServeReply::decode_from(&mut probe) {
+                Ok(r) => {
+                    let e = r.body.expect_err("nobody is serving; an Ok reply is impossible");
+                    assert_eq!(e.kind, ServeErrorKind::Overloaded);
+                    assert!(!e.detail.is_empty(), "rejection must say why");
+                    break;
+                }
+                Err(_) => held.push(probe),
+            }
+        }
+        assert!(front.rejected() >= 1);
+        // The serving side is not wedged: exactly one request holds the
+        // slot (capacity is 1, everything else was rejected) — drain
+        // and answer it.
+        let mut gathered = front.next_batch(16, Duration::from_millis(10));
+        assert!(!gathered.shutdown);
+        assert_eq!(gathered.pending.len(), 1);
+        let p = gathered.pending.pop().unwrap();
+        let rows = vec![0.5; p.nodes.len()];
+        p.reply.send(ServeReply::ok(p.id, 1, rows)).unwrap();
+        drop(held);
+        drop(occupant);
+    }
+
+    #[test]
+    fn client_disconnect_mid_request_does_not_wedge_the_loop() {
+        let mut front = Frontend::bind(0, 4).unwrap();
+        let addr = front.local_addr();
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut buf = Vec::new();
+            ServeRequest { id: 1, op: ServeOp::Query(vec![5]) }.encode_to(&mut buf);
+            s.write_all(&buf).unwrap();
+        } // client gone before reading its reply
+        let mut gathered = front.next_batch(16, Duration::from_millis(50));
+        assert_eq!(gathered.pending.len(), 1);
+        let p = gathered.pending.pop().unwrap();
+        // Replying to the dead client is absorbed, not an error.
+        let _ = p.reply.send(ServeReply::ok(p.id, 1, vec![1.0]));
+        // A fresh client is still served afterwards.
+        let addr_s = addr.to_string();
+        let client = thread::spawn(move || query_once(&addr_s, 2, &[9]).unwrap());
+        let mut gathered = front.next_batch(16, Duration::from_millis(200));
+        assert_eq!(gathered.pending.len(), 1);
+        let p = gathered.pending.pop().unwrap();
+        assert_eq!(p.nodes, vec![9]);
+        p.reply.send(ServeReply::ok(p.id, 1, vec![2.5])).unwrap();
+        let got = client.join().unwrap();
+        assert_eq!(got.id, 2);
+        assert_eq!(got.body.unwrap().rows, vec![2.5]);
+    }
+
+    #[test]
+    fn coalesced_replies_route_to_the_right_client() {
+        let mut front = Frontend::bind(0, 8).unwrap();
+        let addr = front.local_addr().to_string();
+        let clients: Vec<_> = (0..4u32)
+            .map(|k| {
+                let addr = addr.clone();
+                thread::spawn(move || query_once(&addr, u64::from(k), &[k, k + 10]).unwrap())
+            })
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut got = Vec::new();
+        while got.len() < 4 {
+            assert!(Instant::now() < deadline, "requests never arrived");
+            let mut g = front.next_batch(64, Duration::from_millis(20));
+            got.append(&mut g.pending);
+        }
+        // Answer each pending with rows derived from ITS node list.
+        for p in got {
+            let rows: Vec<f32> = p.nodes.iter().map(|&v| v as f32).collect();
+            p.reply.send(ServeReply::ok(p.id, 1, rows)).unwrap();
+        }
+        for (k, client) in clients.into_iter().enumerate() {
+            let r = client.join().unwrap();
+            assert_eq!(r.id, k as u64, "reply correlated to the wrong request");
+            let emb = r.body.unwrap();
+            assert_eq!(emb.rows, vec![k as f32, (k + 10) as f32], "cross-request contamination");
+        }
+    }
+
+    #[test]
+    fn shutdown_request_is_acked_and_flags_the_batch() {
+        let mut front = Frontend::bind(0, 4).unwrap();
+        let addr = front.local_addr().to_string();
+        let client = thread::spawn(move || request_shutdown(&addr).unwrap());
+        let gathered = front.next_batch(16, Duration::from_millis(10));
+        assert!(gathered.shutdown);
+        assert!(gathered.pending.is_empty());
+        let reply = client.join().unwrap();
+        assert!(reply.body.is_ok());
+    }
+
+    #[test]
+    fn empty_query_is_answered_without_touching_the_queue() {
+        let mut front = Frontend::bind(0, 1).unwrap();
+        let addr = front.local_addr().to_string();
+        let reply = query_once(&addr, 11, &[]).unwrap();
+        assert_eq!(reply.id, 11);
+        let emb = reply.body.unwrap();
+        assert_eq!(emb.dim, 0);
+        assert!(emb.rows.is_empty());
+        // Nothing was enqueued: a subsequent gather only sees the real
+        // request sent below.
+        let addr2 = front.local_addr().to_string();
+        let client = thread::spawn(move || query_once(&addr2, 12, &[3]).unwrap());
+        let mut gathered = front.next_batch(4, Duration::from_millis(20));
+        assert_eq!(gathered.pending.len(), 1);
+        let p = gathered.pending.pop().unwrap();
+        assert_eq!(p.id, 12);
+        p.reply.send(ServeReply::ok(p.id, 1, vec![0.0])).unwrap();
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn addr_slot_publishes_and_times_out() {
+        let slot = Arc::new(AddrSlot::default());
+        assert_eq!(slot.wait(Duration::from_millis(10)), None);
+        let waiter = {
+            let slot = Arc::clone(&slot);
+            thread::spawn(move || slot.wait(Duration::from_secs(20)))
+        };
+        let addr: SocketAddr = "127.0.0.1:9550".parse().unwrap();
+        slot.publish(addr);
+        assert_eq!(waiter.join().unwrap(), Some(addr));
+        assert_eq!(slot.wait(Duration::from_millis(1)), Some(addr));
+    }
+}

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train         distributed training, all ranks in this process
 //!   worker        ONE rank of a multi-process run (real TCP rendezvous)
+//!   query         client for a serving mesh (`worker --task serve`)
 //!   partition     partition a dataset and print quality metrics
 //!   sample-bench  quick fused-vs-baseline sampling comparison
 //!   gen-data      generate + save a synthetic dataset to disk
@@ -17,14 +18,18 @@ use anyhow::{bail, ensure, Context, Result};
 use fastsample::config;
 use fastsample::coordinator::experiments as exp;
 use fastsample::dist::{
-    run_worker_process, Comm, Counters, NetworkModel, RendezvousConfig, TransportConfig,
+    query_once, request_shutdown, run_worker_process, Comm, Counters, NetworkModel,
+    RendezvousConfig, TransportConfig,
 };
-use fastsample::graph::{datasets, io as graph_io};
+use fastsample::graph::{datasets, io as graph_io, NodeId};
 use fastsample::partition::{partition_graph, PartitionBook, PartitionConfig, ReplicationPolicy};
 use fastsample::runtime::Manifest;
 use fastsample::sampling::rng::RngKey;
 use fastsample::sampling::{sample_mfgs, KernelKind, MinibatchSchedule, SamplerWorkspace};
-use fastsample::train::{sample_rank, train_distributed, train_rank, TrainConfig};
+use fastsample::train::{
+    propagate_mean, sample_rank, serve_key, serve_rank, train_distributed, train_rank,
+    ServeAnswer, ServeConfig, TrainConfig,
+};
 use fastsample::util::cli::Args;
 
 const USAGE: &str = "\
@@ -69,16 +74,34 @@ COMMANDS:
                 [--rendezvous-timeout SECS]  (default 30; env fallback
                 FASTSAMPLE_RENDEZVOUS_TIMEOUT_MS) [--recv-timeout SECS]
                 (0 = wait forever, the default)
-                [--task auto|train|sample]  (train = real training, needs
-                artifacts; sample = artifact-free sampling + feature +
-                grad-sync rounds with a merged digest curve; auto picks
-                train iff artifacts exist)
+                [--task auto|train|sample|serve]  (train = real training,
+                needs artifacts; sample = artifact-free sampling +
+                feature + grad-sync rounds with a merged digest curve;
+                serve = stay resident after startup and answer embedding
+                queries — rank 0 listens for `fastsample query` clients,
+                all ranks cooperatively sample + fetch each batch; auto
+                picks train iff artifacts exist)
                 plus the train flags (--dataset --variant --mode --epochs
                 --lr --optimizer --seed --net --max-batches --cache
                 --adj-cache --adj-cache-policy --sampling-wire --pipeline
                 --replication-budget --checkpoint-dir --checkpoint-every
-                --resume) and, for the sample task,
-                [--batch 32] [--fanouts 4,3]
+                --resume) and, for the sample/serve tasks,
+                [--batch 32] [--fanouts 4,3]; serve also takes
+                [--serve-port 9550]  (rank 0's client listener; 0 =
+                ephemeral) [--serve-max-inflight 4]  (admitted-but-
+                unanswered bound; beyond it clients get `overloaded`)
+                [--serve-max-batch 64]  (node ids coalesced per
+                collective batch) [--serve-max-wait-ms 2]  (coalescing
+                window) [--serve-answer features|logits]  (logits runs
+                the trained model — needs artifacts, and --resume
+                restores params from a train-task checkpoint)
+  query         one request against a serving mesh:
+                --addr host:port --nodes 0,1,2 [--id N] prints one
+                `node <v>: [..]` line per requested node; --shutdown
+                (with --addr) stops the whole mesh cleanly; --reference
+                --dataset <spec> --nodes ... [--fanouts 4,3] [--seed S]
+                computes the same rows single-machine (no server) in the
+                same format, so served output can be diffed against it
   partition     --dataset <spec> --parts 8 [--seed S]
   sample-bench  --dataset <spec> --batch 1024 --fanouts 15,10,5 [--iters 10]
   gen-data      --dataset <spec> --out graph.bin [--seed S]
@@ -106,6 +129,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&args),
         "worker" => cmd_worker(&args),
+        "query" => cmd_query(&args),
         "partition" => cmd_partition(&args),
         "sample-bench" => cmd_sample_bench(&args),
         "gen-data" => cmd_gen_data(&args),
@@ -198,19 +222,28 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Worker task codes for the startup agreement vote (and the branch
+/// taken in [`cmd_worker`]).
+const TASK_SAMPLE: u64 = 0;
+const TASK_TRAIN: u64 = 1;
+const TASK_SERVE: u64 = 2;
+
 /// Every rank must run the same task, but `--task auto` resolves from
 /// the **local** filesystem (are artifacts present?), which can diverge
-/// across machines. Two uncharged control-plane votes before the first
-/// data collective turn a mixed launch into a clear startup error on
-/// every rank instead of a confusing mid-run `SequenceMismatch`.
-fn agree_on_task(comm: &mut Comm, train_task: bool) -> Result<()> {
-    let code = u64::from(train_task);
-    let all_sample = comm.all_zero_u64(code)?;
-    let all_train = comm.all_zero_u64(1 - code)?;
+/// across machines. One uncharged control-plane vote per task code
+/// before the first data collective turns a mixed launch into a clear
+/// startup error on every rank instead of a confusing mid-run
+/// `SequenceMismatch` (a rank's XOR against candidate `t` is zero iff
+/// its own code is `t`; the vote passes iff that holds on every rank).
+fn agree_on_task(comm: &mut Comm, code: u64) -> Result<()> {
+    let mut agreed = false;
+    for t in [TASK_SAMPLE, TASK_TRAIN, TASK_SERVE] {
+        agreed |= comm.all_zero_u64(code ^ t)?;
+    }
     ensure!(
-        all_sample || all_train,
-        "ranks disagree on the worker task (train vs sample): artifacts exist on some \
-         machines but not others — pass --task explicitly on every rank"
+        agreed,
+        "ranks disagree on the worker task (train vs sample vs serve): artifacts exist \
+         on some machines but not others — pass --task explicitly on every rank"
     );
     Ok(())
 }
@@ -260,14 +293,26 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let task = args.get_str("task", "auto");
     let batch = args.get("batch", 32usize)?;
     let fanouts = args.get_list("fanouts", &[4, 3])?;
+    let serve_port = args.get("serve-port", 9550u16)?;
+    let serve_max_inflight = args.get("serve-max-inflight", 4usize)?;
+    let serve_max_batch = args.get("serve-max-batch", 64usize)?;
+    let serve_max_wait_ms = args.get("serve-max-wait-ms", 2u64)?;
+    let serve_answer = args.get_str("serve-answer", "features");
     let (spec, cfg) = parse_train_flags(args, world, "free")?;
     args.finish()?;
 
-    let train_task = match task.as_str() {
-        "train" => true,
-        "sample" => false,
-        "auto" => config::artifacts_available(),
-        other => bail!("unknown worker task {other:?} (auto | train | sample)"),
+    let task_code = match task.as_str() {
+        "train" => TASK_TRAIN,
+        "sample" => TASK_SAMPLE,
+        "serve" => TASK_SERVE,
+        "auto" => {
+            if config::artifacts_available() {
+                TASK_TRAIN
+            } else {
+                TASK_SAMPLE
+            }
+        }
+        other => bail!("unknown worker task {other:?} (auto | train | sample | serve)"),
     };
     let dataset = config::dataset(&spec, cfg.seed)?;
     if cfg.transport != TransportConfig::Inproc {
@@ -276,16 +321,20 @@ fn cmd_worker(args: &Args) -> Result<()> {
              multi-process mesh is always real TCP"
         );
     }
+    let task_name = match task_code {
+        TASK_TRAIN => "train",
+        TASK_SERVE => "serve",
+        _ => "sample",
+    };
     eprintln!(
-        "[rank {rank}/{world}] task {} on {} ({} nodes), mode {}, rendezvous timeout {:?}",
-        if train_task { "train" } else { "sample" },
+        "[rank {rank}/{world}] task {task_name} on {} ({} nodes), mode {}, rendezvous timeout {:?}",
         dataset.name,
         dataset.num_nodes(),
         cfg.policy.label(),
         rdv.timeout
     );
     let counters = Arc::new(Counters::default());
-    if train_task {
+    if task_code == TASK_TRAIN {
         let report = run_worker_process(
             rank,
             &peers,
@@ -294,7 +343,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
             cfg.net.clone(),
             counters,
             |rank, comm| {
-                agree_on_task(comm, train_task)?;
+                agree_on_task(comm, task_code)?;
                 train_rank(&dataset, &config::artifacts_dir(), &cfg, rank, comm)
             },
         )
@@ -310,6 +359,37 @@ fn cmd_worker(args: &Args) -> Result<()> {
         }
         println!("comm (per-process view — see OPERATIONS.md):");
         println!("{}", report.comm_total.report());
+    } else if task_code == TASK_SERVE {
+        let mut scfg = ServeConfig::new(fanouts.clone());
+        scfg.port = serve_port;
+        scfg.max_inflight = serve_max_inflight;
+        scfg.max_batch = serve_max_batch;
+        scfg.max_wait = Duration::from_millis(serve_max_wait_ms);
+        scfg.answer = ServeAnswer::parse(&serve_answer)?;
+        // Logits answers come from a trained model, so a `--resume`
+        // restores a train-task checkpoint; feature answers pair with
+        // the artifact-free sample task and its adjacency-cache rows.
+        scfg.ckpt_task = match scfg.answer {
+            ServeAnswer::Logits => "train".to_string(),
+            ServeAnswer::Features => "sample".to_string(),
+        };
+        scfg.ckpt_batch = batch;
+        let report = run_worker_process(
+            rank,
+            &peers,
+            &rdv,
+            recv_timeout,
+            cfg.net.clone(),
+            counters,
+            |rank, comm| {
+                agree_on_task(comm, task_code)?;
+                serve_rank(&dataset, &config::artifacts_dir(), &cfg, &scfg, rank, comm)
+            },
+        )
+        .context("multi-process rendezvous failed")??;
+        println!("[rank {rank}] {}", report.summary_line());
+        println!("comm (per-process view — see OPERATIONS.md):");
+        println!("{}", report.comm_total.report());
     } else {
         let report = run_worker_process(
             rank,
@@ -319,7 +399,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
             cfg.net.clone(),
             counters,
             |rank, comm| {
-                agree_on_task(comm, train_task)?;
+                agree_on_task(comm, task_code)?;
                 sample_rank(&dataset, &cfg, batch, &fanouts, false, rank, comm)
             },
         )
@@ -333,6 +413,82 @@ fn cmd_worker(args: &Args) -> Result<()> {
         }
         println!("comm (per-process view — see OPERATIONS.md):");
         println!("{}", report.comm_total.report());
+    }
+    Ok(())
+}
+
+/// One client request against a serving mesh — or, with `--reference`,
+/// the same rows computed single-machine so the two outputs diff clean
+/// (the serve determinism contract: per-node sampled trees depend only
+/// on the serve key and the node id, never on batch composition).
+fn cmd_query(args: &Args) -> Result<()> {
+    if args.has("reference") {
+        let spec = args.get_str("dataset", "quickstart");
+        let node_list = args.get_list("nodes", &[])?;
+        let fanouts = args.get_list("fanouts", &[4, 3])?;
+        let seed = args.get("seed", 0u64)?;
+        args.finish()?;
+        ensure!(!node_list.is_empty(), "--nodes lists no node ids");
+        let d = config::dataset(&spec, seed)?;
+        let mut batch: Vec<NodeId> = Vec::new();
+        for &v in &node_list {
+            ensure!(v < d.num_nodes(), "node {v} out of range for {} nodes", d.num_nodes());
+            let v = v as NodeId;
+            if !batch.contains(&v) {
+                batch.push(v);
+            }
+        }
+        let mut ws = SamplerWorkspace::new();
+        let mfgs =
+            sample_mfgs(&d.graph, &batch, &fanouts, serve_key(seed), &mut ws, KernelKind::Fused);
+        let mut feats = Vec::with_capacity(mfgs[0].src_nodes.len() * d.feat_dim);
+        for &s in &mfgs[0].src_nodes {
+            let off = s as usize * d.feat_dim;
+            feats.extend_from_slice(&d.feats[off..off + d.feat_dim]);
+        }
+        let rows = propagate_mean(&mfgs, &feats, d.feat_dim);
+        for &v in &node_list {
+            let i = batch
+                .iter()
+                .position(|&b| b == v as NodeId)
+                .context("query node missing from its own batch")?;
+            println!("node {v}: {:?}", &rows[i * d.feat_dim..(i + 1) * d.feat_dim]);
+        }
+        return Ok(());
+    }
+
+    let addr = args.require_str("addr")?;
+    if args.has("shutdown") {
+        args.finish()?;
+        let reply = request_shutdown(&addr).with_context(|| format!("shutdown via {addr}"))?;
+        match reply.body {
+            Ok(_) => println!("shutdown acknowledged"),
+            Err(e) => bail!("shutdown refused: {e}"),
+        }
+        return Ok(());
+    }
+    let node_list = args.get_list("nodes", &[])?;
+    let id = args.get("id", 1u64)?;
+    args.finish()?;
+    ensure!(!node_list.is_empty(), "--nodes lists no node ids");
+    let nodes: Vec<NodeId> = node_list
+        .iter()
+        .map(|&v| u32::try_from(v).map_err(|_| anyhow::anyhow!("node id {v} exceeds u32")))
+        .collect::<Result<_>>()?;
+    let reply = query_once(&addr, id, &nodes).with_context(|| format!("query via {addr}"))?;
+    match reply.body {
+        Ok(emb) => {
+            ensure!(
+                emb.num_rows() == nodes.len(),
+                "reply carries {} rows for {} requested nodes",
+                emb.num_rows(),
+                nodes.len()
+            );
+            for (i, &v) in nodes.iter().enumerate() {
+                println!("node {v}: {:?}", emb.row(i));
+            }
+        }
+        Err(e) => bail!("query {id} failed: {e}"),
     }
     Ok(())
 }

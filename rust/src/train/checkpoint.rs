@@ -233,10 +233,12 @@ pub struct CheckpointState {
     pub params: Vec<HostTensor>,
     /// Full optimizer state (train task).
     pub opt: Option<OptimizerState>,
-    /// Adjacency-cache resident rows in slot order. Written in serial
-    /// mode; pipelined checkpoints leave it empty (the sampler thread
-    /// owns the cache across the whole run) — correctness is unaffected
-    /// either way, only warm-up traffic.
+    /// Adjacency-cache resident rows in slot order. Serial runs snapshot
+    /// the view directly at the fence; pipelined runs get the identical
+    /// set handed back through the sampler thread's `EpochEnd` marker
+    /// (the sampler owns the cache, the trainer writes the checkpoint) —
+    /// the `checkpoint_resume` suite pins the two bit-equal. Correctness
+    /// is unaffected either way, only warm-up traffic.
     pub cache_rows: Vec<(NodeId, Vec<NodeId>)>,
     /// Steps executed so far (sample task reporting).
     pub steps: u64,

@@ -1,14 +1,17 @@
 //! Training stack: MFG padding, optimizers, metrics, the distributed
 //! trainer that drives sampling → feature exchange → AOT compute → grad
 //! sync per minibatch, the MFG prefetcher that overlaps the first two
-//! phases with the last two (`--pipeline on`), and the fenced
-//! checkpoint/resume subsystem (`--checkpoint-dir` / `--resume`).
+//! phases with the last two (`--pipeline on`), the fenced
+//! checkpoint/resume subsystem (`--checkpoint-dir` / `--resume`), and
+//! the resident serve loop (`--task serve`) that answers embedding
+//! queries over the same collectives after training.
 
 pub mod checkpoint;
 pub mod metrics;
 pub mod optimizer;
 pub mod padding;
 pub mod prefetch;
+pub mod serve;
 pub mod trainer;
 
 pub use checkpoint::{
@@ -18,6 +21,10 @@ pub use checkpoint::{
 pub use metrics::{accuracy, EpochStats, PhaseTimes, Stopwatch};
 pub use optimizer::{Adam, Optimizer, OptimizerState, Sgd};
 pub use padding::pad_batch;
+pub use serve::{
+    propagate_mean, serve_key, serve_query_batch, serve_rank, ServeAnswer, ServeConfig,
+    ServeReport, FRONTEND_RANK,
+};
 pub use trainer::{
     sample_rank, train_distributed, train_rank, AggEpoch, RankTrainReport, SampleRankReport,
     ScheduleKind, TrainConfig, TrainReport,

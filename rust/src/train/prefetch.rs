@@ -27,6 +27,12 @@
 //! the epoch's last fetch has been charged — so the sampler is
 //! quiescent (blocked on `go.recv()`) across both of the trainer's
 //! fences, and per-epoch round/byte deltas are pipeline-invariant.
+//! When the run checkpoints ([`ProducerPlan::snapshot_cache`]), the
+//! `EpochEnd` marker also carries the adjacency-cache resident set as
+//! of the fence — the sampler owns the cache, but the trainer writes
+//! the checkpoint, and a `+pipe` checkpoint must warm-start a resume
+//! exactly like a serial one (the `checkpoint_resume` suite pins the
+//! two resident sets bit-equal).
 //! Fanouts ride the `go` channel because schedules like `Plateau`
 //! depend on the trainer's smoothed loss, which only exists on the
 //! trainer thread.
@@ -69,6 +75,12 @@ pub struct ProducerPlan {
     pub batch: usize,
     pub kernel: KernelKind,
     pub wire: SamplingWire,
+    /// Snapshot the adjacency-cache resident set into every
+    /// [`Produced::EpochEnd`] marker. Set when the run checkpoints
+    /// (`--checkpoint-dir`): the resident rows are cloned at each epoch
+    /// fence so the trainer can persist them. Off otherwise — the clone
+    /// is pure overhead when nothing will be written.
+    pub snapshot_cache: bool,
 }
 
 /// One unit out of the sampler thread's bounded channel.
@@ -88,8 +100,11 @@ pub enum Produced {
     },
     /// Epoch boundary marker: every batch of `epoch` has been produced
     /// and charged. The trainer drains to this before taking its fenced
-    /// end-of-epoch counter snapshot.
-    EpochEnd { epoch: usize },
+    /// end-of-epoch counter snapshot. `cache_rows` is the adjacency
+    /// cache's resident set at the fence when
+    /// [`ProducerPlan::snapshot_cache`] is set (empty otherwise) — the
+    /// trainer folds it into the epoch's checkpoint.
+    EpochEnd { epoch: usize, cache_rows: Vec<(NodeId, Vec<NodeId>)> },
 }
 
 /// Produce every epoch's minibatches into `items`, gated per epoch on
@@ -133,7 +148,8 @@ pub fn sampler_epochs(
                 return Ok(());
             }
         }
-        if items.send(Produced::EpochEnd { epoch }).is_err() {
+        let cache_rows = if plan.snapshot_cache { view.cached_entries() } else { Vec::new() };
+        if items.send(Produced::EpochEnd { epoch, cache_rows }).is_err() {
             return Ok(());
         }
     }

@@ -1,0 +1,627 @@
+//! Serve mode: after training (or a checkpoint restore) the ranks stay
+//! resident and answer embedding/classification queries for arbitrary
+//! node ids — the online-inference leg of the north star.
+//!
+//! Division of labor per query batch:
+//!
+//! * **Rank 0 (the frontend, [`FRONTEND_RANK`])** owns the client
+//!   listener ([`crate::dist::serve::Frontend`]): it coalesces
+//!   concurrent requests into one batch (bounded by `--serve-max-batch`
+//!   nodes and a `--serve-max-wait-ms` window), validates node ids
+//!   *before* any collective, and dedups the batch.
+//! * **Every rank** then runs the same lockstep sequence: a continue/stop
+//!   vote (`all_zero_u64`, the frontend is the only rank voting
+//!   "continue"), a batch broadcast on the Sampling plane's
+//!   `SampleRequest` round, cooperative L-hop sampling + feature fetch
+//!   ([`serve_query_batch`] — the exact `sample_mfgs_distributed_wire` /
+//!   `fetch_features` path training uses), and a uniform answer
+//!   computation. Inputs are identical on every rank, so answers are
+//!   bit-identical everywhere; only the frontend splits rows back per
+//!   request and replies.
+//!
+//! **Determinism contract.** Sampling streams are keyed per *node*
+//! ([`serve_key`] folds a serve-specific constant over the run seed;
+//! `sample_node` then streams on the node id), so the tree sampled for
+//! node v is independent of which other nodes share its batch. That is
+//! what makes coalescing sound: a coalesced batch answers every request
+//! bit-identically to one-at-a-time queries, and both match the
+//! single-machine pipeline (`sample_mfgs`) under the same key — pinned
+//! by `tests/serve_equivalence.rs` across the wire × transport × policy
+//! grid.
+//!
+//! **Failure contract.** Any fabric error breaks the loop on every rank
+//! (typed `CommError`, never a hang); the frontend then answers every
+//! in-flight and queued request with a typed `PeerLost`/`Internal`
+//! reply before returning the error. A clean stop (client `Shutdown`
+//! request, or a `max_batches` cap) drains the queue with typed
+//! `ShuttingDown` replies.
+
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::dist::serve::{AddrSlot, Frontend, LatencyHistogram, Pending, ServeErrorKind, ServeReply};
+use crate::dist::{
+    fetch_features, sample_mfgs_distributed_wire, Comm, CommError, Plane, RoundKind, SamplingWire,
+};
+use crate::graph::{Dataset, NodeId};
+use crate::partition::{build_shard, partition_graph, PartitionConfig, TopologyView, WorkerShard};
+use crate::runtime::{Engine, HostTensor, Manifest, ModelRuntime};
+use crate::sampling::rng::RngKey;
+use crate::sampling::{KernelKind, Mfg, SamplerWorkspace};
+
+use super::checkpoint::{self, Fingerprint};
+use super::padding::pad_batch;
+use super::trainer::{check_variant, TrainConfig};
+
+/// The rank that owns the client listener. Every rank reads this slot of
+/// the batch-broadcast round.
+pub const FRONTEND_RANK: usize = 0;
+
+/// The serve-session sampling key: a serve-specific fold over the run
+/// seed. Fixed for the whole session — *not* folded per batch — so each
+/// node's sampling stream depends only on (seed, level, node id) and a
+/// node's sampled tree is the same in every batch it appears in. The
+/// single-machine reference (`fastsample query --reference`) uses the
+/// same key, which is what makes served answers diffable against it.
+pub fn serve_key(seed: u64) -> RngKey {
+    RngKey::new(seed).fold(0x5E12E5)
+}
+
+/// What a query answer contains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeAnswer {
+    /// Deterministic L-hop mean feature propagation ([`propagate_mean`])
+    /// — artifact-free, so serve mode (like `--task sample`) runs
+    /// anywhere; the tier-1 equivalence grid pins this mode.
+    Features,
+    /// The trained model's seed logits (`eval_step` on the checkpointed
+    /// parameters) — needs AOT artifacts, batches are capped at the
+    /// variant's seed count.
+    Logits,
+}
+
+impl ServeAnswer {
+    /// Parse a `--serve-answer` value.
+    pub fn parse(name: &str) -> Result<ServeAnswer> {
+        match name {
+            "features" => Ok(ServeAnswer::Features),
+            "logits" => Ok(ServeAnswer::Logits),
+            other => bail!("unknown serve answer {other:?} (features | logits)"),
+        }
+    }
+}
+
+/// Configuration of one serve session (uniform across ranks, like
+/// [`TrainConfig`] — only [`ServeConfig::max_batches`] may legitimately
+/// differ, and then only in fault tests simulating a kill).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Client listener port on the frontend (0 ⇒ ephemeral; published
+    /// through [`ServeConfig::ready`] when set).
+    pub port: u16,
+    /// Admission-control bound: requests admitted but not yet answered.
+    /// Beyond it clients get a typed `Overloaded` reply immediately.
+    pub max_inflight: usize,
+    /// Coalescing cap: target node ids per collective query batch.
+    pub max_batch: usize,
+    /// Coalescing window: how long the frontend waits for more requests
+    /// after the first one before closing the batch.
+    pub max_wait: Duration,
+    /// Sampling fanouts per level, as in `--task sample`.
+    pub fanouts: Vec<usize>,
+    /// What the answer rows are.
+    pub answer: ServeAnswer,
+    /// Where the frontend publishes its bound address (tests, port 0).
+    pub ready: Option<Arc<AddrSlot>>,
+    /// Stop after serving this many batches. `None` for a real server.
+    /// Tests hand a non-frontend rank a smaller cap than its peers to
+    /// simulate a mid-query kill (the survivors' next collective then
+    /// surfaces a typed `CommError`).
+    pub max_batches: Option<usize>,
+    /// Which task's checkpoints `--resume` loads: `"sample"` restores
+    /// the adjacency-cache resident set, `"train"` additionally restores
+    /// model parameters (the Logits answer mode).
+    pub ckpt_task: String,
+    /// The batch size the checkpointing `--task sample` run used (part
+    /// of its fingerprint); ignored for `ckpt_task == "train"`.
+    pub ckpt_batch: usize,
+}
+
+impl ServeConfig {
+    /// Defaults: ephemeral port, 4 in-flight batches, 64-node batches,
+    /// 2 ms coalescing window, feature answers, sample-task checkpoints.
+    pub fn new(fanouts: Vec<usize>) -> ServeConfig {
+        ServeConfig {
+            port: 0,
+            max_inflight: 4,
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            fanouts,
+            answer: ServeAnswer::Features,
+            ready: None,
+            max_batches: None,
+            ckpt_task: "sample".to_string(),
+            ckpt_batch: 8,
+        }
+    }
+}
+
+/// What one rank reports after a serve session. `requests`, `rejected`,
+/// and `latency` are frontend-side quantities (zero/empty elsewhere);
+/// `batches` counts collective query rounds and is identical on every
+/// rank that ran to completion.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub batches: usize,
+    pub requests: u64,
+    pub rejected: u64,
+    pub latency: LatencyHistogram,
+}
+
+impl ServeReport {
+    /// The one-line report the worker prints (CI greps `p50=`).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "serve report: batches={} requests={} rejected={} {}",
+            self.batches,
+            self.requests,
+            self.rejected,
+            self.latency.summary()
+        )
+    }
+}
+
+/// Deterministic L-hop mean propagation over sampled MFGs: per level,
+/// `next[i] = (h[i] + Σ h[p] for p in neighbors(i)) / (1 + degree(i))`,
+/// summed in compacted-index order (self row first). `feats` is the
+/// row-major feature matrix of `mfgs[0].src_nodes`; the result holds one
+/// row per destination of the top level, i.e. per query node, in batch
+/// order. Bit-deterministic: the summation order is fixed by the MFG,
+/// and the MFG is bit-identical across wires, transports, and budgets.
+pub fn propagate_mean(mfgs: &[Mfg], feats: &[f32], dim: usize) -> Vec<f32> {
+    let mut h = feats.to_vec();
+    for m in mfgs {
+        let mut next = vec![0.0f32; m.n_dst * dim];
+        for i in 0..m.n_dst {
+            let row = &mut next[i * dim..(i + 1) * dim];
+            // Destination i is source i (the dst-prefix convention).
+            row.copy_from_slice(&h[i * dim..(i + 1) * dim]);
+            for &p in m.neighbors(i) {
+                let src = &h[p as usize * dim..(p as usize + 1) * dim];
+                for (acc, x) in row.iter_mut().zip(src) {
+                    *acc += *x;
+                }
+            }
+            let inv = 1.0 / (1 + m.degree(i)) as f32;
+            for acc in row.iter_mut() {
+                *acc *= inv;
+            }
+        }
+        h = next;
+    }
+    h
+}
+
+/// One cooperative query round: distributed L-hop sampling of `batch`
+/// (every rank passes the same batch and key) followed by the feature
+/// fetch for the level-0 frontier into `feats`. Collective — every rank
+/// must call it in lockstep with identical arguments; the returned MFGs
+/// and features are bit-identical on every rank.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_query_batch(
+    comm: &mut Comm,
+    shard: &WorkerShard,
+    view: &mut TopologyView,
+    batch: &[NodeId],
+    fanouts: &[usize],
+    key: RngKey,
+    ws: &mut SamplerWorkspace,
+    kernel: KernelKind,
+    wire: SamplingWire,
+    feats: &mut Vec<f32>,
+) -> Result<Vec<Mfg>, CommError> {
+    let mfgs = sample_mfgs_distributed_wire(comm, shard, view, batch, fanouts, key, ws, kernel, wire)?;
+    fetch_features(comm, shard, &mfgs[0].src_nodes, None, feats)?;
+    Ok(mfgs)
+}
+
+/// The answer engine: what turns a sampled batch into reply rows.
+enum Answerer {
+    Features,
+    Logits {
+        // The engine must outlive the loaded executables.
+        _engine: Engine,
+        rt: Box<ModelRuntime>,
+        params: Vec<HostTensor>,
+    },
+}
+
+/// Uniform answer computation: identical (mfgs, feats) on every rank in,
+/// identical rows out — `n` rows of `dim` values, batch order. Failures
+/// (padding caps, engine errors) are deterministic functions of the same
+/// inputs, so every rank takes the same branch and the mesh stays in
+/// lockstep; the frontend turns the message into typed error replies.
+fn compute_answer(
+    answerer: &Answerer,
+    mfgs: &[Mfg],
+    feats: &[f32],
+    n: usize,
+    feat_dim: usize,
+) -> Result<Vec<f32>, String> {
+    match answerer {
+        Answerer::Features => Ok(propagate_mean(mfgs, feats, feat_dim)),
+        Answerer::Logits { rt, params, .. } => {
+            let padded = pad_batch(&rt.variant, mfgs, feats, |_| 0).map_err(|e| e.to_string())?;
+            let out = rt.eval_step(params, &padded).map_err(|e| e.to_string())?;
+            let logits = out.logits.as_f32().map_err(|e| e.to_string())?;
+            Ok(logits[..n * rt.variant.classes].to_vec())
+        }
+    }
+}
+
+/// Reject a request before it costs the mesh anything: out-of-range node
+/// ids always, oversized requests when the answer mode caps a batch.
+fn validate_request(
+    p: &Pending,
+    num_nodes: usize,
+    req_cap: Option<usize>,
+) -> Result<(), (ServeErrorKind, String)> {
+    if let Some(cap) = req_cap {
+        if p.nodes.len() > cap {
+            return Err((
+                ServeErrorKind::BadRequest,
+                format!("request has {} nodes; the model variant caps a batch at {cap}", p.nodes.len()),
+            ));
+        }
+    }
+    if let Some(&bad) = p.nodes.iter().find(|&&v| (v as usize) >= num_nodes) {
+        return Err((
+            ServeErrorKind::BadRequest,
+            format!("node id {bad} out of range (graph has {num_nodes} nodes)"),
+        ));
+    }
+    Ok(())
+}
+
+fn error_kind(e: &CommError) -> ServeErrorKind {
+    match e {
+        CommError::PeerLost { .. } => ServeErrorKind::PeerLost,
+        _ => ServeErrorKind::Internal,
+    }
+}
+
+/// Run one rank of a serve session until a client shutdown request, a
+/// `max_batches` cap, or a fabric error. SPMD-collective: every rank
+/// must call it with uniform `cfg`/`scfg` (see [`ServeConfig`] for the
+/// one sanctioned exception). Returns this rank's [`ServeReport`]; a
+/// fabric failure returns the typed error *after* the frontend has
+/// answered every in-flight client.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_rank(
+    dataset: &Dataset,
+    artifacts_dir: &Path,
+    cfg: &TrainConfig,
+    scfg: &ServeConfig,
+    rank: usize,
+    comm: &mut Comm,
+) -> Result<ServeReport> {
+    ensure!(!scfg.fanouts.is_empty(), "need at least one fanout level");
+    ensure!(scfg.max_batch >= 1, "serve max-batch must be >= 1");
+    ensure!(comm.rank() == rank, "comm endpoint is rank {}, not {rank}", comm.rank());
+    ensure!(
+        comm.world() == cfg.workers,
+        "fabric has {} ranks, config says {} workers",
+        comm.world(),
+        cfg.workers
+    );
+
+    let book = Arc::new(partition_graph(
+        &dataset.graph,
+        &dataset.train_ids,
+        &PartitionConfig::new(cfg.workers),
+    ));
+    let shard = build_shard(dataset, &book, &cfg.policy, rank);
+    let mut view = shard.topology.clone();
+    if cfg.adj_cache_bytes > 0 && !shard.policy.is_full() {
+        view.enable_cache(cfg.adj_cache_bytes, cfg.adj_cache_policy);
+    }
+    let mut ws = SamplerWorkspace::new();
+    let key = serve_key(cfg.seed);
+    let num_nodes = dataset.num_nodes();
+
+    // The answer engine. Features mode is artifact-free; Logits compiles
+    // the variant's eval executable and starts from Xavier weights until
+    // a train-task checkpoint restore below replaces them.
+    let mut answerer = match scfg.answer {
+        ServeAnswer::Features => Answerer::Features,
+        ServeAnswer::Logits => {
+            let manifest = Manifest::load(artifacts_dir)?;
+            check_variant(&manifest, dataset, cfg)?;
+            let engine = Engine::cpu()?;
+            let rt = ModelRuntime::load(&engine, &manifest, &cfg.variant)?;
+            ensure!(
+                scfg.fanouts.len() == rt.variant.layers(),
+                "serve fanouts have {} levels, variant {} has {}",
+                scfg.fanouts.len(),
+                cfg.variant,
+                rt.variant.layers()
+            );
+            let params = rt.init_params(cfg.seed);
+            Answerer::Logits { _engine: engine, rt: Box::new(rt), params }
+        }
+    };
+    let (dim, req_cap) = match &answerer {
+        Answerer::Features => (shard.feat_dim, None),
+        Answerer::Logits { rt, .. } => (rt.variant.classes, Some(rt.variant.batch)),
+    };
+    let max_batch = match req_cap {
+        Some(cap) => scfg.max_batch.min(cap),
+        None => scfg.max_batch,
+    };
+
+    // Warm start from a checkpoint: `resume_latest` is a collective
+    // guarded only by uniform config. The sample-task fingerprint
+    // restores the adjacency-cache resident set (serial *and* pipelined
+    // checkpoints carry it — see the EpochEnd handoff in prefetch);
+    // the train-task fingerprint additionally restores parameters.
+    if cfg.resume {
+        if let Some(dir) = &cfg.checkpoint_dir {
+            let fp = match scfg.ckpt_task.as_str() {
+                "sample" => Fingerprint::new(
+                    "sample",
+                    &dataset.name,
+                    cfg,
+                    Some((scfg.ckpt_batch, &scfg.fanouts)),
+                ),
+                "train" => Fingerprint::new("train", &dataset.name, cfg, None),
+                other => bail!("unknown serve checkpoint task {other:?} (sample | train)"),
+            };
+            if let Some(state) = checkpoint::resume_latest(comm, dir, &fp)? {
+                for (v, row) in &state.cache_rows {
+                    view.cache_insert(*v, row);
+                }
+                if let Answerer::Logits { params, .. } = &mut answerer {
+                    if !state.params.is_empty() {
+                        ensure!(
+                            state.params.len() == params.len()
+                                && state.params.iter().zip(params.iter()).all(|(a, b)| a.shape() == b.shape()),
+                            "checkpoint parameter shapes do not match variant {}",
+                            cfg.variant
+                        );
+                        *params = state.params;
+                    }
+                }
+            }
+        }
+    }
+
+    // The frontend lives on rank 0 only; no collective happens inside
+    // this block (the lint-visible contract: collectives below are
+    // reached by every rank unconditionally).
+    let mut frontend = match rank {
+        FRONTEND_RANK => {
+            let f = Frontend::bind(scfg.port, scfg.max_inflight)
+                .with_context(|| format!("binding serve listener on port {}", scfg.port))?;
+            if let Some(slot) = &scfg.ready {
+                slot.publish(f.local_addr());
+            }
+            if cfg.verbose {
+                eprintln!("[serve] rank {rank} listening on {}", f.local_addr());
+            }
+            Some(f)
+        }
+        _ => None,
+    };
+
+    // Query traffic rides the Sampling plane (the plane split training
+    // established); the continue/stop vote stays on the base handle.
+    let mut scomm = comm.plane(Plane::Sampling);
+    let world = comm.world();
+    let mut report = ServeReport::default();
+    let mut inflight: Vec<Pending> = Vec::new();
+    let mut feats: Vec<f32> = Vec::new();
+    let mut stopping = false;
+
+    let outcome: Result<(), CommError> = loop {
+        // Batch-count seam: a capped frontend votes stop; a capped
+        // non-frontend rank leaves unilaterally (the fault tests'
+        // simulated kill — survivors get a typed error from their next
+        // collective, never a hang).
+        if let Some(cap) = scfg.max_batches {
+            if report.batches >= cap {
+                if frontend.is_some() {
+                    stopping = true;
+                } else {
+                    break Ok(());
+                }
+            }
+        }
+
+        // Frontend: gather a batch worth serving (every request is
+        // validated and possibly rejected *before* the mesh is asked to
+        // do anything), then dedup node ids preserving first-occurrence
+        // order — replies re-expand rows per request.
+        let mut batch: Vec<NodeId> = Vec::new();
+        if let Some(f) = frontend.as_mut() {
+            while !stopping && inflight.is_empty() {
+                let mut gathered = f.next_batch(max_batch, scfg.max_wait);
+                stopping |= gathered.shutdown;
+                for p in gathered.pending.drain(..) {
+                    match validate_request(&p, num_nodes, req_cap) {
+                        Ok(()) => inflight.push(p),
+                        Err((kind, detail)) => {
+                            let _ = p.reply.send(ServeReply::error(p.id, kind, detail));
+                        }
+                    }
+                }
+            }
+            let mut seen: HashSet<NodeId> = HashSet::new();
+            for p in &inflight {
+                for &v in &p.nodes {
+                    if seen.insert(v) {
+                        batch.push(v);
+                    }
+                }
+            }
+        }
+
+        // Continue/stop vote (uncharged control round): only the
+        // frontend ever votes "continue"; all-zero means stop for all.
+        let go = u64::from(!batch.is_empty());
+        match comm.all_zero_u64(go) {
+            Ok(true) => break Ok(()),
+            Ok(false) => {}
+            Err(e) => break Err(e),
+        }
+
+        // Batch broadcast on the Sampling plane: the frontend fills every
+        // slot (its own passes through), other ranks send empties, and
+        // every rank reads the frontend's slot.
+        let outbox: Vec<Vec<NodeId>> = if batch.is_empty() {
+            vec![Vec::new(); world]
+        } else {
+            vec![batch.clone(); world]
+        };
+        let batch = match scomm.exchange(RoundKind::SampleRequest, outbox) {
+            Ok(mut got) => std::mem::take(&mut got[FRONTEND_RANK]),
+            Err(e) => break Err(e),
+        };
+
+        // Cooperative sampling + feature fetch, then a uniform answer.
+        let mfgs = match serve_query_batch(
+            &mut scomm,
+            &shard,
+            &mut view,
+            &batch,
+            &scfg.fanouts,
+            key,
+            &mut ws,
+            cfg.kernel,
+            cfg.sampling_wire,
+            &mut feats,
+        ) {
+            Ok(m) => m,
+            Err(e) => break Err(e),
+        };
+        report.batches += 1;
+        let answer = compute_answer(&answerer, &mfgs, &feats, batch.len(), shard.feat_dim);
+
+        // Split rows back per request and reply (frontend only — other
+        // ranks have no in-flight requests, so this is a no-op there).
+        match answer {
+            Ok(rows) => {
+                let index: HashMap<NodeId, usize> =
+                    batch.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+                for p in inflight.drain(..) {
+                    let mut out = Vec::with_capacity(p.nodes.len() * dim);
+                    let mut complete = true;
+                    for v in &p.nodes {
+                        match index.get(v) {
+                            Some(&i) => out.extend_from_slice(&rows[i * dim..(i + 1) * dim]),
+                            None => {
+                                complete = false;
+                                break;
+                            }
+                        }
+                    }
+                    let reply = if complete {
+                        ServeReply::ok(p.id, dim, out)
+                    } else {
+                        ServeReply::error(
+                            p.id,
+                            ServeErrorKind::Internal,
+                            "answer row missing from batch",
+                        )
+                    };
+                    let _ = p.reply.send(reply);
+                    report.latency.record_duration(p.arrived.elapsed());
+                    report.requests += 1;
+                }
+            }
+            Err(detail) => {
+                for p in inflight.drain(..) {
+                    let _ = p.reply.send(ServeReply::error(p.id, ServeErrorKind::Internal, detail.clone()));
+                    report.latency.record_duration(p.arrived.elapsed());
+                    report.requests += 1;
+                }
+            }
+        }
+    };
+
+    // Teardown: every still-unanswered client gets a typed reply — a
+    // fabric failure maps to PeerLost/Internal, a clean stop to
+    // ShuttingDown — then the listener closes.
+    if let Some(f) = frontend.as_mut() {
+        match &outcome {
+            Err(e) => f.fail_all(std::mem::take(&mut inflight), error_kind(e), &format!("mesh failure: {e}")),
+            Ok(()) => f.fail_all(std::mem::take(&mut inflight), ServeErrorKind::ShuttingDown, "server stopping"),
+        }
+        f.stop();
+        report.rejected = f.rejected();
+    }
+    outcome.map_err(anyhow::Error::from)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::sampling::sample_mfgs;
+
+    #[test]
+    fn propagate_mean_matches_hand_rolled_full_fanout_average() {
+        let d = config::dataset("quickstart", 7).unwrap();
+        let key = serve_key(7);
+        let mut ws = SamplerWorkspace::new();
+        let batch: Vec<NodeId> = vec![0, 3, 5, 3];
+        // One level with a fanout above every degree: the sampled
+        // neighborhood is the full neighbor list in graph order, so the
+        // answer must be the plain mean over {v} ∪ N(v), summed in the
+        // same order.
+        let fanouts = [d.num_nodes()];
+        let mfgs = sample_mfgs(&d.graph, &batch, &fanouts, key, &mut ws, KernelKind::Fused);
+        let dim = d.feat_dim;
+        let mut feats = Vec::new();
+        for &v in &mfgs[0].src_nodes {
+            feats.extend_from_slice(d.feat(v));
+        }
+        let got = propagate_mean(&mfgs, &feats, dim);
+        assert_eq!(got.len(), batch.len() * dim);
+        for (i, &v) in batch.iter().enumerate() {
+            let neigh = d.graph.neighbors(v);
+            let mut want = d.feat(v).to_vec();
+            for &u in neigh {
+                for (acc, x) in want.iter_mut().zip(d.feat(u)) {
+                    *acc += *x;
+                }
+            }
+            let inv = 1.0 / (1 + neigh.len()) as f32;
+            for acc in want.iter_mut() {
+                *acc *= inv;
+            }
+            let got_bits: Vec<u32> = got[i * dim..(i + 1) * dim].iter().map(|x| x.to_bits()).collect();
+            let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "node {v}");
+        }
+        // The duplicate query node answers identically per occurrence.
+        assert_eq!(
+            got[dim..2 * dim].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got[3 * dim..4 * dim].iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn serve_key_is_stable_and_distinct_from_task_keys() {
+        // The constant is load-bearing: the CLI reference path and the
+        // serving ranks must derive the same key from the same seed.
+        assert_eq!(serve_key(11), RngKey::new(11).fold(0x5E12E5));
+        assert_ne!(serve_key(11), RngKey::new(11).fold(0xD16E57));
+        assert_ne!(serve_key(11), serve_key(12));
+    }
+}

@@ -255,7 +255,7 @@ struct WorkerResult {
 
 /// Shape compatibility between a dataset and an AOT variant, checked
 /// once per run (shared by the in-process and per-rank entry points).
-fn check_variant(manifest: &Manifest, dataset: &Dataset, cfg: &TrainConfig) -> Result<()> {
+pub(crate) fn check_variant(manifest: &Manifest, dataset: &Dataset, cfg: &TrainConfig) -> Result<()> {
     let variant = manifest.variant(&cfg.variant)?;
     ensure!(
         variant.feat_dim == dataset.feat_dim,
@@ -466,6 +466,7 @@ pub fn sample_rank(
             batch,
             kernel: cfg.kernel,
             wire: cfg.sampling_wire,
+            snapshot_cache: cfg.checkpoint_dir.is_some(),
         };
         let (items_tx, items_rx) = mpsc::sync_channel::<Produced>(1);
         let (go_tx, go_rx) = mpsc::channel::<Vec<usize>>();
@@ -517,18 +518,19 @@ pub fn sample_rank(
                     }
                     // Drain to the epoch marker before fencing: it means
                     // the sampler has charged every byte of this epoch
-                    // and is quiescent again (blocked on `go`).
-                    match items_rx.recv() {
-                        Ok(Produced::EpochEnd { epoch: e }) if e == epoch => {}
+                    // and is quiescent again (blocked on `go`). The
+                    // marker hands back the cache resident set as of the
+                    // fence (the sampler thread owns the view), so
+                    // pipelined checkpoints warm-start a resume exactly
+                    // like serial ones.
+                    let fenced_cache_rows = match items_rx.recv() {
+                        Ok(Produced::EpochEnd { epoch: e, cache_rows }) if e == epoch => cache_rows,
                         Ok(_) => anyhow::bail!("prefetcher desynchronized at epoch boundary"),
                         Err(_) => anyhow::bail!("sampler thread stopped early"),
-                    }
+                    };
                     let end = comm.fenced_snapshot()?;
                     epoch_deltas.push(end.diff(&mark));
-                    // Checkpoint at the fence (sampler quiescent on `go`);
-                    // the cache section stays empty — the sampler thread
-                    // owns the view for the whole scope, and cache rows
-                    // shape traffic only, never the digest curve.
+                    // Checkpoint at the fence (sampler quiescent on `go`).
                     if let Some(dir) = &cfg.checkpoint_dir {
                         if (epoch + 1) % cfg.checkpoint_every.max(1) == 0 {
                             let state = CheckpointState {
@@ -539,7 +541,7 @@ pub fn sample_rank(
                                 epoch_deltas: epoch_deltas.clone(),
                                 params: Vec::new(),
                                 opt: None,
-                                cache_rows: Vec::new(),
+                                cache_rows: fenced_cache_rows,
                                 steps: steps as u64,
                                 sampled_edges,
                             };
@@ -850,6 +852,7 @@ fn worker_loop(
             batch: variant.batch,
             kernel: cfg.kernel,
             wire: cfg.sampling_wire,
+            snapshot_cache: cfg.checkpoint_dir.is_some(),
         };
         let (items_tx, items_rx) = mpsc::sync_channel::<Produced>(1);
         let (go_tx, go_rx) = mpsc::channel::<Vec<usize>>();
@@ -942,12 +945,13 @@ fn worker_loop(
                     // Drain to the epoch marker before the end fence: it
                     // means the sampler has charged every byte of this
                     // epoch and is quiescent again, so the fenced delta
-                    // is pipeline-invariant.
-                    match items_rx.recv() {
-                        Ok(Produced::EpochEnd { epoch: e }) if e == epoch => {}
+                    // is pipeline-invariant. The marker also hands back
+                    // the adjacency-cache resident set at the fence.
+                    let fenced_cache_rows = match items_rx.recv() {
+                        Ok(Produced::EpochEnd { epoch: e, cache_rows }) if e == epoch => cache_rows,
                         Ok(_) => anyhow::bail!("prefetcher desynchronized at epoch boundary"),
                         Err(_) => anyhow::bail!("sampler thread stopped early"),
-                    }
+                    };
                     let comm_end = comm.fenced_snapshot()?;
                     let mut sw_end = epoch_sw;
                     let wall_s = sw_end.lap();
@@ -980,9 +984,9 @@ fn worker_loop(
                     // quiescent (the sampler is blocked on `go`), so the
                     // cumulative `comm_end` is exact. Purely local I/O.
                     // The sampler thread owns view/cache for the whole
-                    // scope, so pipelined checkpoints skip the cache
-                    // section — a resumed run re-warms on demand, which
-                    // shapes traffic only, never curves.
+                    // scope, so the resident set rides the `EpochEnd`
+                    // marker — pipelined checkpoints carry the same
+                    // cache section a serial run would write.
                     if let Some(dir) = &cfg.checkpoint_dir {
                         if (epoch + 1) % cfg.checkpoint_every.max(1) == 0 {
                             let state = CheckpointState {
@@ -993,7 +997,7 @@ fn worker_loop(
                                 epoch_deltas: Vec::new(),
                                 params: params.clone(),
                                 opt: Some(opt.state()),
-                                cache_rows: Vec::new(),
+                                cache_rows: fenced_cache_rows,
                                 steps: 0,
                                 sampled_edges: 0,
                             };

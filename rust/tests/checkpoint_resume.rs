@@ -42,12 +42,13 @@ const EPOCHS: usize = 3;
 /// cache actually fills and rides the checkpoint) and a cache large
 /// enough to never evict (restored resident rows then reproduce traffic
 /// exactly; CLOCK reference bits are not checkpointed).
-const GRID: [(&str, &str, bool); 5] = [
+const GRID: [(&str, &str, bool); 6] = [
     ("serial-bulk", "vanilla+wire:bulk", false),
     ("serial-scalar", "vanilla+wire:scalar", false),
     ("pipe-bulk", "vanilla+wire:bulk", true),
     ("pipe-scalar", "vanilla+wire:scalar", true),
     ("serial-cache", "budget:4k+cache:64k", false),
+    ("pipe-cache", "budget:4k+cache:64k", true),
 ];
 
 fn sample_dataset() -> Dataset {
@@ -147,8 +148,10 @@ fn resume_continues_bit_identically_across_modes_and_wires() {
         }
         // Serial vanilla arms: the per-epoch fenced counter deltas and
         // the restored cumulative counters must also stitch exactly
-        // (pipelined/cache checkpoints are covered by the curve — the
-        // cache section is empty in pipelined mode by design).
+        // (pipelined/cache checkpoints are covered by the curve and by
+        // the resident-set parity test below — a restored cache changes
+        // which rounds miss, so counter stitching is a vanilla-only
+        // guarantee).
         if !pipeline && !mode.contains("cache") {
             for rank in 0..WORLD {
                 assert_eq!(
@@ -161,6 +164,55 @@ fn resume_continues_bit_identically_across_modes_and_wires() {
                 );
             }
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The resident-set handoff regression: a pipelined checkpoint used to
+/// write an empty adjacency-cache section (the sampler thread owns the
+/// view), so a resumed `+pipe` run re-warmed from cold. The sampler now
+/// hands its resident set back through the `EpochEnd` fence marker —
+/// serial and pipelined checkpoints of the same run must carry the
+/// identical, non-empty resident set on every rank.
+#[test]
+fn pipelined_checkpoint_carries_the_same_resident_set_as_serial() {
+    use fastsample::train::{load_checkpoint, Fingerprint};
+    let d = sample_dataset();
+    let mode = "budget:4k+cache:64k";
+    let dirs: Vec<PathBuf> = [false, true]
+        .iter()
+        .map(|&pipeline| {
+            let dir = fresh_dir(if pipeline { "resident-pipe" } else { "resident-serial" });
+            let mut cfg = task_config(mode, pipeline, 2);
+            cfg.checkpoint_dir = Some(dir.clone());
+            run_sample(&d, &cfg);
+            dir
+        })
+        .collect();
+    for rank in 0..WORLD {
+        let states: Vec<_> = [false, true]
+            .iter()
+            .zip(&dirs)
+            .map(|(&pipeline, dir)| {
+                // The fingerprint records the pipeline flag, so each
+                // mode's checkpoint is loaded under its own.
+                let mut cfg = task_config(mode, pipeline, 2);
+                cfg.checkpoint_dir = Some(dir.clone());
+                let fp = Fingerprint::new("sample", &d.name, &cfg, Some((BATCH, &FANOUTS)));
+                load_checkpoint(dir, &fp, rank, 2)
+                    .unwrap_or_else(|e| panic!("pipeline={pipeline} rank {rank}: {e}"))
+            })
+            .collect();
+        assert!(
+            !states[0].cache_rows.is_empty(),
+            "rank {rank}: the 4k-budget run should leave remote misses that fill the cache"
+        );
+        assert_eq!(
+            states[0].cache_rows, states[1].cache_rows,
+            "rank {rank}: pipelined checkpoint carries a different resident set than serial"
+        );
+    }
+    for dir in dirs {
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -623,6 +623,130 @@ fn prop_interleaved_frames_demultiplex_by_source() {
 }
 
 #[test]
+fn prop_serve_request_codec_round_trips() {
+    use fastsample::dist::{ServeErrorKind, ServeOp, ServeReply, ServeRequest};
+    use std::io::Cursor;
+    check(115, 40, |i, s| {
+        // Request side: 0-length batches, typical batches, and payloads
+        // past 64 KiB (node ids are 4 bytes; 17k+ ids cross it).
+        let n = if i == 0 {
+            0
+        } else if s.next_below(8) == 0 {
+            (16 << 10) + gen::size(s, 1, 2048)
+        } else {
+            gen::size(s, 0, 512)
+        };
+        let op = if n == 0 && s.next_below(4) == 0 {
+            ServeOp::Shutdown
+        } else {
+            ServeOp::Query((0..n).map(|_| s.next_u64() as u32).collect())
+        };
+        let req = ServeRequest { id: s.next_u64(), op };
+        let mut buf = Vec::new();
+        req.encode_to(&mut buf);
+        let mut cur = Cursor::new(buf.as_slice());
+        let back = ServeRequest::decode_from(&mut cur).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(cur.position() as usize, buf.len(), "decoder must consume the exact frame");
+
+        // Reply side: arbitrary f32 bit patterns (NaNs included) must
+        // survive by bits, so equality is checked on the raw bits.
+        let dim = gen::size(s, 1, 8);
+        let rows = gen::size(s, 0, 64);
+        let values: Vec<f32> =
+            (0..dim * rows).map(|_| f32::from_bits(s.next_u64() as u32)).collect();
+        let reply = ServeReply::ok(s.next_u64(), dim, values.clone());
+        let mut buf = Vec::new();
+        reply.encode_to(&mut buf);
+        let mut cur = Cursor::new(buf.as_slice());
+        let back = ServeReply::decode_from(&mut cur).unwrap();
+        assert_eq!(cur.position() as usize, buf.len());
+        assert_eq!(back.id, reply.id);
+        let emb = back.body.unwrap();
+        assert_eq!(emb.dim, dim);
+        assert_eq!(
+            emb.rows.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+
+        // Error replies round-trip kind and detail exactly.
+        let kinds = [
+            ServeErrorKind::Overloaded,
+            ServeErrorKind::PeerLost,
+            ServeErrorKind::BadRequest,
+            ServeErrorKind::ShuttingDown,
+            ServeErrorKind::Internal,
+        ];
+        let kind = kinds[s.next_below(kinds.len())];
+        let detail: String =
+            (0..gen::size(s, 0, 80)).map(|_| (b'a' + s.next_below(26) as u8) as char).collect();
+        let err = ServeReply::error(s.next_u64(), kind, detail);
+        let mut buf = Vec::new();
+        err.encode_to(&mut buf);
+        let back = ServeReply::decode_from(&mut Cursor::new(buf.as_slice())).unwrap();
+        assert_eq!(back, err);
+    });
+}
+
+#[test]
+fn prop_coalesced_batches_equal_individual_queries() {
+    use fastsample::train::{propagate_mean, serve_key};
+    check(116, 30, |i, s| {
+        let d = random_dataset(i, s);
+        let n = d.num_nodes();
+        let dim = d.feat_dim;
+        let key = serve_key(s.next_u64());
+        let fanouts = [gen::size(s, 1, 4), gen::size(s, 1, 4)];
+
+        // A random interleaving of client requests, with duplicates
+        // within and across requests.
+        let k = gen::size(s, 1, 5);
+        let requests: Vec<Vec<NodeId>> =
+            (0..k).map(|_| gen::vec_below(s, gen::size(s, 1, 5), n)).collect();
+
+        // The frontend's coalesced batch: first-occurrence dedup order.
+        let mut batch: Vec<NodeId> = Vec::new();
+        for req in &requests {
+            for &v in req {
+                if !batch.contains(&v) {
+                    batch.push(v);
+                }
+            }
+        }
+        let mut ws = SamplerWorkspace::new();
+        let mfgs = sample_mfgs(&d.graph, &batch, &fanouts, key, &mut ws, KernelKind::Fused);
+        let mut feats = Vec::new();
+        for &src in &mfgs[0].src_nodes {
+            feats.extend_from_slice(d.feat(src));
+        }
+        let coalesced = propagate_mean(&mfgs, &feats, dim);
+
+        // One-at-a-time: every requested node sampled alone under the
+        // same serve key must answer bit-identically — batch composition
+        // is invisible because sampling streams are keyed per node.
+        for (ri, req) in requests.iter().enumerate() {
+            for &v in req {
+                let m1 = sample_mfgs(&d.graph, &[v], &fanouts, key, &mut ws, KernelKind::Fused);
+                let mut f1 = Vec::new();
+                for &src in &m1[0].src_nodes {
+                    f1.extend_from_slice(d.feat(src));
+                }
+                let solo = propagate_mean(&m1, &f1, dim);
+                let bi = batch.iter().position(|&b| b == v).unwrap();
+                assert_eq!(
+                    coalesced[bi * dim..(bi + 1) * dim]
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect::<Vec<_>>(),
+                    solo.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "request {ri}, node {v}: coalesced answer diverged from a solo query"
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_workspace_reuse_never_leaks_between_graphs() {
     // Reusing one workspace across random graphs of different sizes must
     // behave as if fresh (epoch stamping correctness).

@@ -1,0 +1,351 @@
+//! Serve mode: the request-level guarantees, pinned end to end.
+//!
+//! * **Bit-identity grid**: a served embedding for node v equals the
+//!   single-machine forward pass (`sample_mfgs` + `propagate_mean` under
+//!   the same serve key) bit for bit, across {scalar, bulk} sampling
+//!   wire × {inproc, tcp} transport × {budget:0, budget:4k, full
+//!   replication} policy — the same grid the training equivalence
+//!   suites pin, now observed through the client socket.
+//! * **Coalescing correctness**: concurrent clients with interleaved,
+//!   overlapping requests each get their own per-request-correct rows —
+//!   no cross-batch contamination (per-node sampling keys make batch
+//!   composition irrelevant).
+//! * **Fault seams**: a mid-query peer kill surfaces a typed `PeerLost`
+//!   to the in-flight client and a typed `CommError` on every surviving
+//!   rank under a hard deadline — never a hang; a client that
+//!   disconnects mid-request must not wedge the serving loop.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastsample::dist::{
+    query_once, request_shutdown, run_workers_on, run_workers_with, AddrSlot, CommError,
+    Counters, NetworkModel, ServeErrorKind, ServeOp, ServeRequest, TransportConfig,
+};
+use fastsample::graph::generator::{make_dataset, DatasetParams};
+use fastsample::graph::{Dataset, NodeId};
+use fastsample::sampling::{sample_mfgs, KernelKind, SamplerWorkspace};
+use fastsample::train::{
+    propagate_mean, serve_key, serve_rank, ServeConfig, ServeReport, TrainConfig,
+};
+
+const WORLD: usize = 4;
+const FANOUTS: [usize; 2] = [3, 2];
+const SEED: u64 = 11;
+
+fn serve_dataset() -> Dataset {
+    make_dataset(&DatasetParams {
+        name: "serve-equivalence".into(),
+        num_nodes: 300,
+        avg_degree: 7,
+        feat_dim: 4,
+        num_classes: 3,
+        labeled_frac: 0.3,
+        p_intra: 0.8,
+        noise: 0.2,
+        seed: 43,
+    })
+}
+
+fn task_config(mode: &str, world: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::mode("quickstart", mode, world).unwrap();
+    cfg.net = NetworkModel::free();
+    cfg.seed = SEED;
+    cfg.verbose = false;
+    cfg
+}
+
+/// The single-machine reference: dedup exactly as the frontend does,
+/// sample under the serve key, mean-propagate, re-expand per requested
+/// node (duplicates answered per occurrence).
+fn reference_rows(d: &Dataset, nodes: &[NodeId], fanouts: &[usize], seed: u64) -> Vec<f32> {
+    let mut batch: Vec<NodeId> = Vec::new();
+    for &v in nodes {
+        if !batch.contains(&v) {
+            batch.push(v);
+        }
+    }
+    let mut ws = SamplerWorkspace::new();
+    let mfgs = sample_mfgs(&d.graph, &batch, fanouts, serve_key(seed), &mut ws, KernelKind::Fused);
+    let dim = d.feat_dim;
+    let mut feats = Vec::with_capacity(mfgs[0].src_nodes.len() * dim);
+    for &s in &mfgs[0].src_nodes {
+        feats.extend_from_slice(d.feat(s));
+    }
+    let rows = propagate_mean(&mfgs, &feats, dim);
+    let mut out = Vec::with_capacity(nodes.len() * dim);
+    for &v in nodes {
+        let i = batch.iter().position(|&b| b == v).unwrap();
+        out.extend_from_slice(&rows[i * dim..(i + 1) * dim]);
+    }
+    out
+}
+
+fn bits(rows: &[f32]) -> Vec<u32> {
+    rows.iter().map(|v| v.to_bits()).collect()
+}
+
+fn wait_addr(slot: &AddrSlot) -> String {
+    slot.wait(Duration::from_secs(30)).expect("frontend never published its address").to_string()
+}
+
+fn base_scfg(slot: &Arc<AddrSlot>) -> ServeConfig {
+    let mut scfg = ServeConfig::new(FANOUTS.to_vec());
+    scfg.ready = Some(Arc::clone(slot));
+    scfg
+}
+
+/// Serve one query and assert its rows equal the reference bit for bit.
+fn query_and_check(d: &Dataset, addr: &str, id: u64, nodes: &[NodeId], tag: &str) {
+    let reply = query_once(addr, id, nodes).unwrap_or_else(|e| panic!("{tag}: query {id}: {e}"));
+    assert_eq!(reply.id, id, "{tag}: reply correlated to the wrong request");
+    let emb = reply.body.unwrap_or_else(|e| panic!("{tag}: query {id} rejected: {e}"));
+    assert_eq!(emb.dim, d.feat_dim, "{tag}: wrong row width");
+    assert_eq!(emb.num_rows(), nodes.len(), "{tag}: wrong row count");
+    assert_eq!(
+        bits(&emb.rows),
+        bits(&reference_rows(d, nodes, &FANOUTS, SEED)),
+        "{tag}: served rows diverged from the single-machine reference"
+    );
+}
+
+/// One serve world: spin up `WORLD` ranks, run `client` against the
+/// published address, and return (per-rank results, client output).
+fn run_serve_world<T: Send>(
+    d: &Dataset,
+    cfg: &TrainConfig,
+    transport: &TransportConfig,
+    client: impl FnOnce(String) -> T + Send,
+) -> (Vec<anyhow::Result<ServeReport>>, T) {
+    let slot = Arc::new(AddrSlot::default());
+    let scfg = base_scfg(&slot);
+    std::thread::scope(|s| {
+        let client = s.spawn({
+            let slot = Arc::clone(&slot);
+            move || client(wait_addr(&slot))
+        });
+        let results = run_workers_on(
+            transport,
+            WORLD,
+            NetworkModel::free(),
+            Arc::new(Counters::default()),
+            |rank, comm| serve_rank(d, &fastsample::config::artifacts_dir(), cfg, &scfg, rank, comm),
+        )
+        .expect("transport mesh failed to connect");
+        (results, client.join().expect("client thread panicked"))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The bit-identity grid
+// ---------------------------------------------------------------------------
+
+fn run_grid(transport: &TransportConfig, transport_tag: &str) {
+    let d = serve_dataset();
+    for policy in ["vanilla", "budget:4k", "hybrid"] {
+        for wire in ["wire:scalar", "wire:bulk"] {
+            let tag = format!("{transport_tag}/{policy}+{wire}");
+            let cfg = task_config(&format!("{policy}+{wire}"), WORLD);
+            let (results, ()) = run_serve_world(&d, &cfg, transport, |addr| {
+                query_and_check(&d, &addr, 1, &[0, 5, 9], &tag);
+                // Duplicates in one request are answered per occurrence.
+                query_and_check(&d, &addr, 2, &[7, 7, 2], &tag);
+                query_and_check(&d, &addr, 3, &[299], &tag);
+                let ack = request_shutdown(&addr).unwrap();
+                assert!(ack.body.is_ok(), "{tag}: shutdown not acked");
+            });
+            let mut batch_counts = Vec::new();
+            for (rank, r) in results.into_iter().enumerate() {
+                let report = r.unwrap_or_else(|e| panic!("{tag}: rank {rank} failed: {e:#}"));
+                batch_counts.push(report.batches);
+                if rank == 0 {
+                    assert_eq!(report.requests, 3, "{tag}: frontend request count");
+                    assert_eq!(report.rejected, 0, "{tag}: nothing should be load-shed");
+                    assert_eq!(report.latency.len(), 3, "{tag}: one latency sample per request");
+                    assert!(report.latency.summary().contains("p50="), "{tag}: report summary");
+                }
+            }
+            assert!(
+                batch_counts.iter().all(|&b| b == batch_counts[0]),
+                "{tag}: ranks disagree on the collective batch count: {batch_counts:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn served_rows_match_the_single_machine_reference_inproc() {
+    run_grid(&TransportConfig::Inproc, "inproc");
+}
+
+#[test]
+fn served_rows_match_the_single_machine_reference_over_tcp() {
+    run_grid(&TransportConfig::Tcp { base_port: 0 }, "tcp");
+}
+
+// ---------------------------------------------------------------------------
+// Coalescing: concurrent clients, per-request correctness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_clients_get_per_request_correct_answers() {
+    let d = serve_dataset();
+    let cfg = task_config("budget:4k+wire:bulk", WORLD);
+    let slot = Arc::new(AddrSlot::default());
+    // A wide coalescing window and batch so interleaved requests really
+    // do share collective batches.
+    let mut scfg = base_scfg(&slot);
+    scfg.max_wait = Duration::from_millis(50);
+    scfg.max_batch = 64;
+    scfg.max_inflight = 16;
+
+    const CLIENTS: u64 = 6;
+    const QUERIES_PER_CLIENT: u64 = 3;
+    std::thread::scope(|s| {
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                s.spawn({
+                    let d = &d;
+                    let slot = Arc::clone(&slot);
+                    move || {
+                        let addr = wait_addr(&slot);
+                        for q in 0..QUERIES_PER_CLIENT {
+                            // Overlapping node sets across clients, distinct
+                            // per (client, query): contamination would hand
+                            // one client another's rows.
+                            let nodes: Vec<NodeId> =
+                                vec![(c * 7 % 300) as NodeId, (c * 13 + q * 31 + 1) as NodeId % 300, (q * 97 + 5) as NodeId % 300];
+                            query_and_check(d, &addr, c * 100 + q, &nodes, &format!("client {c}"));
+                        }
+                    }
+                })
+            })
+            .collect();
+        // The closer joins every client, then asks the mesh to stop —
+        // it must run off this thread, which is about to block in
+        // `run_workers_with` until that very shutdown lands.
+        let closer = s.spawn({
+            let slot = Arc::clone(&slot);
+            move || {
+                for c in clients {
+                    c.join().expect("client thread panicked");
+                }
+                let addr = wait_addr(&slot);
+                let ack = request_shutdown(&addr).expect("shutdown send failed");
+                assert!(ack.body.is_ok(), "shutdown not acked");
+            }
+        });
+        let results = run_workers_with(
+            WORLD,
+            NetworkModel::free(),
+            Arc::new(Counters::default()),
+            |rank, comm| {
+                serve_rank(&d, &fastsample::config::artifacts_dir(), &cfg, &scfg, rank, comm)
+            },
+        );
+        closer.join().expect("closer thread panicked");
+        for (rank, r) in results.into_iter().enumerate() {
+            let report = r.unwrap_or_else(|e| panic!("rank {rank} failed: {e:#}"));
+            if rank == 0 {
+                assert_eq!(report.requests, CLIENTS * QUERIES_PER_CLIENT);
+                assert_eq!(report.latency.len() as u64, CLIENTS * QUERIES_PER_CLIENT);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fault seams
+// ---------------------------------------------------------------------------
+
+/// A peer dying between batches: the survivors' next collective gets a
+/// typed `PeerLost`, the in-flight client gets a typed `peer-lost`
+/// reply, and everything returns under a hard deadline — never a hang.
+#[test]
+fn mid_query_peer_kill_surfaces_typed_errors_and_never_hangs() {
+    const KILL_WORLD: usize = 3;
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let d = serve_dataset();
+        let cfg = task_config("budget:4k+wire:bulk", KILL_WORLD);
+        let slot = Arc::new(AddrSlot::default());
+        let scfg = base_scfg(&slot);
+        let out = std::thread::scope(|s| {
+            let client = s.spawn({
+                let d = &d;
+                let slot = Arc::clone(&slot);
+                move || {
+                    let addr = wait_addr(&slot);
+                    // Batch 1 is served by the full mesh.
+                    query_and_check(d, &addr, 1, &[1, 2], "pre-kill");
+                    // Rank 2 has left; the next query's collective fails.
+                    let reply = query_once(&addr, 2, &[3]).expect("reply channel broken");
+                    reply.body.expect_err("query after the kill must be refused")
+                }
+            });
+            let results = run_workers_with(
+                KILL_WORLD,
+                NetworkModel::free(),
+                Arc::new(Counters::default()),
+                |rank, comm| {
+                    let mut scfg = scfg.clone();
+                    if rank == 2 {
+                        // The simulated kill: serve one batch, leave.
+                        scfg.max_batches = Some(1);
+                    }
+                    serve_rank(&d, &fastsample::config::artifacts_dir(), &cfg, &scfg, rank, comm)
+                },
+            );
+            (results, client.join().expect("client thread panicked"))
+        });
+        let _ = tx.send(out);
+    });
+    // The hard deadline: a wedged mesh fails here, not in CI's timeout.
+    let (results, client_err) = rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("serve world hung after a peer kill");
+
+    assert_eq!(
+        client_err.kind,
+        ServeErrorKind::PeerLost,
+        "in-flight client should see the typed peer loss: {client_err}"
+    );
+    // The killed rank exited cleanly; every survivor holds a typed
+    // fabric error naming the loss.
+    assert!(results[2].is_ok(), "the capped rank leaves cleanly");
+    for (rank, r) in results.iter().enumerate().take(2) {
+        let e = r.as_ref().expect_err("survivors must fail, not hang");
+        match e.downcast_ref::<CommError>() {
+            Some(CommError::PeerLost { .. }) => {}
+            other => panic!("rank {rank}: wanted PeerLost, got {other:?} ({e:#})"),
+        }
+    }
+}
+
+/// A client that sends a request and vanishes without reading the reply
+/// must not wedge the loop: the write failure is the client's problem,
+/// the next client is served normally.
+#[test]
+fn client_disconnect_mid_request_does_not_wedge_serving() {
+    let d = serve_dataset();
+    let cfg = task_config("vanilla+wire:bulk", WORLD);
+    let transport = TransportConfig::Inproc;
+    let (results, ()) = run_serve_world(&d, &cfg, &transport, |addr| {
+        {
+            let mut s = TcpStream::connect(&addr).expect("connect");
+            let mut buf = Vec::new();
+            ServeRequest { id: 9, op: ServeOp::Query(vec![1, 2, 3]) }.encode_to(&mut buf);
+            s.write_all(&buf).expect("send");
+            // Vanish: the reply write will fail; nobody must care.
+        }
+        query_and_check(&d, &addr, 10, &[4, 6], "post-disconnect");
+        let ack = request_shutdown(&addr).unwrap();
+        assert!(ack.body.is_ok(), "shutdown not acked");
+    });
+    for (rank, r) in results.into_iter().enumerate() {
+        r.unwrap_or_else(|e| panic!("rank {rank} failed: {e:#}"));
+    }
+}
