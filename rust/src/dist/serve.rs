@@ -12,12 +12,17 @@
 //!   a rejected or failed request always gets a reply, never a silent
 //!   drop or a closed socket.
 //! * **[`Frontend`]** — rank 0's listener: a polling accept thread plus
-//!   one blocking handler thread per connection. Handlers push decoded
-//!   requests into a *bounded* queue (`--serve-max-inflight`); a full
-//!   queue is answered immediately with [`ServeErrorKind::Overloaded`]
-//!   (admission control). The serve loop drains the queue through
-//!   [`Frontend::next_batch`], which coalesces concurrent requests into
-//!   one batch under a node-count cap and a max-wait window.
+//!   one blocking handler thread per connection. Admission control is an
+//!   atomic count of admitted-but-unanswered requests
+//!   (`--serve-max-inflight`): a request that would push the count past
+//!   the bound is answered immediately with
+//!   [`ServeErrorKind::Overloaded`], and the slot is released only when
+//!   the reply comes back to the handler — the bound really is
+//!   outstanding requests, not queue depth. The serve loop drains
+//!   admitted requests through [`Frontend::next_batch`], which coalesces
+//!   concurrent requests into one batch under a node-count cap and a
+//!   max-wait window, and returns an empty batch after `idle_wait` so
+//!   the caller can run liveness checks while no traffic flows.
 //! * **[`LatencyHistogram`]** — exact nearest-rank percentiles over
 //!   recorded per-request latencies (p50/p99/max in the serve report).
 //! * **Client helpers** — [`query_once`] / [`request_shutdown`], shared
@@ -30,10 +35,11 @@
 //! `ShuttingDown` reply — a client is *never* left hanging on a socket
 //! with no reply on the way.
 
+use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
@@ -56,6 +62,9 @@ pub const MAX_ERROR_DETAIL: usize = 1 << 16;
 
 /// Accept-thread poll interval while waiting for connections.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
+/// Accept-thread backoff when the process is out of file descriptors:
+/// long enough for in-flight handlers to finish and free theirs.
+const ACCEPT_FD_BACKOFF: Duration = Duration::from_millis(100);
 
 const OP_QUERY: u8 = 0;
 const OP_SHUTDOWN: u8 = 1;
@@ -290,10 +299,15 @@ impl ServeReply {
             }
             Err(e) => {
                 out.push(e.kind.code());
-                let detail = e.detail.as_bytes();
-                let take = detail.len().min(MAX_ERROR_DETAIL);
+                // Truncate on a char boundary: a cut mid-codepoint would
+                // make the client's decode fail on utf-8 instead of
+                // delivering the typed error.
+                let mut take = e.detail.len().min(MAX_ERROR_DETAIL);
+                while !e.detail.is_char_boundary(take) {
+                    take -= 1;
+                }
                 put_u32(out, take as u32);
-                out.extend_from_slice(&detail[..take]);
+                out.extend_from_slice(&e.detail.as_bytes()[..take]);
             }
         }
     }
@@ -468,16 +482,62 @@ pub struct Gathered {
     pub shutdown: bool,
 }
 
+/// The open-connection registry: one entry per live handler thread,
+/// keyed by an accept-order token, inserted by the accept loop and
+/// removed by the handler on exit — so [`Frontend::stop`] can unblock
+/// every handler, and a closed connection costs nothing after its
+/// handler returns (no per-request FD leak on a resident server).
+type ConnRegistry = Arc<Mutex<HashMap<u64, TcpStream>>>;
+
+/// Removes a handler's registry entry (and with it the last clone of
+/// its socket) however the handler exits.
+struct ConnGuard {
+    token: u64,
+    conns: ConnRegistry,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        lock(&self.conns).remove(&self.token);
+    }
+}
+
+/// What the per-connection handlers need from the frontend.
+#[derive(Clone)]
+struct HandlerShared {
+    queue: Sender<Pending>,
+    /// Admitted-but-unanswered queries; the admission-control gauge.
+    outstanding: Arc<AtomicUsize>,
+    max_inflight: usize,
+    rejected: Arc<AtomicU64>,
+}
+
+impl HandlerShared {
+    /// Try to claim an admission slot; `false` ⇒ answer `Overloaded`.
+    fn try_admit(&self) -> bool {
+        self.outstanding
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                (cur < self.max_inflight).then_some(cur + 1)
+            })
+            .is_ok()
+    }
+
+    /// Release an admission slot once the request has its answer.
+    fn release(&self) {
+        self.outstanding.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
 /// Rank 0's client listener: accepts connections, admission-controls
-/// decoded requests into a bounded queue, and coalesces them into
-/// batches for the serve loop.
+/// decoded requests by an outstanding-request count, and coalesces them
+/// into batches for the serve loop.
 #[derive(Debug)]
 pub struct Frontend {
     addr: SocketAddr,
     queue: Receiver<Pending>,
     stash: Option<Pending>,
     stop: Arc<AtomicBool>,
-    conns: Arc<Mutex<Vec<TcpStream>>>,
+    conns: ConnRegistry,
     rejected: Arc<AtomicU64>,
     accept: Option<JoinHandle<()>>,
 }
@@ -490,15 +550,20 @@ impl Frontend {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let (tx, rx) = mpsc::sync_channel(max_inflight.max(1));
+        let (tx, rx) = mpsc::channel();
         let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let conns: ConnRegistry = Arc::new(Mutex::new(HashMap::new()));
         let rejected = Arc::new(AtomicU64::new(0));
+        let shared = HandlerShared {
+            queue: tx,
+            outstanding: Arc::new(AtomicUsize::new(0)),
+            max_inflight: max_inflight.max(1),
+            rejected: Arc::clone(&rejected),
+        };
         let accept = {
             let stop = Arc::clone(&stop);
             let conns = Arc::clone(&conns);
-            let rejected = Arc::clone(&rejected);
-            thread::spawn(move || accept_loop(listener, tx, stop, conns, rejected))
+            thread::spawn(move || accept_loop(listener, shared, stop, conns))
         };
         Ok(Frontend {
             addr,
@@ -521,22 +586,33 @@ impl Frontend {
         self.rejected.load(Ordering::Relaxed)
     }
 
-    /// Block for the next request, then coalesce: keep draining the
-    /// queue until the batch holds at least `max_nodes` node ids or
-    /// `max_wait` has elapsed since the first request was taken. A
+    /// Live client connections right now (registry size; an entry dies
+    /// with its handler thread, so a resident server holds FDs only for
+    /// clients that are actually connected).
+    pub fn open_connections(&self) -> usize {
+        lock(&self.conns).len()
+    }
+
+    /// Wait up to `idle_wait` for a first request, then coalesce: keep
+    /// draining the queue until the batch holds at least `max_nodes`
+    /// node ids or `max_wait` has elapsed since the first request was
+    /// taken. No request within `idle_wait` returns an *empty*,
+    /// non-shutdown [`Gathered`] — the caller's cue to run a liveness
+    /// round and come back, so an idle frontend never blocks forever. A
     /// request that would push a non-empty batch past `max_nodes` is
     /// stashed for the next call (the *first* request of a batch is
     /// always taken whole, so a single oversized request still forms a
     /// batch — per-request caps are the serve loop's job). A shutdown
     /// request is acked immediately and flips [`Gathered::shutdown`].
-    pub fn next_batch(&mut self, max_nodes: usize, max_wait: Duration) -> Gathered {
+    pub fn next_batch(&mut self, max_nodes: usize, max_wait: Duration, idle_wait: Duration) -> Gathered {
         let mut out = Gathered::default();
         let mut total = 0usize;
         let first = match self.stash.take() {
             Some(p) => p,
-            None => match self.queue.recv() {
+            None => match self.queue.recv_timeout(idle_wait) {
                 Ok(p) => p,
-                Err(_) => {
+                Err(RecvTimeoutError::Timeout) => return out,
+                Err(RecvTimeoutError::Disconnected) => {
                     out.shutdown = true;
                     return out;
                 }
@@ -591,7 +667,7 @@ impl Frontend {
     /// reads) and join the accept thread. Idempotent; also runs on drop.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Release);
-        for conn in lock(&self.conns).iter() {
+        for conn in lock(&self.conns).values() {
             let _ = conn.shutdown(std::net::Shutdown::Both);
         }
         if let Some(h) = self.accept.take() {
@@ -616,26 +692,51 @@ fn admit(p: Pending, out: &mut Gathered, total: &mut usize) {
     }
 }
 
+/// True for accept() errors that occur in normal operation and must not
+/// stop the listener: an aborted handshake, a signal, or transient FD
+/// exhaustion (EMFILE/ENFILE — raw errno, `io::ErrorKind` has no stable
+/// name for them).
+fn accept_error_is_transient(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::ConnectionAborted | io::ErrorKind::Interrupted)
+        || matches!(e.raw_os_error(), Some(23 /* ENFILE */) | Some(24 /* EMFILE */))
+}
+
 fn accept_loop(
     listener: TcpListener,
-    queue: SyncSender<Pending>,
+    shared: HandlerShared,
     stop: Arc<AtomicBool>,
-    conns: Arc<Mutex<Vec<TcpStream>>>,
-    rejected: Arc<AtomicU64>,
+    conns: ConnRegistry,
 ) {
+    let mut next_token = 0u64;
     while !stop.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let _ = stream.set_nodelay(true);
+                let token = next_token;
+                next_token += 1;
                 if let Ok(clone) = stream.try_clone() {
-                    lock(&conns).push(clone);
+                    lock(&conns).insert(token, clone);
                 }
-                let queue = queue.clone();
-                let rejected = Arc::clone(&rejected);
-                thread::spawn(move || handle_conn(stream, queue, rejected));
+                let guard = ConnGuard { token, conns: Arc::clone(&conns) };
+                let shared = shared.clone();
+                thread::spawn(move || {
+                    let _guard = guard;
+                    handle_conn(stream, shared);
+                });
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(ACCEPT_POLL),
-            Err(_) => break,
+            Err(e) if accept_error_is_transient(&e) => {
+                // Out of FDs ⇒ back off so live handlers can finish and
+                // free theirs; aborted/interrupted ⇒ just try again.
+                if e.raw_os_error().is_some_and(|c| c == 23 || c == 24) {
+                    eprintln!("[serve] accept backing off: {e}");
+                    thread::sleep(ACCEPT_FD_BACKOFF);
+                }
+            }
+            Err(e) => {
+                eprintln!("[serve] accept failed, listener stopping: {e}");
+                break;
+            }
         }
     }
 }
@@ -647,11 +748,13 @@ fn write_reply(stream: &mut TcpStream, reply: &ServeReply) -> io::Result<()> {
 }
 
 /// Per-connection handler: decode requests in a loop, admission-control
-/// each into the bounded queue, block for the serve loop's answer, and
-/// write it back. A client disconnect (EOF, reset, garbage) just ends
-/// this thread — the serve loop is untouched, and if the request was
-/// already admitted its reply is simply absorbed by the dead socket.
-fn handle_conn(mut stream: TcpStream, queue: SyncSender<Pending>, rejected: Arc<AtomicU64>) {
+/// each against the outstanding-request bound, block for the serve
+/// loop's answer, and write it back. A client disconnect (EOF, reset,
+/// garbage) just ends this thread — the serve loop is untouched, and if
+/// the request was already admitted its reply is simply absorbed by the
+/// dead socket (the admission slot is still released when the answer
+/// arrives, so a vanished client cannot pin capacity forever).
+fn handle_conn(mut stream: TcpStream, shared: HandlerShared) {
     loop {
         let req = match ServeRequest::decode_from(&mut stream) {
             Ok(r) => r,
@@ -666,29 +769,32 @@ fn handle_conn(mut stream: TcpStream, queue: SyncSender<Pending>, rejected: Arc<
                 }
             }
             ServeOp::Query(nodes) => {
-                let (tx, rx) = mpsc::channel();
-                let pending =
-                    Pending { id: req.id, nodes, shutdown: false, reply: tx, arrived: Instant::now() };
-                let reply = match queue.try_send(pending) {
-                    Ok(()) => match rx.recv() {
-                        Ok(r) => r,
-                        Err(_) => ServeReply::error(
-                            req.id,
-                            ServeErrorKind::ShuttingDown,
-                            "serve loop stopped before answering",
-                        ),
-                    },
-                    Err(TrySendError::Full(_)) => {
-                        rejected.fetch_add(1, Ordering::Relaxed);
-                        ServeReply::error(
-                            req.id,
-                            ServeErrorKind::Overloaded,
-                            "admission queue full; retry later",
-                        )
-                    }
-                    Err(TrySendError::Disconnected(_)) => {
-                        ServeReply::error(req.id, ServeErrorKind::ShuttingDown, "serve loop stopped")
-                    }
+                let reply = if shared.try_admit() {
+                    let (tx, rx) = mpsc::channel();
+                    let pending =
+                        Pending { id: req.id, nodes, shutdown: false, reply: tx, arrived: Instant::now() };
+                    let reply = match shared.queue.send(pending) {
+                        Ok(()) => match rx.recv() {
+                            Ok(r) => r,
+                            Err(_) => ServeReply::error(
+                                req.id,
+                                ServeErrorKind::ShuttingDown,
+                                "serve loop stopped before answering",
+                            ),
+                        },
+                        Err(_) => {
+                            ServeReply::error(req.id, ServeErrorKind::ShuttingDown, "serve loop stopped")
+                        }
+                    };
+                    shared.release();
+                    reply
+                } else {
+                    shared.rejected.fetch_add(1, Ordering::Relaxed);
+                    ServeReply::error(
+                        req.id,
+                        ServeErrorKind::Overloaded,
+                        "too many requests in flight; retry later",
+                    )
                 };
                 if write_reply(&mut stream, &reply).is_err() {
                     return;
@@ -698,8 +804,9 @@ fn handle_conn(mut stream: TcpStream, queue: SyncSender<Pending>, rejected: Arc<
                 let (tx, rx) = mpsc::channel();
                 let pending =
                     Pending { id: req.id, nodes: Vec::new(), shutdown: true, reply: tx, arrived: Instant::now() };
-                // Blocking send: shutdown must never be load-shed.
-                let reply = match queue.send(pending) {
+                // Outside admission control: shutdown must never be
+                // load-shed.
+                let reply = match shared.queue.send(pending) {
                     Ok(()) => match rx.recv() {
                         Ok(r) => r,
                         Err(_) => ServeReply::ok(req.id, 0, Vec::new()),
@@ -918,7 +1025,7 @@ mod tests {
         // The serving side is not wedged: exactly one request holds the
         // slot (capacity is 1, everything else was rejected) — drain
         // and answer it.
-        let mut gathered = front.next_batch(16, Duration::from_millis(10));
+        let mut gathered = front.next_batch(16, Duration::from_millis(10), Duration::from_secs(10));
         assert!(!gathered.shutdown);
         assert_eq!(gathered.pending.len(), 1);
         let p = gathered.pending.pop().unwrap();
@@ -938,7 +1045,7 @@ mod tests {
             ServeRequest { id: 1, op: ServeOp::Query(vec![5]) }.encode_to(&mut buf);
             s.write_all(&buf).unwrap();
         } // client gone before reading its reply
-        let mut gathered = front.next_batch(16, Duration::from_millis(50));
+        let mut gathered = front.next_batch(16, Duration::from_millis(50), Duration::from_secs(10));
         assert_eq!(gathered.pending.len(), 1);
         let p = gathered.pending.pop().unwrap();
         // Replying to the dead client is absorbed, not an error.
@@ -946,7 +1053,7 @@ mod tests {
         // A fresh client is still served afterwards.
         let addr_s = addr.to_string();
         let client = thread::spawn(move || query_once(&addr_s, 2, &[9]).unwrap());
-        let mut gathered = front.next_batch(16, Duration::from_millis(200));
+        let mut gathered = front.next_batch(16, Duration::from_millis(200), Duration::from_secs(10));
         assert_eq!(gathered.pending.len(), 1);
         let p = gathered.pending.pop().unwrap();
         assert_eq!(p.nodes, vec![9]);
@@ -970,7 +1077,7 @@ mod tests {
         let mut got = Vec::new();
         while got.len() < 4 {
             assert!(Instant::now() < deadline, "requests never arrived");
-            let mut g = front.next_batch(64, Duration::from_millis(20));
+            let mut g = front.next_batch(64, Duration::from_millis(20), Duration::from_secs(1));
             got.append(&mut g.pending);
         }
         // Answer each pending with rows derived from ITS node list.
@@ -991,7 +1098,7 @@ mod tests {
         let mut front = Frontend::bind(0, 4).unwrap();
         let addr = front.local_addr().to_string();
         let client = thread::spawn(move || request_shutdown(&addr).unwrap());
-        let gathered = front.next_batch(16, Duration::from_millis(10));
+        let gathered = front.next_batch(16, Duration::from_millis(10), Duration::from_secs(10));
         assert!(gathered.shutdown);
         assert!(gathered.pending.is_empty());
         let reply = client.join().unwrap();
@@ -1011,12 +1118,72 @@ mod tests {
         // request sent below.
         let addr2 = front.local_addr().to_string();
         let client = thread::spawn(move || query_once(&addr2, 12, &[3]).unwrap());
-        let mut gathered = front.next_batch(4, Duration::from_millis(20));
+        let mut gathered = front.next_batch(4, Duration::from_millis(20), Duration::from_secs(10));
         assert_eq!(gathered.pending.len(), 1);
         let p = gathered.pending.pop().unwrap();
         assert_eq!(p.id, 12);
         p.reply.send(ServeReply::ok(p.id, 1, vec![0.0])).unwrap();
         client.join().unwrap();
+    }
+
+    #[test]
+    fn error_detail_truncates_on_a_char_boundary() {
+        // 3-byte chars with a cap that is not a multiple of 3: a byte
+        // cut would land mid-codepoint and break the client's decode.
+        assert_eq!(MAX_ERROR_DETAIL % 3, 1);
+        let detail = "…".repeat(MAX_ERROR_DETAIL / 3 + 10);
+        assert!(detail.len() > MAX_ERROR_DETAIL);
+        let reply = ServeReply::error(1, ServeErrorKind::Internal, detail.clone());
+        let mut buf = Vec::new();
+        reply.encode_to(&mut buf);
+        let got = ServeReply::decode_from(&mut Cursor::new(buf.as_slice()))
+            .expect("truncated detail must still decode");
+        let e = got.body.unwrap_err();
+        assert_eq!(e.kind, ServeErrorKind::Internal);
+        assert!(e.detail.len() <= MAX_ERROR_DETAIL);
+        assert!(detail.starts_with(&e.detail), "truncation must be a prefix");
+        assert!(!e.detail.is_empty());
+    }
+
+    #[test]
+    fn idle_timeout_returns_an_empty_non_shutdown_batch() {
+        let mut front = Frontend::bind(0, 4).unwrap();
+        let start = Instant::now();
+        let gathered = front.next_batch(16, Duration::from_millis(1), Duration::from_millis(30));
+        assert!(gathered.pending.is_empty());
+        assert!(!gathered.shutdown, "idle is not shutdown");
+        assert!(start.elapsed() >= Duration::from_millis(30), "must wait out idle_wait");
+    }
+
+    #[test]
+    fn closed_connections_are_pruned_from_the_registry() {
+        const ROUNDS: usize = 8;
+        let mut front = Frontend::bind(0, 4).unwrap();
+        let addr = front.local_addr().to_string();
+        // Each query_once opens a fresh connection and drops it after
+        // the reply — the resident-server traffic pattern that must not
+        // leak an FD per request.
+        let client = thread::spawn(move || {
+            for k in 0..ROUNDS as u64 {
+                let got = query_once(&addr, k, &[1]).unwrap();
+                assert_eq!(got.id, k);
+            }
+        });
+        let mut served = 0;
+        while served < ROUNDS {
+            for p in front.next_batch(16, Duration::from_millis(5), Duration::from_secs(10)).pending {
+                p.reply.send(ServeReply::ok(p.id, 1, vec![0.0])).unwrap();
+                served += 1;
+            }
+        }
+        client.join().unwrap();
+        // Handlers notice the closed sockets and remove their registry
+        // entries; poll briefly for the races to settle.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while front.open_connections() > 0 {
+            assert!(Instant::now() < deadline, "registry still holds closed connections");
+            thread::sleep(Duration::from_millis(5));
+        }
     }
 
     #[test]

@@ -92,7 +92,10 @@ COMMANDS:
                 unanswered bound; beyond it clients get `overloaded`)
                 [--serve-max-batch 64]  (node ids coalesced per
                 collective batch) [--serve-max-wait-ms 2]  (coalescing
-                window) [--serve-answer features|logits]  (logits runs
+                window) [--serve-heartbeat-ms 250]  (idle liveness
+                cadence: an empty collective round after this long with
+                no traffic, so a dead peer is detected while idle)
+                [--serve-answer features|logits]  (logits runs
                 the trained model — needs artifacts, and --resume
                 restores params from a train-task checkpoint)
   query         one request against a serving mesh:
@@ -297,6 +300,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let serve_max_inflight = args.get("serve-max-inflight", 4usize)?;
     let serve_max_batch = args.get("serve-max-batch", 64usize)?;
     let serve_max_wait_ms = args.get("serve-max-wait-ms", 2u64)?;
+    let serve_heartbeat_ms = args.get("serve-heartbeat-ms", 250u64)?;
     let serve_answer = args.get_str("serve-answer", "features");
     let (spec, cfg) = parse_train_flags(args, world, "free")?;
     args.finish()?;
@@ -365,6 +369,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         scfg.max_inflight = serve_max_inflight;
         scfg.max_batch = serve_max_batch;
         scfg.max_wait = Duration::from_millis(serve_max_wait_ms);
+        scfg.idle_heartbeat = Duration::from_millis(serve_heartbeat_ms.max(1));
         scfg.answer = ServeAnswer::parse(&serve_answer)?;
         // Logits answers come from a trained model, so a `--resume`
         // restores a train-task checkpoint; feature answers pair with

@@ -32,9 +32,14 @@
 //! **Failure contract.** Any fabric error breaks the loop on every rank
 //! (typed `CommError`, never a hang); the frontend then answers every
 //! in-flight and queued request with a typed `PeerLost`/`Internal`
-//! reply before returning the error. A clean stop (client `Shutdown`
-//! request, or a `max_batches` cap) drains the queue with typed
-//! `ShuttingDown` replies.
+//! reply before returning the error. The contract holds even with no
+//! client traffic: after [`ServeConfig::idle_heartbeat`] without a
+//! request the frontend runs an empty liveness round (vote + empty
+//! broadcast, no sampling), so a rank that dies while the mesh is idle
+//! is detected within one interval instead of whenever the next query
+//! happens to arrive. A clean stop (client `Shutdown` request, or a
+//! `max_batches` cap) drains the queue with typed `ShuttingDown`
+//! replies.
 
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
@@ -111,6 +116,12 @@ pub struct ServeConfig {
     /// Coalescing window: how long the frontend waits for more requests
     /// after the first one before closing the batch.
     pub max_wait: Duration,
+    /// Liveness cadence while idle: with no client traffic for this
+    /// long, the frontend runs an empty heartbeat round (vote + empty
+    /// broadcast, no sampling) so a dead peer surfaces as a typed
+    /// `CommError` within one interval instead of hanging the mesh
+    /// until the next query.
+    pub idle_heartbeat: Duration,
     /// Sampling fanouts per level, as in `--task sample`.
     pub fanouts: Vec<usize>,
     /// What the answer rows are.
@@ -133,13 +144,15 @@ pub struct ServeConfig {
 
 impl ServeConfig {
     /// Defaults: ephemeral port, 4 in-flight batches, 64-node batches,
-    /// 2 ms coalescing window, feature answers, sample-task checkpoints.
+    /// 2 ms coalescing window, 250 ms idle heartbeat, feature answers,
+    /// sample-task checkpoints.
     pub fn new(fanouts: Vec<usize>) -> ServeConfig {
         ServeConfig {
             port: 0,
             max_inflight: 4,
             max_batch: 64,
             max_wait: Duration::from_millis(2),
+            idle_heartbeat: Duration::from_millis(250),
             fanouts,
             answer: ServeAnswer::Features,
             ready: None,
@@ -444,11 +457,14 @@ pub fn serve_rank(
         // Frontend: gather a batch worth serving (every request is
         // validated and possibly rejected *before* the mesh is asked to
         // do anything), then dedup node ids preserving first-occurrence
-        // order — replies re-expand rows per request.
+        // order — replies re-expand rows per request. The gather is
+        // bounded by the idle heartbeat: no traffic for that long
+        // yields an empty batch, which still runs the vote and the
+        // broadcast below as a liveness round.
         let mut batch: Vec<NodeId> = Vec::new();
         if let Some(f) = frontend.as_mut() {
-            while !stopping && inflight.is_empty() {
-                let mut gathered = f.next_batch(max_batch, scfg.max_wait);
+            if !stopping && inflight.is_empty() {
+                let mut gathered = f.next_batch(max_batch, scfg.max_wait, scfg.idle_heartbeat);
                 stopping |= gathered.shutdown;
                 for p in gathered.pending.drain(..) {
                     match validate_request(&p, num_nodes, req_cap) {
@@ -470,8 +486,14 @@ pub fn serve_rank(
         }
 
         // Continue/stop vote (uncharged control round): only the
-        // frontend ever votes "continue"; all-zero means stop for all.
-        let go = u64::from(!batch.is_empty());
+        // frontend ever votes "continue" — with a real batch or as an
+        // idle heartbeat — so all-zero means stop for all, and a rank
+        // that died while the mesh was idle fails this vote (or the
+        // broadcast below) within one heartbeat, typed, never a hang.
+        let go = match &frontend {
+            Some(_) => u64::from(!stopping || !batch.is_empty()),
+            None => 0,
+        };
         match comm.all_zero_u64(go) {
             Ok(true) => break Ok(()),
             Ok(false) => {}
@@ -490,6 +512,13 @@ pub fn serve_rank(
             Ok(mut got) => std::mem::take(&mut got[FRONTEND_RANK]),
             Err(e) => break Err(e),
         };
+
+        // Heartbeat round: the broadcast batch is empty on every rank
+        // (uniform — it is the frontend's slot), liveness is proven,
+        // nothing to sample or answer.
+        if batch.is_empty() {
+            continue;
+        }
 
         // Cooperative sampling + feature fetch, then a uniform answer.
         let mfgs = match serve_query_batch(
