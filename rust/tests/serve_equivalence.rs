@@ -272,7 +272,12 @@ fn mid_query_peer_kill_surfaces_typed_errors_and_never_hangs() {
         let d = serve_dataset();
         let cfg = task_config("budget:4k+wire:bulk", KILL_WORLD);
         let slot = Arc::new(AddrSlot::default());
-        let scfg = base_scfg(&slot);
+        let mut scfg = base_scfg(&slot);
+        // This test pins the *in-flight* seam: query 2 must be the thing
+        // that trips over the dead rank. A long heartbeat keeps the idle
+        // liveness round (pinned by the idle-kill test below) from
+        // winning that race and tearing the mesh down first.
+        scfg.idle_heartbeat = Duration::from_secs(10);
         let out = std::thread::scope(|s| {
             let client = s.spawn({
                 let d = &d;
@@ -315,6 +320,53 @@ fn mid_query_peer_kill_surfaces_typed_errors_and_never_hangs() {
     );
     // The killed rank exited cleanly; every survivor holds a typed
     // fabric error naming the loss.
+    assert!(results[2].is_ok(), "the capped rank leaves cleanly");
+    for (rank, r) in results.iter().enumerate().take(2) {
+        let e = r.as_ref().expect_err("survivors must fail, not hang");
+        match e.downcast_ref::<CommError>() {
+            Some(CommError::PeerLost { .. }) => {}
+            other => panic!("rank {rank}: wanted PeerLost, got {other:?} ({e:#})"),
+        }
+    }
+}
+
+/// A peer dying while the mesh is completely idle (no client traffic at
+/// all): the frontend's idle heartbeat — an empty collective round every
+/// `idle_heartbeat` — detects the loss, so every survivor exits with a
+/// typed `PeerLost` under a hard deadline instead of hanging in a
+/// collective until the next query happens to arrive.
+#[test]
+fn peer_kill_while_idle_is_detected_by_the_heartbeat() {
+    const KILL_WORLD: usize = 3;
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let d = serve_dataset();
+        let cfg = task_config("budget:4k+wire:bulk", KILL_WORLD);
+        let slot = Arc::new(AddrSlot::default());
+        let mut scfg = base_scfg(&slot);
+        scfg.idle_heartbeat = Duration::from_millis(50);
+        let results = run_workers_with(
+            KILL_WORLD,
+            NetworkModel::free(),
+            Arc::new(Counters::default()),
+            |rank, comm| {
+                let mut scfg = scfg.clone();
+                if rank == 2 {
+                    // The simulated kill: leave before serving anything —
+                    // no client ever queries, so only a heartbeat can
+                    // notice.
+                    scfg.max_batches = Some(0);
+                }
+                serve_rank(&d, &fastsample::config::artifacts_dir(), &cfg, &scfg, rank, comm)
+            },
+        );
+        let _ = tx.send(results);
+    });
+    // The hard deadline: without the heartbeat the survivors block in
+    // their collectives forever and this recv times out.
+    let results = rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("idle serve mesh hung after a peer kill");
     assert!(results[2].is_ok(), "the capped rank leaves cleanly");
     for (rank, r) in results.iter().enumerate().take(2) {
         let e = r.as_ref().expect_err("survivors must fail, not hang");
